@@ -1,0 +1,77 @@
+"""Kernel-layer microbench: jnp scatter-add vs the Pallas-equivalent math on
+CPU (the kernels themselves are TPU-targeted; on CPU we time the oracle
+formulations that define their arithmetic, giving a portable baseline the
+TPU run is compared against in EXPERIMENTS.md §Perf)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import record, timeit
+from repro.kernels import ops, ref
+
+
+def run():
+    rng = np.random.default_rng(0)
+
+    # SpMV formulations on a 64k-row, avg-degree-16 graph
+    N, deg = 1 << 14, 16
+    E = N * deg
+    indptr = np.arange(0, E + 1, deg)
+    indices = rng.integers(0, N, E).astype(np.int32)
+    weights = rng.standard_normal(E).astype(np.float32)
+    x = jnp.asarray(rng.standard_normal(N).astype(np.float32))
+
+    src = np.repeat(np.arange(N), deg)
+    ji, jw, js = map(jnp.asarray, (indices, weights, src))
+
+    @jax.jit
+    def scatter_spmv(x):
+        return jnp.zeros((N,), jnp.float32).at[js].add(jw * x[ji])
+
+    ell_i, ell_w, rmap = ops.csr_to_ell(indptr, indices, weights)
+    ell_i, ell_w, rmap = map(jnp.asarray, (ell_i, ell_w, rmap))
+
+    @jax.jit
+    def ell_spmv(x):
+        return ref.spmv_ref(ell_i, ell_w, x)
+
+    scatter_spmv(x).block_until_ready()
+    ell_spmv(x).block_until_ready()
+    us_sc = timeit(lambda: scatter_spmv(x).block_until_ready(), repeat=5)
+    us_el = timeit(lambda: ell_spmv(x).block_until_ready(), repeat=5)
+    record("kern_spmv_scatter_csr", us_sc, f"gflops={2 * E / us_sc / 1e3:.2f}")
+    record("kern_spmv_ell", us_el,
+           f"gflops={2 * E / us_el / 1e3:.2f};vs_scatter={us_sc / us_el:.2f}x")
+
+    # attention: dense vs blockwise oracle at prefill-ish shape
+    from repro.models.attention import blockwise_attention, dense_attention
+    q = jnp.asarray(rng.standard_normal((1, 1024, 4, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((1, 1024, 4, 64)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((1, 1024, 4, 64)), jnp.bfloat16)
+    dense = jax.jit(lambda q, k, v: dense_attention(q, k, v))
+    block = jax.jit(lambda q, k, v: blockwise_attention(
+        q, k, v, block_q=256, block_kv=256))
+    dense(q, k, v).block_until_ready()
+    block(q, k, v).block_until_ready()
+    us_d = timeit(lambda: dense(q, k, v).block_until_ready(), repeat=5)
+    us_b = timeit(lambda: block(q, k, v).block_until_ready(), repeat=5)
+    record("kern_attn_dense_1k", us_d)
+    record("kern_attn_blockwise_1k", us_b,
+           f"vs_dense={us_d / us_b:.2f}x (memory-bounded path)")
+
+    # segment sum formulations
+    Eseg = 1 << 16
+    segs = np.sort(rng.integers(0, 1 << 12, Eseg)).astype(np.int32)
+    vals = rng.standard_normal(Eseg).astype(np.float32)
+    jseg, jval = jnp.asarray(segs), jnp.asarray(vals)
+
+    @jax.jit
+    def seg_scatter(v):
+        return jnp.zeros((1 << 12,), jnp.float32).at[jseg].add(v)
+
+    seg_scatter(jval).block_until_ready()
+    us = timeit(lambda: seg_scatter(jval).block_until_ready(), repeat=5)
+    record("kern_segsum_scatter", us, f"meps={Eseg / us:.1f}")

@@ -1,0 +1,55 @@
+"""Benchmark suite entry point — one section per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only storage,query,...]``
+prints ``name,us_per_call,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all",
+                    help="comma list: storage,query,analytics,learning,kernels")
+    args = ap.parse_args()
+    wanted = set(args.only.split(",")) if args.only != "all" else {
+        "storage", "query", "analytics", "learning", "kernels"}
+
+    from benchmarks.common import emit_header
+    emit_header()
+
+    sections = []
+    if "storage" in wanted:
+        from benchmarks import storage_bench
+        sections.append(("storage", storage_bench.run))
+    if "query" in wanted:
+        from benchmarks import query_bench
+        sections.append(("query", query_bench.run))
+    if "analytics" in wanted:
+        from benchmarks import analytics_bench
+        sections.append(("analytics", analytics_bench.run))
+    if "learning" in wanted:
+        from benchmarks import learning_bench
+        sections.append(("learning", learning_bench.run))
+    if "kernels" in wanted:
+        from benchmarks import kernel_bench
+        sections.append(("kernels", kernel_bench.run))
+
+    failed = []
+    for name, fn in sections:
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED sections: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""Exp-1 analogue: storage layer performance (paper Fig. 7a–7d).
+
+(a) the same three workloads (PageRank / BI query / GNN sampling) run
+    unmodified over all three GRIN backends;
+(b) GRIN adapter overhead vs direct store access (<8% in the paper);
+(c) edge-scan throughput: static CSR ≥ GART ≫ LiveGraph-like linked list;
+(d) graph construction: GraphAr chunked-columnar vs CSV (≈5× in the paper).
+"""
+
+from __future__ import annotations
+
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import record, timeit
+from repro.engines.gaia import GaiaEngine
+from repro.engines.grape import GrapeEngine, algorithms as alg
+from repro.learning.sampler import GraphSampler
+from repro.storage.csr import CSRStore
+from repro.storage.gart import GARTStore, LinkedListStore
+from repro.storage.generators import snb_store
+from repro.storage.graphar import GraphArStore, load_csv, write_csv
+from repro.storage.grin import GRINAdapter
+
+BI_QUERY = ("MATCH (a:Person)-[:BUY]->(c:Item) WHERE a.credits > 800 "
+            "WITH c, COUNT(a) AS buyers RETURN buyers AS buyers "
+            "ORDER BY buyers DESC LIMIT 10")
+
+
+def _stores():
+    base = snb_store(n_persons=3000, n_items=1500, n_posts=500, seed=1)
+    base._vprops["feat"] = np.random.default_rng(0).standard_normal(
+        (base.n_vertices, 16)).astype(np.float32)
+    indptr, indices = base.adjacency()
+    src = np.repeat(np.arange(base.n_vertices), np.diff(indptr))
+    gart = GARTStore(base.n_vertices, src[: len(src) * 3 // 4],
+                     indices[: len(src) * 3 // 4],
+                     vertex_props=base.subgraph_props(),
+                     vertex_labels=base.vertex_labels(),
+                     edge_labels=base.edge_labels()[: len(src) * 3 // 4],
+                     edge_props={"date":
+                                 base.edge_prop("date")[: len(src) * 3 // 4]})
+    gart.add_edges(src[len(src) * 3 // 4:], indices[len(src) * 3 // 4:])
+    tmp = tempfile.mkdtemp()
+    GraphArStore.write(tmp, base, chunk_size=1 << 12)
+    return base, gart.snapshot(), GraphArStore(tmp)
+
+
+def run():
+    vineyard, gart_snap, graphar = _stores()
+    backends = {"vineyard": vineyard, "gart": gart_snap,
+                "graphar": graphar.to_csr()}
+
+    # ---- (a) three workloads × three backends (one implementation each)
+    for name, store in backends.items():
+        eng = GrapeEngine(store, n_frags=2)
+        us = timeit(lambda: np.asarray(alg.pagerank(eng, max_steps=10)),
+                    repeat=3)
+        record(f"exp1a_pagerank_{name}", us)
+    for name, store in backends.items():
+        gaia = GaiaEngine(store)
+        us = timeit(lambda: gaia.execute(BI_QUERY), repeat=3)
+        record(f"exp1a_biquery_{name}", us)
+    for name, store in backends.items():
+        sampler = GraphSampler(store, feature_prop="feat")
+        us = timeit(lambda: sampler.sample_batch(np.arange(256), [10, 5]),
+                    repeat=3)
+        record(f"exp1a_gnn_sampling_{name}", us)
+
+    # ---- (b) GRIN adapter overhead vs direct access
+    g = GRINAdapter(vineyard)
+    indptr, indices = vineyard.adjacency()
+
+    def direct_scan():
+        return int(indices[indptr[0]:indptr[-1]].sum())
+
+    def grin_scan():
+        ip, ix = g.adjacency()
+        return int(ix[ip[0]:ip[-1]].sum())
+
+    d = timeit(direct_scan, repeat=9)
+    gr = timeit(grin_scan, repeat=9)
+    record("exp1b_direct_scan", d)
+    record("exp1b_grin_scan", gr,
+           f"overhead={100 * (gr - d) / max(d, 1e-9):.1f}%")
+
+    # ---- (c) edge-scan throughput (edges/s)
+    ll = LinkedListStore(vineyard.n_vertices)
+    ip, ix = vineyard.adjacency()
+    srcs = np.repeat(np.arange(vineyard.n_vertices), np.diff(ip))
+    for s, dd in zip(srcs[::1], ix[::1]):
+        ll.add_edge(int(s), int(dd))
+    E = vineyard.n_edges
+
+    us_csr = timeit(lambda: int(ix.sum()), repeat=5)
+    record("exp1c_scan_csr", us_csr, f"meps={E / us_csr:.1f}")
+
+    bip, bix, dsrc, ddst = gart_snap.scan_edges_base_delta()
+    us_gart = timeit(lambda: int(bix.sum()) + int(ddst.sum()), repeat=5)
+    record("exp1c_scan_gart", us_gart,
+           f"meps={E / us_gart:.1f};vs_csr={us_csr / us_gart:.2f}x")
+
+    us_ll = timeit(ll.scan_all_edges, repeat=1, warmup=0)
+    record("exp1c_scan_livegraph_like", us_ll,
+           f"meps={E / us_ll:.3f};gart_speedup={us_ll / us_gart:.1f}x")
+
+    # ---- (d) construction: GraphAr vs CSV
+    tmp_csv = tempfile.mkdtemp()
+    write_csv(tmp_csv, vineyard)
+    tmp_ga = tempfile.mkdtemp()
+    GraphArStore.write(tmp_ga, vineyard, chunk_size=1 << 12)
+
+    us_csv = timeit(lambda: load_csv(tmp_csv), repeat=3)
+    us_ga = timeit(lambda: GraphArStore(tmp_ga).to_csr(), repeat=3)
+    record("exp1d_build_from_csv", us_csv)
+    record("exp1d_build_from_graphar", us_ga,
+           f"speedup={us_csv / us_ga:.1f}x")
+
+    # ---- (d2) chunk pruning: selective label scan reads few chunks
+    ga = GraphArStore(tmp_ga, chunks=[])
+    us_sel = timeit(lambda: GraphArStore(tmp_ga, chunks=[]).scan_vertices(
+        label=2), repeat=3)
+    n_loaded = len(GraphArStore(tmp_ga, chunks=[]).chunks_with_label(2))
+    record("exp1d_graphar_pruned_scan", us_sel,
+           f"chunks_read={n_loaded}/{ga.meta['n_chunks']}")

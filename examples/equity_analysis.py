@@ -1,0 +1,49 @@
+"""Equity analysis (paper §8, Exp-6): find ultimate controllers by
+propagating ownership shares along weighted invest edges on GRAPE.
+
+    PYTHONPATH=src python examples/equity_analysis.py
+"""
+
+import numpy as np
+
+from repro.core import flexbuild
+from repro.engines.grape import algorithms as alg
+from repro.storage.csr import CSRStore
+
+
+def main():
+    rng = np.random.default_rng(7)
+    n_people, n_companies = 4000, 12000
+    n = n_people + n_companies
+
+    # investment edges: person->company and company->company with share
+    # weights normalized per investee to ≤ 1
+    m = 40000
+    src = np.concatenate([
+        rng.integers(0, n_people, m // 4),                     # people invest
+        n_people + rng.integers(0, n_companies, 3 * m // 4),   # cross-holdings
+    ])
+    dst = n_people + rng.integers(0, n_companies, m)
+    w = rng.random(m).astype(np.float32)
+    # normalize incoming share per company
+    tot = np.zeros(n)
+    np.add.at(tot, dst, w)
+    w = (w / np.maximum(tot[dst], 1e-9)).astype(np.float32) * 0.95
+
+    store = CSRStore(n, src, dst, edge_props={"weight": w})
+    dep = flexbuild(store, ["pregel", "grape"], n_frags=4)
+
+    holders = np.zeros(n, np.float32)
+    holders[:n_people] = 1.0
+    shares = np.asarray(alg.equity_shares(dep.engine("grape"), holders,
+                                          max_steps=40))
+    controlled = (shares[n_people:] > 0.51).sum()
+    print(f"companies with a dominant ultimate controller (>51%): "
+          f"{controlled}/{n_companies}")
+    top = np.argsort(shares[n_people:])[-5:][::-1]
+    for c in top:
+        print(f"  company {c}: ultimate-holder share={shares[n_people + c]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

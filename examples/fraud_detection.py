@@ -1,0 +1,63 @@
+"""Real-time fraud detection (paper §8, Exp-5): HiActor + GART.
+
+A stream of orders mutates the GART store while batched fraud-check stored
+procedures run against MVCC snapshots.
+
+    PYTHONPATH=src python examples/fraud_detection.py
+"""
+
+import time
+
+import numpy as np
+
+from repro.core import flexbuild
+from repro.engines.hiactor import HiActorEngine
+from repro.storage.gart import GARTStore
+from repro.storage.generators import E_BUY, snb_store
+
+FRAUD_CHECK = (
+    "MATCH (v:Person {id: $acct})-[b1:BUY]->(:Item)<-[b2:BUY]-(s:Person) "
+    "WHERE s.is_fraud_seed == 1 AND b1.date - b2.date < 5 "
+    "AND b1.date - b2.date > -5 "
+    "WITH v, COUNT(s) AS cnt RETURN cnt AS cnt")
+
+
+def main():
+    base = snb_store(n_persons=3000, n_items=1500, n_posts=256, seed=0)
+    indptr, indices = base.adjacency()
+    src = np.repeat(np.arange(base.n_vertices), np.diff(indptr))
+    gart = GARTStore(base.n_vertices, src, indices,
+                     vertex_props=base.subgraph_props(),
+                     vertex_labels=base.vertex_labels(),
+                     edge_labels=base.edge_labels(),
+                     edge_props={"date": base.edge_prop("date"),
+                                 "rating": base.edge_prop("rating")})
+    rng = np.random.default_rng(1)
+
+    total_checked = 0
+    t0 = time.perf_counter()
+    for wave in range(5):
+        # ---- new orders arrive (dynamic graph updates) ----------------
+        buyers = rng.integers(0, 3000, 64)
+        items = 3000 + rng.integers(0, 1500, 64)
+        version = gart.add_edges(buyers, items, label=E_BUY,
+                                 props={"date": rng.integers(0, 365, 64)})
+
+        # ---- batched fraud checks against a consistent snapshot -------
+        snap = gart.snapshot(version)
+        eng = HiActorEngine(snap)
+        eng.register("fraud", FRAUD_CHECK)
+        params = [{"acct": int(c)} for c in rng.integers(0, 3000, 200)]
+        outs = eng.submit_batch("fraud", params)
+        flagged = sum(1 for o in outs
+                      if len(o["cnt"]) and int(o["cnt"][0]) > 3)
+        total_checked += len(params)
+        print(f"wave {wave}: version={version} checked={len(params)} "
+              f"flagged={flagged}")
+    dt = time.perf_counter() - t0
+    print(f"throughput: {total_checked / dt:.0f} checks/s "
+          f"(batched OLTP over MVCC snapshots)")
+
+
+if __name__ == "__main__":
+    main()

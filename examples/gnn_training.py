@@ -1,0 +1,60 @@
+"""End-to-end driver (paper §7): train GraphSAGE for a few hundred steps
+with the decoupled sampling→training pipeline, checkpoints included.
+
+    PYTHONPATH=src python examples/gnn_training.py [--steps 300]
+"""
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import flexbuild
+from repro.learning.pipeline import DecoupledPipeline
+from repro.learning.trainer import SageTrainer
+from repro.storage.generators import rmat_store
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--workers", type=int, default=2)
+    args = ap.parse_args()
+
+    # graph with learnable structure: labels = f(features)
+    g = rmat_store(scale=12, edge_factor=8, seed=0)
+    n = g.n_vertices
+    rng = np.random.default_rng(0)
+    feats = rng.standard_normal((n, 32)).astype(np.float32)
+    w = rng.standard_normal((32, 4))
+    labels = feats @ w
+    g._vprops["feat"] = feats
+    g._vprops["label"] = labels.argmax(-1).astype(np.int32)
+
+    dep = flexbuild(g, ["sage", "graphlearn"], feature_prop="feat",
+                    label_prop="label")
+    trainer = SageTrainer(dep.engine("graphlearn"), hidden=64, n_classes=4,
+                          fanouts=[10, 5], batch_size=512, lr=0.03)
+
+    pipe = DecoupledPipeline(trainer.sample, n_workers=args.workers, depth=8)
+    t0 = time.perf_counter()
+    losses = []
+    try:
+        for step in range(args.steps):
+            _, batch = pipe.get()
+            losses.append(trainer.train_on(batch))
+            if step % 25 == 0:
+                rate = (step + 1) / (time.perf_counter() - t0)
+                print(f"step={step:4d} loss={losses[-1]:.4f} "
+                      f"steps/s={rate:.2f} "
+                      f"(sampler workers={args.workers})", flush=True)
+    finally:
+        pipe.close()
+    print(f"first-10 mean loss {np.mean(losses[:10]):.4f} -> "
+          f"last-10 mean {np.mean(losses[-10:]):.4f}")
+    print(f"sampler wait {pipe.stats['sampler_wait_s']:.1f}s, "
+          f"trainer wait {pipe.stats['trainer_wait_s']:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

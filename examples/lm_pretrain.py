@@ -1,0 +1,16 @@
+"""Train an assigned-architecture LM (reduced preset) for a few hundred
+steps with the production train loop: checkpoint/restart, prefetch pipeline,
+optional gradient compression.
+
+    PYTHONPATH=src python examples/lm_pretrain.py --arch gemma-7b --steps 200
+"""
+
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or ["--arch", "gemma-7b", "--preset", "smoke",
+                            "--steps", "200", "--seq", "128", "--batch", "8",
+                            "--lr", "3e-3", "--ckpt-dir", "/tmp/lm_ckpt"]
+    sys.exit(main(argv))

@@ -1,0 +1,16 @@
+"""repro — GraphScope Flex (LEGO-like graph computing stack) rebuilt on JAX/TPU.
+
+Layers
+------
+- ``repro.core``        flexbuild composition + GraphIR query compiler
+- ``repro.storage``     GRIN trait protocol + CSR / GART / GraphAr stores
+- ``repro.engines``     Gaia (OLAP), HiActor (OLTP), GRAPE (analytics)
+- ``repro.learning``    decoupled sampling/training GNN stack
+- ``repro.models``      LM training/serving backends (10 assigned archs)
+- ``repro.distributed`` sharding rules, pipeline parallel, compression
+- ``repro.train``       optimizer, train/serve steps, checkpointing
+- ``repro.kernels``     Pallas TPU kernels (+ pure-jnp oracles)
+- ``repro.launch``      mesh, multi-pod dry-run, roofline, train/serve CLIs
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,39 @@
+"""Architecture config registry: ``get_config(arch)`` / ``get_smoke(arch)``."""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.configs import (
+    deepseek_v3_671b,
+    gemma_7b,
+    granite_20b,
+    mistral_nemo_12b,
+    mixtral_8x22b,
+    qwen2_72b,
+    qwen2_vl_72b,
+    rwkv6_7b,
+    whisper_small,
+    zamba2_1p2b,
+)
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig  # noqa: F401
+from repro.configs.shapes import SHAPES, assigned_cells, cell_applicable  # noqa: F401
+
+_MODULES = (
+    mixtral_8x22b, deepseek_v3_671b, zamba2_1p2b, qwen2_vl_72b, whisper_small,
+    gemma_7b, qwen2_72b, mistral_nemo_12b, granite_20b, rwkv6_7b,
+)
+
+REGISTRY: Dict[str, Callable[[], ModelConfig]] = {m.ARCH: m.config for m in _MODULES}
+SMOKE_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {m.ARCH: m.smoke for m in _MODULES}
+ARCHS = tuple(REGISTRY)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in REGISTRY:
+        raise KeyError(f"unknown arch {arch!r}; available: {ARCHS}")
+    return REGISTRY[arch]()
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    return SMOKE_REGISTRY[arch]()

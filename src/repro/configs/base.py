@@ -1,0 +1,181 @@
+"""Model / shape configuration dataclasses shared by the whole framework.
+
+Every assigned architecture is expressed as a :class:`ModelConfig`; the four
+assigned input shapes are :class:`ShapeConfig` presets (see ``shapes.py``).
+Configs are plain frozen dataclasses so they can be hashed into jit caches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts block configuration (GShard/DeepSeek style)."""
+
+    num_experts: int
+    top_k: int
+    expert_ff: int                 # per-expert intermediate width
+    num_shared_experts: int = 0    # DeepSeek-style always-on shared experts
+    capacity_factor: float = 1.25  # for gather/EP dispatch
+    router_dtype: str = "float32"
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2/V3 Multi-head Latent Attention dims."""
+
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 (SSD) block configuration."""
+
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 128               # SSD chunk length
+
+    def n_heads(self, d_model: int) -> int:
+        return (d_model * self.expand) // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    """RWKV6 "Finch" configuration (data-dependent decay)."""
+
+    head_dim: int = 64
+    decay_lora: int = 64           # LoRA rank of the data-dependent decay
+    gate_lora: int = 64
+    chunk: int = 64                # chunked-parallel WKV evaluation
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    """Zamba2-style hybrid: SSM backbone + weight-shared attention block."""
+
+    attn_every: int = 6            # shared attention block applied every N layers
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    # identity -------------------------------------------------------------
+    name: str = "model"
+    family: str = "dense"          # dense|moe|ssm|hybrid|vlm|audio
+    # transformer core -------------------------------------------------------
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 64
+    d_ff: int = 1024
+    vocab: int = 1024
+    # attention flavour ------------------------------------------------------
+    window: Optional[int] = None   # sliding-window attention size (Mixtral SWA)
+    qkv_bias: bool = False         # Qwen2
+    mla: Optional[MLAConfig] = None
+    mrope: bool = False            # Qwen2-VL multimodal 3D RoPE
+    mrope_sections: Tuple[int, ...] = (16, 24, 24)  # t/h/w split of head_dim/2
+    rope_theta: float = 10_000.0
+    # mlp flavour --------------------------------------------------------------
+    geglu: bool = True             # gated MLP (SwiGLU/GeGLU); False => plain GELU MLP
+    gelu_gate: bool = False        # True => GeGLU (gemma), False => SiLU gate
+    moe: Optional[MoEConfig] = None
+    # ssm / rwkv ----------------------------------------------------------------
+    ssm: Optional[SSMConfig] = None
+    rwkv: Optional[RWKVConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    # encoder-decoder (whisper) ---------------------------------------------
+    encdec: bool = False
+    n_enc_layers: int = 0
+    # vlm stub ----------------------------------------------------------------
+    vision_stub: bool = False      # input_specs provides patch embeddings
+    audio_stub: bool = False       # input_specs provides frame embeddings
+    # misc ---------------------------------------------------------------------
+    tie_embeddings: bool = False
+    embed_scale: bool = False      # gemma: embeddings scaled by sqrt(d_model)
+    norm_plus_one: bool = False    # gemma: RMSNorm uses (1 + gamma)
+    mtp_depth: int = 0             # DeepSeek-V3 multi-token prediction modules
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+    # compile strategy -----------------------------------------------------
+    scan_layers: bool = True       # lax.scan over stacked layer params
+    remat: str = "full"            # full|dots|none — activation checkpoint policy
+    attn_block_q: int = 512        # blockwise-attention query block
+    attn_block_kv: int = 1024      # blockwise-attention kv block
+    # perf-iteration knobs (§Perf hillclimbs) --------------------------------
+    kv_cache_dtype: str = "bfloat16"   # "float8_e4m3fn" halves decode memory
+    moe_train_dispatch: str = "auto"   # "scatter_batched" removes GShard
+                                       # dispatch-einsum flops for S>1
+
+    # ------------------------------------------------------------------ helpers
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def subquadratic(self) -> bool:
+        """Eligible for the ``long_500k`` cell (SSM / hybrid / windowed attn)."""
+        return self.family in ("ssm", "hybrid") or self.window is not None
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6·N·D roofline checks)."""
+        from repro.models.model_zoo import count_params_analytic
+
+        return count_params_analytic(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.model_zoo import count_params_analytic
+
+        return count_params_analytic(self, active_only=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # "train" | "prefill" | "decode"
+
+    @property
+    def tokens_per_step(self) -> int:
+        if self.kind == "decode":
+            return self.global_batch          # one new token per sequence
+        return self.seq_len * self.global_batch
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Optimizer / schedule / runtime knobs for the training launcher."""
+
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    grad_clip: float = 1.0
+    optimizer_state_dtype: str = "float32"   # "bfloat16" for the giant configs
+    grad_accum_dtype: str = "float32"        # "bfloat16" for deepseek-v3 @ 1 pod
+    microbatches: int = 1                    # gradient accumulation
+    checkpoint_every: int = 100
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    seed: int = 0

@@ -1,0 +1,34 @@
+"""DeepSeek-V3 671B — MLA, 1 shared + 256 routed top-8 MoE, MTP
+[arXiv:2412.19437; hf]."""
+
+from repro.configs.base import MLAConfig, MoEConfig, ModelConfig
+
+ARCH = "deepseek-v3-671b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH, family="moe",
+        n_layers=61, d_model=7168, n_heads=128, n_kv_heads=128, head_dim=128,
+        d_ff=2048, vocab=129280,
+        moe=MoEConfig(num_experts=256, top_k=8, expert_ff=2048,
+                      num_shared_experts=1),
+        mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512,
+                      qk_nope_head_dim=128, qk_rope_head_dim=64,
+                      v_head_dim=128),
+        mtp_depth=1,
+        geglu=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH + "-smoke", family="moe",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=64, vocab=256,
+        moe=MoEConfig(num_experts=8, top_k=2, expert_ff=64,
+                      num_shared_experts=1, capacity_factor=8.0),
+        mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16,
+                      qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16),
+        mtp_depth=1, geglu=True, attn_block_q=8, attn_block_kv=16,
+    )

@@ -1,0 +1,26 @@
+"""Gemma 7B — GeGLU, head_dim=256, tied embeddings [arXiv:2403.08295; hf]."""
+
+from repro.configs.base import ModelConfig
+
+ARCH = "gemma-7b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH, family="dense",
+        n_layers=28, d_model=3072, n_heads=16, n_kv_heads=16, head_dim=256,
+        d_ff=24576, vocab=256000,
+        geglu=True, gelu_gate=True, tie_embeddings=True,
+        embed_scale=True, norm_plus_one=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH + "-smoke", family="dense",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=32,
+        d_ff=128, vocab=256,
+        geglu=True, gelu_gate=True, tie_embeddings=True,
+        embed_scale=True, norm_plus_one=True,
+        attn_block_q=8, attn_block_kv=16,
+    )

@@ -1,0 +1,23 @@
+"""Granite 20B (code) — llama-arch with MQA (kv=1) [arXiv:2405.04324; hf]."""
+
+from repro.configs.base import ModelConfig
+
+ARCH = "granite-20b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH, family="dense",
+        n_layers=52, d_model=6144, n_heads=48, n_kv_heads=1, head_dim=128,
+        d_ff=24576, vocab=49152,
+        geglu=False,    # GPT-BigCode lineage: plain GELU MLP → ~20 B params
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH + "-smoke", family="dense",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=1, head_dim=16,
+        d_ff=128, vocab=256,
+        geglu=False, attn_block_q=8, attn_block_kv=16,
+    )

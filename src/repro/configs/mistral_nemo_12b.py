@@ -1,0 +1,24 @@
+"""Mistral-Nemo 12B — dense GQA, 128k context
+[hf:mistralai/Mistral-Nemo-Base-2407; hf]."""
+
+from repro.configs.base import ModelConfig
+
+ARCH = "mistral-nemo-12b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH, family="dense",
+        n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8, head_dim=128,
+        d_ff=14336, vocab=131072,
+        geglu=True, rope_theta=1_000_000.0,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH + "-smoke", family="dense",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab=256,
+        geglu=True, attn_block_q=8, attn_block_kv=16,
+    )

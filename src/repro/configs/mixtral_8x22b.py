@@ -1,0 +1,27 @@
+"""Mixtral 8x22B — 8-expert top-2 MoE, GQA kv=8, SWA [arXiv:2401.04088; hf]."""
+
+from repro.configs.base import MoEConfig, ModelConfig
+
+ARCH = "mixtral-8x22b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH, family="moe",
+        n_layers=56, d_model=6144, n_heads=48, n_kv_heads=8, head_dim=128,
+        d_ff=16384, vocab=32768,
+        moe=MoEConfig(num_experts=8, top_k=2, expert_ff=16384),
+        window=4096,                      # sliding-window attention
+        geglu=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH + "-smoke", family="moe",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab=256,
+        moe=MoEConfig(num_experts=4, top_k=2, expert_ff=128,
+                      capacity_factor=8.0),   # dropless at smoke scale
+        window=16, geglu=True, attn_block_q=8, attn_block_kv=16,
+    )

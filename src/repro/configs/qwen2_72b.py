@@ -1,0 +1,23 @@
+"""Qwen2 72B — dense GQA with QKV bias [arXiv:2407.10671; hf]."""
+
+from repro.configs.base import ModelConfig
+
+ARCH = "qwen2-72b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH, family="dense",
+        n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+        d_ff=29568, vocab=152064,
+        qkv_bias=True, geglu=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH + "-smoke", family="dense",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab=256,
+        qkv_bias=True, geglu=True, attn_block_q=8, attn_block_kv=16,
+    )

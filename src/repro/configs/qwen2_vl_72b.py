@@ -1,0 +1,26 @@
+"""Qwen2-VL 72B backbone — M-RoPE, dynamic-resolution vision stub
+[arXiv:2409.12191; hf]."""
+
+from repro.configs.base import ModelConfig
+
+ARCH = "qwen2-vl-72b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH, family="vlm",
+        n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+        d_ff=29568, vocab=152064,
+        qkv_bias=True, mrope=True, mrope_sections=(16, 24, 24),
+        vision_stub=True, geglu=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH + "-smoke", family="vlm",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab=256,
+        qkv_bias=True, mrope=True, mrope_sections=(2, 3, 3),
+        vision_stub=True, geglu=True, attn_block_q=8, attn_block_kv=16,
+    )

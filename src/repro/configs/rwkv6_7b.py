@@ -1,0 +1,26 @@
+"""RWKV6 7B "Finch" — attention-free, data-dependent decay
+[arXiv:2404.05892; hf]."""
+
+from repro.configs.base import ModelConfig, RWKVConfig
+
+ARCH = "rwkv6-7b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH, family="ssm",
+        n_layers=32, d_model=4096, n_heads=64, n_kv_heads=64, head_dim=64,
+        d_ff=14336, vocab=65536,
+        rwkv=RWKVConfig(head_dim=64, decay_lora=64, gate_lora=64, chunk=64),
+        geglu=False,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH + "-smoke", family="ssm",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=128, vocab=256,
+        rwkv=RWKVConfig(head_dim=16, decay_lora=8, gate_lora=8, chunk=8),
+        geglu=False,
+    )

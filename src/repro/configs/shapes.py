@@ -1,0 +1,30 @@
+"""The four assigned input-shape presets (LM-family cells).
+
+``decode_*`` / ``long_*`` lower ``serve_step`` (one new token against a KV/state
+cache of ``seq_len``), NOT ``train_step``. ``long_500k`` requires sub-quadratic
+attention and is skipped for pure full-attention architectures (see
+DESIGN.md §4 and ModelConfig.subquadratic).
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+TRAIN_4K = ShapeConfig(name="train_4k", seq_len=4_096, global_batch=256, kind="train")
+PREFILL_32K = ShapeConfig(name="prefill_32k", seq_len=32_768, global_batch=32, kind="prefill")
+DECODE_32K = ShapeConfig(name="decode_32k", seq_len=32_768, global_batch=128, kind="decode")
+LONG_500K = ShapeConfig(name="long_500k", seq_len=524_288, global_batch=1, kind="decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether an (arch × shape) cell runs, and the reason when it does not."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "long_500k skipped: pure full-attention architecture"
+    return True, ""
+
+
+def assigned_cells(cfg: ModelConfig):
+    """All four shapes with applicability flags for this architecture."""
+    return [(shape, *cell_applicable(cfg, shape)) for shape in SHAPES.values()]

@@ -1,0 +1,27 @@
+"""Whisper-small — encoder-decoder, conv frontend stubbed
+[arXiv:2212.04356; unverified]. 12 encoder + 12 decoder layers."""
+
+from repro.configs.base import ModelConfig
+
+ARCH = "whisper-small"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH, family="audio",
+        n_layers=12, n_enc_layers=12, encdec=True,
+        d_model=768, n_heads=12, n_kv_heads=12, head_dim=64,
+        d_ff=3072, vocab=51865,
+        geglu=False, tie_embeddings=True, audio_stub=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH + "-smoke", family="audio",
+        n_layers=2, n_enc_layers=2, encdec=True,
+        d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=128, vocab=256,
+        geglu=False, tie_embeddings=True, audio_stub=True,
+        attn_block_q=8, attn_block_kv=16,
+    )

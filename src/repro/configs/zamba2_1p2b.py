@@ -1,0 +1,28 @@
+"""Zamba2 1.2B — Mamba2 backbone + weight-shared attention blocks
+[arXiv:2411.15242; hf]."""
+
+from repro.configs.base import HybridConfig, ModelConfig, SSMConfig
+
+ARCH = "zamba2-1.2b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH, family="hybrid",
+        n_layers=38, d_model=2048, n_heads=32, n_kv_heads=32, head_dim=64,
+        d_ff=8192, vocab=32000,
+        ssm=SSMConfig(d_state=64, d_conv=4, expand=2, head_dim=64, chunk=128),
+        hybrid=HybridConfig(attn_every=6),
+        geglu=True, scan_layers=False,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH + "-smoke", family="hybrid",
+        n_layers=4, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=128, vocab=256,
+        ssm=SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=16, chunk=8),
+        hybrid=HybridConfig(attn_every=2),
+        geglu=True, scan_layers=False, attn_block_q=8, attn_block_kv=16,
+    )

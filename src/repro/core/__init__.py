@@ -1,0 +1,1 @@
+from repro.core.flexbuild import flexbuild, Deployment  # noqa: F401

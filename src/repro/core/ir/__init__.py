@@ -1,0 +1,7 @@
+from repro.core.ir.dag import (  # noqa: F401
+    Expand, GetVertex, GroupCount, Limit, LogicalPlan, OrderBy, Pred,
+    Project, Scan, Select, BinExpr, PropRef, Const, Agg, With,
+)
+from repro.core.ir.rbo import apply_rbo  # noqa: F401
+from repro.core.ir.cbo import Catalog, apply_cbo  # noqa: F401
+from repro.core.ir.parser import parse_cypher, parse_gremlin  # noqa: F401

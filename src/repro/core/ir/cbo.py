@@ -1,0 +1,217 @@
+"""Cost-Based Optimization — GLogue-lite (paper §5.2, [54]).
+
+The catalog tracks pattern frequencies from single vertices up to 2-paths
+(label, edge_label, label): exactly the small-k version of GLogue's pattern
+lattice. The CBO reorders a linear match chain so expansion starts from the
+most selective anchor and proceeds by smallest estimated frequency —
+reproducing the paper's example of collapsing a bifurcated logical DAG into
+a linear physical chain anchored at the cheaper side.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.ir.dag import (Const, BinExpr, Expand, GetVertex, LogicalPlan,
+                               Pred, PropRef, Scan, Select)
+
+
+@dataclasses.dataclass
+class Catalog:
+    """Pattern-frequency statistics over a PropertyGraph."""
+
+    n_vertices: int
+    label_counts: Dict[int, int]
+    edge_label_counts: Dict[int, int]
+    # (src_label, edge_label, dst_label, direction) -> count
+    path2: Dict[Tuple[int, int, int, str], int]
+    # (label, prop) -> n_distinct (equality selectivity)
+    distinct: Dict[Tuple[int, str], int]
+    # (src_label, edge_label, direction) -> size-biased fanout E[d²]/E[d]
+    # (a frontier reached *via edges* samples vertices ∝ degree — the
+    # mean-field fanout wildly underestimates zipf joins)
+    size_biased: Dict[Tuple[int, int, str], float] = dataclasses.field(
+        default_factory=dict)
+
+    @staticmethod
+    def build(pg) -> "Catalog":
+        vlab = pg.vlabels
+        elab = pg.elabels
+        indptr, indices = pg.indptr, pg.indices
+        src = np.repeat(np.arange(pg.n_vertices), np.diff(indptr))
+        lc = {int(k): int(v) for k, v in
+              zip(*np.unique(vlab, return_counts=True))}
+        ec = {int(k): int(v) for k, v in
+              zip(*np.unique(elab, return_counts=True))}
+        path2: Dict[Tuple[int, int, int, str], int] = {}
+        trip = np.stack([vlab[src], elab, vlab[indices]], axis=1)
+        uniq, counts = np.unique(trip, axis=0, return_counts=True)
+        for (sl, el, dl), c in zip(uniq, counts):
+            path2[(int(sl), int(el), int(dl), "out")] = int(c)
+            path2[(int(dl), int(el), int(sl), "in")] = int(c)
+
+        sb: Dict[Tuple[int, int, str], float] = {}
+        n = pg.n_vertices
+        for el in ec:
+            m = elab == el
+            for direction, vcol in (("out", src[m]), ("in", indices[m])):
+                deg = np.bincount(vcol, minlength=n).astype(np.float64)
+                for sl in lc:
+                    d = deg[vlab == sl]
+                    tot = d.sum()
+                    if tot > 0:
+                        sb[(int(sl), int(el), direction)] = \
+                            float((d * d).sum() / tot)
+        return Catalog(pg.n_vertices, lc, ec, path2, {}, sb)
+
+    def add_prop_stats(self, pg, label: int, prop: str):
+        ids = pg.vertices(label)
+        self.distinct[(label, prop)] = max(
+            1, len(np.unique(pg.vprop(prop)[ids])))
+
+    # ------------------------------------------------------------ estimates
+    def scan_card(self, label: Optional[int], pred: Optional[Pred]) -> float:
+        base = (self.label_counts.get(label, self.n_vertices)
+                if label is not None else self.n_vertices)
+        if pred is not None:
+            base *= self._pred_selectivity(label, pred)
+        return max(base, 1e-3)
+
+    def _pred_selectivity(self, label, pred: Pred) -> float:
+        # equality on a tracked prop: 1/n_distinct; otherwise 0.1 heuristic
+        expr = pred.expr
+        if (isinstance(expr, BinExpr) and expr.op == "=="
+                and isinstance(expr.left, PropRef)
+                and isinstance(expr.right, Const)):
+            nd = self.distinct.get((label, expr.left.prop))
+            if nd:
+                return 1.0 / nd
+            return 0.01
+        return 0.1
+
+    def expand_fanout(self, src_label: Optional[int], edge_label: Optional[int],
+                      dst_label: Optional[int], direction: str) -> float:
+        """Average out-edges per source vertex for this typed expansion."""
+        if src_label is None or edge_label is None:
+            e = (self.edge_label_counts.get(edge_label,
+                                            sum(self.edge_label_counts.values()))
+                 if edge_label is not None
+                 else sum(self.edge_label_counts.values()))
+            return max(e / max(self.n_vertices, 1), 1e-3)
+        key = (src_label, edge_label, dst_label, direction)
+        if dst_label is None:
+            total = sum(v for (sl, el, dl, d), v in self.path2.items()
+                        if sl == src_label and el == edge_label and d == direction)
+        else:
+            total = self.path2.get(key, 0)
+        n_src = max(self.label_counts.get(src_label, self.n_vertices), 1)
+        return max(total / n_src, 1e-3)
+
+
+def plan_cost(plan: LogicalPlan, catalog: Catalog) -> float:
+    """Estimated total intermediate-result size (the GLogue cost: sum of
+    subgraph frequencies along the execution plan)."""
+    cost = 0.0
+    card = 1.0
+    labels: Dict[str, Optional[int]] = {}
+    hops = 0
+    for op in plan.ops:
+        if isinstance(op, Scan):
+            card = catalog.scan_card(op.label, op.pred)
+            labels[op.alias] = op.label
+            cost += card
+        elif isinstance(op, Expand):
+            src_label = labels.get(op.src)
+            dst_label = op.vertex_label
+            f = catalog.expand_fanout(src_label, op.edge_label, dst_label,
+                                      op.direction)
+            if hops >= 1 and src_label is not None \
+                    and op.edge_label is not None:
+                # edge-reached frontier: use the size-biased fanout
+                f = max(f, catalog.size_biased.get(
+                    (src_label, op.edge_label, op.direction), f))
+            hops += 1
+            card *= f
+            if op.pred is not None:
+                card *= 0.25
+            if op.vertex_pred is not None:
+                card *= 0.1
+            if op.fused_vertex:
+                labels[op.fused_vertex] = op.vertex_label
+            cost += card
+        elif isinstance(op, GetVertex):
+            labels[op.alias] = op.label
+            if op.pred is not None:
+                card *= 0.1
+            cost += card
+        elif isinstance(op, Select):
+            card *= 0.1
+            cost += card
+        else:
+            cost += card
+    return cost
+
+
+def _chain_segments(plan: LogicalPlan):
+    """Split the plan into the match chain (Scan + Expands/GetVertex) and the
+    relational tail; CBO only reorders the chain."""
+    chain: List = []
+    tail: List = []
+    for op in plan.ops:
+        if isinstance(op, (Scan, Expand, GetVertex)) and not tail:
+            chain.append(op)
+        else:
+            tail.append(op)
+    return chain, tail
+
+
+def apply_cbo(plan: LogicalPlan, catalog: Catalog) -> LogicalPlan:
+    """Direction-flip CBO for linear chains: a path pattern
+    (a)-[e1]->(b)-[e2]->(c) can be matched left→right or right→left.
+    Choose the anchor (first Scan) with the lower estimated cost."""
+    chain, tail = _chain_segments(plan)
+    if not chain or not isinstance(chain[0], Scan):
+        return plan
+    reversed_chain = _reverse_chain(chain)
+    if reversed_chain is None:
+        return plan
+    fwd_cost = plan_cost(LogicalPlan(chain), catalog)
+    rev_cost = plan_cost(LogicalPlan(reversed_chain), catalog)
+    best = chain if fwd_cost <= rev_cost else reversed_chain
+    return LogicalPlan(list(best) + list(tail))
+
+
+def _reverse_chain(chain) -> Optional[List]:
+    """Reverse a pure fused linear chain Scan→Expand*→ (after RBO)."""
+    if not all(isinstance(op, (Scan, Expand)) for op in chain):
+        return None
+    expands = chain[1:]
+    if not all(isinstance(e, Expand) and e.fused_vertex for e in expands):
+        return None
+    scan: Scan = chain[0]
+    # aliases along the path
+    aliases = [scan.alias] + [e.fused_vertex for e in expands]
+    labels = {scan.alias: scan.label}
+    preds = {scan.alias: scan.pred}
+    for e in expands:
+        labels[e.fused_vertex] = e.vertex_label
+        preds[e.fused_vertex] = e.vertex_pred
+    new_scan = Scan(aliases[-1], labels[aliases[-1]], preds[aliases[-1]])
+    out: List = [new_scan]
+    for i in range(len(expands) - 1, -1, -1):
+        e = expands[i]
+        tgt = aliases[i]
+        out.append(Expand(
+            src=aliases[i + 1],
+            edge_label=e.edge_label,
+            direction="in" if e.direction == "out" else "out",
+            edge=e.edge,
+            pred=e.pred,
+            fused_vertex=tgt,
+            vertex_label=labels[tgt],
+            vertex_pred=preds[tgt],
+        ))
+    return out

@@ -1,0 +1,234 @@
+"""Code generation: physical GraphIR DAG → executable operator pipeline
+(paper §5.3). The same physical plan compiles to either engine:
+
+- **Gaia** (OLAP): each operator is a vectorized dataflow stage over a row
+  table (SOURCE/FLATMAP/MAP in the paper's mapping);
+- **HiActor** (OLTP): the plan becomes a *stored procedure* parameterized by
+  query arguments; many concurrent queries are batched into one table with
+  a ``__qid__`` column and executed in a single pass (TPU adaptation of
+  actor-level concurrency — see DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.ir.dag import (Agg, Expand, GetVertex, GroupCount, Limit,
+                               LogicalPlan, OrderBy, Pred, Project, Scan,
+                               Select, With, eval_expr)
+
+
+@dataclasses.dataclass
+class Table:
+    """Row-aligned columns: vertex aliases → ids, edge aliases → edge ids,
+    computed names → values."""
+
+    columns: Dict[str, np.ndarray]
+    edge_cols: Dict[str, np.ndarray]
+
+    @property
+    def n_rows(self) -> int:
+        for c in self.columns.values():
+            return len(c)
+        for c in self.edge_cols.values():
+            return len(c)
+        return 0
+
+    def gather(self, rows: np.ndarray) -> "Table":
+        return Table({k: v[rows] for k, v in self.columns.items()},
+                     {k: v[rows] for k, v in self.edge_cols.items()})
+
+    def mask(self, m: np.ndarray) -> "Table":
+        return Table({k: v[m] for k, v in self.columns.items()},
+                     {k: v[m] for k, v in self.edge_cols.items()})
+
+
+def _eval_pred(pred: Pred, table: Table, pg) -> np.ndarray:
+    return np.asarray(
+        eval_expr(pred.expr, _cols_with_labels(table, pg), pg,
+                  table.edge_cols), dtype=bool)
+
+
+def _cols_with_labels(table: Table, pg):
+    """Expose __label__ pseudo-property lookups (used by gremlin hasLabel)."""
+    return table.columns
+
+
+class _LabelAwarePG:
+    """Wraps PropertyGraph so PropRef(alias, '__label__') resolves."""
+
+    def __init__(self, pg):
+        self._pg = pg
+
+    def vprop(self, name):
+        if name == "__label__":
+            return self._pg.vlabels
+        return self._pg.vprop(name)
+
+    def eprop(self, name):
+        if name == "__label__":
+            return self._pg.elabels
+        return self._pg.eprop(name)
+
+    def __getattr__(self, item):
+        return getattr(self._pg, item)
+
+
+def execute_plan(plan: LogicalPlan, pg, *,
+                 params: Optional[Dict[str, Any]] = None,
+                 table: Optional[Table] = None) -> Dict[str, np.ndarray]:
+    """Run a (physical) plan over a PropertyGraph. ``params`` substitutes
+    Const placeholders of the form ``$name`` (stored procedures)."""
+    pg = _LabelAwarePG(pg)
+    out: Dict[str, np.ndarray] = {}
+    for op in plan.ops:
+        op = _bind_params(op, params)
+        if isinstance(op, Scan):
+            ids = pg.vertices(op.label)
+            t = Table({op.alias: ids}, {})
+            if table is not None and table.n_rows:
+                # cartesian with existing rows is not supported; scans after
+                # the first must be correlated via later Select
+                raise NotImplementedError("multiple uncorrelated scans")
+            if op.pred is not None:
+                t = t.mask(_eval_pred(op.pred, t, pg))
+            table = t
+        elif isinstance(op, Expand):
+            src_ids = table.columns[op.src]
+            tails, heads, eids = pg.expand(
+                src_ids, op.edge_label, op.direction)
+            table = table.gather(tails)
+            if op.edge is not None:
+                table.edge_cols[op.edge] = eids
+            if op.fused_vertex is not None:
+                table.columns[op.fused_vertex] = heads
+                if op.vertex_label is not None:
+                    table = table.mask(
+                        pg.vlabels[table.columns[op.fused_vertex]]
+                        == op.vertex_label)
+                if op.vertex_pred is not None:
+                    table = table.mask(_eval_pred(op.vertex_pred, table, pg))
+            else:
+                table.columns["__head__" + (op.edge or "")] = heads
+            if op.pred is not None:
+                table = table.mask(_eval_pred(op.pred, table, pg))
+        elif isinstance(op, GetVertex):
+            heads = table.columns.pop("__head__" + op.edge)
+            table.columns[op.alias] = heads
+            if op.label is not None:
+                table = table.mask(pg.vlabels[table.columns[op.alias]]
+                                   == op.label)
+            if op.pred is not None:
+                table = table.mask(_eval_pred(op.pred, table, pg))
+        elif isinstance(op, Select):
+            table = table.mask(_eval_pred(op.pred, table, pg))
+        elif isinstance(op, With):
+            table = _group(op, table, pg)
+        elif isinstance(op, Project):
+            for expr, name in op.items:
+                out[name] = np.asarray(
+                    eval_expr(expr, table.columns, pg, table.edge_cols))
+            continue
+        elif isinstance(op, OrderBy):
+            key = out.get(op.key)
+            if key is None:
+                key = table.columns[op.key]
+            order = np.argsort(key, kind="stable")
+            if op.desc:
+                order = order[::-1]
+            if out:
+                out = {k: v[order] for k, v in out.items()}
+            else:
+                table = table.gather(order)
+        elif isinstance(op, Limit):
+            if out:
+                out = {k: v[:op.n] for k, v in out.items()}
+            else:
+                table = table.gather(np.arange(min(op.n, table.n_rows)))
+        elif isinstance(op, GroupCount):
+            key = np.asarray(eval_expr(op.key, table.columns, pg,
+                                       table.edge_cols))
+            uniq, counts = np.unique(key, return_counts=True)
+            out["key"] = uniq
+            out[op.name] = counts
+        else:
+            raise NotImplementedError(op)
+    if not out and table is not None:
+        out = dict(table.columns)
+    return out
+
+
+def _group(op: With, table: Table, pg) -> Table:
+    keys = [k for k in op.keys]
+    if keys:
+        key_cols = [np.asarray(table.columns[k] if k in table.columns
+                               else table.edge_cols[k]) for k in keys]
+        if all(np.issubdtype(c.dtype, np.integer) for c in key_cols):
+            # mixed-radix combined key: one 1-D unique instead of a
+            # lexsorted unique(axis=0) over the stacked columns
+            combined = key_cols[0].astype(np.int64)
+            for c in key_cols[1:]:
+                span = int(c.max()) + 1 if len(c) else 1
+                combined = combined * span + c.astype(np.int64)
+            ukey, first_idx, inverse = np.unique(
+                combined, return_index=True, return_inverse=True)
+            uniq = np.stack([c[first_idx] for c in key_cols], axis=1)
+        else:
+            stacked = np.stack(key_cols, axis=1)
+            uniq, inverse = np.unique(stacked, axis=0, return_inverse=True)
+        n_groups = len(uniq)
+    else:
+        inverse = np.zeros(table.n_rows, np.int64)
+        n_groups = 1 if table.n_rows else 0
+        uniq = None
+    new_cols: Dict[str, np.ndarray] = {}
+    for i, k in enumerate(keys):
+        new_cols[k] = uniq[:, i] if uniq is not None else np.zeros(0)
+    for agg in op.aggs:
+        if agg.fn == "count" and agg.expr is None:
+            vals = np.bincount(inverse, minlength=n_groups)
+        else:
+            col = np.asarray(eval_expr(agg.expr, table.columns, pg,
+                                       table.edge_cols), dtype=np.float64)
+            if agg.fn == "count":
+                vals = np.bincount(inverse, minlength=n_groups)
+            elif agg.fn == "sum":
+                vals = np.bincount(inverse, weights=col, minlength=n_groups)
+            elif agg.fn == "avg":
+                s = np.bincount(inverse, weights=col, minlength=n_groups)
+                c = np.bincount(inverse, minlength=n_groups)
+                vals = s / np.maximum(c, 1)
+            elif agg.fn in ("min", "max"):
+                fill = np.inf if agg.fn == "min" else -np.inf
+                vals = np.full(n_groups, fill)
+                fn = np.minimum if agg.fn == "min" else np.maximum
+                getattr(np, f"{agg.fn}imum").at(vals, inverse, col)
+            else:
+                raise NotImplementedError(agg.fn)
+        new_cols[agg.name] = vals
+    return Table(new_cols, {})
+
+
+def _bind_params(op, params: Optional[Dict[str, Any]]):
+    if not params:
+        return op
+
+    from repro.core.ir.dag import BinExpr, Const, PropRef
+
+    def bind_expr(e):
+        if isinstance(e, Const) and isinstance(e.value, str) \
+                and e.value.startswith("$"):
+            return Const(params[e.value[1:]])
+        if isinstance(e, BinExpr):
+            return BinExpr(e.op, bind_expr(e.left), bind_expr(e.right))
+        return e
+
+    changes = {}
+    for f in dataclasses.fields(op):
+        v = getattr(op, f.name)
+        if isinstance(v, Pred):
+            changes[f.name] = Pred(bind_expr(v.expr))
+    return dataclasses.replace(op, **changes) if changes else op

@@ -1,0 +1,200 @@
+"""GraphIR — the unified intermediate representation (paper §5.1).
+
+A query (Cypher or Gremlin) parses into a *logical plan*: a chain of graph
+operators (SCAN, EXPAND_EDGE, GET_VERTEX) and relational operators (SELECT,
+PROJECT, ORDER, GROUP, LIMIT) over the IR data model D: rows of named
+columns whose types are vertices, edges (by id) or primitives.
+
+The physical stage (after RBO/CBO) may contain the fused ExpandVertex
+operator (EdgeVertexFusion) and predicates pushed into scans/expands
+(FilterPushIntoMatch).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+
+# --------------------------------------------------------------- expressions
+@dataclasses.dataclass(frozen=True)
+class PropRef:
+    alias: str          # column (vertex or edge alias)
+    prop: Optional[str]  # None = the id itself
+
+    def refs(self):
+        return {self.alias}
+
+
+@dataclasses.dataclass(frozen=True)
+class Const:
+    value: Any
+
+    def refs(self):
+        return set()
+
+
+@dataclasses.dataclass(frozen=True)
+class BinExpr:
+    op: str             # + - * / == != < <= > >= in and or
+    left: Union["BinExpr", PropRef, Const]
+    right: Union["BinExpr", PropRef, Const]
+
+    def refs(self):
+        return self.left.refs() | self.right.refs()
+
+
+Expr = Union[BinExpr, PropRef, Const]
+
+
+@dataclasses.dataclass(frozen=True)
+class Pred:
+    """A (possibly compound) boolean expression."""
+
+    expr: Expr
+
+    def refs(self):
+        return self.expr.refs()
+
+
+# ------------------------------------------------------------------ operators
+@dataclasses.dataclass(frozen=True)
+class Scan:
+    alias: str
+    label: Optional[int] = None
+    pred: Optional[Pred] = None          # pushed-down vertex predicate
+
+
+@dataclasses.dataclass(frozen=True)
+class Expand:
+    """EXPAND_EDGE: from ``src`` along ``edge_label``; edge alias ``edge``."""
+
+    src: str
+    edge_label: Optional[int]
+    direction: str = "out"               # out|in
+    edge: Optional[str] = None
+    pred: Optional[Pred] = None          # pushed-down edge predicate
+    fused_vertex: Optional[str] = None   # set by EdgeVertexFusion
+    vertex_label: Optional[int] = None   # label filter on the fused vertex
+    vertex_pred: Optional[Pred] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class GetVertex:
+    """Materialize the head vertex of the edge produced by prior Expand."""
+
+    edge: str
+    alias: str
+    label: Optional[int] = None
+    pred: Optional[Pred] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Select:
+    pred: Pred
+
+
+@dataclasses.dataclass(frozen=True)
+class Project:
+    items: Tuple[Tuple[Expr, str], ...]   # (expr, out name)
+
+
+@dataclasses.dataclass(frozen=True)
+class Agg:
+    fn: str                               # count|sum|min|max|avg
+    expr: Optional[Expr]                  # None for count(*)
+    name: str
+
+
+@dataclasses.dataclass(frozen=True)
+class With:
+    """Group by ``keys`` computing ``aggs`` (Cypher WITH ... , COUNT(..))."""
+
+    keys: Tuple[str, ...]                 # aliases kept as group keys
+    aggs: Tuple[Agg, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupCount:
+    key: Expr
+    name: str = "count"
+
+
+@dataclasses.dataclass(frozen=True)
+class OrderBy:
+    key: str
+    desc: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class Limit:
+    n: int
+
+
+Op = Union[Scan, Expand, GetVertex, Select, Project, With, GroupCount,
+           OrderBy, Limit]
+
+
+@dataclasses.dataclass
+class LogicalPlan:
+    ops: List[Op]
+
+    def __iter__(self):
+        return iter(self.ops)
+
+    def pretty(self) -> str:
+        return "\n".join(f"  {i}: {op}" for i, op in enumerate(self.ops))
+
+
+# -------------------------------------------------------------- evaluation
+import numpy as np  # noqa: E402
+
+
+def eval_expr(expr: Expr, columns: Dict[str, np.ndarray],
+              pg, edge_cols: Dict[str, np.ndarray]) -> np.ndarray:
+    """Evaluate an expression over the row table. ``columns`` maps vertex
+    aliases → vertex ids; ``edge_cols`` maps edge aliases → edge ids."""
+    if isinstance(expr, Const):
+        return expr.value
+    if isinstance(expr, PropRef):
+        if expr.alias in edge_cols:
+            eids = edge_cols[expr.alias]
+            if expr.prop is None:
+                return eids
+            return pg.eprop(expr.prop)[eids]
+        ids = columns[expr.alias]
+        if expr.prop is None:
+            return ids
+        return pg.vprop(expr.prop)[ids]
+    if isinstance(expr, BinExpr):
+        l = eval_expr(expr.left, columns, pg, edge_cols)
+        r = eval_expr(expr.right, columns, pg, edge_cols)
+        op = expr.op
+        if op == "+":
+            return l + r
+        if op == "-":
+            return l - r
+        if op == "*":
+            return l * r
+        if op == "/":
+            return l / r
+        if op == "==":
+            return l == r
+        if op == "!=":
+            return l != r
+        if op == "<":
+            return l < r
+        if op == "<=":
+            return l <= r
+        if op == ">":
+            return l > r
+        if op == ">=":
+            return l >= r
+        if op == "in":
+            return np.isin(l, r)
+        if op == "and":
+            return np.logical_and(l, r)
+        if op == "or":
+            return np.logical_or(l, r)
+        raise ValueError(f"unknown op {op}")
+    raise TypeError(type(expr))

@@ -1,0 +1,350 @@
+"""Mini Cypher / Gremlin front-ends → GraphIR logical plans (paper §5.1).
+
+The supported subsets cover the paper's running examples (Fig. 5 and the
+fraud-detection query of §8): linear MATCH path patterns with inline
+property maps, WHERE with conjunctions / arithmetic over vertex & edge
+properties / IN lists, WITH aggregation, RETURN projection, ORDER BY,
+LIMIT; Gremlin V()/hasLabel/has/out/in/both/values/where chains.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.ir.dag import (Agg, BinExpr, Const, Expand, GetVertex, Limit,
+                               LogicalPlan, OrderBy, Pred, Project, PropRef,
+                               Scan, Select, With)
+from repro.storage.generators import EDGE_NAMES, LABEL_NAMES
+
+
+# ------------------------------------------------------------- expressions
+_TOKEN = re.compile(r"""
+    (?P<num>-?\d+\.?\d*)
+  | (?P<list>\[[^\]]*\])
+  | (?P<str>'[^']*'|"[^\"]*")
+  | (?P<prop>[A-Za-z_]\w*\.[A-Za-z_]\w*)
+  | (?P<ident>[A-Za-z_]\w*)
+  | (?P<op><=|>=|<>|!=|==?|<|>|\+|-|\*|/|\(|\))
+  | (?P<ws>\s+)
+""", re.X)
+
+_CMP = {"=": "==", "==": "==", "!=": "!=", "<>": "!=", "<": "<", "<=": "<=",
+        ">": ">", ">=": ">="}
+
+
+def _tokenize(s: str) -> List[Tuple[str, str]]:
+    out = []
+    pos = 0
+    while pos < len(s):
+        m = _TOKEN.match(s, pos)
+        if not m:
+            raise SyntaxError(f"bad token at {s[pos:pos+20]!r}")
+        pos = m.end()
+        kind = m.lastgroup
+        if kind != "ws":
+            out.append((kind, m.group()))
+    return out
+
+
+class _ExprParser:
+    """Precedence: or < and < cmp/IN < add < mul < atom."""
+
+    def __init__(self, tokens):
+        self.toks = tokens
+        self.i = 0
+
+    def peek(self):
+        return self.toks[self.i] if self.i < len(self.toks) else (None, None)
+
+    def take(self):
+        t = self.peek()
+        self.i += 1
+        return t
+
+    def parse(self):
+        return self._or()
+
+    def _or(self):
+        left = self._and()
+        while self.peek() == ("ident", "OR"):
+            self.take()
+            left = BinExpr("or", left, self._and())
+        return left
+
+    def _and(self):
+        left = self._cmp()
+        while self.peek() == ("ident", "AND"):
+            self.take()
+            left = BinExpr("and", left, self._cmp())
+        return left
+
+    def _cmp(self):
+        left = self._add()
+        kind, val = self.peek()
+        if kind == "op" and val in _CMP:
+            self.take()
+            return BinExpr(_CMP[val], left, self._add())
+        if (kind, val) == ("ident", "IN"):
+            self.take()
+            return BinExpr("in", left, self._add())
+        return left
+
+    def _add(self):
+        left = self._mul()
+        while True:
+            kind, val = self.peek()
+            if kind == "op" and val in ("+", "-"):
+                self.take()
+                left = BinExpr(val, left, self._mul())
+            else:
+                return left
+
+    def _mul(self):
+        left = self._atom()
+        while True:
+            kind, val = self.peek()
+            if kind == "op" and val in ("*", "/"):
+                self.take()
+                left = BinExpr(val, left, self._atom())
+            else:
+                return left
+
+    def _atom(self):
+        kind, val = self.take()
+        if kind == "num":
+            return Const(float(val) if "." in val else int(val))
+        if kind == "str":
+            return Const(val[1:-1])
+        if kind == "list":
+            items = [x.strip() for x in val[1:-1].split(",") if x.strip()]
+            return Const(np.array([float(x) if "." in x else int(x)
+                                   for x in items]))
+        if kind == "prop":
+            alias, prop = val.split(".")
+            return PropRef(alias, prop)
+        if kind == "ident":
+            return PropRef(val, None)
+        if (kind, val) == ("op", "("):
+            e = self.parse()
+            k, v = self.take()
+            assert (k, v) == ("op", ")"), "unbalanced parens"
+            return e
+        raise SyntaxError(f"unexpected {kind} {val!r}")
+
+
+def parse_expr(s: str):
+    # normalize keywords
+    s = re.sub(r"\b(and)\b", "AND", s, flags=re.I)
+    s = re.sub(r"\b(or)\b", "OR", s, flags=re.I)
+    s = re.sub(r"\b(in)\b", "IN", s, flags=re.I)
+    return _ExprParser(_tokenize(s)).parse()
+
+
+# ------------------------------------------------------------------ Cypher
+_NODE = re.compile(r"\(\s*(?P<alias>\w+)?\s*(?::(?P<label>\w+))?"
+                   r"\s*(?P<props>\{[^}]*\})?\s*\)")
+_EDGE = re.compile(r"(?P<l><)?-\s*(?:\[\s*(?P<alias>\w+)?\s*(?::(?P<label>\w+))?"
+                   r"\s*\])?\s*-(?P<r>>)?")
+
+
+def _props_to_pred(alias: str, props: Optional[str]):
+    if not props:
+        return None
+    inner = props.strip()[1:-1]
+    parts = []
+    for kv in inner.split(","):
+        if not kv.strip():
+            continue
+        k, v = kv.split(":")
+        v = v.strip()
+        if v.startswith("$"):
+            value = Const(v)                 # stored-procedure parameter
+        elif v[0] in "'\"":
+            value = Const(v[1:-1])
+        else:
+            value = Const(float(v) if "." in v else int(v))
+        parts.append(BinExpr("==", PropRef(alias, k.strip()), value))
+    out = parts[0]
+    for p in parts[1:]:
+        out = BinExpr("and", out, p)
+    return Pred(out)
+
+
+def _parse_pattern(pattern: str, seen: set, anon_counter: List[int]) -> List:
+    """One comma-separated MATCH pattern → list of Scan/Expand+GetVertex."""
+    ops: List = []
+    pos = 0
+    m = _NODE.match(pattern, pos)
+    if not m:
+        raise SyntaxError(f"pattern must start with a node: {pattern!r}")
+
+    def node_info(m):
+        alias = m.group("alias")
+        if alias is None:
+            anon_counter[0] += 1
+            alias = f"_v{anon_counter[0]}"
+        label = LABEL_NAMES.get(m.group("label")) if m.group("label") else None
+        return alias, label, _props_to_pred(alias, m.group("props"))
+
+    alias, label, pred = node_info(m)
+    if alias not in seen:
+        ops.append(Scan(alias, label, pred))
+        seen.add(alias)
+    prev = alias
+    pos = m.end()
+    while pos < len(pattern):
+        em = _EDGE.match(pattern, pos)
+        if not em:
+            break
+        direction = "in" if em.group("l") else "out"
+        e_alias = em.group("alias")
+        if e_alias is None:
+            anon_counter[0] += 1
+            e_alias = f"_e{anon_counter[0]}"
+        e_label = (EDGE_NAMES.get(em.group("label"))
+                   if em.group("label") else None)
+        pos = em.end()
+        nm = _NODE.match(pattern, pos)
+        if not nm:
+            raise SyntaxError(f"expected node after edge at {pattern[pos:]!r}")
+        n_alias, n_label, n_pred = node_info(nm)
+        pos = nm.end()
+        ops.append(Expand(src=prev, edge_label=e_label, direction=direction,
+                          edge=e_alias))
+        ops.append(GetVertex(edge=e_alias, alias=n_alias, label=n_label,
+                             pred=n_pred))
+        seen.add(n_alias)
+        prev = n_alias
+    return ops
+
+
+_CLAUSE = re.compile(
+    r"\b(MATCH|WHERE|WITH|RETURN|ORDER BY|LIMIT)\b", re.I)
+
+
+def parse_cypher(query: str) -> LogicalPlan:
+    query = re.sub(r"/\*.*?\*/", "", query, flags=re.S)
+    query = " ".join(query.split())
+    # split into clauses
+    parts = []
+    idx = [(m.start(), m.group().upper()) for m in _CLAUSE.finditer(query)]
+    for i, (start, name) in enumerate(idx):
+        end = idx[i + 1][0] if i + 1 < len(idx) else len(query)
+        body = query[start + len(name):end].strip()
+        parts.append((name, body))
+
+    ops: List = []
+    seen: set = set()
+    anon = [0]
+    for name, body in parts:
+        if name == "MATCH":
+            for pattern in _split_patterns(body):
+                ops.extend(_parse_pattern(pattern, seen, anon))
+        elif name == "WHERE":
+            ops.append(Select(Pred(parse_expr(body))))
+        elif name == "WITH":
+            keys: List[str] = []
+            aggs: List[Agg] = []
+            for item in body.split(","):
+                item = item.strip()
+                am = re.match(r"(COUNT|SUM|MIN|MAX|AVG)\s*\(\s*([\w\.\*]+)\s*\)"
+                              r"\s+AS\s+(\w+)", item, re.I)
+                if am:
+                    fn = am.group(1).lower()
+                    target = am.group(2)
+                    expr = None if target == "*" else parse_expr(target)
+                    aggs.append(Agg(fn, expr, am.group(3)))
+                else:
+                    keys.append(item)
+            ops.append(With(tuple(keys), tuple(aggs)))
+            seen |= {a.name for a in aggs}
+        elif name == "RETURN":
+            items = []
+            for item in body.split(","):
+                item = item.strip()
+                am = re.match(r"(.+?)\s+AS\s+(\w+)$", item, re.I)
+                if am:
+                    items.append((parse_expr(am.group(1)), am.group(2)))
+                else:
+                    items.append((parse_expr(item), item.replace(".", "_")))
+            ops.append(Project(tuple(items)))
+        elif name == "ORDER BY":
+            desc = bool(re.search(r"\bDESC\b", body, re.I))
+            key = re.sub(r"\b(ASC|DESC)\b", "", body, flags=re.I).strip()
+            ops.append(OrderBy(key.replace(".", "_"), desc))
+        elif name == "LIMIT":
+            ops.append(Limit(int(body)))
+    return LogicalPlan(ops)
+
+
+def _split_patterns(body: str) -> List[str]:
+    """Split comma-separated patterns (commas inside () or {} don't count)."""
+    out, depth, cur = [], 0, []
+    for ch in body:
+        if ch in "({[":
+            depth += 1
+        elif ch in ")}]":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur).strip())
+    return out
+
+
+# ----------------------------------------------------------------- Gremlin
+_GREMLIN_STEP = re.compile(r"\.(\w+)\(([^)]*)\)")
+
+
+def parse_gremlin(query: str) -> LogicalPlan:
+    """g.V().hasLabel('X').has('p', v).out('E').in_('E').values('p')…"""
+    query = query.strip()
+    if not query.startswith("g.V()"):
+        raise SyntaxError("gremlin query must start with g.V()")
+    ops: List = []
+    anon = [0]
+    cur_alias = "v0"
+    ops.append(Scan(cur_alias, None, None))
+    n_v = 0
+    for m in _GREMLIN_STEP.finditer(query[len("g.V()"):]):
+        step, rawargs = m.group(1), m.group(2)
+        args = [a.strip().strip("'\"") for a in rawargs.split(",")] \
+            if rawargs.strip() else []
+        if step == "hasLabel":
+            label = LABEL_NAMES[args[0]]
+            ops.append(Select(Pred(BinExpr(
+                "==", PropRef(cur_alias, "__label__"), Const(label)))))
+        elif step == "has":
+            prop, value = args[0], args[1]
+            try:
+                value = float(value) if "." in value else int(value)
+            except ValueError:
+                pass
+            ops.append(Select(Pred(BinExpr(
+                "==", PropRef(cur_alias, prop), Const(value)))))
+        elif step in ("out", "in_", "in", "both"):
+            direction = "out" if step == "out" else "in"
+            elabel = EDGE_NAMES.get(args[0]) if args else None
+            anon[0] += 1
+            e_alias = f"_e{anon[0]}"
+            n_v += 1
+            new_alias = f"v{n_v}"
+            ops.append(Expand(src=cur_alias, edge_label=elabel,
+                              direction=direction, edge=e_alias))
+            ops.append(GetVertex(edge=e_alias, alias=new_alias))
+            cur_alias = new_alias
+        elif step == "values":
+            ops.append(Project(((PropRef(cur_alias, args[0]), args[0]),)))
+        elif step == "count":
+            ops.append(With((), (Agg("count", None, "count"),)))
+        elif step == "limit":
+            ops.append(Limit(int(args[0])))
+        else:
+            raise SyntaxError(f"unsupported gremlin step {step}")
+    return LogicalPlan(ops)

@@ -1,0 +1,115 @@
+"""Gradient compression for cross-pod data parallelism.
+
+Inter-pod links are the slow tier (DCN vs ICI); compressing the gradient
+all-reduce is the standard mitigation at 1000+ node scale. Two schemes, both
+with error feedback (EF keeps the *accumulated* quantization error and adds
+it back next step — provably preserves SGD convergence):
+
+- ``int8``: per-block scale quantization (4× wire reduction vs fp32,
+  2× vs bf16);
+- ``topk``: magnitude sparsification keeping a fraction of entries
+  (wire ≈ 2·k·(4+4) bytes).
+
+``make_grad_transform`` plugs into ``make_train_step(grad_transform=…)`` as
+a quantize→dequantize round-trip (what the wire would carry); the EF state
+variant is used by the fault-tolerance-aware training loop.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 2048
+
+
+def quantize_int8(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-block symmetric int8 quantization. Returns (q, scales)."""
+    flat = g.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(blocks / jnp.maximum(scale, 1e-12)), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray,
+                    shape: Tuple[int, ...]) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def roundtrip_int8(g: jnp.ndarray) -> jnp.ndarray:
+    q, s = quantize_int8(g.astype(jnp.float32))
+    return dequantize_int8(q, s, g.shape).astype(g.dtype)
+
+
+def topk_mask(g: jnp.ndarray, frac: float) -> jnp.ndarray:
+    """Keep the top-|frac| fraction by magnitude (per leaf)."""
+    flat = jnp.abs(g.reshape(-1))
+    k = max(1, int(flat.shape[0] * frac))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return jnp.where(jnp.abs(g) >= thresh, g, 0.0)
+
+
+def make_grad_transform(kind: str = "int8", frac: float = 0.01) -> Callable:
+    """Stateless wire round-trip (no error feedback)."""
+    if kind == "int8":
+        return lambda grads: jax.tree_util.tree_map(roundtrip_int8, grads)
+    if kind == "topk":
+        return lambda grads: jax.tree_util.tree_map(
+            functools.partial(topk_mask, frac=frac), grads)
+    if kind == "none":
+        return lambda grads: grads
+    raise KeyError(kind)
+
+
+# ------------------------------------------------------------ error feedback
+def ef_init(params) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def ef_compress(grads, residual, kind: str = "int8", frac: float = 0.01):
+    """(grads, residual) → (wire grads, new residual)."""
+    rt = make_grad_transform(kind, frac)
+
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        wire = rt(corrected) if kind == "none" else None
+        if kind == "int8":
+            wire = roundtrip_int8(corrected)
+        elif kind == "topk":
+            wire = topk_mask(corrected, frac)
+        else:
+            wire = corrected
+        return wire, corrected - wire
+
+    out = jax.tree_util.tree_map(one, grads, residual)
+    wire = jax.tree_util.tree_map(lambda t: t[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    new_res = jax.tree_util.tree_map(lambda t: t[1], out,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+    return wire, new_res
+
+
+def wire_bytes(grads, kind: str = "int8", frac: float = 0.01) -> int:
+    """Bytes this scheme would put on the wire (for the roofline collective
+    term: compressed DP all-reduce)."""
+    total = 0
+    for g in jax.tree_util.tree_leaves(grads):
+        n = g.size
+        if kind == "int8":
+            total += n + 4 * (n // BLOCK + 1)
+        elif kind == "topk":
+            total += int(n * frac) * 8
+        else:
+            total += n * 4
+    return total

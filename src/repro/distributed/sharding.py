@@ -1,0 +1,173 @@
+"""Logical-axis sharding rules (MaxText-style) for the whole framework.
+
+Every parameter / activation dimension carries a *logical* axis name
+("embed", "heads", "act_batch", ...). A :class:`MeshRules` table maps logical
+names to mesh axes. Building a concrete ``PartitionSpec`` applies two
+safety passes so one rules table serves all 10 architectures:
+
+1. **divisibility stripping** — a mesh axis is dropped from a dim whose size
+   it does not divide (e.g. ``kv_heads=8`` cannot shard over ``model=16``;
+   granite's MQA ``kv_heads=1`` is replicated);
+2. **duplicate stripping** — a mesh axis may appear only once per spec
+   (e.g. deepseek experts take ``model``, so ``expert_ff`` is then
+   replicated on that weight, while mixtral's 8 experts don't divide 16 so
+   the *expert* dim is stripped and ``expert_ff`` keeps ``model``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Tuple[Optional[str], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    """Logical-axis → mesh-axes mapping. ``()`` means replicate."""
+
+    batch: Tuple[str, ...] = ("pod", "data")
+    fsdp: Tuple[str, ...] = ("data",)          # weight "embed"/stacked dim
+    tensor: Tuple[str, ...] = ("model",)       # heads/ffn/vocab
+    expert: Tuple[str, ...] = ("model",)       # MoE expert dim
+    seq: Tuple[str, ...] = ()                  # sequence parallel (off by default)
+    cache_seq: Tuple[str, ...] = ("model",)    # decode KV-cache sequence dim
+    stage: Tuple[str, ...] = ()                # pipeline stages (hillclimb)
+
+    def table(self) -> Dict[str, Tuple[str, ...]]:
+        t = {
+            # --- weight dims -------------------------------------------------
+            "layers": (),
+            "embed": self.fsdp,
+            "heads": self.tensor,
+            "kv_heads": self.tensor,
+            "head_dim": (),
+            "ffn": self.tensor,
+            "vocab": self.tensor,
+            "expert": self.expert,
+            "expert_ff": self.tensor,
+            "q_lora": (),
+            "kv_lora": (),
+            "state": (),
+            "conv": (),
+            "inner": self.tensor,              # SSM/RWKV inner dim
+            "rwkv_lora": (),
+            # --- activation dims --------------------------------------------
+            "act_batch": self.batch,
+            "act_seq": self.seq,
+            "act_embed": (),
+            "act_heads": self.tensor,
+            "act_ffn": self.tensor,
+            "act_expert": self.expert,
+            "act_vocab": self.tensor,
+            "act_kv_seq": self.cache_seq,
+            "act_inner": self.tensor,
+            "act_state": (),
+        }
+        return t
+
+    def restrict_to(self, mesh_axes: Sequence[str]) -> "MeshRules":
+        """Drop mesh axes not present in the mesh (single-pod has no 'pod')."""
+        def keep(axes: Tuple[str, ...]) -> Tuple[str, ...]:
+            return tuple(a for a in axes if a in mesh_axes)
+
+        return MeshRules(
+            **{f.name: keep(getattr(self, f.name)) for f in dataclasses.fields(self)}
+        )
+
+
+def logical_to_spec(
+    axes: Axes,
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: MeshRules,
+) -> P:
+    """Build a PartitionSpec with divisibility + duplicate stripping."""
+    table = rules.restrict_to(mesh.axis_names).table()
+    used: set = set()
+    out = []
+    for dim, name in enumerate(axes):
+        if name is None:
+            out.append(None)
+            continue
+        mesh_axes = table.get(name, ())
+        picked = []
+        size = shape[dim]
+        for ax in mesh_axes:
+            if ax in used:
+                continue
+            n = mesh.shape[ax]
+            if size % n != 0:
+                continue
+            picked.append(ax)
+            used.add(ax)
+            size //= n
+        if not picked:
+            out.append(None)
+        elif len(picked) == 1:
+            out.append(picked[0])
+        else:
+            out.append(tuple(picked))
+    # trim trailing Nones for a tidy spec
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def shardings_for_tree(tree: Any, axes_tree: Any, mesh: Mesh, rules: MeshRules):
+    """NamedShardings for a pytree of arrays/ShapeDtypeStructs.
+
+    ``axes_tree`` mirrors ``tree`` with tuples of logical axis names as
+    leaves (tuples are leaves here, arrays are leaves there).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    axes_leaves = treedef.flatten_up_to(axes_tree)
+    shardings = [
+        NamedSharding(mesh, logical_to_spec(ax, leaf.shape, mesh, rules))
+        for leaf, ax in zip(leaves, axes_leaves)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, shardings)
+
+
+def constrain(x: jnp.ndarray, axes: Axes, mesh: Optional[Mesh] = None,
+              rules: Optional[MeshRules] = None) -> jnp.ndarray:
+    """``with_sharding_constraint`` by logical axes; no-op outside a mesh."""
+    if mesh is None:
+        mesh = _current_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    if rules is None:
+        rules = _CURRENT_RULES[-1] if _CURRENT_RULES else MeshRules()
+    spec = logical_to_spec(axes, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _current_mesh() -> Optional[Mesh]:
+    try:
+        env = jax.interpreters.pxla.thread_resources.env
+        mesh = env.physical_mesh
+        return None if mesh.empty else mesh
+    except Exception:
+        return None
+
+
+# A tiny dynamic-scope stack so model code can say ``constrain(x, axes)``
+# without plumbing rules everywhere; launchers push the active rules.
+_CURRENT_RULES: list = []
+
+
+class use_rules:
+    def __init__(self, rules: MeshRules):
+        self.rules = rules
+
+    def __enter__(self):
+        _CURRENT_RULES.append(self.rules)
+        return self.rules
+
+    def __exit__(self, *exc):
+        _CURRENT_RULES.pop()
+        return False

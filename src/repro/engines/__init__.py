@@ -1,0 +1,2 @@
+from repro.engines.gaia import GaiaEngine  # noqa: F401
+from repro.engines.hiactor import HiActorEngine  # noqa: F401

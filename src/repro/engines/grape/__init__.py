@@ -1,0 +1,2 @@
+from repro.engines.grape.engine import GrapeEngine  # noqa: F401
+from repro.engines.grape import algorithms  # noqa: F401

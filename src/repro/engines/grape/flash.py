@@ -1,0 +1,61 @@
+"""FLASH — flexible control flow beyond fixed-point (paper §6, [58]).
+
+FLASH programs manipulate *vertex sets* (dense boolean masks) with three
+primitives, allowing non-neighbor communication (arbitrary gather/scatter by
+vertex id — e.g. pointer-jumping connected components):
+
+- ``vset(pred)``            — filter a vertex set
+- ``push(vs, value_fn)``    — emit along edges from a set (neighbor comm)
+- ``pull_at(idx)``          — read state at arbitrary vertex ids (non-neighbor)
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.engines.grape.engine import GrapeEngine
+
+
+class FlashContext:
+    def __init__(self, engine: GrapeEngine):
+        self.engine = engine
+        self.n = engine.frags.n_vertices
+        self.deg = engine.out_degree.astype(jnp.float32)
+
+    def all_vertices(self) -> jnp.ndarray:
+        return jnp.ones((self.n,), bool)
+
+    def vset(self, mask_or_pred) -> jnp.ndarray:
+        if callable(mask_or_pred):
+            return mask_or_pred(jnp.arange(self.n))
+        return mask_or_pred
+
+    def push(self, vs: jnp.ndarray, values: jnp.ndarray,
+             combiner: str = "sum", use_weights: bool = False) -> jnp.ndarray:
+        """Emit ``values`` along out-edges of vertices in ``vs``; returns the
+        combined inbox [N]."""
+        if combiner == "sum":
+            emitted = jnp.where(vs, values, 0.0)
+        elif combiner == "min":
+            emitted = jnp.where(vs, values, jnp.inf)
+        else:
+            emitted = jnp.where(vs, values, -jnp.inf)
+        owned = self.engine.owned_view(emitted)
+        return self.engine.superstep(owned, combiner, use_weights)
+
+    @staticmethod
+    def pull_at(state: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+        """Non-neighbor communication: read state at arbitrary vertices."""
+        return state[idx]
+
+    @staticmethod
+    def scatter_to(state: jnp.ndarray, idx: jnp.ndarray, values,
+                   combiner: str = "min") -> jnp.ndarray:
+        if combiner == "sum":
+            return state.at[idx].add(values)
+        if combiner == "min":
+            return state.at[idx].min(values)
+        return state.at[idx].max(values)

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+- ``flash_attention`` — blockwise online-softmax attention (LM prefill/train)
+- ``spmv``            — blocked-ELL sparse matrix–vector product (the GRAPE
+                        PageRank/analytics scatter hot loop; see DESIGN.md §2
+                        for the GPU→TPU adaptation: row bucketing replaces
+                        warp-per-row / work stealing)
+- ``segment_sum``     — tiled one-hot segment reduction (message combining)
+
+Each kernel: ``<name>.py`` (pl.pallas_call + BlockSpec), a jitted wrapper in
+``ops.py`` (interpret-mode switch + pure-jnp fallback) and an oracle in
+``ref.py``; tests sweep shapes/dtypes against the oracle in interpret mode.
+"""

@@ -1,0 +1,111 @@
+"""Pallas TPU flash attention (blockwise online softmax).
+
+Grid ``(B·H, n_q, n_kv)`` — the kv axis is the minor (sequential) grid dim on
+TPU, so the fp32 running max / denominator / accumulator live in VMEM
+scratch across kv iterations. Causal and sliding-window masks both clamp the
+*executed* kv range via ``pl.when`` (skipped blocks cost no MXU work).
+
+Block shapes default to (128, 128) — MXU-aligned for head_dim multiples of
+128; the ops.py wrapper pads head_dim when needed.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  block_q: int, block_kv: int, n_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    run = jnp.asarray(True)
+    if causal:
+        run = run & (ki * block_kv <= qi * block_q + block_q - 1)
+    if window is not None:
+        run = run & ((ki + 1) * block_kv > qi * block_q - window + 1)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale      # [bq, bkv]
+        if causal or window is not None:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 0)
+            kpos = ki * block_kv + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 1)
+            mask = jnp.ones((block_q, block_kv), bool)
+            if causal:
+                mask &= kpos <= qpos
+            if window is not None:
+                mask &= kpos > qpos - window
+            s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                         causal: bool = True, window: Optional[int] = None,
+                         scale: Optional[float] = None,
+                         block_q: int = 128, block_kv: int = 128,
+                         interpret: bool = False) -> jnp.ndarray:
+    """q:[BH, S, D], k/v:[BH, T, D] (heads pre-flattened, GQA pre-broadcast)."""
+    BH, S, D = q.shape
+    T = k.shape[1]
+    assert S % block_q == 0 and T % block_kv == 0, (S, T, block_q, block_kv)
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    n_q, n_kv = S // block_q, T // block_kv
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_kv=block_kv, n_kv=n_kv)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_kv, D), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_kv, D), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

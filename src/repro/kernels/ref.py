@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  scale: Optional[float] = None) -> jnp.ndarray:
+    """q:[BH,S,D], k/v:[BH,T,D] — dense softmax attention in fp32."""
+    BH, S, D = q.shape
+    T = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    s = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal or window is not None:
+        qpos = jnp.arange(S)[:, None]
+        kpos = jnp.arange(T)[None, :]
+        mask = jnp.ones((S, T), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bst,btd->bsd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def spmv_ref(indices: jnp.ndarray, weights: jnp.ndarray,
+             x: jnp.ndarray) -> jnp.ndarray:
+    """ELL SpMV oracle. indices/weights [N,W]; −1 ⇒ padding."""
+    safe = jnp.maximum(indices, 0)
+    g = x.astype(jnp.float32)[safe]
+    vals = jnp.where(indices >= 0, g * weights.astype(jnp.float32), 0.0)
+    return jnp.sum(vals, axis=1)
+
+
+def segment_sum_ref(vals: jnp.ndarray, segs: jnp.ndarray,
+                    n_out: int) -> jnp.ndarray:
+    keep = segs >= 0
+    return jnp.zeros((n_out,), jnp.float32).at[
+        jnp.where(keep, segs, 0)
+    ].add(jnp.where(keep, vals.astype(jnp.float32), 0.0))
+
+
+def wkv_ref(r, k, v, lw, u, state0):
+    """Sequential per-token RWKV6 WKV recurrence (oracle for the chunked
+    form in repro.models.rwkv6). r,k,v,lw:[B,S,H,P]; u:[H,P]; state:[B,H,P,P]."""
+    B, S, H, P = r.shape
+
+    def step(state, t):
+        rt, kt, vt, wt = r[:, t], k[:, t], v[:, t], jnp.exp(lw[:, t])
+        y = jnp.einsum("bhp,bhpn->bhn", rt, state) + \
+            jnp.einsum("bhp,bhp,bhn->bhn", rt, u[None] * kt, vt)
+        state = state * wt[..., None] + jnp.einsum("bhp,bhn->bhpn", kt, vt)
+        return state, y
+
+    state, ys = jax.lax.scan(step, state0, jnp.arange(S))
+    return ys.transpose(1, 0, 2, 3), state
+
+
+def ssd_ref(xh, Bm, Cm, a, state0):
+    """Sequential Mamba2/SSD recurrence oracle.
+
+    xh:[B,S,H,P] (dt-scaled), Bm/Cm:[B,S,N], a:[B,S,H] (log decay),
+    state0:[B,H,P,N]."""
+    B, S, H, P = xh.shape
+
+    def step(state, t):
+        decay = jnp.exp(a[:, t])                          # [B,H]
+        state = state * decay[..., None, None] + \
+            jnp.einsum("bn,bhp->bhpn", Bm[:, t], xh[:, t])
+        y = jnp.einsum("bhpn,bn->bhp", state, Cm[:, t])
+        return state, y
+
+    state, ys = jax.lax.scan(step, state0, jnp.arange(S))
+    return ys.transpose(1, 0, 2, 3), state

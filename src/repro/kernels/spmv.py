@@ -1,0 +1,50 @@
+"""Pallas TPU blocked-ELL SpMV — the GRAPE analytics hot loop.
+
+Hardware adaptation (DESIGN.md §2): GPU graph engines balance power-law
+degree distributions dynamically (warp-per-row, work stealing). TPU has no
+dynamic scheduling, so balance is *structural*: rows are padded into an ELL
+slab ``indices/weights [N, W]`` (the ops wrapper buckets rows by degree and
+splits ultra-heavy rows), and the kernel tiles ``[block_rows, W]`` slabs
+against an x vector resident in VMEM. The gather ``x[idx]`` is the TPU
+dynamic-gather; everything else is VPU elementwise + row reduction.
+
+y[r] = Σ_w  weights[r, w] · x[indices[r, w]]   (indices < 0 ⇒ padding)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmv_kernel(idx_ref, w_ref, x_ref, y_ref):
+    idx = idx_ref[...]                         # [block_rows, W] int32
+    w = w_ref[...].astype(jnp.float32)         # [block_rows, W]
+    x = x_ref[...]                             # [N] fp32 (VMEM resident)
+    safe = jnp.maximum(idx, 0)
+    gathered = jnp.take(x, safe, axis=0)       # TPU dynamic gather
+    vals = jnp.where(idx >= 0, gathered * w, 0.0)
+    y_ref[...] = jnp.sum(vals, axis=1)
+
+
+def spmv_ell(indices: jnp.ndarray, weights: jnp.ndarray, x: jnp.ndarray, *,
+             block_rows: int = 256, interpret: bool = False) -> jnp.ndarray:
+    """indices/weights: [N, W] ELL slab; x: [N_cols] fp32 → y [N] fp32."""
+    N, W = indices.shape
+    assert N % block_rows == 0, (N, block_rows)
+    grid = (N // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_spmv_kernel),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, W), lambda r: (r, 0)),
+            pl.BlockSpec((block_rows, W), lambda r: (r, 0)),
+            pl.BlockSpec(x.shape, lambda r: (0,)),   # x fully VMEM-resident
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda r: (r,)),
+        out_shape=jax.ShapeDtypeStruct((N,), jnp.float32),
+        interpret=interpret,
+    )(indices, weights, x.astype(jnp.float32))

@@ -1,0 +1,302 @@
+"""Roofline-term extraction from lowered/compiled artifacts.
+
+Three sources, cross-checked in EXPERIMENTS.md:
+
+1. ``jaxpr_cost`` — walks the *lowered jaxpr* counting dot_general flops and
+   heavy-op bytes analytically. ``lax.scan`` bodies are multiplied by their
+   static lengths (layer stacks, microbatches, SSD/RWKV chunks), which XLA's
+   HLO cost analysis does not do (it visits while bodies once — verified in
+   launch/calibrate.py). Blockwise-attention inner ``fori_loop``s are
+   corrected analytically per cell (causal band flops are data-independent).
+2. ``compiled.cost_analysis()`` / ``memory_analysis()`` — recorded raw; the
+   per-device convention was verified by calibrate.py.
+3. ``parse_collectives`` — scans post-SPMD HLO for all-gather / all-reduce /
+   reduce-scatter / all-to-all / collective-permute, with a while-body
+   multiplier heuristic (loop-carried xs leading dim matched against known
+   loop lengths) and replica-group attribution (intra- vs inter-pod).
+
+Bytes model: only "heavy" primitives (dot/gather/scatter/sort/reduce/conv)
+count operand+result traffic; elementwise chains are assumed fused. This is
+a *fused-traffic* estimate — an optimistic lower bound documented in
+EXPERIMENTS.md §Roofline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+HEAVY_BYTES_PRIMS = {
+    "dot_general", "conv_general_dilated", "gather", "scatter", "scatter-add",
+    "scatter_add", "sort", "reduce_sum", "reduce_max", "reduce_min",
+    "argmax", "argmin", "cumsum", "cumlogsumexp", "top_k", "dynamic_slice",
+    "dynamic_update_slice", "take",
+}
+
+
+def _aval_bytes(aval) -> int:
+    try:
+        return int(math.prod(aval.shape)) * aval.dtype.itemsize
+    except Exception:  # noqa: BLE001
+        return 0
+
+
+def _dot_flops(eqn) -> float:
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    a, b = eqn.invars[0].aval, eqn.invars[1].aval
+    batch = math.prod([a.shape[i] for i in lb], start=1)
+    contract = math.prod([a.shape[i] for i in lc], start=1)
+    m = math.prod([a.shape[i] for i in range(a.ndim)
+                   if i not in lc and i not in lb], start=1)
+    n = math.prod([b.shape[i] for i in range(b.ndim)
+                   if i not in rc and i not in rb], start=1)
+    return 2.0 * batch * m * n * contract
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    by_prim: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.by_prim.items():
+            self.by_prim[k] = self.by_prim.get(k, 0.0) + v * mult
+
+
+def jaxpr_cost(jaxpr) -> Cost:
+    """Analytic flops/bytes of a (closed) jaxpr, scan lengths included."""
+    if hasattr(jaxpr, "jaxpr"):
+        jaxpr = jaxpr.jaxpr
+    cost = Cost()
+    # var -> pre-convert source bytes: a dot reading convert(x_f8) streams
+    # the f8 bytes from HBM (the upcast fuses into the matmul)
+    convert_src: Dict[Any, int] = {}
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "convert_element_type" and eqn.invars \
+                and hasattr(eqn.invars[0], "aval"):
+            convert_src[eqn.outvars[0]] = _aval_bytes(eqn.invars[0].aval)
+
+    def op_bytes(v) -> int:
+        if v in convert_src:
+            return convert_src[v]
+        return _aval_bytes(v.aval) if hasattr(v, "aval") else 0
+
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim == "scan":
+            inner = jaxpr_cost(eqn.params["jaxpr"])
+            cost.add(inner, mult=float(eqn.params["length"]))
+        elif prim == "while":
+            body = jaxpr_cost(eqn.params["body_jaxpr"])
+            cost.add(body, mult=1.0)      # corrected analytically per cell
+        elif prim == "cond":
+            branches = [jaxpr_cost(b) for b in eqn.params["branches"]]
+            worst = max(branches, key=lambda c: c.flops) if branches else Cost()
+            cost.add(worst)
+        elif prim in ("jit", "pjit", "closed_call", "core_call",
+                      "custom_jvp_call", "custom_vjp_call",
+                      "custom_vjp_call_jaxpr", "remat_call", "checkpoint",
+                      "remat", "remat2", "custom_vjp_call_fwd", "named_call",
+                      "shard_map"):
+            sub = (eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+                   or eqn.params.get("fun_jaxpr"))
+            if sub is not None:
+                cost.add(jaxpr_cost(sub))
+        elif prim == "dot_general":
+            f = _dot_flops(eqn)
+            cost.flops += f
+            cost.by_prim["dot_flops"] = cost.by_prim.get("dot_flops", 0.0) + f
+            b = sum(op_bytes(v) for v in eqn.invars) + \
+                sum(_aval_bytes(v.aval) for v in eqn.outvars)
+            cost.bytes += b
+        else:
+            if prim in HEAVY_BYTES_PRIMS:
+                if prim in ("gather", "take", "dynamic_slice"):
+                    # reads touch only the gathered elements, not the
+                    # whole source (in-place source stays in HBM)
+                    b = 2 * sum(_aval_bytes(v.aval) for v in eqn.outvars)
+                elif prim in ("scatter", "scatter_add", "scatter-add",
+                              "dynamic_update_slice"):
+                    # in-place update: traffic = the updates operand (+read
+                    # -modify-write), not the full buffer (donated/aliased);
+                    # dus invars = (operand, update, *starts); scatter
+                    # invars = (operand, indices, updates)
+                    idx = 1 if prim == "dynamic_update_slice" else 2
+                    upd = eqn.invars[idx] if len(eqn.invars) > idx else None
+                    ub = (_aval_bytes(upd.aval)
+                          if upd is not None and hasattr(upd, "aval") else 0)
+                    b = 3 * ub
+                else:
+                    b = sum(_aval_bytes(v.aval) for v in eqn.invars
+                            if hasattr(v, "aval")) + \
+                        sum(_aval_bytes(v.aval) for v in eqn.outvars)
+                cost.bytes += b
+                cost.by_prim[f"bytes_{prim}"] = \
+                    cost.by_prim.get(f"bytes_{prim}", 0.0) + b
+            # elementwise flops: one per output element (cheap, usually fused)
+            for v in eqn.outvars:
+                if hasattr(v, "aval") and hasattr(v.aval, "shape"):
+                    cost.flops += float(math.prod(v.aval.shape))
+    return cost
+
+
+# ------------------------------------------------------------------ HLO side
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8\w*|s64|s32|s16|s8|u64|u32|u16|u8|pred)"
+                       r"\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+                "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1}
+_COLL_RE = re.compile(r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                      r"collective-permute)(?:-start)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    base = _DTYPE_BYTES.get(dtype.split("[")[0], 4)
+    if dtype.startswith("f8"):
+        base = 1
+    return n * base
+
+
+def _result_bytes(line: str) -> int:
+    """Bytes of the result shape(s) on an HLO instruction line (before '=')
+    plus operands — we take the first shape group, which is the result."""
+    m = _SHAPE_RE.search(line)
+    if not m:
+        return 0
+    return _shape_bytes(m.group(1), m.group(2))
+
+
+def _operand_bytes(line: str) -> int:
+    rhs = line.split("=", 1)[-1]
+    inner = rhs[rhs.find("("):]
+    return sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(inner))
+
+
+def _group_info(line: str, n_devices: int) -> Tuple[int, bool]:
+    """(group size, crosses_pod) from replica_groups. Supports the iota form
+    ``replica_groups=[G,N/G]<=[N]`` and explicit ``{{0,1,..},{..}}``."""
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        n_groups, gsize = int(m.group(1)), int(m.group(2))
+        # iota order: consecutive ids in a group unless a transpose suffix
+        crosses = gsize > 256 or ("T(" in line and n_devices > 256)
+        return gsize, crosses
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        ids = [int(x) for x in m.group(1).split(",") if x.strip()]
+        crosses = (max(ids) // 256) != (min(ids) // 256) if ids else False
+        return len(ids), crosses
+    return n_devices, n_devices > 256
+
+
+_WIRE_FACTOR = {
+    # per-device wire bytes as multiple of (result|operand) bytes, ring algos
+    "all-gather": ("result", 1.0),        # receives result-local bytes
+    "all-reduce": ("result", 2.0),        # reduce-scatter + all-gather
+    "reduce-scatter": ("operand", 1.0),   # sends operand-local bytes
+    "all-to-all": ("result", 1.0),
+    "collective-permute": ("result", 1.0),
+}
+
+
+def parse_collectives(hlo_text: str, n_devices: int,
+                      loop_lengths: Optional[Iterable[int]] = None) -> Dict[str, Any]:
+    """Sum per-device collective wire bytes from post-SPMD HLO.
+
+    ``loop_lengths``: known static loop lengths (layer count, microbatches,
+    …). A while-body computation's collectives are multiplied by the body's
+    inferred trip count: the leading dim of a loop-carried stacked-xs array
+    that matches one of ``loop_lengths`` (product over nested bodies handled
+    by matching each body independently).
+    """
+    loop_lengths = sorted(set(int(x) for x in (loop_lengths or []) if x > 1))
+    # split computations:  %name (args) -> ... {  ... }
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*\{", stripped)
+        if ("{" in stripped and ("->" in stripped or stripped.startswith("ENTRY"))
+                and not stripped.startswith("//")):
+            name_m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)", stripped)
+            cur = name_m.group(1) if name_m else "anon"
+            comps.setdefault(cur, [])
+            continue
+        if cur is not None:
+            comps.setdefault(cur, []).append(line)
+
+    # infer trip counts for while-body computations
+    body_mult: Dict[str, float] = {}
+    for name, lines in comps.items():
+        text = "\n".join(lines)
+        for wm in re.finditer(r"while\(([^)]*)\)[^\n]*body=%?([\w\.\-]+)", text):
+            body = wm.group(2)
+            # find the while instruction's full line to read carried shapes
+            line = next((ln for ln in lines if f"body=%{body}" in ln
+                         or f"body={body}" in ln), "")
+            dims = [int(s.split(",")[0])
+                    for _, s in _SHAPE_RE.findall(line) if s and s.split(",")[0]]
+            trip = 1.0
+            for L in loop_lengths[::-1]:
+                if dims.count(L) >= 1:
+                    trip = float(L)
+                    break
+            body_mult[body] = max(body_mult.get(body, 1.0), trip)
+
+    totals = {k: 0.0 for k in _WIRE_FACTOR}
+    intra, inter = 0.0, 0.0
+    count = 0
+    for name, lines in comps.items():
+        mult = body_mult.get(name, 1.0)
+        for line in lines:
+            cm = _COLL_RE.search(line)
+            if not cm or "-done" in line:
+                continue
+            op = cm.group(1)
+            which, factor = _WIRE_FACTOR[op]
+            size = _result_bytes(line) if which == "result" else _operand_bytes(line)
+            gsize, crosses = _group_info(line, n_devices)
+            wire = size * factor * max(0.0, (gsize - 1) / max(gsize, 1)) * mult
+            totals[op] += wire
+            count += 1
+            if crosses:
+                inter += wire
+            else:
+                intra += wire
+    return {
+        "per_op_bytes": totals,
+        "total_bytes": sum(totals.values()),
+        "intra_pod_bytes": intra,
+        "inter_pod_bytes": inter,
+        "n_collectives": count,
+        "while_multipliers": body_mult,
+    }
+
+
+# ------------------------------------------------------------ attention corr
+def attention_flops(B: float, H: float, S: float, T: float, D: float,
+                    causal: bool, window: Optional[int] = None,
+                    decode: bool = False) -> float:
+    """Analytic attention flops (scores + PV), fwd only. Multiply by 3.5 for
+    train (fwd+bwd≈2.5x of fwd with remat recompute)."""
+    if decode:
+        pairs = B * T
+    elif window is not None:
+        pairs = B * S * min(window, T)
+    elif causal:
+        pairs = B * S * (T + 1) / 2.0
+    else:
+        pairs = B * S * T
+    return 4.0 * H * D * pairs

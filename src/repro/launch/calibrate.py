@@ -1,0 +1,71 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Calibrate compiled-artifact introspection semantics on this jax build:
+
+- is cost_analysis() flops per-device (post-SPMD) or global?
+- does memory_analysis() work on the CPU backend?
+- do collectives appear in compiled.as_text() with parseable shapes?
+
+Run once; the dry-run relies on the conventions printed here.
+"""
+
+import json
+import re
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import make_production_mesh
+
+
+def main():
+    mesh = make_production_mesh(multi_pod=False)   # (data=16, model=16)
+    M = N = K = 4096
+    x = jax.ShapeDtypeStruct((M, K), jnp.bfloat16)
+    w = jax.ShapeDtypeStruct((K, N), jnp.bfloat16)
+
+    def f(x, w):
+        y = x @ w                     # 2*M*N*K = 274.9 GFLOP global
+        return jnp.sum(y.astype(jnp.float32))
+
+    with mesh:
+        lowered = jax.jit(
+            f,
+            in_shardings=(NamedSharding(mesh, P("data", None)),
+                          NamedSharding(mesh, P(None, "model"))),
+        ).lower(x, w)
+        compiled = lowered.compile()
+
+    ca = compiled.cost_analysis()
+    print("cost_analysis keys sample:", {k: v for k, v in list(ca.items())[:8]})
+    flops = ca.get("flops", -1)
+    global_flops = 2 * M * N * K
+    print(f"flops={flops:.3e} global={global_flops:.3e} "
+          f"ratio_global={flops / global_flops:.4f} "
+          f"ratio_perdev={flops / (global_flops / 256):.4f}")
+    print("bytes accessed:", ca.get("bytes accessed", None))
+
+    try:
+        ma = compiled.memory_analysis()
+        print("memory_analysis:", ma)
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "generated_code_size_in_bytes"):
+            print(" ", attr, getattr(ma, attr, None))
+    except Exception as e:  # noqa: BLE001
+        print("memory_analysis failed:", e)
+
+    txt = compiled.as_text()
+    colls = re.findall(r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                       r"collective-permute)[^\n]*", txt)
+    print(f"collective lines: {len(colls)}")
+    for c in colls[:8]:
+        print("  ", c[:160])
+    # rough shapes on those lines
+    shapes = re.findall(r"(?:f32|bf16|s32|u32|f16)\[[0-9,]*\]", "\n".join(colls))
+    print("collective operand shapes:", shapes[:10])
+
+
+if __name__ == "__main__":
+    main()

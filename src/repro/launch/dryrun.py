@@ -1,0 +1,339 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell with
+ShapeDtypeStruct inputs on the production meshes (16×16 single-pod,
+2×16×16 multi-pod), recording memory/cost analysis, analytic jaxpr cost and
+parsed collective bytes — one JSONL row per cell (appended incrementally so
+a crash resumes where it left off).
+
+Usage:
+    python -m repro.launch.dryrun --arch all --shape all --mesh both \
+        --out results/dryrun.jsonl
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.configs.shapes import cell_applicable
+from repro.distributed.sharding import MeshRules, shardings_for_tree, use_rules
+from repro.launch import analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models import encdec as ed
+from repro.models.model_zoo import build_model, model_flops_per_step
+from repro.train.train_step import (make_train_step, train_state_axes,
+                                    train_state_specs)
+
+# Per-arch training memory plan (see EXPERIMENTS.md §Dry-run memory table):
+# microbatches sized so per-device saved layer inputs fit ~5 GB; optimizer /
+# accumulation dtypes chosen so the deepseek-v3 state fits one pod.
+TRAIN_PLAN: Dict[str, Dict[str, Any]] = {
+    "mixtral-8x22b":    dict(microbatches=16, optimizer="adamw"),
+    "deepseek-v3-671b": dict(microbatches=16, optimizer="adafactor",
+                             grad_accum_dtype="bfloat16"),
+    "zamba2-1.2b":      dict(microbatches=2, optimizer="adamw"),
+    "qwen2-vl-72b":     dict(microbatches=16, optimizer="adamw"),
+    # whisper's 12 heads don't divide model=16 → heads replicated; dense-attn
+    # scores dominate memory, so split further (55GB/dev at micro=1, measured)
+    "whisper-small":    dict(microbatches=8, optimizer="adamw"),
+    "gemma-7b":         dict(microbatches=2, optimizer="adamw"),
+    "qwen2-72b":        dict(microbatches=16, optimizer="adamw"),
+    "mistral-nemo-12b": dict(microbatches=4, optimizer="adamw"),
+    "granite-20b":      dict(microbatches=8, optimizer="adamw"),
+    "rwkv6-7b":         dict(microbatches=4, optimizer="adamw"),
+}
+
+
+def default_rules(multi_pod: bool, overrides: Optional[Dict[str, Any]] = None) -> MeshRules:
+    kw: Dict[str, Any] = dict(
+        batch=("pod", "data"),
+        fsdp=("data",),
+        tensor=("model",),
+        expert=("model",),
+        seq=(),
+        cache_seq=("model",),
+    )
+    kw.update(overrides or {})
+    return MeshRules(**{k: tuple(v) for k, v in kw.items()})
+
+
+TRAIN_PLAN_ENV = "DRYRUN_MICROBATCHES"   # per-variant override
+
+
+def train_config_for(arch: str, overrides: Optional[Dict[str, Any]] = None) -> TrainConfig:
+    plan = dict(TRAIN_PLAN.get(arch, {}))
+    plan.pop("optimizer", None)
+    if os.environ.get(TRAIN_PLAN_ENV):
+        plan["microbatches"] = int(os.environ[TRAIN_PLAN_ENV])
+    plan.update({k: v for k, v in (overrides or {}).items()
+                 if k in {f.name for f in dataclasses.fields(TrainConfig)}})
+    return TrainConfig(**plan)
+
+
+def optimizer_for(arch: str) -> str:
+    return TRAIN_PLAN.get(arch, {}).get("optimizer", "adamw")
+
+
+def prefill_attn_correction(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Analytic flops of blockwise attention not visible to the jaxpr walker
+    (inner fori_loop bodies are counted once). Prefill cells only."""
+    B, S = shape.global_batch, shape.seq_len
+    bkv = cfg.attn_block_kv
+
+    def corr(h, s, t, d, causal, window=None):
+        total = analysis.attention_flops(B, h, s, t, d, causal, window)
+        one_block = analysis.attention_flops(B, h, s, min(bkv, t), d, False)
+        return max(0.0, total - one_block)
+
+    if cfg.family == "ssm":
+        return 0.0
+    if cfg.family == "audio":
+        sd = ed.dec_len(S)
+        return (cfg.n_enc_layers * corr(cfg.n_heads, S, S, cfg.head_dim, False)
+                + cfg.n_layers * corr(cfg.n_heads, sd, sd, cfg.head_dim, True)
+                + cfg.n_layers * corr(cfg.n_heads, sd, S, cfg.head_dim, False))
+    if cfg.family == "hybrid":
+        n_apps = cfg.n_layers // cfg.hybrid.attn_every
+        return n_apps * corr(cfg.n_heads, S, S, cfg.head_dim, True)
+    d = cfg.head_dim
+    if cfg.mla:
+        d = cfg.mla.qk_nope_head_dim + cfg.mla.qk_rope_head_dim
+    return cfg.n_layers * corr(cfg.n_heads, S, S, d, True, cfg.window)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, rules: MeshRules,
+               arch: str):
+    """Returns (fn, arg_specs tuple, in_shardings, out_shardings, meta)."""
+    model = build_model(cfg)
+    meta: Dict[str, Any] = {}
+
+    if shape.kind == "train":
+        # cap microbatches so the per-microbatch batch still divides the
+        # data-parallel extent (pod×data) — otherwise the microbatch reshape
+        # forces GSPMD to reshard across pods every step (measured: 131 GB of
+        # inter-pod collective-permute per step before this cap).
+        dp = 1
+        for ax in ("pod", "data"):
+            if ax in mesh.axis_names:
+                dp *= mesh.shape[ax]
+        micro_cap = max(1, shape.global_batch // dp)
+        tcfg = train_config_for(arch)
+        if tcfg.microbatches > micro_cap:
+            tcfg = dataclasses.replace(tcfg, microbatches=micro_cap)
+        optimizer = optimizer_for(arch)
+        meta["microbatches"] = tcfg.microbatches
+        meta["optimizer"] = optimizer
+        batch_specs = model.input_specs(shape)["batch"]
+        batch_axes = model.input_axes(shape)["batch"]
+        step = make_train_step(model, tcfg, optimizer=optimizer,
+                               batch_axes=batch_axes)
+        state_specs = train_state_specs(model, tcfg, optimizer)
+        state_axes = train_state_axes(model, optimizer)
+        in_sh = (shardings_for_tree(state_specs, state_axes, mesh, rules),
+                 shardings_for_tree(batch_specs, batch_axes, mesh, rules))
+        out_sh = (in_sh[0], None)
+        meta["donate"] = (0,)
+        return step, (state_specs, batch_specs), in_sh, out_sh, meta
+
+    params_specs = model.param_shapes()
+    params_axes = model.param_axes()
+    params_sh = shardings_for_tree(params_specs, params_axes, mesh, rules)
+
+    if shape.kind == "prefill":
+        def fn(params, batch):
+            return model.prefill(params, batch)
+
+        batch_specs = model.input_specs(shape)["batch"]
+        batch_axes = model.input_axes(shape)["batch"]
+        in_sh = (params_sh,
+                 shardings_for_tree(batch_specs, batch_axes, mesh, rules))
+        cache_len = shape.seq_len
+        cache_specs = model.cache_specs(shape.global_batch, cache_len)
+        cache_sh = shardings_for_tree(cache_specs, model.cache_axes(), mesh, rules)
+        out_sh = (None, cache_sh)
+        meta["attn_correction"] = prefill_attn_correction(cfg, shape)
+        meta["donate"] = ()
+        return fn, (params_specs, batch_specs), in_sh, out_sh, meta
+
+    # decode
+    def fn(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    ispecs = model.input_specs(shape)
+    iaxes = model.input_axes(shape)
+    cache_sh = shardings_for_tree(ispecs["cache"], iaxes["cache"], mesh, rules)
+    tok_sh = shardings_for_tree(ispecs["tokens"], iaxes["tokens"], mesh, rules)
+    pos_sh = shardings_for_tree(ispecs["pos"], iaxes["pos"], mesh, rules)
+    in_sh = (params_sh, cache_sh, tok_sh, pos_sh)
+    out_sh = (None, cache_sh)
+    meta["donate"] = (1,)
+    return fn, (params_specs, ispecs["cache"], ispecs["tokens"],
+                ispecs["pos"]), in_sh, out_sh, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             variant: str = "baseline",
+             cfg_overrides: Optional[Dict[str, Any]] = None,
+             rules_overrides: Optional[Dict[str, Any]] = None
+             ) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    if cfg_overrides:
+        flat = {k: v for k, v in cfg_overrides.items() if "." not in k}
+        if flat:
+            cfg = dataclasses.replace(cfg, **flat)
+        for k, v in cfg_overrides.items():     # nested: "moe.capacity_factor"
+            if "." in k:
+                outer, inner = k.split(".", 1)
+                sub = dataclasses.replace(getattr(cfg, outer), **{inner: v})
+                cfg = dataclasses.replace(cfg, **{outer: sub})
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    row: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "variant": variant,
+        "n_devices": 512 if multi_pod else 256,
+    }
+    if cfg_overrides:
+        row["cfg_overrides"] = {k: str(v) for k, v in cfg_overrides.items()}
+    if rules_overrides:
+        row["rules_overrides"] = {k: list(v) for k, v in
+                                  rules_overrides.items()}
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        row["status"] = "skipped"
+        row["reason"] = why
+        return row
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        rules = default_rules(multi_pod, rules_overrides)
+        model = build_model(cfg)
+        row["n_params"] = model.n_params()
+        row["n_active_params"] = cfg.active_param_count()
+        row["model_flops"] = model_flops_per_step(cfg, shape)
+
+        fn, arg_specs, in_sh, out_sh, meta = build_cell(cfg, shape, mesh,
+                                                        rules, arch)
+        donate = meta.pop("donate", ())
+        row.update(meta)
+
+        with mesh, use_rules(rules):
+            t0 = time.time()
+            jaxpr = jax.make_jaxpr(fn)(*arg_specs)
+            cost = analysis.jaxpr_cost(jaxpr)
+            row["trace_s"] = round(time.time() - t0, 2)
+            row["walker_flops_global"] = cost.flops
+            row["walker_bytes_global"] = cost.bytes
+            if "attn_correction" in row:
+                row["walker_flops_global"] += row["attn_correction"]
+
+            t0 = time.time()
+            lowered = jax.jit(fn, in_shardings=in_sh,
+                              out_shardings=out_sh,
+                              donate_argnums=donate).lower(*arg_specs)
+            row["lower_s"] = round(time.time() - t0, 2)
+            t0 = time.time()
+            compiled = lowered.compile()
+            row["compile_s"] = round(time.time() - t0, 2)
+
+        ca = compiled.cost_analysis() or {}
+        row["cost_analysis"] = {k: float(v) for k, v in ca.items()
+                                if isinstance(v, (int, float))
+                                and k in ("flops", "bytes accessed",
+                                          "optimal_seconds", "transcendentals")}
+        try:
+            ma = compiled.memory_analysis()
+            row["memory_analysis"] = {
+                k: int(getattr(ma, k, 0)) for k in
+                ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes")}
+        except Exception as e:  # noqa: BLE001
+            row["memory_analysis"] = {"error": str(e)}
+
+        loop_lengths = [cfg.n_layers, cfg.n_enc_layers,
+                        row.get("microbatches", 1)]
+        if cfg.ssm:
+            loop_lengths.append(max(1, shape.seq_len // cfg.ssm.chunk))
+        if cfg.rwkv:
+            loop_lengths.append(max(1, shape.seq_len // cfg.rwkv.chunk))
+        if shape.kind != "decode":
+            loop_lengths.append(max(1, shape.seq_len // cfg.attn_block_q))
+        hlo = compiled.as_text()
+        row["hlo_bytes"] = len(hlo)
+        row["collectives"] = analysis.parse_collectives(
+            hlo, row["n_devices"], loop_lengths)
+        row["status"] = "ok"
+    except Exception as e:  # noqa: BLE001
+        row["status"] = "error"
+        row["error"] = f"{type(e).__name__}: {e}"
+        row["traceback"] = traceback.format_exc()[-2000:]
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--force", action="store_true",
+                    help="re-run cells already present in --out")
+    ap.add_argument("--variant", default="baseline",
+                    help="tag for §Perf hillclimb rows")
+    ap.add_argument("--cfg-overrides", default=None,
+                    help='JSON, e.g. {"kv_cache_dtype": "float8_e4m3fn"}')
+    ap.add_argument("--rules-overrides", default=None,
+                    help='JSON, e.g. {"tensor": [], "fsdp": ["model"]}')
+    args = ap.parse_args()
+    cfg_over = json.loads(args.cfg_overrides) if args.cfg_overrides else None
+    rules_over = (json.loads(args.rules_overrides)
+                  if args.rules_overrides else None)
+
+    from repro.configs import ARCHS
+    archs = list(ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if os.path.exists(args.out) and not args.force:
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("status") in ("ok", "skipped"):
+                        done.add((r["arch"], r["shape"], r["mesh"],
+                                  r.get("variant", "baseline")))
+                except json.JSONDecodeError:
+                    continue
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                key = (arch, shape, "pod2x16x16" if mp else "pod16x16",
+                       args.variant)
+                if key in done:
+                    print(f"[dryrun] skip-done {key}", flush=True)
+                    continue
+                t0 = time.time()
+                row = run_cell(arch, shape, mp, variant=args.variant,
+                               cfg_overrides=cfg_over,
+                               rules_overrides=rules_over)
+                row["wall_s"] = round(time.time() - t0, 2)
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(row) + "\n")
+                print(f"[dryrun] {key} -> {row['status']} "
+                      f"({row['wall_s']}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Roofline analysis over the dry-run JSONL (§Roofline of EXPERIMENTS.md).
+
+Per (arch × shape × mesh) cell:
+
+    compute term    = FLOPs / (chips × 197e12)         [bf16 peak, v5e]
+    memory term     = bytes / (chips × 819e9)          [HBM]
+    collective term = wire bytes / (chips × 50e9)      [ICI per link]
+                      + inter-pod bytes / (chips × 25e9)  [slow tier]
+
+FLOPs/bytes come from the scan-aware jaxpr walker (global → per-chip by
+dividing by the device count; the dry-run records raw cost_analysis() for
+cross-checking). The useful-work ratio MODEL_FLOPS/walker_FLOPs flags remat
+and dispatch waste. Output: markdown table + per-cell bottleneck.
+
+    python -m repro.launch.roofline --in results/dryrun.jsonl
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List, Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+INTER_POD_BW = 25e9     # effective per-chip share of the cross-pod tier
+
+
+def derive_terms(row: Dict) -> Optional[Dict]:
+    if row.get("status") != "ok":
+        return None
+    chips = row["n_devices"]
+    flops = row["walker_flops_global"] / chips
+    bytes_ = row["walker_bytes_global"] / chips
+    coll = row.get("collectives", {})
+    intra = coll.get("intra_pod_bytes", 0.0)
+    inter = coll.get("inter_pod_bytes", 0.0)
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = bytes_ / HBM_BW
+    # parsed collective bytes are per-device wire bytes (post-SPMD local
+    # shapes × ring wire factors), so no further division by chips
+    t_coll = intra / ICI_BW_PER_LINK + inter / INTER_POD_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    model_flops = row.get("model_flops", 0.0)
+    useful = model_flops / max(row["walker_flops_global"], 1.0)
+    mfu = (model_flops / chips) / max(step_s, 1e-12) / PEAK_FLOPS_BF16
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "step_s": step_s,
+        "useful_ratio": useful,
+        "roofline_fraction": t_compute / max(step_s, 1e-12),
+        "mfu": mfu,
+        "mem_gb": row.get("memory_analysis", {}).get("temp_size_in_bytes", 0)
+        / 1e9,
+    }
+
+
+def load(path: str) -> List[Dict]:
+    rows = []
+    seen = {}
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            seen[(r.get("arch"), r.get("shape"), r.get("mesh"),
+                  r.get("variant", "baseline"))] = r
+    return list(seen.values())
+
+
+def fmt(v, pattern="{:.2e}"):
+    return pattern.format(v) if v is not None else "—"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="results/dryrun.jsonl")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--md", action="store_true", help="markdown output")
+    args = ap.parse_args()
+
+    rows = load(args.inp)
+    rows.sort(key=lambda r: (r.get("arch", ""), r.get("shape", ""),
+                             r.get("mesh", "")))
+    header = ("| arch | shape | mesh | compute s | memory s | collective s "
+              "| bottleneck | useful | roofline frac | MFU@roof |")
+    print(header)
+    print("|" + "---|" * 10)
+    for r in rows:
+        if args.mesh and r.get("mesh") != args.mesh:
+            continue
+        key = f"| {r.get('arch')} | {r.get('shape')} | {r.get('mesh')} "
+        if r.get("status") == "skipped":
+            print(key + "| — | — | — | skipped: full attention | — | — | — |")
+            continue
+        if r.get("status") != "ok":
+            print(key + f"| — | — | — | ERROR {r.get('error', '')[:40]} "
+                        "| — | — | — |")
+            continue
+        t = derive_terms(r)
+        print(key +
+              f"| {t['compute_s']:.3f} | {t['memory_s']:.3f} "
+              f"| {t['collective_s']:.3f} | {t['dominant']} "
+              f"| {t['useful_ratio']:.2f} | {t['roofline_fraction']:.2f} "
+              f"| {t['mfu']:.2f} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.learning.sampler import GraphSampler  # noqa: F401
+from repro.learning.pipeline import DecoupledPipeline  # noqa: F401
+from repro.learning.gnn import GraphSAGE, NCN  # noqa: F401

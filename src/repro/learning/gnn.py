@@ -1,0 +1,116 @@
+"""GNN models in pure JAX: GraphSAGE (mean aggregator) and NCN link
+prediction — the learning-stack training backends (paper §7/§8)."""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+
+
+class GraphSAGE:
+    """Mean-aggregator GraphSAGE over fixed-fanout sampled batches."""
+
+    def __init__(self, feature_dim: int, hidden: int, n_classes: int,
+                 fanouts: Sequence[int]):
+        self.feature_dim = feature_dim
+        self.hidden = hidden
+        self.n_classes = n_classes
+        self.fanouts = tuple(fanouts)
+
+    def specs(self) -> dict:
+        dims = [self.feature_dim] + [self.hidden] * len(self.fanouts)
+        layers = {}
+        for i in range(len(self.fanouts)):
+            layers[f"l{i}"] = {
+                "w_self": nn.Spec((dims[i], dims[i + 1]), (None, None), "fan_in",
+                                  dtype=jnp.float32),
+                "w_nbr": nn.Spec((dims[i], dims[i + 1]), (None, None), "fan_in",
+                                 dtype=jnp.float32),
+                "b": nn.Spec((dims[i + 1],), (None,), "zeros", dtype=jnp.float32),
+            }
+        layers["out"] = {
+            "w": nn.Spec((self.hidden, self.n_classes), (None, None), "fan_in",
+                         dtype=jnp.float32),
+            "b": nn.Spec((self.n_classes,), (None,), "zeros", dtype=jnp.float32),
+        }
+        return layers
+
+    def init(self, key):
+        return nn.init_tree(self.specs(), key, dtype=jnp.float32)
+
+    def embed(self, params, feats: List[jnp.ndarray],
+              layer_nbrs: List[jnp.ndarray]) -> jnp.ndarray:
+        """feats[l]: frontier-l features [B·∏f[:l], D]; layer_nbrs[l] the
+        sampled neighbor ids (only used for the valid-mask)."""
+        k = len(self.fanouts)
+        h = list(feats)
+        for l in range(k):
+            lp = params[f"l{l}"]
+            new_h = []
+            for depth in range(k - l):
+                cur = h[depth]
+                nbr = h[depth + 1].reshape(cur.shape[0], self.fanouts[depth], -1)
+                valid = (layer_nbrs[depth].reshape(cur.shape[0], -1) >= 0
+                         )[..., None].astype(cur.dtype)
+                mean_nbr = jnp.sum(nbr * valid, axis=1) / \
+                    jnp.maximum(jnp.sum(valid, axis=1), 1.0)
+                z = cur @ lp["w_self"] + mean_nbr @ lp["w_nbr"] + lp["b"]
+                new_h.append(jax.nn.relu(z))
+            h = new_h
+        return h[0]
+
+    def logits(self, params, feats, layer_nbrs) -> jnp.ndarray:
+        z = self.embed(params, feats, layer_nbrs)
+        return z @ params["out"]["w"] + params["out"]["b"]
+
+    def loss(self, params, feats, layer_nbrs, labels) -> jnp.ndarray:
+        lg = self.logits(params, feats, layer_nbrs)
+        return nn.softmax_cross_entropy(lg, labels)
+
+
+class NCN:
+    """Neural Common Neighbor link predictor [80]: scores an edge (u,v) from
+    the pooled GraphSAGE embeddings of u, v and their common neighbors."""
+
+    def __init__(self, feature_dim: int, hidden: int, fanouts: Sequence[int]):
+        self.backbone = GraphSAGE(feature_dim, hidden, hidden, fanouts)
+        self.hidden = hidden
+
+    def specs(self):
+        return {
+            "backbone": self.backbone.specs(),
+            "edge_mlp": {
+                "w1": nn.Spec((3 * self.hidden, self.hidden), (None, None),
+                              "fan_in", dtype=jnp.float32),
+                "b1": nn.Spec((self.hidden,), (None,), "zeros", dtype=jnp.float32),
+                "w2": nn.Spec((self.hidden, 1), (None, None), "fan_in",
+                              dtype=jnp.float32),
+            },
+        }
+
+    def init(self, key):
+        return nn.init_tree(self.specs(), key, dtype=jnp.float32)
+
+    def score(self, params, batch) -> jnp.ndarray:
+        bp = params["backbone"]
+        eu = self.backbone.logits(bp, batch["u_feats"], batch["u_nbrs"])
+        ev = self.backbone.logits(bp, batch["v_feats"], batch["v_nbrs"])
+        ecn = self.backbone.logits(bp, batch["cn_feats"], batch["cn_nbrs"])
+        B = eu.shape[0]
+        ecn = ecn.reshape(B, -1, self.hidden)
+        cn_mask = (batch["common"] >= 0)[..., None].astype(eu.dtype)
+        pooled = jnp.sum(ecn * cn_mask, axis=1) / \
+            jnp.maximum(jnp.sum(cn_mask, axis=1), 1.0)
+        z = jnp.concatenate([eu, ev, pooled], axis=-1)
+        m = params["edge_mlp"]
+        z = jax.nn.relu(z @ m["w1"] + m["b1"])
+        return (z @ m["w2"])[:, 0]
+
+    def loss(self, params, batch, labels) -> jnp.ndarray:
+        s = self.score(params, batch)
+        return jnp.mean(
+            jnp.maximum(s, 0) - s * labels + jnp.log1p(jnp.exp(-jnp.abs(s))))

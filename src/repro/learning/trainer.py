@@ -1,0 +1,69 @@
+"""GNN trainer gluing sampler → pipeline → jitted update (paper §7)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.learning.gnn import GraphSAGE
+from repro.learning.pipeline import DecoupledPipeline
+from repro.learning.sampler import GraphSampler
+
+
+class SageTrainer:
+    def __init__(self, sampler: GraphSampler, hidden: int, n_classes: int,
+                 fanouts: Sequence[int], batch_size: int = 256,
+                 lr: float = 1e-2, seed: int = 0):
+        self.sampler = sampler
+        self.model = GraphSAGE(sampler.feature_dim, hidden, n_classes, fanouts)
+        self.fanouts = tuple(fanouts)
+        self.batch_size = batch_size
+        self.lr = lr
+        self.params = self.model.init(jax.random.PRNGKey(seed))
+        self.rng = np.random.default_rng(seed)
+        self._update = jax.jit(self._update_fn)
+
+    def sample(self, step: int) -> Dict[str, np.ndarray]:
+        n = self.sampler.grin.n_vertices
+        rng = np.random.default_rng(step)
+        seeds = rng.integers(0, n, self.batch_size)
+        b = self.sampler.sample_batch(seeds, self.fanouts)
+        return {
+            "feats": b.features,
+            "nbrs": b.layers,
+            "labels": b.labels.astype(np.int32),
+        }
+
+    def _update_fn(self, params, feats, nbrs, labels):
+        def loss(p):
+            return self.model.loss(p, feats, nbrs, labels)
+
+        l, g = jax.value_and_grad(loss)(params)
+        params = jax.tree_util.tree_map(lambda p, gg: p - self.lr * gg,
+                                        params, g)
+        return params, l
+
+    def train_on(self, batch) -> float:
+        self.params, l = self._update(self.params, batch["feats"],
+                                      batch["nbrs"], batch["labels"])
+        return float(l)
+
+    def train(self, steps: int, pipelined: bool = True,
+              n_workers: int = 2) -> Tuple[float, list]:
+        losses = []
+        if pipelined:
+            pipe = DecoupledPipeline(self.sample, n_workers=n_workers)
+            try:
+                for _ in range(steps):
+                    _, batch = pipe.get()
+                    losses.append(self.train_on(batch))
+            finally:
+                pipe.close()
+        else:
+            for step in range(steps):
+                losses.append(self.train_on(self.sample(step)))
+        return losses[-1], losses

@@ -1,0 +1,386 @@
+"""Attention family: GQA/MQA (+bias, +sliding window), MLA, caches.
+
+Three execution paths per flavour:
+
+- ``*_train``   — dense masked attention (seq ≤ ~4k cells); memory handled by
+                  microbatching + remat at the step level.
+- ``*_prefill`` — blockwise online-softmax attention (q-block scan × kv-block
+                  ``fori_loop`` with causal/window trip-count clamping, so HLO
+                  flops match the causal ideal, not 2× it). Forward-only.
+- ``*_decode``  — one token against a cache. Full caches for dense archs;
+                  ring-buffer caches of ``window`` slots for SWA (Mixtral) —
+                  this is what makes ``long_500k`` sub-quadratic for SWA.
+
+MLA (DeepSeek) trains in expanded form and decodes in *absorbed* form over
+the compressed latent cache (rank-512 + decoupled-rope 64).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import nn
+from repro.models.layers import apply_rope, rope_angles
+
+NEG_INF = -1e30
+
+
+# =====================================================================  GQA
+def gqa_specs(cfg: ModelConfig, stacked: bool = True,
+              n_layers: Optional[int] = None) -> dict:
+    L = ((n_layers if n_layers is not None else cfg.n_layers),) if stacked else ()
+    lax_ = ("layers",) if stacked else ()
+    d, H, K, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    specs = {
+        "wq": nn.Spec(L + (d, H, Dh), lax_ + ("embed", "heads", "head_dim"), "fan_in"),
+        "wk": nn.Spec(L + (d, K, Dh), lax_ + ("embed", "kv_heads", "head_dim"), "fan_in"),
+        "wv": nn.Spec(L + (d, K, Dh), lax_ + ("embed", "kv_heads", "head_dim"), "fan_in"),
+        "wo": nn.Spec(L + (H, Dh, d), lax_ + ("heads", "head_dim", "embed"), "fan_in"),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = nn.Spec(L + (H, Dh), lax_ + ("heads", "head_dim"), "zeros")
+        specs["bk"] = nn.Spec(L + (K, Dh), lax_ + ("kv_heads", "head_dim"), "zeros")
+        specs["bv"] = nn.Spec(L + (K, Dh), lax_ + ("kv_heads", "head_dim"), "zeros")
+    return specs
+
+
+def _qkv(params, cfg: ModelConfig, x: jnp.ndarray):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = constrain(q, ("act_batch", "act_seq", "act_heads", None))
+    k = constrain(k, ("act_batch", "act_seq", "act_heads", None))
+    v = constrain(v, ("act_batch", "act_seq", "act_heads", None))
+    return q, k, v
+
+
+def _causal_window_mask(S: int, T: int, q_offset, window: Optional[int]) -> jnp.ndarray:
+    """[S, T] boolean mask. Query i sits at absolute position q_offset+i."""
+    qpos = jnp.arange(S)[:, None] + q_offset
+    kpos = jnp.arange(T)[None, :]
+    mask = kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    return mask
+
+
+def dense_attention(q, k, v, *, q_offset=0, window=None, scale=None,
+                    causal=True) -> jnp.ndarray:
+    """Reference/train attention. q:[B,S,H,D] k,v:[B,T,K,D] (GQA broadcast)."""
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = scale or (1.0 / math.sqrt(D))
+    qg = q.reshape(B, S, K, G, D)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32) * scale
+    if causal:
+        mask = _causal_window_mask(S, k.shape[1], q_offset, window)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(B, S, H, v.shape[-1])
+
+
+def blockwise_attention(q, k, v, *, q_offset=0, window=None, scale=None,
+                        block_q=512, block_kv=1024, causal=True) -> jnp.ndarray:
+    """Memory-bounded causal attention (forward only — prefill path).
+
+    Outer ``lax.scan`` over query blocks; inner ``lax.fori_loop`` whose trip
+    count is clamped to the causal (and window) band, so no flops are spent
+    on fully-masked blocks.
+    """
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    K = k.shape[2]
+    G = H // K
+    scale = scale or (1.0 / math.sqrt(D))
+    if S % block_q or T % block_kv:    # odd lengths: dense fallback
+        return dense_attention(q, k, v, q_offset=q_offset, window=window,
+                               scale=scale, causal=causal)
+    nq, nkv = S // block_q, T // block_kv
+
+    qg = q.reshape(B, nq, block_q, K, G, D).transpose(1, 0, 2, 3, 4, 5)
+
+    kpos_in_block = jnp.arange(block_kv)
+
+    def q_block_body(_, blk):
+        qi, qblk = blk                                   # qblk [B,bq,K,G,D]
+        q_start = qi * block_q + q_offset
+        qpos = q_start + jnp.arange(block_q)
+
+        # causal upper bound / window lower bound on kv blocks
+        if causal:
+            hi = jnp.minimum((q_start + block_q + block_kv - 1) // block_kv, nkv)
+        else:
+            hi = jnp.full((), nkv, jnp.int32)
+        if window is not None:
+            # earliest kv needed by the FIRST query in this block
+            lo = jnp.maximum((q_start - window + 1) // block_kv, 0)
+        else:
+            lo = jnp.zeros((), jnp.int32)
+
+        m0 = jnp.full((B, block_q, K, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, block_q, K, G), jnp.float32)
+        a0 = jnp.zeros((B, block_q, K, G, D), jnp.float32)
+
+        def kv_body(j, carry):
+            m, l, acc = carry
+            kblk = jax.lax.dynamic_slice_in_dim(k, j * block_kv, block_kv, axis=1)
+            vblk = jax.lax.dynamic_slice_in_dim(v, j * block_kv, block_kv, axis=1)
+            s = jnp.einsum("bqkgd,btkd->bqkgt", qblk, kblk).astype(jnp.float32) * scale
+            kpos = j * block_kv + kpos_in_block
+            if causal or window is not None:
+                mask = kpos[None, :] <= qpos[:, None] if causal else (
+                    jnp.ones((block_q, block_kv), bool))
+                if window is not None:
+                    mask &= kpos[None, :] > qpos[:, None] - window
+                s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqkgt,btkd->bqkgd", p.astype(q.dtype), vblk
+            ).astype(jnp.float32)
+            return m_new, l_new, acc_new
+
+        m, l, acc = jax.lax.fori_loop(lo, hi, kv_body, (m0, l0, a0))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_block_body, None, (jnp.arange(nq), qg))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, D)
+    return out
+
+
+# ----------------------------------------------------------------- GQA caches
+def gqa_cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    return min(cfg.window, seq_len) if cfg.window is not None else seq_len
+
+
+def gqa_cache_specs(cfg: ModelConfig, batch: int, seq_len: int,
+                    n_layers: Optional[int] = None,
+                    dtype=None) -> dict:
+    L = n_layers if n_layers is not None else cfg.n_layers
+    W = gqa_cache_len(cfg, seq_len)
+    K, Dh = cfg.n_kv_heads, cfg.head_dim
+    dtype = dtype if dtype is not None else jnp.dtype(cfg.kv_cache_dtype)
+    specs = {
+        "k": jax.ShapeDtypeStruct((L, batch, W, K, Dh), dtype),
+        "v": jax.ShapeDtypeStruct((L, batch, W, K, Dh), dtype),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if cfg.window is not None:
+        specs["slot_pos"] = jax.ShapeDtypeStruct((L, W), jnp.int32)
+    return specs
+
+
+def gqa_cache_axes(cfg: ModelConfig) -> dict:
+    ax = {
+        "k": ("layers", "act_batch", "act_kv_seq", "act_heads", None),
+        "v": ("layers", "act_batch", "act_kv_seq", "act_heads", None),
+        "pos": (),
+    }
+    if cfg.window is not None:
+        ax["slot_pos"] = ("layers", None)
+    return ax
+
+
+def init_gqa_cache(cfg: ModelConfig, batch: int, seq_len: int,
+                   n_layers: Optional[int] = None, dtype=jnp.bfloat16) -> dict:
+    specs = gqa_cache_specs(cfg, batch, seq_len, n_layers, dtype)
+    cache = {k: jnp.zeros(v.shape, v.dtype) for k, v in specs.items()}
+    if "slot_pos" in cache:
+        cache["slot_pos"] = cache["slot_pos"] - 1  # -1 = empty slot
+    return cache
+
+
+def gqa_decode(params, cfg: ModelConfig, x: jnp.ndarray,
+               layer_cache: dict, pos: jnp.ndarray) -> Tuple[jnp.ndarray, dict]:
+    """One-token decode. x:[B,1,d]; layer_cache holds this layer's k/v slabs."""
+    B = x.shape[0]
+    K, Dh = cfg.n_kv_heads, cfg.head_dim
+    q, k, v = _qkv(params, cfg, x)                    # [B,1,H,Dh]/[B,1,K,Dh]
+    cos, sin = rope_angles(pos[None, None], Dh, cfg.rope_theta)  # [1,1,half]
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    ck, cv = layer_cache["k"], layer_cache["v"]       # [B,W,K,Dh]
+    k = k.astype(ck.dtype)        # f8 cache writes quantize here
+    v = v.astype(cv.dtype)
+    W = ck.shape[1]
+    if cfg.window is not None:
+        slot = jnp.mod(pos, W)
+        ck = jax.lax.dynamic_update_slice(ck, k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v, (0, slot, 0, 0))
+        slot_pos = layer_cache["slot_pos"]
+        slot_pos = jax.lax.dynamic_update_slice(slot_pos, pos[None], (slot,))
+        valid = (slot_pos >= 0) & (slot_pos > pos - W) & (slot_pos <= pos)
+        new_cache = {"k": ck, "v": cv, "slot_pos": slot_pos}
+    else:
+        ck = jax.lax.dynamic_update_slice(ck, k, (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v, (0, pos, 0, 0))
+        valid = jnp.arange(W) <= pos
+        new_cache = {"k": ck, "v": cv}
+
+    H = cfg.n_heads
+    G = H // K
+    qg = q.reshape(B, K, G, Dh)
+    ck_c = ck.astype(x.dtype)     # f8 cache reads dequantize here
+    cv_c = cv.astype(x.dtype)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg, ck_c).astype(jnp.float32)
+    scores = scores / math.sqrt(Dh)
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs, cv_c).reshape(B, 1, H, Dh)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return out, new_cache
+
+
+def gqa_train(params, cfg: ModelConfig, x: jnp.ndarray, *,
+              positions: Optional[jnp.ndarray] = None,
+              mrope_cs: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+              blockwise: bool = False) -> jnp.ndarray:
+    """Full-sequence attention (train / prefill). x:[B,S,d]."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(params, cfg, x)
+    if mrope_cs is not None:
+        cos, sin = mrope_cs
+    else:
+        if positions is None:
+            positions = jnp.arange(S)[None]
+        cos, sin = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if blockwise:
+        out = blockwise_attention(q, k, v, window=cfg.window,
+                                  block_q=cfg.attn_block_q,
+                                  block_kv=cfg.attn_block_kv)
+    else:
+        out = dense_attention(q, k, v, window=cfg.window)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), (k, v)
+
+
+# =====================================================================  MLA
+def mla_specs(cfg: ModelConfig, stacked: bool = True) -> dict:
+    m = cfg.mla
+    L = (cfg.n_layers,) if stacked else ()
+    lax_ = ("layers",) if stacked else ()
+    d, H = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": nn.Spec(L + (d, m.q_lora_rank), lax_ + ("embed", "q_lora"), "fan_in"),
+        "q_norm": nn.Spec(L + (m.q_lora_rank,), lax_ + ("q_lora",), "ones"),
+        "wq_b": nn.Spec(L + (m.q_lora_rank, H, qk), lax_ + ("q_lora", "heads", None), "fan_in"),
+        "wkv_a": nn.Spec(L + (d, m.kv_lora_rank + m.qk_rope_head_dim),
+                         lax_ + ("embed", "kv_lora"), "fan_in"),
+        "kv_norm": nn.Spec(L + (m.kv_lora_rank,), lax_ + ("kv_lora",), "ones"),
+        "wk_b": nn.Spec(L + (m.kv_lora_rank, H, m.qk_nope_head_dim),
+                        lax_ + ("kv_lora", "heads", None), "fan_in"),
+        "wv_b": nn.Spec(L + (m.kv_lora_rank, H, m.v_head_dim),
+                        lax_ + ("kv_lora", "heads", None), "fan_in"),
+        "wo": nn.Spec(L + (H, m.v_head_dim, d), lax_ + ("heads", None, "embed"), "fan_in"),
+    }
+
+
+def _mla_qkr(params, cfg: ModelConfig, x, positions):
+    """Shared q / (c_kv, k_rope) computation. x:[B,S,d]."""
+    m = cfg.mla
+    x = constrain(x, ("act_batch", "act_seq", None))
+    cq = jnp.einsum("bsd,dr->bsr", x, params["wq_a"])
+    cq = nn.rms_norm(cq, params["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, params["wq_b"])
+    q = constrain(q, ("act_batch", "act_seq", "act_heads", None))
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = q[..., m.qk_nope_head_dim:]
+
+    kv_a = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"])
+    c_kv = nn.rms_norm(kv_a[..., : m.kv_lora_rank], params["kv_norm"], cfg.norm_eps)
+    c_kv = constrain(c_kv, ("act_batch", "act_seq", None))
+    k_rope = kv_a[..., m.kv_lora_rank:]              # [B,S,rope] shared across heads
+
+    cos, sin = rope_angles(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_train(params, cfg: ModelConfig, x: jnp.ndarray, *,
+              blockwise: bool = False) -> Tuple[jnp.ndarray, tuple]:
+    m = cfg.mla
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None]
+    q_nope, q_rope, c_kv, k_rope = _mla_qkr(params, cfg, x, positions)
+
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["wk_b"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, params["wv_b"])
+    H = cfg.n_heads
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, m.qk_rope_head_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    # pad v to qk dim for the shared attention helpers, then slice back
+    if blockwise:
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, q.shape[-1] - v.shape[-1])))
+        out = blockwise_attention(q, k, vp, scale=scale,
+                                  block_q=cfg.attn_block_q,
+                                  block_kv=cfg.attn_block_kv)[..., : m.v_head_dim]
+    else:
+        out = dense_attention(q, k, v, scale=scale)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return out, (c_kv, k_rope)
+
+
+def mla_cache_specs(cfg: ModelConfig, batch: int, seq_len: int,
+                    dtype=jnp.bfloat16) -> dict:
+    m = cfg.mla
+    return {
+        "ckv": jax.ShapeDtypeStruct((cfg.n_layers, batch, seq_len, m.kv_lora_rank), dtype),
+        "krope": jax.ShapeDtypeStruct((cfg.n_layers, batch, seq_len, m.qk_rope_head_dim), dtype),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def mla_cache_axes(cfg: ModelConfig) -> dict:
+    return {
+        "ckv": ("layers", "act_batch", "act_kv_seq", None),
+        "krope": ("layers", "act_batch", "act_kv_seq", None),
+        "pos": (),
+    }
+
+
+def mla_decode(params, cfg: ModelConfig, x: jnp.ndarray,
+               layer_cache: dict, pos: jnp.ndarray) -> Tuple[jnp.ndarray, dict]:
+    """Absorbed-form MLA decode over the compressed latent cache."""
+    m = cfg.mla
+    B = x.shape[0]
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkr(
+        params, cfg, x, pos[None, None]
+    )
+    ckv = jax.lax.dynamic_update_slice(layer_cache["ckv"], c_kv_new, (0, pos, 0))
+    krope = jax.lax.dynamic_update_slice(layer_cache["krope"], k_rope_new, (0, pos, 0))
+
+    # absorb W_uk into q: q_lat [B,1,H,rank]
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, params["wk_b"])
+    scores = jnp.einsum("bshr,btr->bhst", q_lat, ckv)
+    scores = scores + jnp.einsum("bshk,btk->bhst", q_rope, krope)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    scores = scores.astype(jnp.float32) * scale
+    T = ckv.shape[1]
+    valid = jnp.arange(T) <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhst,btr->bshr", probs, ckv)       # latent context
+    out = jnp.einsum("bshr,rhk->bshk", ctx, params["wv_b"])
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return out, {"ckv": ckv, "krope": krope}

@@ -1,0 +1,241 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+Per the assignment the conv frontend is a stub: ``input_specs`` provides
+precomputed frame embeddings ``[B, S_enc, d]``. Cell convention (DESIGN.md §4):
+train_4k → enc 4096 / dec 1024; prefill_32k → enc 32768 / dec 8192;
+decode_32k → one token vs self-cache 8192 + cross-cache 32768.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as ll
+from repro.models import nn
+
+DEC_FRAC = 4  # decoder length = encoder length / DEC_FRAC in our cells
+
+
+def dec_len(seq_len: int) -> int:
+    return max(16, seq_len // DEC_FRAC)
+
+
+def _ln_specs(L, d):
+    return {
+        "g": nn.Spec((L, d), ("layers", "embed"), "ones"),
+        "b": nn.Spec((L, d), ("layers", "embed"), "zeros"),
+    }
+
+
+def encdec_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    Le, Ld = cfg.n_enc_layers, cfg.n_layers
+    enc_layer = {
+        "ln1": _ln_specs(Le, d),
+        "ln2": _ln_specs(Le, d),
+        "attn": attn.gqa_specs(cfg, n_layers=Le),
+        "mlp": _mlp_specs_n(cfg, Le),
+    }
+    dec_layer = {
+        "ln1": _ln_specs(Ld, d),
+        "ln2": _ln_specs(Ld, d),
+        "ln3": _ln_specs(Ld, d),
+        "attn": attn.gqa_specs(cfg),                 # self attention
+        "xattn": attn.gqa_specs(cfg),                # cross attention
+        "mlp": _mlp_specs_n(cfg, Ld),
+    }
+    return {
+        "embed": ll.embed_specs(cfg),
+        "enc": enc_layer,
+        "dec": dec_layer,
+        "enc_final": {"g": nn.Spec((d,), ("embed",), "ones"),
+                      "b": nn.Spec((d,), ("embed",), "zeros")},
+        "dec_final": {"g": nn.Spec((d,), ("embed",), "ones"),
+                      "b": nn.Spec((d,), ("embed",), "zeros")},
+    }
+
+
+def _mlp_specs_n(cfg: ModelConfig, L: int) -> dict:
+    return {
+        "wi": nn.Spec((L, cfg.d_model, cfg.d_ff), ("layers", "embed", "ffn"), "fan_in"),
+        "wo": nn.Spec((L, cfg.d_ff, cfg.d_model), ("layers", "ffn", "embed"), "fan_in"),
+    }
+
+
+def _sinusoid(S: int, d: int, dtype=jnp.bfloat16) -> jnp.ndarray:
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None]
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def _mlp_plain(lp, x):
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, lp["mlp"]["wi"]))
+    return jnp.einsum("bsf,fd->bsd", h, lp["mlp"]["wo"])
+
+
+def _attn_noro(ap, cfg, q_in, kv_in, *, causal, blockwise):
+    """Attention without RoPE (whisper uses absolute sinusoid embeddings)."""
+    wq, wk = ap["wq"], ap["wk"]
+    wv, wo = ap["wv"], ap["wo"]
+    q = jnp.einsum("bsd,dhk->bshk", q_in, wq)
+    k = jnp.einsum("bsd,dhk->bshk", kv_in, wk)
+    v = jnp.einsum("bsd,dhk->bshk", kv_in, wv)
+    if blockwise:
+        out = attn.blockwise_attention(q, k, v, causal=causal,
+                                       block_q=cfg.attn_block_q,
+                                       block_kv=cfg.attn_block_kv)
+    else:
+        out = attn.dense_attention(q, k, v, causal=causal)
+    return jnp.einsum("bshk,hkd->bsd", out, wo), (k, v)
+
+
+def encode(cfg: ModelConfig, params, frames: jnp.ndarray,
+           blockwise: bool = False) -> jnp.ndarray:
+    B, S, d = frames.shape
+    x = frames + _sinusoid(S, d, frames.dtype)[None]
+
+    def body(h, lp):
+        hn = nn.layer_norm(h, lp["ln1"]["g"], lp["ln1"]["b"], cfg.norm_eps)
+        a, _ = _attn_noro(lp["attn"], cfg, hn, hn, causal=False,
+                          blockwise=blockwise)
+        h = h + a
+        hn = nn.layer_norm(h, lp["ln2"]["g"], lp["ln2"]["b"], cfg.norm_eps)
+        return h + _mlp_plain(lp, hn), None
+
+    body = jax.checkpoint(body) if cfg.remat != "none" else body
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return nn.layer_norm(x, params["enc_final"]["g"], params["enc_final"]["b"],
+                         cfg.norm_eps)
+
+
+def _dec_stack(cfg: ModelConfig, params, x, enc_h, *, blockwise, collect=False):
+    def body(h, lp):
+        hn = nn.layer_norm(h, lp["ln1"]["g"], lp["ln1"]["b"], cfg.norm_eps)
+        a, self_kv = _attn_noro(lp["attn"], cfg, hn, hn, causal=True,
+                                blockwise=blockwise)
+        h = h + a
+        hn = nn.layer_norm(h, lp["ln2"]["g"], lp["ln2"]["b"], cfg.norm_eps)
+        a, cross_kv = _attn_noro(lp["xattn"], cfg, hn, enc_h, causal=False,
+                                 blockwise=blockwise)
+        h = h + a
+        hn = nn.layer_norm(h, lp["ln3"]["g"], lp["ln3"]["b"], cfg.norm_eps)
+        h = h + _mlp_plain(lp, hn)
+        return h, (self_kv, cross_kv) if collect else None
+
+    if not collect and cfg.remat != "none":
+        body = jax.checkpoint(body)
+    return jax.lax.scan(body, x, params["dec"])
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, blockwise: bool = False):
+    enc_h = encode(cfg, params, batch["frames"], blockwise)
+    tokens = batch["tokens"]
+    x = ll.embed(params["embed"], tokens)
+    x = x + _sinusoid(tokens.shape[1], cfg.d_model, x.dtype)[None]
+    h, _ = _dec_stack(cfg, params, x, enc_h, blockwise=blockwise)
+    h = nn.layer_norm(h, params["dec_final"]["g"], params["dec_final"]["b"],
+                      cfg.norm_eps)
+    logits = ll.unembed({}, params["embed"], cfg, h[:, :-1])
+    ce = nn.softmax_cross_entropy(logits, tokens[:, 1:])
+    return ce, {"ce": ce}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    Sd = dec_len(seq_len)
+    K, Dh, Ld = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    return {
+        "self_k": jax.ShapeDtypeStruct((Ld, batch, Sd, K, Dh), jnp.bfloat16),
+        "self_v": jax.ShapeDtypeStruct((Ld, batch, Sd, K, Dh), jnp.bfloat16),
+        "cross_k": jax.ShapeDtypeStruct((Ld, batch, seq_len, K, Dh), jnp.bfloat16),
+        "cross_v": jax.ShapeDtypeStruct((Ld, batch, seq_len, K, Dh), jnp.bfloat16),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def cache_axes(cfg: ModelConfig) -> dict:
+    kv = ("layers", "act_batch", "act_kv_seq", "act_heads", None)
+    return {"self_k": kv, "self_v": kv, "cross_k": kv, "cross_v": kv, "pos": ()}
+
+
+def prefill(cfg: ModelConfig, params, batch, cache_len=None):
+    """Encode + teacher-forced decoder prefill; returns (logits, cache)."""
+    enc_h = encode(cfg, params, batch["frames"], blockwise=True)
+    tokens = batch["tokens"]
+    x = ll.embed(params["embed"], tokens)
+    x = x + _sinusoid(tokens.shape[1], cfg.d_model, x.dtype)[None]
+    h, kvs = _dec_stack(cfg, params, x, enc_h, blockwise=True, collect=True)
+    (self_k, self_v), (cross_k, cross_v) = kvs
+    if cache_len is not None and cache_len > self_k.shape[2]:
+        pad = cache_len - self_k.shape[2]
+        widths = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
+        self_k = jnp.pad(self_k, widths)
+        self_v = jnp.pad(self_v, widths)
+    h = nn.layer_norm(h[:, -1:], params["dec_final"]["g"],
+                      params["dec_final"]["b"], cfg.norm_eps)
+    logits = ll.unembed({}, params["embed"], cfg, h)[:, 0]
+    cache = {"self_k": self_k, "self_v": self_v,
+             "cross_k": cross_k, "cross_v": cross_v,
+             "pos": jnp.asarray(tokens.shape[1], jnp.int32)}
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens: jnp.ndarray,
+                pos: jnp.ndarray):
+    """One decoder token vs self+cross caches. tokens:[B]."""
+    pos = jnp.asarray(pos, jnp.int32)
+    B = tokens.shape[0]
+    x = ll.embed(params["embed"], tokens[:, None])
+    Sd = cache["self_k"].shape[2]
+    pe = _sinusoid(Sd, cfg.d_model, x.dtype)
+    x = x + jax.lax.dynamic_slice_in_dim(pe, pos, 1, 0)[None]
+
+    def body(h, xs):
+        lp, lc = xs
+        hn = nn.layer_norm(h, lp["ln1"]["g"], lp["ln1"]["b"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", hn, lp["attn"]["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", hn, lp["attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", hn, lp["attn"]["wv"])
+        sk = jax.lax.dynamic_update_slice(lc["self_k"], k, (0, pos, 0, 0))
+        sv = jax.lax.dynamic_update_slice(lc["self_v"], v, (0, pos, 0, 0))
+        valid = jnp.arange(Sd) <= pos
+        a = _cache_attend(q, sk, sv, valid, cfg)
+        h = h + jnp.einsum("bshk,hkd->bsd", a, lp["attn"]["wo"])
+        hn = nn.layer_norm(h, lp["ln2"]["g"], lp["ln2"]["b"], cfg.norm_eps)
+        qx = jnp.einsum("bsd,dhk->bshk", hn, lp["xattn"]["wq"])
+        ax = _cache_attend(qx, lc["cross_k"], lc["cross_v"], None, cfg)
+        h = h + jnp.einsum("bshk,hkd->bsd", ax, lp["xattn"]["wo"])
+        hn = nn.layer_norm(h, lp["ln3"]["g"], lp["ln3"]["b"], cfg.norm_eps)
+        h = h + _mlp_plain(lp, hn)
+        return h, {"self_k": sk, "self_v": sv}
+
+    layer_caches = {"self_k": cache["self_k"], "self_v": cache["self_v"],
+                    "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}
+    x, new_self = jax.lax.scan(body, x, (params["dec"], layer_caches))
+    h = nn.layer_norm(x, params["dec_final"]["g"], params["dec_final"]["b"],
+                      cfg.norm_eps)
+    logits = ll.unembed({}, params["embed"], cfg, h)[:, 0]
+    new_cache = {"self_k": new_self["self_k"], "self_v": new_self["self_v"],
+                 "cross_k": cache["cross_k"], "cross_v": cache["cross_v"],
+                 "pos": pos + 1}
+    return logits, new_cache
+
+
+def _cache_attend(q, k, v, valid, cfg: ModelConfig):
+    """q:[B,1,H,D] vs cache k/v:[B,T,K,D]; optional validity mask [T]."""
+    B, _, H, Dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, Dh)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k).astype(jnp.float32)
+    s = s / math.sqrt(Dh)
+    if valid is not None:
+        s = jnp.where(valid[None, None, None, :], s, attn.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgt,btkd->bkgd", p, v).reshape(B, 1, H, Dh)

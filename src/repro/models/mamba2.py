@@ -1,0 +1,197 @@
+"""Mamba2 (SSD — state-space duality) blocks, chunked-parallel for train and
+O(1)-state for decode. Used by the ``zamba2`` hybrid architecture.
+
+Chunked evaluation: within a chunk the quadratic (attention-like) form is
+used; across chunks a recurrent state [B,H,P,N] is carried by ``lax.scan`` —
+the TPU-friendly analogue of the paper's "aggregate messages into a compact
+buffer" (state exchange happens once per chunk, not per token).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import nn
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    inner = s.expand * cfg.d_model
+    H = inner // s.head_dim
+    conv_dim = inner + 2 * s.d_state   # xBC goes through the causal conv
+    return s, inner, H, conv_dim
+
+
+def mamba2_specs(cfg: ModelConfig, n_layers: Optional[int] = None) -> dict:
+    s, inner, H, conv_dim = _dims(cfg)
+    L = (n_layers if n_layers is not None else cfg.n_layers,)
+    lx = ("layers",)
+    d = cfg.d_model
+    return {
+        # in_proj → [z(inner), x(inner), B(N), C(N), dt(H)]
+        "in_proj": nn.Spec(L + (d, 2 * inner + 2 * s.d_state + H),
+                           lx + ("embed", "inner"), "fan_in"),
+        "conv_w": nn.Spec(L + (s.d_conv, conv_dim), lx + ("conv", "inner"), "fan_in"),
+        "conv_b": nn.Spec(L + (conv_dim,), lx + ("inner",), "zeros"),
+        "A_log": nn.Spec(L + (H,), lx + (None,), "zeros", dtype=jnp.float32),
+        "dt_bias": nn.Spec(L + (H,), lx + (None,), "zeros", dtype=jnp.float32),
+        "D": nn.Spec(L + (H,), lx + (None,), "ones", dtype=jnp.float32),
+        "norm": nn.Spec(L + (inner,), lx + ("inner",), "ones"),
+        "out_proj": nn.Spec(L + (inner, d), lx + ("inner", "embed"), "fan_in"),
+    }
+
+
+def _split_proj(cfg: ModelConfig, h: jnp.ndarray):
+    s, inner, H, _ = _dims(cfg)
+    z = h[..., :inner]
+    x = h[..., inner:2 * inner]
+    B = h[..., 2 * inner:2 * inner + s.d_state]
+    C = h[..., 2 * inner + s.d_state:2 * inner + 2 * s.d_state]
+    dt = h[..., 2 * inner + 2 * s.d_state:]
+    return z, x, B, C, dt
+
+
+def _causal_conv(xBC: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv along seq. xBC:[B,S,C], w:[d_conv,C]."""
+    d_conv = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xBC, dtype=jnp.float32)
+    for i in range(d_conv):
+        out = out + pad[:, i:i + xBC.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(xBC.dtype)
+
+
+def _ssd_scan(xh, Bm, Cm, a, state0):
+    """Chunk-scanned SSD core.
+
+    xh:[B,nc,Q,H,P] (dt-scaled inputs), Bm/Cm:[B,nc,Q,N], a:[B,nc,Q,H]
+    (log-decay increments, ≤0), state0:[B,H,P,N]. Returns (y, state).
+    """
+    Bsz, nc, Q, H, P = xh.shape
+
+    def chunk_body(state, inp):
+        xc, Bc, Cc, ac = inp                     # [B,Q,...]
+        Acum = jnp.cumsum(ac, axis=1)            # inclusive [B,Q,H]
+        Atot = Acum[:, -1]                       # [B,H]
+        # ---- intra-chunk (quadratic within chunk)
+        CB = jnp.einsum("bqn,bsn->bqs", Cc, Bc)  # [B,Q,Q]
+        Ldec = jnp.exp(Acum[:, :, None, :] - Acum[:, None, :, :])  # [B,Q,S,H]
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        W = jnp.where(tri[None, :, :, None], CB[..., None] * Ldec, 0.0)
+        y_intra = jnp.einsum("bqsh,bshp->bqhp", W, xc)
+        # ---- inter-chunk (carry-in state)
+        y_inter = jnp.einsum("bqn,bhpn,bqh->bqhp", Cc, state, jnp.exp(Acum))
+        # ---- state update
+        decay_rem = jnp.exp(Atot[:, None, :] - Acum)            # [B,Q,H]
+        inc = jnp.einsum("bqh,bqn,bqhp->bhpn", decay_rem, Bc, xc)
+        state = state * jnp.exp(Atot)[:, :, None, None] + inc
+        return state, y_intra + y_inter
+
+    # scan over the chunk axis
+    xs = (xh.transpose(1, 0, 2, 3, 4), Bm.transpose(1, 0, 2, 3),
+          Cm.transpose(1, 0, 2, 3), a.transpose(1, 0, 2, 3))
+    state, ys = jax.lax.scan(chunk_body, state0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4)              # [B,nc,Q,H,P]
+    return y, state
+
+
+def mamba2_forward(params, cfg: ModelConfig, x: jnp.ndarray,
+                   state0: Optional[jnp.ndarray] = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full-sequence Mamba2 block.
+
+    x:[B,S,d] → (y:[B,S,d], final ssm state, conv tail [B,d_conv-1,conv_dim]).
+    """
+    s, inner, H, conv_dim = _dims(cfg)
+    B_, S, d = x.shape
+    P, N = s.head_dim, s.d_state
+    h = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xi, Bm, Cm, dt = _split_proj(cfg, h)
+    xBC = jnp.concatenate([xi, Bm, Cm], axis=-1)
+    conv_tail = xBC[:, S - (s.d_conv - 1):, :]
+    xBC = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+    xi, Bm, Cm = (xBC[..., :inner], xBC[..., inner:inner + N],
+                  xBC[..., inner + N:])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # [B,S,H]
+    A = -jnp.exp(params["A_log"])                                      # [H]
+    a = dt * A                                                          # log-decay ≤ 0
+
+    Q = min(s.chunk, S)
+    pad = (-S) % Q
+    xh = (xi.reshape(B_, S, H, P).astype(jnp.float32) * dt[..., None])
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+    af = a
+    if pad:   # zero inputs + zero log-decay leave the state untouched
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bf = jnp.pad(Bf, ((0, 0), (0, pad), (0, 0)))
+        Cf = jnp.pad(Cf, ((0, 0), (0, pad), (0, 0)))
+        af = jnp.pad(af, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+    y, state = _ssd_scan(
+        xh.reshape(B_, nc, Q, H, P),
+        Bf.reshape(B_, nc, Q, N),
+        Cf.reshape(B_, nc, Q, N),
+        af.reshape(B_, nc, Q, H),
+        state0 if state0 is not None else jnp.zeros((B_, H, P, N), jnp.float32),
+    )
+    y = y.reshape(B_, Sp, H, P)[:, :S] + params["D"][None, None, :, None] * \
+        xi.reshape(B_, S, H, P).astype(jnp.float32)
+    y = y.reshape(B_, S, inner).astype(x.dtype)
+    y = nn.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                    params["norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, params["out_proj"]), state, conv_tail
+
+
+# ------------------------------------------------------------------ decoding
+def mamba2_cache_specs(cfg: ModelConfig, batch: int,
+                       n_layers: Optional[int] = None) -> dict:
+    s, inner, H, conv_dim = _dims(cfg)
+    L = n_layers if n_layers is not None else cfg.n_layers
+    return {
+        "ssm": jax.ShapeDtypeStruct((L, batch, H, s.head_dim, s.d_state), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((L, batch, s.d_conv - 1, conv_dim), jnp.bfloat16),
+    }
+
+
+def mamba2_cache_axes(cfg: ModelConfig) -> dict:
+    return {
+        "ssm": ("layers", "act_batch", "act_inner", None, None),
+        "conv": ("layers", "act_batch", None, "act_inner"),
+    }
+
+
+def mamba2_decode(params, cfg: ModelConfig, x: jnp.ndarray,
+                  layer_cache: dict) -> Tuple[jnp.ndarray, dict]:
+    """One-token decode. x:[B,1,d]; cache: {ssm:[B,H,P,N], conv:[B,d_conv-1,C]}."""
+    s, inner, H, conv_dim = _dims(cfg)
+    B_ = x.shape[0]
+    P, N = s.head_dim, s.d_state
+    h = jnp.einsum("bsd,de->bse", x, params["in_proj"])[:, 0]
+    z, xi, Bm, Cm, dt = _split_proj(cfg, h)
+    xBC = jnp.concatenate([xi, Bm, Cm], axis=-1)                 # [B,C]
+    conv_in = jnp.concatenate([layer_cache["conv"], xBC[:, None]], axis=1)
+    w = params["conv_w"].astype(jnp.float32)                     # [d_conv,C]
+    out = jnp.sum(conv_in.astype(jnp.float32) * w[None], axis=1)
+    xBC = jax.nn.silu(out + params["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    xi, Bm, Cm = (xBC[..., :inner], xBC[..., inner:inner + N],
+                  xBC[..., inner + N:])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * A)                                      # [B,H]
+    xh = xi.reshape(B_, H, P).astype(jnp.float32) * dt[..., None]
+    state = layer_cache["ssm"] * decay[..., None, None] + \
+        jnp.einsum("bn,bhp->bhpn", Bm.astype(jnp.float32), xh)
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm.astype(jnp.float32))
+    y = y + params["D"][None, :, None] * xi.reshape(B_, H, P).astype(jnp.float32)
+    y = y.reshape(B_, inner).astype(x.dtype)
+    y = nn.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                    params["norm"], cfg.norm_eps)
+    y = jnp.einsum("be,ed->bd", y, params["out_proj"])[:, None]
+    return y, {"ssm": state, "conv": conv_in[:, 1:]}

@@ -1,0 +1,195 @@
+"""Unified Model facade: one object per architecture exposing init / loss /
+prefill / decode plus the shape+sharding metadata the launcher and dry-run
+consume (param axes, cache specs, input specs)."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec as ed
+from repro.models import nn
+from repro.models import transformer as tf
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ----------------------------------------------------------------- specs
+    def specs(self) -> dict:
+        if self.cfg.family == "audio":
+            return ed.encdec_specs(self.cfg)
+        return tf.lm_specs(self.cfg)
+
+    def init(self, key: jax.Array):
+        return nn.init_tree(self.specs(), key)
+
+    def param_axes(self):
+        return nn.axes_tree(self.specs())
+
+    def param_shapes(self):
+        return nn.shapes_tree(self.specs())
+
+    def n_params(self) -> int:
+        return nn.param_count(self.specs())
+
+    # ----------------------------------------------------------------- steps
+    def loss_fn(self, params, batch, *, blockwise: bool = False):
+        if self.cfg.family == "audio":
+            return ed.loss_fn(self.cfg, params, batch, blockwise=blockwise)
+        return tf.loss_fn(self.cfg, params, batch, blockwise=blockwise)
+
+    def prefill(self, params, batch, cache_len: Optional[int] = None):
+        if self.cfg.family == "audio":
+            return ed.prefill(self.cfg, params, batch, cache_len=cache_len)
+        return tf.prefill(self.cfg, params, batch, cache_len=cache_len)
+
+    def decode_step(self, params, cache, tokens, pos):
+        if self.cfg.family == "audio":
+            return ed.decode_step(self.cfg, params, cache, tokens, pos)
+        return tf.decode_step(self.cfg, params, cache, tokens, pos)
+
+    # ----------------------------------------------------------------- caches
+    def cache_specs(self, batch: int, seq_len: int) -> dict:
+        if self.cfg.family == "audio":
+            return ed.cache_specs(self.cfg, batch, seq_len)
+        return tf.cache_specs(self.cfg, batch, seq_len)
+
+    def cache_axes(self) -> dict:
+        if self.cfg.family == "audio":
+            return ed.cache_axes(self.cfg)
+        return tf.cache_axes(self.cfg)
+
+    def init_cache(self, batch: int, seq_len: int):
+        if self.cfg.family == "audio":
+            specs = ed.cache_specs(self.cfg, batch, seq_len)
+            return jax.tree_util.tree_map(
+                lambda s: jnp.zeros(s.shape, s.dtype), specs)
+        return tf.init_cache(self.cfg, batch, seq_len)
+
+    # ----------------------------------------------------------------- inputs
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of this cell."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.kind == "decode":
+            return {
+                "cache": self.cache_specs(B, S),
+                "tokens": jax.ShapeDtypeStruct((B,), i32),
+                "pos": jax.ShapeDtypeStruct((), i32),
+            }
+        batch: Dict[str, Any] = {}
+        if cfg.family == "audio":
+            batch["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+            batch["tokens"] = jax.ShapeDtypeStruct((B, ed.dec_len(S)), i32)
+            return {"batch": batch}
+        batch["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        if cfg.vision_stub:
+            n_vis = min(1024, S // 4)
+            batch["vision_embeds"] = jax.ShapeDtypeStruct(
+                (B, n_vis, cfg.d_model), jnp.bfloat16)
+        if cfg.mrope:
+            batch["mrope_pos"] = jax.ShapeDtypeStruct((3, B, S), i32)
+        return {"batch": batch}
+
+    def input_axes(self, shape: ShapeConfig) -> Dict[str, Any]:
+        cfg = self.cfg
+        if shape.kind == "decode":
+            return {
+                "cache": self.cache_axes(),
+                "tokens": ("act_batch",),
+                "pos": (),
+            }
+        batch: Dict[str, Any] = {}
+        if cfg.family == "audio":
+            batch["frames"] = ("act_batch", "act_seq", "act_embed")
+            batch["tokens"] = ("act_batch", "act_seq")
+            return {"batch": batch}
+        batch["tokens"] = ("act_batch", "act_seq")
+        if cfg.vision_stub:
+            batch["vision_embeds"] = ("act_batch", None, "act_embed")
+        if cfg.mrope:
+            batch["mrope_pos"] = (None, "act_batch", "act_seq")
+        return {"batch": batch}
+
+    def dummy_inputs(self, shape: ShapeConfig, key: Optional[jax.Array] = None):
+        """Concrete random inputs matching input_specs (smoke tests)."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        specs = self.input_specs(shape)
+
+        def mk(s):
+            if jnp.issubdtype(s.dtype, jnp.integer):
+                return jax.random.randint(key, s.shape, 0, min(self.cfg.vocab, 128)
+                                          ).astype(s.dtype)
+            return jax.random.normal(key, s.shape, jnp.float32).astype(s.dtype) * 0.02
+
+        out = jax.tree_util.tree_map(mk, specs)
+        if "batch" in out and "mrope_pos" in out["batch"]:
+            # coherent t/h/w position streams (text layout): all = arange
+            B, S = out["batch"]["tokens"].shape
+            pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                   (B, S))
+            out["batch"]["mrope_pos"] = jnp.stack([pos, pos, pos])
+        if "pos" in out:
+            out["pos"] = jnp.asarray(shape.seq_len // 2, jnp.int32)
+            if self.cfg.family == "audio":
+                out["pos"] = jnp.asarray(ed.dec_len(shape.seq_len) // 2, jnp.int32)
+        if "cache" in out:
+            out["cache"] = self.init_cache(shape.global_batch, shape.seq_len)
+        return out
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)
+
+
+# ---------------------------------------------------------------- param math
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Spec-derived parameter count; MoE expert tensors are scaled by
+    (top_k + shared)/num_experts when ``active_only``."""
+    model = Model(cfg)
+    specs = model.specs()
+    total = 0.0
+    frac = 1.0
+    if cfg.moe is not None and active_only:
+        frac = cfg.moe.top_k / cfg.moe.num_experts
+
+    def walk(tree):
+        nonlocal total
+        for leaf in jax.tree_util.tree_leaves(tree, is_leaf=lambda x: isinstance(x, nn.Spec)):
+            n = math.prod(leaf.shape)
+            if active_only and "expert" in leaf.axes:
+                n *= frac
+            total += n
+
+    walk(specs)
+    return int(total)
+
+
+def model_flops_per_step(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6·N·D (N = active params, D = tokens); the §Roofline
+    'useful flops' yardstick. Decode cells: D = batch (one token each);
+    train counts fwd+bwd (6), prefill/decode fwd only (2).
+
+    Enc-dec (whisper): encoder params see S frames, decoder params see S/4
+    tokens, so N·D splits per sub-stack."""
+    mult = 6.0 if shape.kind == "train" else 2.0
+    if cfg.family == "audio":
+        from repro.models import encdec as _ed
+        model = Model(cfg)
+        specs = model.specs()
+        n_enc = nn.param_count(specs["enc"])
+        n_dec = nn.param_count(specs) - n_enc
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "decode":
+            return mult * (n_dec * B)            # one decoder token
+        return mult * (n_enc * B * S + n_dec * B * _ed.dec_len(S))
+    n_active = count_params_analytic(cfg, active_only=True)
+    return mult * n_active * shape.tokens_per_step

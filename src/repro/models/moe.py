@@ -1,0 +1,206 @@
+"""Mixture-of-Experts blocks (Mixtral 8×top-2, DeepSeek-V3 256×top-8 + shared).
+
+Dispatch strategies (auto-selected by sequence length; all pjit-safe —
+GSPMD replicates any scatter whose *indexed* dims are sharded, so the token
+dim must stay a batch dim of the scatter/einsum):
+
+- ``group_dense``  (train, S ≤ 8k): GShard-style per-sequence one-hot
+  dispatch einsum — the paper-era baseline. Its dispatch-tensor flops are
+  the measured MODEL_FLOPS/HLO gap that the §Perf MoE hillclimb removes.
+- ``scatter_batched`` (prefill, long S): vmapped per-sequence scatter into
+  [E, C, d]; the batch dim keeps dp sharding, E resharded to the expert
+  axis right after.
+- ``scatter`` (decode, S == 1): flat scatter over the few decoded tokens.
+- ``dense``: flat GShard reference (tests / oracle).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import nn
+
+
+def moe_specs(cfg: ModelConfig, stacked: bool = True) -> dict:
+    m = cfg.moe
+    L = (cfg.n_layers,) if stacked else ()
+    lx = ("layers",) if stacked else ()
+    d = cfg.d_model
+    specs = {
+        "router": nn.Spec(L + (d, m.num_experts), lx + ("embed", "expert"),
+                          "fan_in", dtype=jnp.float32),
+        "wi": nn.Spec(L + (m.num_experts, d, 2, m.expert_ff),
+                      lx + ("expert", "embed", None, "expert_ff"), "fan_in"),
+        "wo": nn.Spec(L + (m.num_experts, m.expert_ff, d),
+                      lx + ("expert", "expert_ff", "embed"), "fan_in"),
+    }
+    if m.num_shared_experts:
+        sf = m.num_shared_experts * m.expert_ff
+        specs["shared_wi"] = nn.Spec(L + (d, 2, sf), lx + ("embed", None, "ffn"), "fan_in")
+        specs["shared_wo"] = nn.Spec(L + (sf, d), lx + ("ffn", "embed"), "fan_in")
+    return specs
+
+
+def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    m = cfg.moe
+    c = int(math.ceil(n_tokens * m.top_k * m.capacity_factor / m.num_experts))
+    return max(8, -(-c // 8) * 8)   # round up to multiple of 8
+
+
+def _route(cfg: ModelConfig, logits: jnp.ndarray):
+    """logits [...,E] → (gates [...,k], ids [...,k], aux scalar)."""
+    m = cfg.moe
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, m.top_k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+    E = m.num_experts
+    flat_p = probs.reshape(-1, E)
+    me = jnp.mean(flat_p, axis=0)
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(top_e.reshape(-1, m.top_k), E,
+                                         dtype=jnp.float32), axis=1),
+                  axis=0) / m.top_k
+    aux = E * jnp.sum(me * ce)
+    return top_p, top_e, aux
+
+
+def _positions_in_expert(top_e: jnp.ndarray, E: int) -> jnp.ndarray:
+    """top_e [..., S, k] → position of each assignment within its expert,
+    counted over the trailing (S, k) dims (per leading group)."""
+    shp = top_e.shape
+    flat = top_e.reshape(shp[:-2] + (shp[-2] * shp[-1],))
+    oh = jax.nn.one_hot(flat, E, dtype=jnp.int32)
+    pos = jnp.cumsum(oh, axis=-2) - oh
+    pos = jnp.sum(pos * oh, axis=-1)
+    return pos.reshape(shp)
+
+
+def _expert_mlp(wi, wo, buf: jnp.ndarray) -> jnp.ndarray:
+    """buf [..., E, C, d] → [..., E, C, d] per-expert gated MLP."""
+    h = jnp.einsum("...ecd,edgf->...ecgf", buf, wi)
+    h = jax.nn.silu(h[..., 0, :]) * h[..., 1, :]
+    return jnp.einsum("...ecf,efd->...ecd", h, wo)
+
+
+# ------------------------------------------------------------------ dispatch
+def _group_dense(params, cfg: ModelConfig, x, top_p, top_e, C):
+    """GShard one-hot dispatch per sequence group. x:[B,S,d]."""
+    m = cfg.moe
+    E, k = m.num_experts, m.top_k
+    B, S, d = x.shape
+    pos = _positions_in_expert(top_e, E)                       # [B,S,k]
+    keep = (pos < C).astype(jnp.float32)
+    e_oh = jax.nn.one_hot(top_e, E, dtype=jnp.float32)         # [B,S,k,E]
+    pos_oh = jax.nn.one_hot(pos, C, dtype=jnp.float32) * keep[..., None]
+    disp = jnp.einsum("bske,bskc->bsec", e_oh, pos_oh)         # [B,S,E,C]
+    buf = jnp.einsum("bsec,bsd->becd", disp.astype(x.dtype), x)
+    buf = constrain(buf, ("act_batch", "act_expert", None, None))
+    out_buf = _expert_mlp(params["wi"], params["wo"], buf)
+    out_buf = constrain(out_buf, ("act_batch", "act_expert", None, None))
+    comb = jnp.einsum("bsec,bsk,bske->bsec", disp,
+                      top_p.astype(jnp.float32), e_oh)
+    return jnp.einsum("bsec,becd->bsd", comb.astype(x.dtype), out_buf)
+
+
+def _scatter_one(cfg, x_s, top_p, top_e, pos, keep, C):
+    """Per-sequence scatter dispatch. x_s:[S,d]; returns buf [E,C,d]+meta."""
+    m = cfg.moe
+    E, k = m.num_experts, m.top_k
+    S, d = x_s.shape
+    flat_e = top_e.reshape(-1)
+    flat_pos = pos.reshape(-1)
+    flat_keep = keep.reshape(-1)
+    tok = jnp.repeat(jnp.arange(S), k)
+    buf = jnp.zeros((E, C, d), x_s.dtype)
+    buf = buf.at[jnp.where(flat_keep, flat_e, E),
+                 jnp.where(flat_keep, flat_pos, 0)].set(
+        x_s[tok], mode="drop")
+    return buf, (flat_e, flat_pos, flat_keep, tok)
+
+
+def _scatter_combine_one(out_buf, meta, top_p, S, k, d):
+    flat_e, flat_pos, flat_keep, tok = meta
+    g = out_buf.at[flat_e, flat_pos].get(mode="fill", fill_value=0.0)
+    g = jnp.where(flat_keep[:, None], g, 0.0)
+    g = g * top_p.reshape(-1)[:, None].astype(g.dtype)
+    return jnp.sum(g.reshape(S, k, d), axis=1)
+
+
+def _scatter_batched(params, cfg: ModelConfig, x, top_p, top_e, C):
+    """vmap over sequences: batched scatter keeps the dp sharding on B."""
+    m = cfg.moe
+    B, S, d = x.shape
+    pos = _positions_in_expert(top_e, m.num_experts)
+    keep = pos < C
+
+    def one(x_s, p_s, e_s, pos_s, keep_s):
+        buf, meta = _scatter_one(cfg, x_s, p_s, e_s, pos_s, keep_s, C)
+        return buf, meta
+
+    bufs, metas = jax.vmap(one)(x, top_p, top_e, pos, keep)
+    bufs = constrain(bufs, ("act_batch", "act_expert", None, None))
+    out = _expert_mlp(params["wi"], params["wo"], bufs)
+    out = constrain(out, ("act_batch", "act_expert", None, None))
+
+    def comb(out_b, meta, p_s):
+        return _scatter_combine_one(out_b, meta, p_s, S, m.top_k, d)
+
+    return jax.vmap(comb)(out, metas, top_p)
+
+
+def _scatter_flat(params, cfg: ModelConfig, x, top_p, top_e, C):
+    """Flat scatter over all tokens (decode: a handful of tokens)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    x2 = x.reshape(T, d)
+    pe = _positions_in_expert(top_e.reshape(1, T, m.top_k), m.num_experts)[0]
+    keep = pe < C
+    buf, meta = _scatter_one(cfg, x2, top_p.reshape(T, -1),
+                             top_e.reshape(T, -1), pe, keep, C)
+    buf = constrain(buf, ("act_expert", None, None))
+    out_buf = _expert_mlp(params["wi"], params["wo"], buf)
+    y = _scatter_combine_one(out_buf, meta, top_p.reshape(T, -1), T,
+                             m.top_k, d)
+    return y.reshape(B, S, d)
+
+
+# ------------------------------------------------------------------- block
+def moe_block(params, cfg: ModelConfig, x: jnp.ndarray,
+              dispatch: str = "auto") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x:[B,S,d] → (y, aux_loss)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    x = constrain(x, ("act_batch", "act_seq", None))
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"])
+    top_p, top_e, aux = _route(cfg, logits)
+
+    if dispatch == "auto":
+        if S == 1:
+            dispatch = "scatter"
+        elif cfg.moe_train_dispatch != "auto":
+            dispatch = cfg.moe_train_dispatch
+        elif S <= 8192:
+            dispatch = "group_dense"
+        else:
+            dispatch = "scatter_batched"
+
+    C = capacity(cfg, S if dispatch != "scatter" else B * S)
+    if dispatch == "group_dense":
+        y = _group_dense(params, cfg, x, top_p, top_e, C)
+    elif dispatch == "scatter_batched":
+        y = _scatter_batched(params, cfg, x, top_p, top_e, C)
+    else:
+        y = _scatter_flat(params, cfg, x, top_p, top_e, C)
+
+    if m.num_shared_experts:
+        h = jnp.einsum("bsd,dgf->bsgf", x, params["shared_wi"])
+        h = jax.nn.silu(h[..., 0, :]) * h[..., 1, :]
+        y = y + jnp.einsum("bsf,fd->bsd", h, params["shared_wo"])
+    return y, aux

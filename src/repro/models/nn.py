@@ -1,0 +1,114 @@
+"""Minimal spec-based parameter system (no external NN library).
+
+A model declares a nested dict of :class:`Spec` leaves; ``init_tree`` builds
+the parameter pytree, ``axes_tree`` builds the parallel tree of logical axis
+tuples consumed by ``repro.distributed.sharding``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Axes = Tuple[Optional[str], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: Tuple[int, ...]
+    axes: Axes
+    init: str = "normal"       # normal|zeros|ones|fan_in|small
+    scale: Optional[float] = None
+    dtype: Any = None          # None => model default
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def init_tree(specs: Any, key: jax.Array, dtype=jnp.bfloat16) -> Any:
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for spec, k in zip(leaves, keys):
+        dt = spec.dtype or dtype
+        if spec.init == "zeros":
+            arr = jnp.zeros(spec.shape, dt)
+        elif spec.init == "ones":
+            arr = jnp.ones(spec.shape, dt)
+        elif spec.init == "fan_in":
+            shape = spec.shape
+            if spec.axes and spec.axes[0] == "layers":
+                shape = shape[1:]
+            if spec.axes and "expert" in spec.axes:       # per-expert matrices
+                e_dim = spec.axes.index("expert") - (1 if spec.axes[0] == "layers" else 0)
+                shape = shape[:e_dim] + shape[e_dim + 1:]
+            fan_in = math.prod(shape[:-1]) if len(shape) >= 2 else shape[-1]
+            std = (spec.scale or 1.0) / math.sqrt(max(1, fan_in))
+            arr = (jax.random.normal(k, spec.shape, jnp.float32) * std).astype(dt)
+        elif spec.init == "small":
+            arr = (jax.random.normal(k, spec.shape, jnp.float32) * 1e-2).astype(dt)
+        else:  # "normal"
+            std = spec.scale or 0.02
+            arr = (jax.random.normal(k, spec.shape, jnp.float32) * std).astype(dt)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def axes_tree(specs: Any) -> Any:
+    return jax.tree_util.tree_map(lambda s: s.axes, specs, is_leaf=_is_spec)
+
+
+def shapes_tree(specs: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or jnp.bfloat16),
+        specs,
+        is_leaf=_is_spec,
+    )
+
+
+def param_count(specs: Any) -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=_is_spec)
+    return sum(int(math.prod(s.shape)) for s in leaves)
+
+
+# --------------------------------------------------------------------------- ops
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-5,
+             plus_one: bool = False) -> jnp.ndarray:
+    """RMSNorm in fp32 accumulation. ``plus_one`` = gemma-style (1+g) scaling."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    g = gamma.astype(jnp.float32)
+    if plus_one:
+        g = 1.0 + g
+    return (y * g).astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(x.dtype)
+
+
+def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                          mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean token cross-entropy in fp32; ``labels`` int32 [..], ``logits`` [..,V]."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

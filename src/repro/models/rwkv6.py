@@ -1,0 +1,249 @@
+"""RWKV6 "Finch" — attention-free with data-dependent decay (arXiv:2404.05892).
+
+Time-mix runs in *chunked-parallel* form for train/prefill (log-space
+cumulative decays inside a chunk; per-chunk state hand-off via ``lax.scan``)
+and O(1)-state recurrence for decode. A per-token sequential reference lives
+in ``repro.kernels.ref`` and the two are property-tested against each other.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import nn
+
+
+def _dims(cfg: ModelConfig):
+    r = cfg.rwkv
+    d = cfg.d_model
+    H = d // r.head_dim
+    return r, d, H, r.head_dim
+
+
+def rwkv6_specs(cfg: ModelConfig) -> dict:
+    r, d, H, P = _dims(cfg)
+    L = (cfg.n_layers,)
+    lx = ("layers",)
+    return {
+        "tm": {  # time mix
+            "mu_r": nn.Spec(L + (d,), lx + ("embed",), "small"),
+            "mu_k": nn.Spec(L + (d,), lx + ("embed",), "small"),
+            "mu_v": nn.Spec(L + (d,), lx + ("embed",), "small"),
+            "mu_w": nn.Spec(L + (d,), lx + ("embed",), "small"),
+            "mu_g": nn.Spec(L + (d,), lx + ("embed",), "small"),
+            "w_base": nn.Spec(L + (d,), lx + ("embed",), "zeros", dtype=jnp.float32),
+            "w_lora_a": nn.Spec(L + (d, r.decay_lora), lx + ("embed", "rwkv_lora"), "fan_in"),
+            "w_lora_b": nn.Spec(L + (r.decay_lora, d), lx + ("rwkv_lora", "embed"), "small"),
+            "u": nn.Spec(L + (H, P), lx + ("heads", None), "small", dtype=jnp.float32),
+            "wr": nn.Spec(L + (d, d), lx + ("embed", "inner"), "fan_in"),
+            "wk": nn.Spec(L + (d, d), lx + ("embed", "inner"), "fan_in"),
+            "wv": nn.Spec(L + (d, d), lx + ("embed", "inner"), "fan_in"),
+            "wg": nn.Spec(L + (d, d), lx + ("embed", "inner"), "fan_in"),
+            "wo": nn.Spec(L + (d, d), lx + ("inner", "embed"), "fan_in"),
+            "ln_g": nn.Spec(L + (d,), lx + ("embed",), "ones"),
+            "ln_b": nn.Spec(L + (d,), lx + ("embed",), "zeros"),
+        },
+        "cm": {  # channel mix
+            "mu_r": nn.Spec(L + (d,), lx + ("embed",), "small"),
+            "mu_k": nn.Spec(L + (d,), lx + ("embed",), "small"),
+            "wr": nn.Spec(L + (d, d), lx + ("embed", "inner"), "fan_in"),
+            "wk": nn.Spec(L + (d, cfg.d_ff), lx + ("embed", "ffn"), "fan_in"),
+            "wv": nn.Spec(L + (cfg.d_ff, d), lx + ("ffn", "embed"), "fan_in"),
+        },
+    }
+
+
+def _shift(x: jnp.ndarray, prev: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Token shift: x[t] -> x[t-1]; first slot comes from ``prev`` (or zeros)."""
+    first = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None]
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _lerp(x, xx, mu):
+    return x + (xx - x) * mu
+
+
+def _decay(params_tm, xw: jnp.ndarray) -> jnp.ndarray:
+    """Data-dependent log-decay  lw ≤ 0  (the Finch contribution)."""
+    lora = jnp.einsum("bsd,dr->bsr", xw, params_tm["w_lora_a"])
+    lora = jnp.einsum("bsr,rd->bsd", jnp.tanh(lora), params_tm["w_lora_b"])
+    w = params_tm["w_base"] + lora.astype(jnp.float32)
+    return -jnp.exp(w)     # log-space decay increments, strictly negative
+
+
+def _wkv_chunked(r, k, v, lw, u, state0, chunk: int):
+    """Chunked WKV. r,k,v:[B,S,H,P]; lw:[B,S,H,P] (log decay); u:[H,P];
+    state0:[B,H,P,P] (k-dim × v-dim). Returns (y:[B,S,H,P], state)."""
+    B, S, H, P = r.shape
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:   # zero k/v + zero log-decay leave the state untouched
+        zpad = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, lw = zpad(r), zpad(k), zpad(v), zpad(lw)
+        S_out = S
+        S = S + pad
+    else:
+        S_out = S
+    nc = S // Q
+
+    def reshape(x):
+        return x.reshape(B, nc, Q, H, P).transpose(1, 0, 2, 3, 4)
+
+    rs, ks, vs, lws = map(reshape, (r, k, v, lw))
+
+    tri = jnp.tril(jnp.ones((Q, Q), bool), k=-1)
+
+    def chunk_body(state, inp):
+        rc, kc, vc, lwc = inp                    # [B,Q,H,P]
+        LW = jnp.cumsum(lwc, axis=1)             # inclusive
+        LWexc = LW - lwc                         # exclusive
+        LWtot = LW[:, -1]                        # [B,H,P]
+        # pairwise per-channel decay(t,s) = exp(LWexc[t] - LW[s]); the
+        # exponent is ≤ 0 for s < t so this form cannot overflow (the
+        # exp(LWexc)·exp(-LW) factorization would).
+        Dmat = jnp.exp(jnp.clip(LWexc[:, :, None] - LW[:, None], -60.0, 0.0))
+        A = jnp.einsum("bqhp,bshp,bqshp->bhqs", rc, kc, Dmat)
+        A = jnp.where(tri[None, None], A, 0.0)
+        diag = jnp.einsum("bqhp,bqhp->bhq", rc * u[None, None], kc)
+        y = jnp.einsum("bhqs,bshp->bqhp", A, vc) + diag.transpose(0, 2, 1)[..., None] * vc
+        # inter-chunk carry-in
+        y = y + jnp.einsum("bqhp,bhpn->bqhn",
+                           rc * jnp.exp(jnp.clip(LWexc, -60.0, 0.0)), state)
+        # state update: S' = diag(exp(LWtot)) S + Σ_s diag(exp(LWtot-LW[s])) k_s v_s^T
+        kdec = kc * jnp.exp(jnp.clip(LWtot[:, None] - LW, -60.0, 0.0))
+        state = state * jnp.exp(LWtot)[..., None] + \
+            jnp.einsum("bshp,bshn->bhpn", kdec, vc)
+        return state, y
+
+    state, ys = jax.lax.scan(chunk_body, state0, (rs, ks, vs, lws))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    return y[:, :S_out], state
+
+
+# ------------------------------------------------------------------ block fns
+def _group_norm(x: jnp.ndarray, gamma, beta, H: int, eps: float = 64e-5):
+    """Per-head group norm over the P channels (RWKV ln_x). x:[...,d]."""
+    shp = x.shape
+    xh = x.reshape(shp[:-1] + (H, shp[-1] // H)).astype(jnp.float32)
+    mu = jnp.mean(xh, axis=-1, keepdims=True)
+    var = jnp.var(xh, axis=-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    x = xh.reshape(shp)
+    return (x * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(jnp.bfloat16)
+
+
+def time_mix(tm, cfg: ModelConfig, x: jnp.ndarray,
+             shift_prev=None, wkv_state=None) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full-sequence time-mix. Returns (y, last_x, wkv_state)."""
+    r_, d, H, P = _dims(cfg)
+    B, S, _ = x.shape
+    xx = _shift(x, shift_prev)
+    xr = _lerp(x, xx, tm["mu_r"])
+    xk = _lerp(x, xx, tm["mu_k"])
+    xv = _lerp(x, xx, tm["mu_v"])
+    xw = _lerp(x, xx, tm["mu_w"])
+    xg = _lerp(x, xx, tm["mu_g"])
+    r = jnp.einsum("bsd,de->bse", xr, tm["wr"]).reshape(B, S, H, P)
+    k = jnp.einsum("bsd,de->bse", xk, tm["wk"]).reshape(B, S, H, P)
+    v = jnp.einsum("bsd,de->bse", xv, tm["wv"]).reshape(B, S, H, P)
+    g = jnp.einsum("bsd,de->bse", xg, tm["wg"])
+    lw = _decay(tm, xw).reshape(B, S, H, P)
+    if wkv_state is None:
+        wkv_state = jnp.zeros((B, H, P, P), jnp.float32)
+    y, wkv_state = _wkv_chunked(r.astype(jnp.float32), k.astype(jnp.float32),
+                                v.astype(jnp.float32), lw, tm["u"],
+                                wkv_state, r_.chunk)
+    y = _group_norm(y.reshape(B, S, d), tm["ln_g"], tm["ln_b"], H)
+    y = (y * jax.nn.silu(g.astype(jnp.float32)).astype(jnp.bfloat16)).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", y, tm["wo"]), x[:, -1], wkv_state
+
+
+def channel_mix(cm, cfg: ModelConfig, x: jnp.ndarray,
+                shift_prev=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    xx = _shift(x, shift_prev)
+    xr = _lerp(x, xx, cm["mu_r"])
+    xk = _lerp(x, xx, cm["mu_k"])
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, cm["wr"]))
+    kk = jnp.einsum("bsd,df->bsf", xk, cm["wk"])
+    kk = jnp.square(jax.nn.relu(kk))
+    return rr * jnp.einsum("bsf,fd->bsd", kk, cm["wv"]), x[:, -1]
+
+
+def rwkv6_cache_specs(cfg: ModelConfig, batch: int) -> dict:
+    r, d, H, P = _dims(cfg)
+    L = cfg.n_layers
+    return {
+        "tm_shift": jax.ShapeDtypeStruct((L, batch, d), jnp.bfloat16),
+        "cm_shift": jax.ShapeDtypeStruct((L, batch, d), jnp.bfloat16),
+        "wkv": jax.ShapeDtypeStruct((L, batch, H, P, P), jnp.float32),
+    }
+
+
+def rwkv6_cache_axes(cfg: ModelConfig) -> dict:
+    return {
+        "tm_shift": ("layers", "act_batch", "act_embed"),
+        "cm_shift": ("layers", "act_batch", "act_embed"),
+        "wkv": ("layers", "act_batch", "act_heads", None, None),
+    }
+
+
+def time_mix_decode(tm, cfg: ModelConfig, x: jnp.ndarray,
+                    shift_prev: jnp.ndarray, wkv_state: jnp.ndarray):
+    """One-token time-mix. x:[B,1,d]; shift_prev:[B,d]; wkv:[B,H,P,P]."""
+    r_, d, H, P = _dims(cfg)
+    B = x.shape[0]
+    xt = x[:, 0]
+    xx = shift_prev
+    xr = _lerp(xt, xx, tm["mu_r"])
+    xk = _lerp(xt, xx, tm["mu_k"])
+    xv = _lerp(xt, xx, tm["mu_v"])
+    xw = _lerp(xt, xx, tm["mu_w"])
+    xg = _lerp(xt, xx, tm["mu_g"])
+    r = jnp.einsum("bd,de->be", xr, tm["wr"]).reshape(B, H, P).astype(jnp.float32)
+    k = jnp.einsum("bd,de->be", xk, tm["wk"]).reshape(B, H, P).astype(jnp.float32)
+    v = jnp.einsum("bd,de->be", xv, tm["wv"]).reshape(B, H, P).astype(jnp.float32)
+    g = jnp.einsum("bd,de->be", xg, tm["wg"])
+    lw = _decay(tm, xw[:, None])[:, 0].reshape(B, H, P)
+    # y = r · (S + diag(u) k v^T);  S' = diag(exp(lw)) S + k v^T
+    y = jnp.einsum("bhp,bhpn->bhn", r, wkv_state) + \
+        jnp.einsum("bhp,bhp,bhn->bhn", r, tm["u"][None] * k, v)
+    wkv_state = wkv_state * jnp.exp(lw)[..., None] + \
+        jnp.einsum("bhp,bhn->bhpn", k, v)
+    y = _group_norm(y.reshape(B, d), tm["ln_g"], tm["ln_b"], H)
+    y = (y * jax.nn.silu(g.astype(jnp.float32)).astype(jnp.bfloat16)).astype(x.dtype)
+    return jnp.einsum("be,ed->bd", y, tm["wo"])[:, None], xt, wkv_state
+
+
+def channel_mix_decode(cm, cfg: ModelConfig, x: jnp.ndarray, shift_prev: jnp.ndarray):
+    xt = x[:, 0]
+    xr = _lerp(xt, shift_prev, cm["mu_r"])
+    xk = _lerp(xt, shift_prev, cm["mu_k"])
+    rr = jax.nn.sigmoid(jnp.einsum("bd,de->be", xr, cm["wr"]))
+    kk = jnp.square(jax.nn.relu(jnp.einsum("bd,df->bf", xk, cm["wk"])))
+    return (rr * jnp.einsum("bf,fd->bd", kk, cm["wv"]))[:, None], xt
+
+
+def wkv_pairwise(r, k, v, lw, u, state0):
+    """O(S²) per-chunk-free reference (used for small S in tests).
+
+    decay(t,s) per channel = exp(LWexc[t] - LW[s]), computed safely.
+    """
+    B, S, H, P = r.shape
+    LW = jnp.cumsum(lw, axis=1)
+    LWexc = LW - lw
+    # D[t,s,i] = exp(LWexc[t,i] - LW[s,i])  for s<t
+    Dmat = jnp.exp(jnp.clip(LWexc[:, :, None] - LW[:, None, :], -60.0, 0.0))
+    A = jnp.einsum("bthp,bshp,btshp->bhts", r, k, Dmat)
+    tri = jnp.tril(jnp.ones((S, S), bool), k=-1)
+    A = jnp.where(tri[None, None], A, 0.0)
+    diag = jnp.einsum("bthp,bthp->bht", r * u[None, None], k)
+    y = jnp.einsum("bhts,bshp->bthp", A, v) + diag.transpose(0, 2, 1)[..., None] * v
+    y = y + jnp.einsum("bthp,bhpn->bthn", r * jnp.exp(jnp.clip(LWexc, -60.0, 0.0)), state0)
+    LWtot = LW[:, -1]
+    kdec = k * jnp.exp(jnp.clip(LWtot[:, None] - LW, -60.0, 0.0))
+    state = state0 * jnp.exp(LWtot)[..., None] + jnp.einsum("bshp,bshn->bhpn", kdec, v)
+    return y, state

@@ -1,0 +1,515 @@
+"""Decoder-only LM assembly for dense / MoE / MLA / hybrid / RWKV families.
+
+Layer stacks are ``lax.scan``-ed over stacked parameters (compact HLO, fast
+512-device compiles) with configurable activation-checkpoint policy; the
+zamba2 hybrid uses an unrolled loop because a weight-shared attention block
+interleaves the SSM backbone.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn
+from repro.models import layers as ll
+from repro.models import mamba2 as m2
+from repro.models import moe as moe_mod
+from repro.models import nn
+from repro.models import rwkv6 as rk
+
+
+def _remat(f, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return f
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(f, policy=policy)
+    return jax.checkpoint(f)
+
+
+# ============================================================== specs
+def lm_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    L = cfg.n_layers
+    specs: Dict[str, Any] = {
+        "embed": ll.embed_specs(cfg),
+        "final_norm": nn.Spec((d,), ("embed",), "ones"),
+        "unembed": ll.unembed_specs(cfg),
+    }
+    if cfg.family == "ssm":      # rwkv6
+        specs["layers"] = {
+            "ln1": nn.Spec((L, d), ("layers", "embed"), "ones"),
+            "ln2": nn.Spec((L, d), ("layers", "embed"), "ones"),
+            **rk.rwkv6_specs(cfg),
+        }
+        return specs
+    if cfg.family == "hybrid":   # zamba2
+        specs["layers"] = {
+            "ln": nn.Spec((L, d), ("layers", "embed"), "ones"),
+            **m2.mamba2_specs(cfg),
+        }
+        specs["shared_attn"] = {
+            "ln1": nn.Spec((d,), ("embed",), "ones"),
+            "ln2": nn.Spec((d,), ("embed",), "ones"),
+            "attn": attn.gqa_specs(cfg, stacked=False),
+            "mlp": ll.mlp_specs(cfg, stacked=False),
+        }
+        return specs
+    # dense / moe / vlm decoder
+    layer: Dict[str, Any] = {
+        "ln1": nn.Spec((L, d), ("layers", "embed"), "ones"),
+        "ln2": nn.Spec((L, d), ("layers", "embed"), "ones"),
+        "attn": attn.mla_specs(cfg) if cfg.mla else attn.gqa_specs(cfg),
+        "mlp": moe_mod.moe_specs(cfg) if cfg.moe else ll.mlp_specs(cfg),
+    }
+    specs["layers"] = layer
+    if cfg.mtp_depth:
+        import dataclasses as _dc
+        one = _dc.replace(cfg, n_layers=1)
+        mtp_layer: Dict[str, Any] = {
+            "ln1": nn.Spec((1, d), ("layers", "embed"), "ones"),
+            "ln2": nn.Spec((1, d), ("layers", "embed"), "ones"),
+            "attn": attn.mla_specs(one) if cfg.mla else attn.gqa_specs(one),
+            "mlp": moe_mod.moe_specs(one) if cfg.moe else ll.mlp_specs(one),
+        }
+        specs["mtp"] = {
+            # two half-projections instead of one (2d,d) over a concat: the
+            # concat's backward slice + fsdp-sharded contraction trips GSPMD
+            # into full rematerialization of the cotangent (2×15 GB measured)
+            "proj_h": nn.Spec((d, d), ("embed", None), "fan_in"),
+            "proj_e": nn.Spec((d, d), ("embed", None), "fan_in"),
+            "norm": nn.Spec((d,), ("embed",), "ones"),
+            "layer": mtp_layer,
+        }
+    return specs
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    return nn.init_tree(lm_specs(cfg), key)
+
+
+def param_axes(cfg: ModelConfig):
+    return nn.axes_tree(lm_specs(cfg))
+
+
+# ============================================================== layer bodies
+def _decoder_layer(cfg: ModelConfig, lp, x, *, blockwise: bool,
+                   mrope_cs=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    h = nn.rms_norm(x, lp["ln1"], cfg.norm_eps, cfg.norm_plus_one)
+    if cfg.mla:
+        a, _ = attn.mla_train(lp["attn"], cfg, h, blockwise=blockwise)
+    else:
+        a, _ = attn.gqa_train(lp["attn"], cfg, h, mrope_cs=mrope_cs,
+                              blockwise=blockwise)
+    x = x + a
+    h = nn.rms_norm(x, lp["ln2"], cfg.norm_eps, cfg.norm_plus_one)
+    if cfg.moe:
+        y, aux = moe_mod.moe_block(lp["mlp"], cfg, h)
+    else:
+        y, aux = ll.mlp(lp["mlp"], cfg, h), jnp.zeros((), jnp.float32)
+    return x + y, aux
+
+
+def _stack_forward(cfg: ModelConfig, params, x, *, blockwise: bool,
+                   mrope_cs=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Run the scanned decoder stack. Returns (hidden, aux_loss_sum)."""
+
+    def body(carry, lp):
+        h, aux = carry
+        h, a = _decoder_layer(cfg, lp, h, blockwise=blockwise, mrope_cs=mrope_cs)
+        return (h, aux + a), None
+
+    body = _remat(body, cfg)
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   params["layers"])
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda p: p[i], params["layers"])
+            (x, aux), _ = body((x, aux), lp)
+    return x, aux
+
+
+# ---------------------------------------------------------------- rwkv stack
+def _rwkv_stack(cfg: ModelConfig, params, x):
+    def body(carry, lp):
+        h, _ = carry
+        a, _, _ = rk.time_mix(lp["tm"], cfg,
+                              nn.rms_norm(h, lp["ln1"], cfg.norm_eps))
+        h = h + a
+        c, _ = rk.channel_mix(lp["cm"], cfg,
+                              nn.rms_norm(h, lp["ln2"], cfg.norm_eps))
+        return (h + c, carry[1]), None
+
+    body = _remat(body, cfg)
+    (x, _), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                             params["layers"])
+    return x, jnp.zeros((), jnp.float32)
+
+
+# --------------------------------------------------------------- zamba2 stack
+def _shared_attn_block(cfg: ModelConfig, sp, x, *, blockwise: bool):
+    h = nn.rms_norm(x, sp["ln1"], cfg.norm_eps)
+    a, _ = attn.gqa_train(sp["attn"], cfg, h, blockwise=blockwise)
+    x = x + a
+    h = nn.rms_norm(x, sp["ln2"], cfg.norm_eps)
+    return x + ll.mlp(sp["mlp"], cfg, h)
+
+
+def _zamba_stack(cfg: ModelConfig, params, x, *, blockwise: bool):
+    """Nested group-scan: scan over groups of (attn_every mamba layers +
+    one weight-shared attention block). The unrolled form compiled the
+    38-layer backward in ~20 min at 256 devices; this compiles the mamba
+    body once per nesting level."""
+    every = cfg.hybrid.attn_every
+    L = cfg.n_layers
+    n_groups = L // every
+    rem = L - n_groups * every
+
+    def mamba_body(h, lp):
+        hh = nn.rms_norm(h, lp["ln"], cfg.norm_eps)
+        y, _, _ = m2.mamba2_forward(lp, cfg, hh)
+        return h + y, None
+
+    mamba_body = _remat(mamba_body, cfg)
+    shared = _remat(
+        functools.partial(_shared_attn_block, cfg, params["shared_attn"],
+                          blockwise=blockwise), cfg)
+
+    head = jax.tree_util.tree_map(
+        lambda p: p[: n_groups * every].reshape(
+            (n_groups, every) + p.shape[1:]), params["layers"])
+    tail = jax.tree_util.tree_map(lambda p: p[n_groups * every:],
+                                  params["layers"])
+
+    def group_body(h, gp):
+        h, _ = jax.lax.scan(mamba_body, h, gp)
+        return shared(h), None
+
+    x, _ = jax.lax.scan(group_body, x, head)
+    if rem:
+        x, _ = jax.lax.scan(mamba_body, x, tail)
+    return x, jnp.zeros((), jnp.float32)
+
+
+# ============================================================== public API
+def _embed_in(cfg: ModelConfig, params, batch: Dict[str, jnp.ndarray]):
+    x = ll.embed(params["embed"], batch["tokens"])
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if cfg.vision_stub and "vision_embeds" in batch:
+        ve = batch["vision_embeds"].astype(x.dtype)
+        x = jax.lax.dynamic_update_slice(x, ve, (0, 4, 0))
+    return x
+
+
+def _mrope_cs(cfg: ModelConfig, batch):
+    if not cfg.mrope:
+        return None
+    return ll.mrope_angles(batch["mrope_pos"], cfg.head_dim, cfg.rope_theta,
+                           cfg.mrope_sections)
+
+
+def forward(cfg: ModelConfig, params, batch, *, blockwise: bool = False):
+    """Hidden states + aux loss for a full sequence. batch["tokens"]: [B,S]."""
+    x = _embed_in(cfg, params, batch)
+    if cfg.family == "ssm":
+        h, aux = _rwkv_stack(cfg, params, x)
+    elif cfg.family == "hybrid":
+        h, aux = _zamba_stack(cfg, params, x, blockwise=blockwise)
+    else:
+        h, aux = _stack_forward(cfg, params, x, blockwise=blockwise,
+                                mrope_cs=_mrope_cs(cfg, batch))
+    h = nn.rms_norm(h, params["final_norm"], cfg.norm_eps, cfg.norm_plus_one)
+    return h, aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, blockwise: bool = False):
+    """Next-token CE (+ MoE aux + MTP loss). Returns (loss, metrics)."""
+    h, aux = forward(cfg, params, batch, blockwise=blockwise)
+    logits = ll.unembed(params["unembed"], params["embed"], cfg, h[:, :-1])
+    labels = batch["tokens"][:, 1:]
+    ce = nn.softmax_cross_entropy(logits, labels)
+    loss = ce + 0.01 * aux
+    metrics = {"ce": ce, "aux": aux}
+    if cfg.mtp_depth and "mtp" in params:
+        mtp = params["mtp"]
+        emb_next = ll.embed(params["embed"], batch["tokens"][:, 1:-1])
+        h_in = (jnp.einsum("bsd,de->bse", h[:, :-2], mtp["proj_h"]) +
+                jnp.einsum("bsd,de->bse", emb_next, mtp["proj_e"]))
+        h_in = nn.rms_norm(h_in, mtp["norm"], cfg.norm_eps)
+
+        # run the MTP layer as a length-1 scan: outside a scan GSPMD reshards
+        # the (B,S-2,d) activation onto the weights' fsdp axis ("involuntary
+        # full rematerialization", 2×15 GB) instead of all-gathering weights
+        # as it does for the scanned main stack.
+        def mtp_body(hh, lp):
+            hh, _ = _decoder_layer(cfg, lp, hh, blockwise=blockwise)
+            return hh, None
+
+        h_mtp, _ = jax.lax.scan(_remat(mtp_body, cfg), h_in, mtp["layer"])
+        mtp_logits = ll.unembed(params["unembed"], params["embed"], cfg, h_mtp)
+        mtp_ce = nn.softmax_cross_entropy(mtp_logits, batch["tokens"][:, 2:])
+        loss = loss + 0.3 * mtp_ce
+        metrics["mtp_ce"] = mtp_ce
+    return loss, metrics
+
+
+# ============================================================== prefill
+def _ring_index(S: int, W: int) -> jnp.ndarray:
+    """Sequence indices of the last-W ring slots after prefilling S tokens."""
+    return S - W + ((jnp.arange(W) - (S % W)) % W)
+
+
+def prefill(cfg: ModelConfig, params, batch, cache_len: Optional[int] = None):
+    """Full-prompt prefill. Returns (last-token logits [B,V], cache).
+
+    ``cache_len`` (≥ prompt length) pre-allocates decode head-room in the
+    full caches (SWA ring buffers and SSM/RWKV states need none)."""
+    x = _embed_in(cfg, params, batch)
+    B, S = batch["tokens"].shape
+
+    def pad_seq(arr, axis=2):
+        if cache_len is None or cache_len <= arr.shape[axis]:
+            return arr
+        widths = [(0, 0)] * arr.ndim
+        widths[axis] = (0, cache_len - arr.shape[axis])
+        return jnp.pad(arr, widths)
+
+    if cfg.family == "ssm":
+        def body(h, lp):
+            a, tm_shift, wkv = rk.time_mix(
+                lp["tm"], cfg, nn.rms_norm(h, lp["ln1"], cfg.norm_eps))
+            h = h + a
+            c, cm_shift = rk.channel_mix(
+                lp["cm"], cfg, nn.rms_norm(h, lp["ln2"], cfg.norm_eps))
+            return h + c, {"tm_shift": tm_shift, "cm_shift": cm_shift, "wkv": wkv}
+
+        x, cache = jax.lax.scan(body, x, params["layers"])
+
+    elif cfg.family == "hybrid":
+        every = cfg.hybrid.attn_every
+        L = cfg.n_layers
+        n_groups = L // every
+        rem = L - n_groups * every
+        sp = params["shared_attn"]
+
+        def mamba_body(h, lp):
+            hh = nn.rms_norm(h, lp["ln"], cfg.norm_eps)
+            y, st, ct = m2.mamba2_forward(lp, cfg, hh)
+            return h + y, {"ssm": st, "conv": ct}
+
+        def group_body(h, gp):
+            h, mc = jax.lax.scan(mamba_body, h, gp)
+            hn = nn.rms_norm(h, sp["ln1"], cfg.norm_eps)
+            a, (k, v) = attn.gqa_train(sp["attn"], cfg, hn, blockwise=True)
+            h = h + a
+            hn = nn.rms_norm(h, sp["ln2"], cfg.norm_eps)
+            h = h + ll.mlp(sp["mlp"], cfg, hn)
+            return h, (mc, k, v)
+
+        head = jax.tree_util.tree_map(
+            lambda p: p[: n_groups * every].reshape(
+                (n_groups, every) + p.shape[1:]), params["layers"])
+        tail = jax.tree_util.tree_map(lambda p: p[n_groups * every:],
+                                      params["layers"])
+        x, (mc_g, ak, av) = jax.lax.scan(group_body, x, head)
+        mcache = jax.tree_util.tree_map(
+            lambda c: c.reshape((-1,) + c.shape[2:]), mc_g)
+        if rem:
+            x, mc_t = jax.lax.scan(mamba_body, x, tail)
+            mcache = jax.tree_util.tree_map(
+                lambda a2, b2: jnp.concatenate([a2, b2], axis=0),
+                mcache, mc_t)
+        cache = {
+            "mamba": mcache,
+            "attn": {"k": pad_seq(ak), "v": pad_seq(av),
+                     "pos": jnp.asarray(S, jnp.int32)},
+        }
+
+    else:
+        mrope_cs = _mrope_cs(cfg, batch)
+
+        def body(carry, lp):
+            h = carry
+            hn = nn.rms_norm(h, lp["ln1"], cfg.norm_eps, cfg.norm_plus_one)
+            if cfg.mla:
+                a, kv = attn.mla_train(lp["attn"], cfg, hn, blockwise=True)
+            else:
+                a, kv = attn.gqa_train(lp["attn"], cfg, hn, mrope_cs=mrope_cs,
+                                       blockwise=True)
+            h = h + a
+            hn = nn.rms_norm(h, lp["ln2"], cfg.norm_eps, cfg.norm_plus_one)
+            if cfg.moe:
+                y, _ = moe_mod.moe_block(lp["mlp"], cfg, hn)
+            else:
+                y = ll.mlp(lp["mlp"], cfg, hn)
+            return h + y, kv
+
+        x, kvs = jax.lax.scan(body, x, params["layers"])
+        if cfg.mla:
+            cache = {"ckv": pad_seq(kvs[0]), "krope": pad_seq(kvs[1]),
+                     "pos": jnp.asarray(S, jnp.int32)}
+        else:
+            k, v = kvs                                   # [L,B,S,K,Dh]
+            cdt = jnp.dtype(cfg.kv_cache_dtype)
+            k, v = k.astype(cdt), v.astype(cdt)
+            W = attn.gqa_cache_len(cfg, S)
+            if cfg.window is not None:
+                idx = _ring_index(S, W)
+                k = jnp.take(k, idx, axis=2)
+                v = jnp.take(v, idx, axis=2)
+                slot_pos = jnp.broadcast_to(idx[None], (cfg.n_layers, W))
+                cache = {"k": k, "v": v, "slot_pos": slot_pos,
+                         "pos": jnp.asarray(S, jnp.int32)}
+            else:
+                cache = {"k": pad_seq(k), "v": pad_seq(v),
+                         "pos": jnp.asarray(S, jnp.int32)}
+
+    h = nn.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps,
+                    cfg.norm_plus_one)
+    logits = ll.unembed(params["unembed"], params["embed"], cfg, h)[:, 0]
+    return logits, cache
+
+
+# ============================================================== serving
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    if cfg.family == "ssm":
+        return rk.rwkv6_cache_specs(cfg, batch)
+    if cfg.family == "hybrid":
+        n_apps = cfg.n_layers // cfg.hybrid.attn_every
+        return {
+            "mamba": m2.mamba2_cache_specs(cfg, batch),
+            "attn": attn.gqa_cache_specs(cfg, batch, seq_len, n_layers=n_apps),
+        }
+    if cfg.mla:
+        return attn.mla_cache_specs(cfg, batch, seq_len)
+    return attn.gqa_cache_specs(cfg, batch, seq_len)
+
+
+def cache_axes(cfg: ModelConfig) -> dict:
+    if cfg.family == "ssm":
+        return rk.rwkv6_cache_axes(cfg)
+    if cfg.family == "hybrid":
+        return {"mamba": m2.mamba2_cache_axes(cfg),
+                "attn": attn.gqa_cache_axes(cfg)}
+    if cfg.mla:
+        return attn.mla_cache_axes(cfg)
+    return attn.gqa_cache_axes(cfg)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    specs = cache_specs(cfg, batch, seq_len)
+    cache = jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
+    if cfg.family not in ("ssm", "hybrid") and not cfg.mla and cfg.window is not None:
+        cache["slot_pos"] = cache["slot_pos"] - 1
+    if cfg.family == "hybrid" and cfg.window is not None and "slot_pos" in cache["attn"]:
+        cache["attn"]["slot_pos"] = cache["attn"]["slot_pos"] - 1
+    return cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens: jnp.ndarray,
+                pos: jnp.ndarray):
+    """One decode step. tokens:[B] int32, pos scalar int32 (uniform batch).
+
+    Returns (logits [B,V], new_cache)."""
+    x = ll.embed(params["embed"], tokens[:, None])
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+
+    if cfg.family == "ssm":
+        x, cache = _rwkv_decode(cfg, params, x, cache)
+    elif cfg.family == "hybrid":
+        x, cache = _zamba_decode(cfg, params, x, cache, pos)
+    else:
+        x, cache = _transformer_decode(cfg, params, x, cache, pos)
+    h = nn.rms_norm(x, params["final_norm"], cfg.norm_eps, cfg.norm_plus_one)
+    logits = ll.unembed(params["unembed"], params["embed"], cfg, h)[:, 0]
+    return logits, cache
+
+
+def _transformer_decode(cfg: ModelConfig, params, x, cache, pos):
+    pos = jnp.asarray(pos, jnp.int32)
+
+    def body(h, xs):
+        lp, lc = xs
+        hn = nn.rms_norm(h, lp["ln1"], cfg.norm_eps, cfg.norm_plus_one)
+        if cfg.mla:
+            a, nc = attn.mla_decode(lp["attn"], cfg, hn, lc, pos)
+        else:
+            a, nc = attn.gqa_decode(lp["attn"], cfg, hn, lc, pos)
+        h = h + a
+        hn = nn.rms_norm(h, lp["ln2"], cfg.norm_eps, cfg.norm_plus_one)
+        if cfg.moe:
+            y, _ = moe_mod.moe_block(lp["mlp"], cfg, hn)
+        else:
+            y = ll.mlp(lp["mlp"], cfg, hn)
+        return h + y, nc
+
+    layer_caches = {k: v for k, v in cache.items() if k not in ("pos", "slot_pos")}
+    extra = {}
+    if "slot_pos" in cache:
+        layer_caches["slot_pos"] = cache["slot_pos"]
+    x, new_caches = jax.lax.scan(body, x, (params["layers"], layer_caches))
+    new_cache = dict(new_caches)
+    new_cache["pos"] = pos + 1
+    return x, new_cache
+
+
+def _rwkv_decode(cfg: ModelConfig, params, x, cache):
+    def body(h, xs):
+        lp, lc = xs
+        a, tm_shift, wkv = rk.time_mix_decode(
+            lp["tm"], cfg, nn.rms_norm(h, lp["ln1"], cfg.norm_eps),
+            lc["tm_shift"], lc["wkv"])
+        h = h + a
+        c, cm_shift = rk.channel_mix_decode(
+            lp["cm"], cfg, nn.rms_norm(h, lp["ln2"], cfg.norm_eps),
+            lc["cm_shift"])
+        return h + c, {"tm_shift": tm_shift, "cm_shift": cm_shift, "wkv": wkv}
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    return x, new_cache
+
+
+def _zamba_decode(cfg: ModelConfig, params, x, cache, pos):
+    pos = jnp.asarray(pos, jnp.int32)
+    every = cfg.hybrid.attn_every
+    sp = params["shared_attn"]
+    mcache = cache["mamba"]
+    acache = cache["attn"]
+    new_m = {"ssm": [], "conv": []}
+    new_a = {k: [] for k in acache}
+    acache_layers = {k: v for k, v in acache.items() if k != "pos"}
+    for i in range(cfg.n_layers):
+        lp = jax.tree_util.tree_map(lambda p: p[i], params["layers"])
+        lc = jax.tree_util.tree_map(lambda p: p[i], mcache)
+        hn = nn.rms_norm(x, lp["ln"], cfg.norm_eps)
+        y, nc = m2.mamba2_decode(lp, cfg, hn, lc)
+        x = x + y
+        new_m["ssm"].append(nc["ssm"])
+        new_m["conv"].append(nc["conv"])
+        if (i + 1) % every == 0:
+            j = (i + 1) // every - 1
+            ac = jax.tree_util.tree_map(lambda p: p[j], acache_layers)
+            hn = nn.rms_norm(x, sp["ln1"], cfg.norm_eps)
+            a, nac = attn.gqa_decode(sp["attn"], cfg, hn, ac, pos)
+            x = x + a
+            hn = nn.rms_norm(x, sp["ln2"], cfg.norm_eps)
+            x = x + ll.mlp(sp["mlp"], cfg, hn)
+            for k in nac:
+                new_a[k].append(nac[k])
+    new_cache = {
+        "mamba": {k: jnp.stack(v) for k, v in new_m.items()},
+        "attn": {k: jnp.stack(v) for k, v in new_a.items() if v},
+    }
+    new_cache["attn"]["pos"] = pos + 1
+    return x, new_cache

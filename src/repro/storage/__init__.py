@@ -1,0 +1,5 @@
+from repro.storage.grin import Traits, GRINAdapter  # noqa: F401
+from repro.storage.csr import CSRStore  # noqa: F401
+from repro.storage.gart import GARTStore, LinkedListStore  # noqa: F401
+from repro.storage.graphar import GraphArStore  # noqa: F401
+from repro.storage.lpg import PropertyGraph  # noqa: F401

@@ -1,0 +1,111 @@
+"""CSRStore — the Vineyard analogue: immutable, in-memory, zero-copy views.
+
+CSR + (optional) CSC with contiguous internal vertex ids, label arrays and
+columnar properties. The construction path (edge list → sorted CSR) is the
+shared substrate for GART compaction and GraphAr chunking.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.storage.grin import Traits
+
+
+def edges_to_csr(n: int, src: np.ndarray, dst: np.ndarray,
+                 data: Optional[Dict[str, np.ndarray]] = None):
+    """Sort an edge list into CSR. Returns (indptr, indices, perm)."""
+    order = np.lexsort((dst, src))
+    src_s, dst_s = src[order], dst[order]
+    counts = np.bincount(src_s, minlength=n)
+    indptr = np.zeros(n + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    return indptr, dst_s.astype(np.int32), order
+
+
+class CSRStore:
+    """Immutable in-memory property graph store (Vineyard-like)."""
+
+    def __init__(self, n_vertices: int, src: np.ndarray, dst: np.ndarray,
+                 vertex_props: Optional[Dict[str, np.ndarray]] = None,
+                 edge_props: Optional[Dict[str, np.ndarray]] = None,
+                 vertex_labels: Optional[np.ndarray] = None,
+                 edge_labels: Optional[np.ndarray] = None,
+                 build_csc: bool = True):
+        src = np.asarray(src, np.int64)
+        dst = np.asarray(dst, np.int64)
+        self._n = int(n_vertices)
+        self.indptr, self.indices, perm = edges_to_csr(self._n, src, dst)
+        self._vprops = dict(vertex_props or {})
+        self._eprops = {k: np.asarray(v)[perm] for k, v in (edge_props or {}).items()}
+        self._vlabels = (np.asarray(vertex_labels, np.int32)
+                         if vertex_labels is not None
+                         else np.zeros(self._n, np.int32))
+        self._elabels = (np.asarray(edge_labels, np.int32)[perm]
+                         if edge_labels is not None
+                         else np.zeros(len(self.indices), np.int32))
+        self._csc: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None
+        if build_csc:
+            self._build_csc()
+
+    # ------------------------------------------------------------------ GRIN
+    def traits(self) -> Traits:
+        t = (Traits.TOPOLOGY_ARRAY | Traits.DEGREE | Traits.VERTEX_PROPERTY |
+             Traits.EDGE_PROPERTY | Traits.VERTEX_LABEL | Traits.EDGE_LABEL |
+             Traits.INDEX_INTERNAL_ID)
+        if self._csc is not None:
+            t |= Traits.TOPOLOGY_CSC
+        return t
+
+    @property
+    def n_vertices(self) -> int:
+        return self._n
+
+    @property
+    def n_edges(self) -> int:
+        return int(len(self.indices))
+
+    def adjacency(self):
+        return self.indptr, self.indices
+
+    def csc(self):
+        if self._csc is None:
+            self._build_csc()
+        return self._csc[0], self._csc[1]
+
+    def csc_edge_map(self) -> np.ndarray:
+        """Map CSC position → CSR edge id (for edge property access)."""
+        if self._csc is None:
+            self._build_csc()
+        return self._csc[2]
+
+    def vertex_prop(self, name: str) -> np.ndarray:
+        return self._vprops[name]
+
+    def edge_prop(self, name: str) -> np.ndarray:
+        return self._eprops[name]
+
+    def vertex_labels(self) -> np.ndarray:
+        return self._vlabels
+
+    def edge_labels(self) -> np.ndarray:
+        return self._elabels
+
+    # ------------------------------------------------------------------ util
+    def _build_csc(self):
+        E = len(self.indices)
+        src = np.repeat(np.arange(self._n, dtype=np.int64),
+                        np.diff(self.indptr))
+        order = np.lexsort((src, self.indices))
+        counts = np.bincount(self.indices, minlength=self._n)
+        indptr = np.zeros(self._n + 1, np.int64)
+        np.cumsum(counts, out=indptr[1:])
+        self._csc = (indptr, src[order].astype(np.int32), order)
+
+    def out_degrees(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+    def subgraph_props(self) -> Dict[str, np.ndarray]:
+        return dict(self._vprops)

@@ -1,0 +1,284 @@
+"""GART — dynamic graph store with MVCC snapshots (paper §4.2).
+
+The paper's GART keeps a "mutable CSR-like" structure: read-optimized like
+CSR, write-friendly like adjacency lists. TPU/numpy adaptation:
+
+- **base**: an immutable CSR (:class:`CSRStore`) holding compacted edges;
+- **delta**: append-only columnar buffers ``(src, dst, version, props…)``;
+- **snapshot(v)**: a consistent read view seeing base + deltas with
+  version ≤ v (MVCC — readers never block writers);
+- **compact()**: folds deltas into a new base CSR (the background
+  compaction GART runs continuously).
+
+``LinkedListStore`` is the deliberately pointer-chasing LiveGraph-like
+baseline used by Exp-1c (edge-scan throughput: CSR ≥ GART ≫ linked list).
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.storage.csr import CSRStore
+from repro.storage.grin import Traits
+
+
+class GARTSnapshot:
+    """Consistent read view of a GARTStore at one version (GRIN store)."""
+
+    def __init__(self, base: CSRStore, d_src, d_dst, d_labels,
+                 d_props: Dict[str, np.ndarray], version: int,
+                 vertex_props, vertex_labels, n_vertices: int):
+        self._base = base
+        self.version = version
+        self._n = n_vertices
+        self._d_src, self._d_dst = d_src, d_dst
+        self._d_labels = d_labels
+        self._d_props = d_props
+        self._vprops = vertex_props
+        self._vlabels = vertex_labels
+        self._merged: Optional[CSRStore] = None
+
+    def traits(self) -> Traits:
+        return (Traits.TOPOLOGY_ARRAY | Traits.TOPOLOGY_CSC | Traits.DEGREE |
+                Traits.VERTEX_PROPERTY | Traits.EDGE_PROPERTY |
+                Traits.VERTEX_LABEL | Traits.EDGE_LABEL |
+                Traits.INDEX_INTERNAL_ID | Traits.MVCC_SNAPSHOT)
+
+    @property
+    def n_vertices(self) -> int:
+        return self._n
+
+    @property
+    def n_edges(self) -> int:
+        return self._base.n_edges + len(self._d_src)
+
+    # merged view is materialized lazily and cached (the paper's snapshots
+    # are similarly materialized CSR-ish structures)
+    def _merge(self) -> CSRStore:
+        if self._merged is None:
+            b = self._base
+            src_base = np.repeat(np.arange(b.n_vertices, dtype=np.int64),
+                                 np.diff(b.indptr))
+            src = np.concatenate([src_base, self._d_src])
+            dst = np.concatenate([b.indices, self._d_dst])
+            elab = np.concatenate([b.edge_labels(), self._d_labels])
+            eprops = {}
+            n_delta = len(self._d_src)
+            for k in set(self._d_props) | set(b._eprops):
+                base_col = (b.edge_prop(k) if k in b._eprops
+                            else np.zeros(b.n_edges,
+                                          self._d_props[k].dtype))
+                delta_col = (self._d_props[k] if k in self._d_props
+                             else np.zeros(n_delta, base_col.dtype))
+                eprops[k] = np.concatenate([base_col, delta_col])
+            self._merged = CSRStore(self._n, src, dst,
+                                    vertex_props=self._vprops,
+                                    edge_props=eprops,
+                                    vertex_labels=self._vlabels,
+                                    edge_labels=elab)
+        return self._merged
+
+    def adjacency(self):
+        return self._merge().adjacency()
+
+    def csc(self):
+        return self._merge().csc()
+
+    def csc_edge_map(self):
+        return self._merge().csc_edge_map()
+
+    def vertex_prop(self, name):
+        return self._vprops[name]
+
+    def edge_prop(self, name):
+        return self._merge().edge_prop(name)
+
+    def vertex_labels(self):
+        return self._vlabels
+
+    def edge_labels(self):
+        return self._merge().edge_labels()
+
+    # raw two-part scan (no merge cost) — what the scan benchmark measures
+    def scan_edges_base_delta(self):
+        b = self._base
+        return (b.indptr, b.indices, self._d_src, self._d_dst)
+
+
+class GARTStore:
+    """Mutable MVCC store: thread-safe appends, versioned snapshots."""
+
+    def __init__(self, n_vertices: int,
+                 src: Optional[np.ndarray] = None,
+                 dst: Optional[np.ndarray] = None,
+                 vertex_props: Optional[Dict[str, np.ndarray]] = None,
+                 vertex_labels: Optional[np.ndarray] = None,
+                 edge_labels: Optional[np.ndarray] = None,
+                 edge_props: Optional[Dict[str, np.ndarray]] = None):
+        self._n = int(n_vertices)
+        src = np.asarray(src if src is not None else [], np.int64)
+        dst = np.asarray(dst if dst is not None else [], np.int64)
+        self._base = CSRStore(self._n, src, dst,
+                              edge_props=edge_props,
+                              vertex_labels=vertex_labels,
+                              edge_labels=edge_labels, build_csc=False)
+        self._vprops = dict(vertex_props or {})
+        self._vlabels = (np.asarray(vertex_labels, np.int32)
+                         if vertex_labels is not None
+                         else np.zeros(self._n, np.int32))
+        cap = 1024
+        self._d_src = np.zeros(cap, np.int64)
+        self._d_dst = np.zeros(cap, np.int64)
+        self._d_ver = np.zeros(cap, np.int64)
+        self._d_lab = np.zeros(cap, np.int32)
+        self._d_props: Dict[str, np.ndarray] = {}
+        self._d_len = 0
+        self.write_version = 0
+        self._lock = threading.Lock()
+
+    def traits(self) -> Traits:
+        return (Traits.TOPOLOGY_ARRAY | Traits.DEGREE | Traits.MUTABLE |
+                Traits.MVCC_SNAPSHOT | Traits.VERTEX_PROPERTY |
+                Traits.VERTEX_LABEL | Traits.EDGE_LABEL | Traits.EDGE_PROPERTY)
+
+    @property
+    def n_vertices(self) -> int:
+        return self._n
+
+    @property
+    def n_edges(self) -> int:
+        return self._base.n_edges + self._d_len
+
+    def adjacency(self):
+        return self.snapshot().adjacency()
+
+    # ------------------------------------------------------------- mutation
+    def _grow(self, need: int):
+        cap = len(self._d_src)
+        if self._d_len + need <= cap:
+            return
+        new_cap = max(cap * 2, self._d_len + need)
+        for name in ("_d_src", "_d_dst", "_d_ver", "_d_lab"):
+            arr = getattr(self, name)
+            new = np.zeros(new_cap, arr.dtype)
+            new[:self._d_len] = arr[:self._d_len]
+            setattr(self, name, new)
+        for k, arr in self._d_props.items():
+            new = np.zeros(new_cap, arr.dtype)
+            new[:self._d_len] = arr[:self._d_len]
+            self._d_props[k] = new
+
+    def add_edges(self, src, dst, label: int = 0,
+                  props: Optional[Dict[str, np.ndarray]] = None) -> int:
+        """Append edges; returns the new write_version (commit id)."""
+        src = np.atleast_1d(np.asarray(src, np.int64))
+        dst = np.atleast_1d(np.asarray(dst, np.int64))
+        with self._lock:
+            self.write_version += 1
+            v = self.write_version
+            k = len(src)
+            self._grow(k)
+            s = self._d_len
+            self._d_src[s:s + k] = src
+            self._d_dst[s:s + k] = dst
+            self._d_ver[s:s + k] = v
+            self._d_lab[s:s + k] = label
+            for name, col in (props or {}).items():
+                if name not in self._d_props:
+                    self._d_props[name] = np.zeros(len(self._d_src),
+                                                   np.asarray(col).dtype)
+                    # backfill existing rows with zeros
+                self._d_props[name][s:s + k] = col
+            self._d_len += k
+            return v
+
+    def set_vertex_prop(self, name: str, ids, values):
+        with self._lock:
+            self._vprops[name] = self._vprops[name].copy()
+            self._vprops[name][ids] = values
+            self.write_version += 1
+            return self.write_version
+
+    # ------------------------------------------------------------- snapshots
+    def snapshot(self, version: Optional[int] = None) -> GARTSnapshot:
+        with self._lock:
+            v = self.write_version if version is None else version
+            mask = self._d_ver[:self._d_len] <= v
+            props = {k: col[:self._d_len][mask]
+                     for k, col in self._d_props.items()}
+            return GARTSnapshot(
+                self._base,
+                self._d_src[:self._d_len][mask].copy(),
+                self._d_dst[:self._d_len][mask].copy(),
+                self._d_lab[:self._d_len][mask].copy(),
+                props, v, dict(self._vprops), self._vlabels, self._n)
+
+    def compact(self):
+        """Fold the delta into a new base CSR (background compaction)."""
+        snap = self.snapshot()        # takes the (non-reentrant) lock itself
+        merged = snap._merge()
+        with self._lock:
+            self._base = merged
+            self._d_len = 0
+        return self
+
+
+class LinkedListStore:
+    """LiveGraph-like adjacency via per-edge next-pointers (Exp-1c baseline).
+
+    Deliberately pointer-chasing: edge e stores (dst[e], next[e]); scanning a
+    vertex's adjacency follows the chain — poor locality, O(1) appends."""
+
+    def __init__(self, n_vertices: int, src=None, dst=None):
+        self._n = n_vertices
+        cap = max(1024, 0 if src is None else 2 * len(src))
+        self._dst = np.full(cap, -1, np.int64)
+        self._next = np.full(cap, -1, np.int64)
+        self._head = np.full(n_vertices, -1, np.int64)
+        self._len = 0
+        if src is not None:
+            for s, d in zip(np.asarray(src), np.asarray(dst)):
+                self.add_edge(int(s), int(d))
+
+    def traits(self) -> Traits:
+        return Traits.MUTABLE | Traits.DEGREE
+
+    @property
+    def n_vertices(self):
+        return self._n
+
+    @property
+    def n_edges(self):
+        return self._len
+
+    def add_edge(self, s: int, d: int):
+        if self._len == len(self._dst):
+            self._dst = np.concatenate([self._dst, np.full(self._len, -1, np.int64)])
+            self._next = np.concatenate([self._next, np.full(self._len, -1, np.int64)])
+        e = self._len
+        self._dst[e] = d
+        self._next[e] = self._head[s]
+        self._head[s] = e
+        self._len += 1
+
+    def neighbors(self, v: int):
+        out = []
+        e = self._head[v]
+        while e != -1:
+            out.append(self._dst[e])
+            e = self._next[e]
+        return np.array(out, np.int64)
+
+    def scan_all_edges(self) -> int:
+        """Full edge scan via pointer chasing; returns edge count touched."""
+        total = 0
+        head, nxt = self._head, self._next
+        for v in range(self._n):
+            e = head[v]
+            while e != -1:
+                total += 1
+                e = nxt[e]
+        return total

@@ -1,0 +1,222 @@
+"""GraphAr — chunked columnar archive format (paper §4.2).
+
+ORC/Parquet are unavailable offline, so the contribution is kept with numpy
+containers: the graph is split into fixed-size *vertex-range chunks*, each
+an ``.npz`` with its adjacency slice (offset-delta encoded) and property
+columns, plus per-chunk min/max label indexes. That preserves what the paper
+measures: (a) selective chunk-pruned loads, (b) storage-level predicate
+pushdown (label scans via chunk indexes), (c) ~5× faster graph construction
+than CSV because columns deserialize directly into arrays.
+"""
+
+from __future__ import annotations
+
+import csv
+import json
+import os
+from typing import Dict, Iterable, List, Optional
+
+import numpy as np
+
+from repro.storage.csr import CSRStore
+from repro.storage.grin import Traits
+
+
+class GraphArStore:
+    """Read view over a GraphAr directory (supports partial loads)."""
+
+    def __init__(self, path: str, chunks: Optional[Iterable[int]] = None):
+        self.path = path
+        with open(os.path.join(path, "meta.json")) as f:
+            self.meta = json.load(f)
+        self._loaded: Dict[int, dict] = {}
+        self._chunk_ids = (list(chunks) if chunks is not None
+                           else list(range(self.meta["n_chunks"])))
+        for c in self._chunk_ids:
+            self._load_chunk(c)
+
+    # ------------------------------------------------------------ write side
+    @staticmethod
+    def write(path: str, store: CSRStore, chunk_size: int = 1 << 14) -> "str":
+        os.makedirs(path, exist_ok=True)
+        n = store.n_vertices
+        n_chunks = (n + chunk_size - 1) // chunk_size
+        indptr, indices = store.adjacency()
+        vlabels = store.vertex_labels()
+        meta = {
+            "n_vertices": int(n), "n_edges": int(store.n_edges),
+            "chunk_size": int(chunk_size), "n_chunks": int(n_chunks),
+            "vertex_props": list(store._vprops.keys()),
+            "edge_props": list(store._eprops.keys()),
+            "label_index": [],
+        }
+        for c in range(n_chunks):
+            lo, hi = c * chunk_size, min((c + 1) * chunk_size, n)
+            e_lo, e_hi = int(indptr[lo]), int(indptr[hi])
+            # offsets delta-encoded (small ints compress well / load fast)
+            off_delta = np.diff(indptr[lo:hi + 1]).astype(np.int32)
+            payload = {
+                "off_delta": off_delta,
+                "indices": indices[e_lo:e_hi],
+                "vlabels": vlabels[lo:hi],
+                "elabels": store.edge_labels()[e_lo:e_hi],
+            }
+            for k in store._vprops:
+                payload[f"vp_{k}"] = store._vprops[k][lo:hi]
+            for k in store._eprops:
+                payload[f"ep_{k}"] = store._eprops[k][e_lo:e_hi]
+            np.savez(os.path.join(path, f"chunk_{c:05d}.npz"), **payload)
+            labels = np.unique(vlabels[lo:hi])
+            meta["label_index"].append([int(x) for x in labels])
+        with open(os.path.join(path, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        return path
+
+    # ------------------------------------------------------------- read side
+    def _load_chunk(self, c: int):
+        if c in self._loaded:
+            return self._loaded[c]
+        z = np.load(os.path.join(self.path, f"chunk_{c:05d}.npz"))
+        self._loaded[c] = {k: z[k] for k in z.files}
+        return self._loaded[c]
+
+    def traits(self) -> Traits:
+        return (Traits.TOPOLOGY_ARRAY | Traits.DEGREE | Traits.CHUNKED |
+                Traits.VERTEX_PROPERTY | Traits.EDGE_PROPERTY |
+                Traits.VERTEX_LABEL | Traits.EDGE_LABEL |
+                Traits.PREDICATE_PUSHDOWN)
+
+    @property
+    def n_vertices(self) -> int:
+        return self.meta["n_vertices"]
+
+    @property
+    def n_edges(self) -> int:
+        return self.meta["n_edges"]
+
+    def adjacency(self):
+        """Materialize CSR from loaded chunks (zeros for unloaded ranges)."""
+        n = self.n_vertices
+        cs = self.meta["chunk_size"]
+        deg = np.zeros(n, np.int32)
+        chunks = sorted(self._loaded)
+        for c in chunks:
+            lo = c * cs
+            d = self._loaded[c]["off_delta"]
+            deg[lo:lo + len(d)] = d
+        indptr = np.zeros(n + 1, np.int64)
+        np.cumsum(deg, out=indptr[1:])
+        indices = np.concatenate(
+            [self._loaded[c]["indices"] for c in chunks]
+        ) if chunks else np.zeros(0, np.int32)
+        return indptr, indices
+
+    def vertex_prop(self, name: str) -> np.ndarray:
+        cs = self.meta["chunk_size"]
+        n = self.n_vertices
+        chunks = sorted(self._loaded)
+        first = self._loaded[chunks[0]][f"vp_{name}"]
+        out = np.zeros((n,) + first.shape[1:], first.dtype)
+        for c in chunks:
+            col = self._loaded[c][f"vp_{name}"]
+            out[c * cs:c * cs + len(col)] = col
+        return out
+
+    def edge_prop(self, name: str) -> np.ndarray:
+        return np.concatenate(
+            [self._loaded[c][f"ep_{name}"] for c in sorted(self._loaded)])
+
+    def vertex_labels(self) -> np.ndarray:
+        cs = self.meta["chunk_size"]
+        out = np.zeros(self.n_vertices, np.int32)
+        for c in sorted(self._loaded):
+            col = self._loaded[c]["vlabels"]
+            out[c * cs:c * cs + len(col)] = col
+        return out
+
+    def edge_labels(self) -> np.ndarray:
+        return np.concatenate(
+            [self._loaded[c]["elabels"] for c in sorted(self._loaded)])
+
+    # ---------------------------------------------- storage-level operations
+    def chunks_with_label(self, label: int) -> List[int]:
+        """Chunk pruning via the per-chunk label index (no chunk IO)."""
+        return [c for c, labels in enumerate(self.meta["label_index"])
+                if label in labels]
+
+    def scan_vertices(self, label=None, prop=None, value=None) -> np.ndarray:
+        """Predicate-pushdown scan: only label-matching chunks are read."""
+        cs = self.meta["chunk_size"]
+        cands = (self.chunks_with_label(label) if label is not None
+                 else list(range(self.meta["n_chunks"])))
+        out = []
+        for c in cands:
+            d = self._load_chunk(c)
+            ids = np.arange(len(d["vlabels"]), dtype=np.int64) + c * cs
+            mask = np.ones(len(ids), bool)
+            if label is not None:
+                mask &= d["vlabels"] == label
+            if prop is not None:
+                mask &= d[f"vp_{prop}"] == value
+            out.append(ids[mask])
+        return np.concatenate(out) if out else np.zeros(0, np.int64)
+
+    def neighbors_of(self, v: int) -> np.ndarray:
+        """Fetch one vertex's adjacency touching only its chunk."""
+        cs = self.meta["chunk_size"]
+        c = v // cs
+        d = self._load_chunk(c)
+        local = v - c * cs
+        off = np.concatenate([[0], np.cumsum(d["off_delta"])])
+        return d["indices"][off[local]:off[local + 1]]
+
+    def to_csr(self) -> CSRStore:
+        indptr, indices = self.adjacency()
+        src = np.repeat(np.arange(self.n_vertices, dtype=np.int64),
+                        np.diff(indptr))
+        vprops = {k: self.vertex_prop(k) for k in self.meta["vertex_props"]}
+        eprops = {k: self.edge_prop(k) for k in self.meta["edge_props"]}
+        return CSRStore(self.n_vertices, src, indices,
+                        vertex_props=vprops, edge_props=eprops,
+                        vertex_labels=self.vertex_labels(),
+                        edge_labels=self.edge_labels())
+
+
+# ------------------------------------------------------------- CSV baseline
+def write_csv(path: str, store: CSRStore):
+    """Row-oriented CSV baseline for the Exp-1d construction benchmark."""
+    os.makedirs(path, exist_ok=True)
+    indptr, indices = store.adjacency()
+    src = np.repeat(np.arange(store.n_vertices, dtype=np.int64),
+                    np.diff(indptr))
+    with open(os.path.join(path, "edges.csv"), "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["src", "dst", "label"])
+        elab = store.edge_labels()
+        for i in range(len(indices)):
+            w.writerow([int(src[i]), int(indices[i]), int(elab[i])])
+    with open(os.path.join(path, "vertices.csv"), "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["id", "label"])
+        vlab = store.vertex_labels()
+        for v in range(store.n_vertices):
+            w.writerow([v, int(vlab[v])])
+
+
+def load_csv(path: str) -> CSRStore:
+    with open(os.path.join(path, "vertices.csv")) as f:
+        r = csv.reader(f)
+        next(r)
+        rows = [(int(a), int(b)) for a, b in r]
+    n = len(rows)
+    vlab = np.zeros(n, np.int32)
+    for vid, lab in rows:
+        vlab[vid] = lab
+    with open(os.path.join(path, "edges.csv")) as f:
+        r = csv.reader(f)
+        next(r)
+        erows = [(int(a), int(b), int(c)) for a, b, c in r]
+    src = np.array([e[0] for e in erows], np.int64)
+    dst = np.array([e[1] for e in erows], np.int64)
+    elab = np.array([e[2] for e in erows], np.int32)
+    return CSRStore(n, src, dst, vertex_labels=vlab, edge_labels=elab)

@@ -1,0 +1,120 @@
+"""Labeled Property Graph facade used by the query engines (paper §2.1).
+
+Wraps any GRIN store exposing labels/properties, adding the per-label
+expansion primitives the GraphIR physical operators consume. All hot paths
+are vectorized over *frontiers* (arrays of vertex ids), matching the
+dataflow engines.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.storage.grin import GRINAdapter, QUERY_REQUIRED, Traits
+
+
+class PropertyGraph:
+    def __init__(self, store):
+        self.grin = GRINAdapter(store, QUERY_REQUIRED)
+        self.indptr, self.indices = self.grin.adjacency()
+        self.vlabels = self.grin.vertex_labels()
+        self.elabels = self.grin.edge_labels()
+        self._rev: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None
+
+    # --------------------------------------------------------------- lookups
+    @property
+    def n_vertices(self):
+        return self.grin.n_vertices
+
+    def vprop(self, name: str) -> np.ndarray:
+        return self.grin.vertex_prop(name)
+
+    def eprop(self, name: str) -> np.ndarray:
+        return self.grin.edge_prop(name)
+
+    def vertices(self, label: Optional[int] = None) -> np.ndarray:
+        if label is None:
+            return np.arange(self.n_vertices, dtype=np.int64)
+        return np.nonzero(self.vlabels == label)[0].astype(np.int64)
+
+    # ------------------------------------------------------------ expansion
+    def _reverse(self):
+        if self._rev is None:
+            store = self.grin.store
+            if store.traits() & Traits.TOPOLOGY_CSC:
+                indptr, indices = store.csc()
+                emap = store.csc_edge_map()
+            else:
+                src = np.repeat(np.arange(self.n_vertices, dtype=np.int64),
+                                np.diff(self.indptr))
+                order = np.argsort(self.indices, kind="stable")
+                counts = np.bincount(self.indices, minlength=self.n_vertices)
+                indptr = np.zeros(self.n_vertices + 1, np.int64)
+                np.cumsum(counts, out=indptr[1:])
+                indices, emap = src[order].astype(np.int32), order
+            self._rev = (indptr, indices, emap)
+        return self._rev
+
+    def expand(self, frontier: np.ndarray, edge_label: Optional[int] = None,
+               direction: str = "out",
+               edge_pred: Optional[Tuple[str, str, float]] = None
+               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Vectorized frontier expansion.
+
+        Returns (tails, heads, edge_ids): for each edge incident to the
+        frontier (matching label/pred), the frontier row index it came from
+        (``tails`` indexes into ``frontier``), the neighbor vertex id, and
+        the global edge id (CSR position) for property access.
+        """
+        if direction == "in":
+            indptr, indices, emap = self._reverse()
+        else:
+            indptr, indices, emap = self.indptr, self.indices, None
+
+        starts = indptr[frontier]
+        degs = (indptr[frontier + 1] - starts).astype(np.int64)
+        total = int(degs.sum())
+        tails = np.repeat(np.arange(len(frontier)), degs)
+        # positions of each expanded edge in the CSR array
+        offs = np.concatenate([[0], np.cumsum(degs)])[:-1]
+        pos = np.arange(total) - np.repeat(offs, degs) + np.repeat(starts, degs)
+        heads = indices[pos].astype(np.int64)
+        eids = emap[pos] if emap is not None else pos
+        if edge_label is not None:
+            keep = self.elabels[eids] == edge_label
+            tails, heads, eids = tails[keep], heads[keep], eids[keep]
+        if edge_pred is not None:
+            name, op, value = edge_pred
+            col = self.eprop(name)[eids]
+            keep = _apply_op(col, op, value)
+            tails, heads, eids = tails[keep], heads[keep], eids[keep]
+        return tails, heads, eids
+
+    def filter_vertices(self, ids: np.ndarray, label=None, prop=None, op="==",
+                        value=None) -> np.ndarray:
+        mask = np.ones(len(ids), bool)
+        if label is not None:
+            mask &= self.vlabels[ids] == label
+        if prop is not None:
+            mask &= _apply_op(self.vprop(prop)[ids], op, value)
+        return mask
+
+
+def _apply_op(col: np.ndarray, op: str, value) -> np.ndarray:
+    if op == "==":
+        return col == value
+    if op == "!=":
+        return col != value
+    if op == "<":
+        return col < value
+    if op == "<=":
+        return col <= value
+    if op == ">":
+        return col > value
+    if op == ">=":
+        return col >= value
+    if op == "in":
+        return np.isin(col, value)
+    raise ValueError(f"unknown op {op}")

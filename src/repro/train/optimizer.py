@@ -1,0 +1,170 @@
+"""Optimizers: AdamW (configurable state dtype) and Adafactor-lite.
+
+Giant configs (deepseek-v3 train on a single pod) use either bf16 Adam
+states or factored Adafactor states — the memory budget table lives in
+EXPERIMENTS.md §Dry-run. All update math runs in fp32 regardless of the
+storage dtype.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def lr_schedule(tcfg: TrainConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup → cosine decay to 10%."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(tcfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - tcfg.warmup_steps) /
+                    jnp.maximum(tcfg.total_steps - tcfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.55 + 0.45 * jnp.cos(jnp.pi * prog)
+    return tcfg.learning_rate * warm * cos
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: (g.astype(jnp.float32) * scale), tree), norm
+
+
+def clip_scale(tree, max_norm: float):
+    """Global-norm clip *factor* only — no materialized fp32 copy of the
+    gradient tree (on deepseek-v3 the stacked expert leaf alone is 7.2 GB
+    fp32 per device; the copy was visible in memory_analysis)."""
+    norm = global_norm(tree)
+    return jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9)), norm
+
+
+# Per-leaf updates on stacked-layer tensors are lax.map'ed over the leading
+# ("layers") axis when the leaf is large: the optimizer's fp32 temporaries
+# then cost 1/L of the leaf instead of the whole leaf (measured ~50 GB of
+# temp on deepseek-v3's 458 B-element stacked expert weight without this).
+_SCAN_THRESHOLD_BYTES = 1 << 28
+
+
+def _leafwise(upd):
+    def wrapped(*args):
+        p = args[0]
+        nbytes = p.size * 4
+        mappable = (p.ndim >= 2 and p.shape[0] > 1
+                    and nbytes > _SCAN_THRESHOLD_BYTES
+                    and all(a.ndim >= 1 and a.shape[:1] == p.shape[:1]
+                            for a in args))
+        if mappable:
+            return jax.lax.map(lambda xs: upd(*xs), args)
+        return upd(*args)
+
+    return wrapped
+
+
+# ------------------------------------------------------------------- AdamW
+def adamw_init(params, tcfg: TrainConfig):
+    dt = jnp.dtype(tcfg.optimizer_state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params, grads, opt, tcfg: TrainConfig):
+    count = opt["count"] + 1
+    lr = lr_schedule(tcfg, count)
+    gscale, gnorm = clip_scale(grads, tcfg.grad_clip)
+    b1, b2 = tcfg.beta1, tcfg.beta2
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** c
+    bc2 = 1.0 - b2 ** c
+    sdt = jnp.dtype(tcfg.optimizer_state_dtype)
+
+    @_leafwise
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * gscale
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        step = (mf / bc1) / (jnp.sqrt(vf / bc2) + 1e-8)
+        step = step + tcfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * step).astype(p.dtype),
+                mf.astype(sdt), vf.astype(sdt))
+
+    out = jax.tree_util.tree_map(upd, params, grads, opt["m"], opt["v"])
+    new_params = jax.tree_util.tree_map(lambda t: t[0], out,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "count": count}, \
+        {"lr": lr, "grad_norm": gnorm}
+
+
+# --------------------------------------------------------------- Adafactor
+def adafactor_init(params, tcfg: TrainConfig):
+    def vrow(p):
+        if p.ndim >= 2:
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def vcol(p):
+        if p.ndim >= 2:
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        return jnp.zeros((), jnp.float32)
+
+    return {
+        "vr": jax.tree_util.tree_map(vrow, params),
+        "vc": jax.tree_util.tree_map(vcol, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(params, grads, opt, tcfg: TrainConfig):
+    count = opt["count"] + 1
+    lr = lr_schedule(tcfg, count)
+    gscale, gnorm = clip_scale(grads, tcfg.grad_clip)
+    decay = 1.0 - count.astype(jnp.float32) ** -0.8
+
+    @_leafwise
+    def upd(p, g, vr, vc):
+        g = g.astype(jnp.float32) * gscale
+        g2 = jnp.square(g) + 1e-30
+        if p.ndim >= 2:
+            nvr = decay * vr + (1 - decay) * jnp.mean(g2, axis=-1)
+            nvc = decay * vc + (1 - decay) * jnp.mean(g2, axis=-2)
+            r = nvr / jnp.maximum(jnp.mean(nvr, axis=-1, keepdims=True), 1e-30)
+            prec = r[..., None] * nvc[..., None, :]
+        else:
+            nvr = decay * vr + (1 - decay) * g2
+            nvc = vc
+            prec = nvr
+        step = g * jax.lax.rsqrt(prec + 1e-30)
+        # update clipping (RMS ≤ 1) per Adafactor
+        rms = jnp.sqrt(jnp.mean(jnp.square(step)) + 1e-30)
+        step = step / jnp.maximum(1.0, rms)
+        step = step + tcfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * step).astype(p.dtype), nvr, nvc)
+
+    out = jax.tree_util.tree_map(upd, params, grads, opt["vr"], opt["vc"])
+    pick = lambda i: jax.tree_util.tree_map(
+        lambda t: t[i], out, is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), {"vr": pick(1), "vc": pick(2), "count": count}, \
+        {"lr": lr, "grad_norm": gnorm}
+
+
+def make_optimizer(name: str):
+    if name == "adamw":
+        return adamw_init, adamw_update
+    if name == "adafactor":
+        return adafactor_init, adafactor_update
+    raise KeyError(name)

@@ -1,0 +1,171 @@
+"""Train / serve step factories with microbatched gradient accumulation.
+
+``make_train_step`` returns a pure function ``(state, batch) -> (state,
+metrics)`` suitable for ``jax.jit`` with explicit in/out shardings (built by
+the launcher from logical axes). Microbatching serves two roles:
+
+1. activation memory: per-microbatch activations are what remat keeps live;
+2. comm/compute overlap: XLA's latency-hiding scheduler overlaps microbatch
+   *i*'s DP gradient reduce-scatter with microbatch *i+1*'s compute.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.models.model_zoo import Model
+from repro.train import optimizer as opt_mod
+
+
+def init_train_state(model: Model, tcfg: TrainConfig, key: jax.Array,
+                     optimizer: str = "adamw") -> Dict[str, Any]:
+    params = model.init(key)
+    opt_init, _ = opt_mod.make_optimizer(optimizer)
+    return {"params": params, "opt": opt_init(params, tcfg),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def train_state_specs(model: Model, tcfg: TrainConfig,
+                      optimizer: str = "adamw") -> Dict[str, Any]:
+    """ShapeDtypeStructs of the train state (for dry-run lowering)."""
+    pshapes = model.param_shapes()
+    sdt = jnp.dtype(tcfg.optimizer_state_dtype)
+
+    def like(s, dtype=None):
+        return jax.ShapeDtypeStruct(s.shape, dtype or s.dtype)
+
+    if optimizer == "adamw":
+        opt = {"m": jax.tree_util.tree_map(lambda s: like(s, sdt), pshapes),
+               "v": jax.tree_util.tree_map(lambda s: like(s, sdt), pshapes),
+               "count": jax.ShapeDtypeStruct((), jnp.int32)}
+    else:  # adafactor
+        def vr(s):
+            shp = s.shape[:-1] if len(s.shape) >= 2 else s.shape
+            return jax.ShapeDtypeStruct(shp, jnp.float32)
+
+        def vc(s):
+            shp = s.shape[:-2] + s.shape[-1:] if len(s.shape) >= 2 else ()
+            return jax.ShapeDtypeStruct(shp, jnp.float32)
+
+        opt = {"vr": jax.tree_util.tree_map(vr, pshapes),
+               "vc": jax.tree_util.tree_map(vc, pshapes),
+               "count": jax.ShapeDtypeStruct((), jnp.int32)}
+    return {"params": pshapes, "opt": opt,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def train_state_axes(model: Model, optimizer: str = "adamw") -> Dict[str, Any]:
+    """Logical axes of the train state (optimizer moments mirror params;
+    adafactor row/col states drop the reduced axis)."""
+    paxes = model.param_axes()
+    pshapes = model.param_shapes()
+    if optimizer == "adamw":
+        opt = {"m": paxes, "v": paxes, "count": ()}
+    else:
+        def vr(ax, s):
+            return tuple(ax[:-1]) if len(s.shape) >= 2 else tuple(ax)
+
+        def vc(ax, s):
+            return tuple(ax[:-2]) + (ax[-1],) if len(s.shape) >= 2 else ()
+
+        is_ax = lambda x: isinstance(x, tuple)
+        opt = {
+            "vr": jax.tree_util.tree_map(vr, paxes, pshapes, is_leaf=is_ax),
+            "vc": jax.tree_util.tree_map(vc, paxes, pshapes, is_leaf=is_ax),
+            "count": (),
+        }
+    return {"params": paxes, "opt": opt, "step": ()}
+
+
+def make_train_step(model: Model, tcfg: TrainConfig, *,
+                    optimizer: str = "adamw",
+                    grad_transform: Optional[Callable] = None,
+                    blockwise: bool = False,
+                    batch_axes: Optional[Dict[str, Any]] = None) -> Callable:
+    """Build the (state, batch) -> (state, metrics) step.
+
+    ``grad_transform`` hooks gradient compression (see
+    distributed/compression.py) between accumulation and the optimizer.
+    ``batch_axes`` (logical axes per batch leaf) re-constrains each
+    microbatch slice so the microbatch reshape cannot silently reshard the
+    data-parallel dim (GSPMD would otherwise shard the *microbatch* axis).
+    """
+    from repro.distributed.sharding import constrain
+
+    _, opt_update = opt_mod.make_optimizer(optimizer)
+    n_micro = max(1, tcfg.microbatches)
+
+    def loss_fn(params, mb):
+        loss, metrics = model.loss_fn(params, mb, blockwise=blockwise)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+
+        if n_micro == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32), grads)
+        else:
+            def split(x):
+                return x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+
+            micro = {}
+            for k, x in batch.items():
+                if k == "mrope_pos":        # [3, B, S]: batch is dim 1
+                    micro[k] = x.reshape(
+                        (3, n_micro, x.shape[1] // n_micro) + x.shape[2:]
+                    ).transpose(1, 0, 2, 3)
+                else:
+                    micro[k] = split(x)
+            if batch_axes is not None:
+                # one cheap reshard of the raw inputs so the scanned micro
+                # axis is replicated and the dp axis stays intact per slice
+                micro = {k: constrain(v, (None,) + tuple(batch_axes[k]))
+                         for k, v in micro.items()}
+
+            acc_dt = jnp.dtype(tcfg.grad_accum_dtype)
+
+            def body(carry, mb):
+                acc, loss_acc = carry
+                (loss, _), grads = grad_fn(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(acc_dt), acc, grads)
+                return (acc, loss_acc + loss), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+            (grads, loss_sum), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+            loss = loss_sum / n_micro
+            metrics = {}
+
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+
+        new_params, new_opt, om = opt_update(params, grads, state["opt"], tcfg)
+        metrics = {"loss": loss, **om, **metrics}
+        return ({"params": new_params, "opt": new_opt,
+                 "step": state["step"] + 1}, metrics)
+
+    return train_step
+
+
+def make_serve_steps(model: Model) -> Tuple[Callable, Callable]:
+    """(prefill_fn, decode_fn) pure functions for jit."""
+
+    def prefill_fn(params, batch):
+        return model.prefill(params, batch)
+
+    def decode_fn(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    return prefill_fn, decode_fn

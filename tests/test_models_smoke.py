@@ -1,0 +1,136 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED config of
+each family runs one forward/train step on CPU with correct shapes and no
+NaNs, plus a prefill→decode consistency check against the full forward."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke
+from repro.configs.base import ShapeConfig
+from repro.configs.shapes import SHAPES, cell_applicable
+from repro.models import build_model
+from repro.models import encdec as ed
+
+TRAIN = ShapeConfig("t", seq_len=32, global_batch=2, kind="train")
+DECODE = ShapeConfig("d", seq_len=32, global_batch=2, kind="decode")
+
+
+@pytest.fixture(scope="module")
+def built():
+    out = {}
+    for arch in ARCHS:
+        cfg = get_smoke(arch)
+        m = build_model(cfg)
+        out[arch] = (m, m.init(jax.random.PRNGKey(0)))
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_no_nan(arch, built):
+    m, params = built[arch]
+    batch = m.dummy_inputs(TRAIN)["batch"]
+    loss, metrics = m.loss_fn(params, batch)
+    assert loss.shape == ()
+    assert not bool(jnp.isnan(loss))
+    grads = jax.grad(lambda p: m.loss_fn(p, batch)[0])(params)
+    gnorm = sum(float(jnp.sum(jnp.square(g.astype(jnp.float32))))
+                for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_shapes(arch, built):
+    m, params = built[arch]
+    inp = build_model(get_smoke(arch)).dummy_inputs(DECODE)
+    logits, cache = m.decode_step(params, inp["cache"], inp["tokens"],
+                                  inp["pos"])
+    assert logits.shape == (2, get_smoke(arch).vocab)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch, built):
+    """prefill(tokens[:-1]) + decode(tokens[-1]) must equal the full-sequence
+    forward's last logits — the strongest single correctness check for every
+    cache implementation (ring/SWA, MLA-absorbed, SSM/RWKV states)."""
+    m, params = built[arch]
+    cfg = get_smoke(arch)
+    S = 32
+    batch = m.dummy_inputs(ShapeConfig("p", seq_len=S, global_batch=2,
+                                       kind="prefill"))["batch"]
+    if cfg.family == "audio":
+        dec = batch["tokens"]
+        pre_batch = dict(batch, tokens=dec[:, :-1])
+        logits_pre, cache = m.prefill(params, pre_batch,
+                                      cache_len=dec.shape[1])
+        logits_dec, _ = m.decode_step(params, cache, dec[:, -1],
+                                      jnp.asarray(dec.shape[1] - 1, jnp.int32))
+        # full forward last-position logits
+        from repro.models import encdec as _ed
+        full_pre, _ = m.prefill(params, batch)
+        # decode at position T-1 attends tokens[:-1] + itself == full prefill
+        np.testing.assert_allclose(np.asarray(logits_dec, np.float32),
+                                   np.asarray(full_pre, np.float32),
+                                   rtol=6e-2, atol=6e-2)
+        return
+    toks = batch["tokens"]
+    pre_batch = dict(batch, tokens=toks[:, :-1])
+    if cfg.mrope:
+        pre_batch["mrope_pos"] = batch["mrope_pos"][:, :, :-1]
+    logits_pre, cache = m.prefill(params, pre_batch, cache_len=S)
+    logits_dec, _ = m.decode_step(params, cache, toks[:, -1],
+                                  jnp.asarray(S - 1, jnp.int32))
+    full, cache2 = m.prefill(params, batch)
+    np.testing.assert_allclose(np.asarray(logits_dec, np.float32),
+                               np.asarray(full, np.float32),
+                               rtol=6e-2, atol=6e-2)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_exact_numbers(arch):
+    """The FULL configs carry the exact assigned hyperparameters (only
+    instantiated as specs — no allocation)."""
+    cfg = get_config(arch)
+    expect = {
+        "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "deepseek-v3-671b": (61, 7168, 128, 128, 2048, 129280),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+        "whisper-small": (12, 768, 12, 12, 3072, 51865),
+        "gemma-7b": (28, 3072, 16, 16, 24576, 256000),
+        "qwen2-72b": (80, 8192, 64, 8, 29568, 152064),
+        "mistral-nemo-12b": (40, 5120, 32, 8, 14336, 131072),
+        "granite-20b": (52, 6144, 48, 1, 24576, 49152),
+        "rwkv6-7b": (32, 4096, 64, 64, 14336, 65536),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab)
+    assert got == expect
+
+
+def test_param_counts_in_range():
+    """Analytic parameter counts of the full configs match the names."""
+    expect = {
+        "mixtral-8x22b": (130e9, 150e9),
+        "deepseek-v3-671b": (640e9, 730e9),
+        "zamba2-1.2b": (0.9e9, 1.6e9),
+        "qwen2-vl-72b": (65e9, 80e9),
+        "whisper-small": (0.15e9, 0.35e9),
+        "gemma-7b": (7e9, 10e9),
+        "qwen2-72b": (65e9, 80e9),
+        "mistral-nemo-12b": (10e9, 14e9),
+        "granite-20b": (15e9, 23e9),
+        "rwkv6-7b": (6e9, 9e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_long_context_applicability():
+    """long_500k runs only for sub-quadratic archs (DESIGN.md §4)."""
+    runs = {a for a in ARCHS
+            if cell_applicable(get_config(a), SHAPES["long_500k"])[0]}
+    assert runs == {"mixtral-8x22b", "zamba2-1.2b", "rwkv6-7b"}

@@ -1,0 +1,164 @@
+"""Storage layer: CSR / GART (MVCC) / GraphAr / GRIN traits."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.storage import (CSRStore, GARTStore, GraphArStore, LinkedListStore)
+from repro.storage.grin import (ANALYTICS_REQUIRED, GRINAdapter,
+                                QUERY_REQUIRED, Traits)
+from repro.storage.generators import rmat_store, snb_store
+from repro.storage.graphar import load_csv, write_csv
+
+
+def small_store():
+    src = np.array([0, 0, 1, 2, 2, 3])
+    dst = np.array([1, 2, 2, 0, 3, 0])
+    return CSRStore(4, src, dst,
+                    edge_props={"weight": np.arange(6, dtype=np.float32)},
+                    vertex_labels=np.array([0, 0, 1, 1], np.int32),
+                    edge_labels=np.array([0, 1, 0, 1, 0, 1], np.int32))
+
+
+class TestCSR:
+    def test_adjacency(self):
+        s = small_store()
+        indptr, indices = s.adjacency()
+        assert indptr.tolist() == [0, 2, 3, 5, 6]
+        assert sorted(indices[0:2].tolist()) == [1, 2]
+        assert s.n_edges == 6
+
+    def test_csc_roundtrip(self):
+        s = small_store()
+        indptr, srcs = s.csc()
+        # in-neighbors of 0 are {2, 3}
+        assert sorted(srcs[indptr[0]:indptr[1]].tolist()) == [2, 3]
+
+    def test_edge_prop_follows_sort(self):
+        s = small_store()
+        indptr, indices = s.adjacency()
+        w = s.edge_prop("weight")
+        # edge 2->3 had weight 4
+        lo, hi = indptr[2], indptr[3]
+        pos = lo + indices[lo:hi].tolist().index(3)
+        assert w[pos] == 4.0
+
+    def test_traits(self):
+        s = small_store()
+        assert s.traits() & Traits.TOPOLOGY_ARRAY
+        assert s.traits() & Traits.VERTEX_LABEL
+
+
+class TestGRIN:
+    def test_adapter_accepts_capable_store(self):
+        GRINAdapter(small_store(), QUERY_REQUIRED)
+
+    def test_adapter_rejects_missing_traits(self):
+        ll = LinkedListStore(4)
+        with pytest.raises(TypeError):
+            GRINAdapter(ll, ANALYTICS_REQUIRED)
+
+    def test_scan_vertices_pushdown_equivalence(self):
+        s = snb_store(n_persons=200, n_items=100, n_posts=50)
+        g = GRINAdapter(s)
+        ids = g.scan_vertices(label=0)
+        assert (s.vertex_labels()[ids] == 0).all()
+        assert len(ids) == 200
+
+
+class TestGART:
+    def test_mvcc_snapshot_isolation(self):
+        g = GARTStore(4, np.array([0]), np.array([1]))
+        v1 = g.add_edges([1], [2])
+        snap1 = g.snapshot(v1)
+        v2 = g.add_edges([2], [3])
+        snap2 = g.snapshot(v2)
+        assert snap1.n_edges == 2
+        assert snap2.n_edges == 3
+        # old snapshot still consistent after more writes
+        g.add_edges([3], [0])
+        assert snap1.n_edges == 2
+
+    def test_snapshot_merge_matches_csr(self):
+        rng = np.random.default_rng(0)
+        src = rng.integers(0, 50, 200)
+        dst = rng.integers(0, 50, 200)
+        g = GARTStore(50, src[:100], dst[:100])
+        g.add_edges(src[100:], dst[100:])
+        snap = g.snapshot()
+        ref = CSRStore(50, src, dst)
+        ip1, ix1 = snap.adjacency()
+        ip2, ix2 = ref.adjacency()
+        assert (ip1 == ip2).all()
+        for v in range(50):
+            assert sorted(ix1[ip1[v]:ip1[v + 1]]) == \
+                sorted(ix2[ip2[v]:ip2[v + 1]])
+
+    def test_compact_preserves_graph(self):
+        g = GARTStore(10, np.array([0, 1]), np.array([1, 2]))
+        g.add_edges([2, 3], [3, 4])
+        before = g.snapshot().n_edges
+        g.compact()
+        assert g.n_edges == before
+        assert g.snapshot().n_edges == before
+
+    def test_vertex_prop_update_versioned(self):
+        g = GARTStore(4, np.array([0]), np.array([1]),
+                      vertex_props={"credits": np.zeros(4, np.int32)})
+        snap_before = g.snapshot()
+        g.set_vertex_prop("credits", [1], [99])
+        assert g.snapshot().vertex_prop("credits")[1] == 99
+        assert snap_before.vertex_prop("credits")[1] == 0
+
+
+class TestGraphAr:
+    def test_roundtrip(self, tmp_path):
+        s = snb_store(n_persons=300, n_items=150, n_posts=64)
+        path = GraphArStore.write(str(tmp_path / "ga"), s, chunk_size=128)
+        ga = GraphArStore(path)
+        ip1, ix1 = ga.adjacency()
+        ip2, ix2 = s.adjacency()
+        assert (ip1 == ip2).all()
+        assert (ix1 == ix2).all()
+        assert (ga.vertex_labels() == s.vertex_labels()).all()
+
+    def test_chunk_pruning(self, tmp_path):
+        s = snb_store(n_persons=300, n_items=150, n_posts=64)
+        path = GraphArStore.write(str(tmp_path / "ga"), s, chunk_size=128)
+        ga = GraphArStore(path, chunks=[])
+        # persons occupy the low vertex range; label index finds their chunks
+        chunks = ga.chunks_with_label(0)
+        assert max(chunks) <= 300 // 128 + 1
+        ids = ga.scan_vertices(label=0)
+        assert len(ids) == 300
+        # only label-bearing chunks were loaded
+        assert set(ga._loaded) == set(chunks)
+
+    def test_neighbor_single_chunk(self, tmp_path):
+        s = small_store()
+        path = GraphArStore.write(str(tmp_path / "ga"), s, chunk_size=2)
+        ga = GraphArStore(path, chunks=[])
+        assert sorted(ga.neighbors_of(2).tolist()) == [0, 3]
+
+    def test_csv_baseline_equivalence(self, tmp_path):
+        s = snb_store(n_persons=100, n_items=50, n_posts=20)
+        write_csv(str(tmp_path / "csv"), s)
+        loaded = load_csv(str(tmp_path / "csv"))
+        ip1, _ = loaded.adjacency()
+        ip2, _ = s.adjacency()
+        assert (ip1 == ip2).all()
+
+
+class TestLinkedList:
+    def test_matches_csr_neighbors(self):
+        rng = np.random.default_rng(1)
+        src = rng.integers(0, 30, 100)
+        dst = rng.integers(0, 30, 100)
+        ll = LinkedListStore(30, src, dst)
+        csr = CSRStore(30, src, dst)
+        ip, ix = csr.adjacency()
+        for v in range(30):
+            assert sorted(ll.neighbors(v).tolist()) == \
+                sorted(ix[ip[v]:ip[v + 1]].tolist())
+        assert ll.scan_all_edges() == 100

@@ -1,0 +1,70 @@
+"""End-to-end behaviour: the paper's use cases through flexbuild stacks."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import flexbuild
+from repro.engines.grape import algorithms as alg
+from repro.storage.gart import GARTStore
+from repro.storage.generators import snb_store
+from repro.storage.graphar import GraphArStore
+
+
+@pytest.fixture(scope="module")
+def store():
+    return snb_store(n_persons=400, n_items=200, n_posts=64, seed=13)
+
+
+def test_workload2_analytics_deployment(store):
+    """Paper Workload 2: analytics over in-memory immutable store."""
+    dep = flexbuild(store, ["pregel", "grape"], n_frags=2)
+    pr = np.asarray(alg.pagerank(dep.engine("grape"), max_steps=20))
+    assert pr.shape[0] == store.n_vertices
+    assert np.isfinite(pr).all()
+
+
+def test_workload5_bi_deployment(store):
+    """Paper Workload 5: BI over an archive store (GraphAr) via Gaia."""
+    import tempfile
+    path = GraphArStore.write(tempfile.mkdtemp(), store, chunk_size=128)
+    ga = GraphArStore(path)
+    dep = flexbuild(ga.to_csr(), ["cypher", "gaia"])
+    r = dep.engine("gaia").execute(
+        "MATCH (a:Person)-[:BUY]->(c:Item) WHERE a.region == 3 "
+        "WITH c, COUNT(a) AS buyers RETURN buyers AS buyers "
+        "ORDER BY buyers DESC LIMIT 3")
+    assert len(r["buyers"]) <= 3
+
+
+def test_fraud_detection_oltp_stack():
+    """Paper §8: OLTP stack = HiActor + GART; order stream + live checks."""
+    base = snb_store(n_persons=200, n_items=100, n_posts=16, seed=3)
+    indptr, indices = base.adjacency()
+    src = np.repeat(np.arange(base.n_vertices), np.diff(indptr))
+    gart = GARTStore(base.n_vertices, src, indices,
+                     vertex_props={k: base.vertex_prop(k)
+                                   for k in ("credits", "price", "region",
+                                             "is_fraud_seed")},
+                     vertex_labels=base.vertex_labels(),
+                     edge_labels=base.edge_labels(),
+                     edge_props={"date": base.edge_prop("date"),
+                                 "rating": base.edge_prop("rating")})
+    dep = flexbuild(gart.snapshot(), ["cypher", "hiactor"])
+    eng = dep.engine("hiactor")
+    eng.register("check", (
+        "MATCH (v:Person {region: $r})-[:BUY]->(:Item)<-[:BUY]-(s:Person) "
+        "WHERE s.is_fraud_seed == 1 WITH v, COUNT(s) AS cnt "
+        "RETURN cnt AS cnt"))
+    outs = eng.submit_batch("check", [{"r": i % 8} for i in range(32)])
+    assert len(outs) == 32
+
+
+def test_learning_deployment(store):
+    """Paper §7: decoupled learning stack via flexbuild."""
+    store._vprops["feat"] = np.random.default_rng(0).standard_normal(
+        (store.n_vertices, 8)).astype(np.float32)
+    dep = flexbuild(store, ["sage", "graphlearn"], feature_prop="feat")
+    sampler = dep.engine("graphlearn")
+    b = sampler.sample_batch(np.arange(16), [4, 2])
+    assert b.features[0].shape == (16, 8)
