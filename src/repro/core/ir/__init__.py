@@ -1,5 +1,5 @@
 from repro.core.ir.dag import (  # noqa: F401
-    Expand, GetVertex, GroupCount, Limit, LogicalPlan, OrderBy, Pred,
+    Expand, GetVertex, GroupCount, Limit, LogicalPlan, OrderBy, Param, Pred,
     Project, Scan, Select, BinExpr, PropRef, Const, Agg, With,
 )
 from repro.core.ir.rbo import apply_rbo  # noqa: F401

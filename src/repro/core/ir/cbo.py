@@ -15,8 +15,9 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.ir.dag import (Const, BinExpr, Expand, GetVertex, LogicalPlan,
-                               Pred, PropRef, Scan, Select)
+from repro.core.ir.dag import (Const, BinExpr, Expand, GetVertex, Limit,
+                               LogicalPlan, Param, Pred, PropRef, Scan,
+                               Select)
 
 
 @dataclasses.dataclass
@@ -85,7 +86,7 @@ class Catalog:
         expr = pred.expr
         if (isinstance(expr, BinExpr) and expr.op == "=="
                 and isinstance(expr.left, PropRef)
-                and isinstance(expr.right, Const)):
+                and isinstance(expr.right, (Const, Param))):
             nd = self.distinct.get((label, expr.left.prop))
             if nd:
                 return 1.0 / nd
@@ -109,6 +110,37 @@ class Catalog:
             total = self.path2.get(key, 0)
         n_src = max(self.label_counts.get(src_label, self.n_vertices), 1)
         return max(total / n_src, 1e-3)
+
+
+def find_indexed_anchor(plan: LogicalPlan):
+    """``(alias, prop, param, label)`` when the plan anchors on a single
+    ``prop == $param`` equality — the stored-procedure pattern HiActor can
+    resolve through a hash/sorted index instead of a full scan."""
+    scan = plan.ops[0] if plan.ops else None
+    if not isinstance(scan, Scan) or scan.pred is None:
+        return None
+    e = scan.pred.expr
+    if (isinstance(e, BinExpr) and e.op == "==" and
+            isinstance(e.left, PropRef) and isinstance(e.right, Param)):
+        return scan.alias, e.left.prop, e.right.name, scan.label
+    return None
+
+
+def is_point_lookup(plan: LogicalPlan, catalog: Catalog,
+                    row_threshold: float = 2e4) -> bool:
+    """Dispatch predicate for the serving layer: plans that anchor on an
+    indexed ``$param`` equality *and* stay small by the GLogue-lite estimate
+    route to HiActor's batched OLTP path; everything else is OLAP-shaped
+    and goes to Gaia's dataflow.
+
+    Plans containing LIMIT are excluded: the batched pass executes the
+    whole multi-query table in one shot, so a LIMIT would truncate
+    across the batch instead of per query."""
+    if find_indexed_anchor(plan) is None:
+        return False
+    if any(isinstance(op, Limit) for op in plan.ops):
+        return False
+    return plan_cost(plan, catalog) <= row_threshold
 
 
 def plan_cost(plan: LogicalPlan, catalog: Catalog) -> float:

@@ -178,15 +178,23 @@ def _group(op: With, table: Table, pg) -> Table:
             uniq = np.stack([c[first_idx] for c in key_cols], axis=1)
         else:
             stacked = np.stack(key_cols, axis=1)
-            uniq, inverse = np.unique(stacked, axis=0, return_inverse=True)
+            uniq, first_idx, inverse = np.unique(
+                stacked, axis=0, return_index=True, return_inverse=True)
         n_groups = len(uniq)
     else:
         inverse = np.zeros(table.n_rows, np.int64)
         n_groups = 1 if table.n_rows else 0
         uniq = None
+        first_idx = np.zeros(n_groups, np.int64)
     new_cols: Dict[str, np.ndarray] = {}
     for i, k in enumerate(keys):
         new_cols[k] = uniq[:, i] if uniq is not None else np.zeros(0)
+    # '$__name' columns are HiActor's per-row parameter bindings; they are
+    # constant within a __qid__ group (always a key on that path), so the
+    # group's first row carries them through the aggregation
+    for name, col in table.columns.items():
+        if name.startswith("$__") and name not in new_cols:
+            new_cols[name] = np.asarray(col)[first_idx]
     for agg in op.aggs:
         if agg.fn == "count" and agg.expr is None:
             vals = np.bincount(inverse, minlength=n_groups)
@@ -215,20 +223,5 @@ def _group(op: With, table: Table, pg) -> Table:
 def _bind_params(op, params: Optional[Dict[str, Any]]):
     if not params:
         return op
-
-    from repro.core.ir.dag import BinExpr, Const, PropRef
-
-    def bind_expr(e):
-        if isinstance(e, Const) and isinstance(e.value, str) \
-                and e.value.startswith("$"):
-            return Const(params[e.value[1:]])
-        if isinstance(e, BinExpr):
-            return BinExpr(e.op, bind_expr(e.left), bind_expr(e.right))
-        return e
-
-    changes = {}
-    for f in dataclasses.fields(op):
-        v = getattr(op, f.name)
-        if isinstance(v, Pred):
-            changes[f.name] = Pred(bind_expr(v.expr))
-    return dataclasses.replace(op, **changes) if changes else op
+    from repro.core.ir.dag import bind_op
+    return bind_op(op, params)

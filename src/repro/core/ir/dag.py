@@ -35,16 +35,29 @@ class Const:
 
 
 @dataclasses.dataclass(frozen=True)
+class Param:
+    """An unbound ``$name`` placeholder (parameterized query / stored
+    procedure). A dedicated node — not a ``Const`` string convention — so
+    genuine string literals that happen to start with ``$`` are never
+    mistaken for parameters."""
+
+    name: str
+
+    def refs(self):
+        return set()
+
+
+@dataclasses.dataclass(frozen=True)
 class BinExpr:
     op: str             # + - * / == != < <= > >= in and or
-    left: Union["BinExpr", PropRef, Const]
-    right: Union["BinExpr", PropRef, Const]
+    left: Union["BinExpr", PropRef, Const, Param]
+    right: Union["BinExpr", PropRef, Const, Param]
 
     def refs(self):
         return self.left.refs() | self.right.refs()
 
 
-Expr = Union[BinExpr, PropRef, Const]
+Expr = Union[BinExpr, PropRef, Const, Param]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -145,6 +158,94 @@ class LogicalPlan:
     def pretty(self) -> str:
         return "\n".join(f"  {i}: {op}" for i, op in enumerate(self.ops))
 
+    # ------------------------------------------------- parameterized queries
+    def param_names(self) -> set:
+        """Names of unbound ``$param`` placeholders anywhere in the plan."""
+        out: set = set()
+
+        def collect(e):
+            _collect_expr(e, out)
+            return e
+
+        for op in self.ops:
+            map_op_exprs(op, collect)
+        return out
+
+    def bind(self, params: Optional[Dict[str, Any]]) -> "LogicalPlan":
+        """Substitute ``$name`` placeholders with ``params['name']`` values.
+
+        Binding happens *after* RBO/CBO, so an optimized plan compiled once
+        can be re-bound for every request (the serving-layer plan cache).
+        Raises ``KeyError`` if any placeholder is left unbound.
+        """
+        missing = self.param_names() - set(params or {})
+        if missing:
+            raise KeyError(f"unbound parameters: {sorted(missing)}")
+        if not params:
+            return self
+        return LogicalPlan([bind_op(op, params) for op in self.ops])
+
+
+# ------------------------------------------------------- parameter binding
+def bind_expr(expr: Expr, params: Dict[str, Any]) -> Expr:
+    """Replace Param placeholders; returns ``expr`` itself when nothing
+    changed (so callers can cheaply detect no-op binds)."""
+    if isinstance(expr, Param):
+        return Const(params[expr.name])
+    if isinstance(expr, BinExpr):
+        l = bind_expr(expr.left, params)
+        r = bind_expr(expr.right, params)
+        if l is expr.left and r is expr.right:
+            return expr
+        return BinExpr(expr.op, l, r)
+    return expr
+
+
+def _map_value(v, fn):
+    """Apply ``fn`` to every expression nested in one field value
+    (identity-preserving so callers can detect no-op rewrites)."""
+    if isinstance(v, Pred):
+        e = fn(v.expr)
+        return v if e is v.expr else Pred(e)
+    if isinstance(v, (BinExpr, PropRef, Const, Param)):
+        return fn(v)
+    if isinstance(v, Agg):
+        if v.expr is None:
+            return v
+        e = fn(v.expr)
+        return v if e is v.expr else Agg(v.fn, e, v.name)
+    if isinstance(v, tuple):
+        items = tuple(_map_value(x, fn) for x in v)
+        return v if all(a is b for a, b in zip(items, v)) else items
+    return v
+
+
+def map_op_exprs(op: Op, fn) -> Op:
+    """Rebuild ``op`` with ``fn`` applied to every expression-bearing
+    field — the single traversal under parameter binding, collection, and
+    HiActor's per-row column rewrite. Returns ``op`` itself when nothing
+    changed."""
+    changes = {}
+    for f in dataclasses.fields(op):
+        v = getattr(op, f.name)
+        nv = _map_value(v, fn)
+        if nv is not v:
+            changes[f.name] = nv
+    return dataclasses.replace(op, **changes) if changes else op
+
+
+def bind_op(op: Op, params: Dict[str, Any]) -> Op:
+    """Bind every expression-bearing field of one operator."""
+    return map_op_exprs(op, lambda e: bind_expr(e, params))
+
+
+def _collect_expr(e, out: set):
+    if isinstance(e, Param):
+        out.add(e.name)
+    elif isinstance(e, BinExpr):
+        _collect_expr(e.left, out)
+        _collect_expr(e.right, out)
+
 
 # -------------------------------------------------------------- evaluation
 import numpy as np  # noqa: E402
@@ -156,6 +257,9 @@ def eval_expr(expr: Expr, columns: Dict[str, np.ndarray],
     aliases → vertex ids; ``edge_cols`` maps edge aliases → edge ids."""
     if isinstance(expr, Const):
         return expr.value
+    if isinstance(expr, Param):
+        raise ValueError(f"unbound parameter ${expr.name}: call "
+                         f"LogicalPlan.bind(params) before execution")
     if isinstance(expr, PropRef):
         if expr.alias in edge_cols:
             eids = edge_cols[expr.alias]

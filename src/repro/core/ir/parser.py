@@ -15,8 +15,8 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.ir.dag import (Agg, BinExpr, Const, Expand, GetVertex, Limit,
-                               LogicalPlan, OrderBy, Pred, Project, PropRef,
-                               Scan, Select, With)
+                               LogicalPlan, OrderBy, Param, Pred, Project,
+                               PropRef, Scan, Select, With)
 from repro.storage.generators import EDGE_NAMES, LABEL_NAMES
 
 
@@ -25,6 +25,7 @@ _TOKEN = re.compile(r"""
     (?P<num>-?\d+\.?\d*)
   | (?P<list>\[[^\]]*\])
   | (?P<str>'[^']*'|"[^\"]*")
+  | (?P<param>\$[A-Za-z_]\w*)
   | (?P<prop>[A-Za-z_]\w*\.[A-Za-z_]\w*)
   | (?P<ident>[A-Za-z_]\w*)
   | (?P<op><=|>=|<>|!=|==?|<|>|\+|-|\*|/|\(|\))
@@ -118,6 +119,8 @@ class _ExprParser:
             return Const(float(val) if "." in val else int(val))
         if kind == "str":
             return Const(val[1:-1])
+        if kind == "param":
+            return Param(val[1:])             # placeholder; bound later
         if kind == "list":
             items = [x.strip() for x in val[1:-1].split(",") if x.strip()]
             return Const(np.array([float(x) if "." in x else int(x)
@@ -161,7 +164,7 @@ def _props_to_pred(alias: str, props: Optional[str]):
         k, v = kv.split(":")
         v = v.strip()
         if v.startswith("$"):
-            value = Const(v)                 # stored-procedure parameter
+            value = Param(v[1:])             # stored-procedure parameter
         elif v[0] in "'\"":
             value = Const(v[1:-1])
         else:

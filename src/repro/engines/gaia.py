@@ -24,14 +24,33 @@ from repro.storage.lpg import PropertyGraph
 
 class GaiaEngine:
     def __init__(self, store, catalog: Optional[Catalog] = None,
-                 rbo: bool = True, cbo: bool = True):
-        self.pg = PropertyGraph(store)
+                 rbo: bool = True, cbo: bool = True, plan_cache=None):
+        # accept a prebuilt facade so co-located engines share one set of
+        # adjacency caches (reverse CSR, label slices)
+        self.pg = store if isinstance(store, PropertyGraph) \
+            else PropertyGraph(store)
         self.catalog = catalog or Catalog.build(self.pg)
         self.rbo = rbo
         self.cbo = cbo
+        # optional serving-layer PlanCache (anything with get_or_compile);
+        # shared across engines so repeated templates skip parse+RBO+CBO
+        self.plan_cache = plan_cache
 
     # ------------------------------------------------------------- compile
     def compile(self, query: str, language: str = "cypher") -> LogicalPlan:
+        return self.compile_cached(query, language)[0]
+
+    def compile_cached(self, query: str, language: str = "cypher"):
+        """``(plan, cache_hit)``; compiles cold when no cache is attached."""
+        if self.plan_cache is None:
+            return self.compile_cold(query, language), False
+        from repro.serving.plan_cache import plan_key
+        key = plan_key(query, language, self.rbo, self.cbo)
+        return self.plan_cache.get_or_compile(
+            key, lambda: self.compile_cold(query, language))
+
+    def compile_cold(self, query: str, language: str = "cypher") -> LogicalPlan:
+        """Full parse + RBO + CBO, bypassing any plan cache."""
         plan = (parse_cypher(query) if language == "cypher"
                 else parse_gremlin(query))
         if self.rbo:

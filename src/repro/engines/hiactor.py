@@ -18,11 +18,11 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.ir.cbo import Catalog, apply_cbo
+from repro.core.ir.cbo import Catalog, apply_cbo, find_indexed_anchor
 from repro.core.ir.codegen import Table, execute_plan, _LabelAwarePG, _eval_pred
-from repro.core.ir.dag import (BinExpr, Const, Expand, GetVertex,
-                               LogicalPlan, Pred, Project, PropRef, Scan,
-                               Select, With)
+from repro.core.ir.dag import (Agg, BinExpr, Const, Expand, GetVertex,
+                               LogicalPlan, Param, Pred, Project, PropRef,
+                               Scan, Select, With, map_op_exprs)
 from repro.core.ir.parser import parse_cypher
 from repro.core.ir.rbo import apply_rbo
 from repro.storage.lpg import PropertyGraph
@@ -38,34 +38,27 @@ class Procedure:
     scan_label: Optional[int]
 
 
-def _find_index_scan(plan: LogicalPlan):
-    scan = plan.ops[0]
-    if not isinstance(scan, Scan) or scan.pred is None:
-        return None
-    e = scan.pred.expr
-    if (isinstance(e, BinExpr) and e.op == "==" and
-            isinstance(e.left, PropRef) and isinstance(e.right, Const) and
-            isinstance(e.right.value, str) and e.right.value.startswith("$")):
-        return scan.alias, e.left.prop, e.right.value[1:], scan.label
-    return None
-
-
 def _strip_param_binding(expr, param_cols: set):
-    """Replace Const('$p') with PropRef('$__p', None) row-column refs."""
-    if isinstance(expr, Const) and isinstance(expr.value, str) \
-            and expr.value.startswith("$"):
-        param_cols.add(expr.value[1:])
-        return PropRef(f"$__{expr.value[1:]}", None)
+    """Replace Param('p') with PropRef('$__p', None) row-column refs —
+    applied through every expression-bearing field via map_op_exprs, so a
+    ``$param`` anywhere in the plan (predicates, projections, aggregates)
+    becomes a per-row column reference."""
+    if isinstance(expr, Param):
+        param_cols.add(expr.name)
+        return PropRef(f"$__{expr.name}", None)
     if isinstance(expr, BinExpr):
-        return BinExpr(expr.op,
-                       _strip_param_binding(expr.left, param_cols),
-                       _strip_param_binding(expr.right, param_cols))
+        l = _strip_param_binding(expr.left, param_cols)
+        r = _strip_param_binding(expr.right, param_cols)
+        if l is expr.left and r is expr.right:
+            return expr
+        return BinExpr(expr.op, l, r)
     return expr
 
 
 class HiActorEngine:
     def __init__(self, store, catalog: Optional[Catalog] = None):
-        self.pg = PropertyGraph(store)
+        self.pg = store if isinstance(store, PropertyGraph) \
+            else PropertyGraph(store)
         self.catalog = catalog or Catalog.build(self.pg)
         self._procs: Dict[str, Procedure] = {}
         self._indexes: Dict[Tuple[Optional[int], str],
@@ -75,7 +68,13 @@ class HiActorEngine:
     def register(self, name: str, cypher: str) -> Procedure:
         plan = apply_rbo(parse_cypher(cypher))
         plan = apply_cbo(plan, self.catalog)
-        info = _find_index_scan(plan)
+        return self.register_plan(name, plan)
+
+    def register_plan(self, name: str, plan: LogicalPlan) -> Procedure:
+        """Register an already-compiled (post-RBO/CBO) plan as a stored
+        procedure — the serving layer's plan cache hands plans in directly,
+        so a cache hit never re-parses or re-optimizes."""
+        info = find_indexed_anchor(plan)
         if info is None:
             proc = Procedure(name, plan, plan.ops[0].alias
                              if isinstance(plan.ops[0], Scan) else "?",
@@ -90,6 +89,14 @@ class HiActorEngine:
             proc = Procedure(name, plan, alias, prop, param, label)
         self._procs[name] = proc
         return proc
+
+    def has_procedure(self, name: str) -> bool:
+        return name in self._procs
+
+    def unregister(self, name: str) -> None:
+        """Drop a stored procedure (property indexes are schema-bounded
+        and shared across procedures, so they stay)."""
+        self._procs.pop(name, None)
 
     def _build_index(self, label: Optional[int], prop: str):
         key = (label, prop)
@@ -133,16 +140,12 @@ class HiActorEngine:
         param_cols: set = set()
         plan_ops = []
         for op in proc.plan.ops[1:]:
-            changes = {}
-            for f in dataclasses.fields(op):
-                v = getattr(op, f.name)
-                if isinstance(v, Pred):
-                    changes[f.name] = Pred(
-                        _strip_param_binding(v.expr, param_cols))
+            op = map_op_exprs(
+                op, lambda e: _strip_param_binding(e, param_cols))
             if isinstance(op, With):
-                changes["keys"] = tuple(["__qid__"] + list(op.keys))
-            plan_ops.append(dataclasses.replace(op, **changes)
-                            if changes else op)
+                op = dataclasses.replace(
+                    op, keys=tuple(["__qid__"] + list(op.keys)))
+            plan_ops.append(op)
         for pname in param_cols:
             vals = np.array([p[pname] for p in params_list])
             table.columns[f"$__{pname}"] = vals[qids]

@@ -1,0 +1,11 @@
+"""Serving layer: parameterized plan cache + concurrent query front door.
+
+Sits above both query engines (DESIGN.md §5): templates compile once, bind
+per request, and same-template traffic admits in vectorized batches routed
+to Gaia (OLAP-shaped) or HiActor (indexed point lookups).
+"""
+
+from repro.serving.plan_cache import (CacheStats, PlanCache,  # noqa: F401
+                                      plan_key)
+from repro.serving.service import (QueryService, Request,  # noqa: F401
+                                   Response, ServingStats)

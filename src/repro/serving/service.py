@@ -1,0 +1,212 @@
+"""QueryService — the multi-tenant front door over both query engines
+(DESIGN.md §5).
+
+A request is ``(template, params)``: a parameterized query template plus the
+values to bind. The service
+
+1. compiles each distinct template once through the shared :class:`PlanCache`
+   (parse + RBO + CBO only on a miss),
+2. groups pending requests by template and admits them in vectorized batches
+   — HiActor's homogeneous-batch trick extended across tenants: requests
+   from *different* clients that share a template ride one batch,
+3. dispatches each template by shape: plans anchored on an indexed
+   ``$param`` equality with a small GLogue-lite cost estimate go to
+   HiActor's batched OLTP path; everything else executes on Gaia's
+   dataflow with the cached plan re-bound per request,
+4. reports per-query latency and aggregate QPS per flush.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.ir.cbo import Catalog, is_point_lookup
+from repro.engines.gaia import GaiaEngine
+from repro.engines.hiactor import HiActorEngine
+from repro.serving.plan_cache import PlanCache, plan_key
+from repro.storage.lpg import PropertyGraph
+
+
+@dataclasses.dataclass
+class Request:
+    template: str
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    language: str = "cypher"
+
+
+@dataclasses.dataclass
+class Response:
+    result: Dict[str, np.ndarray]
+    engine: str          # "gaia" | "hiactor"
+    cached: bool         # plan-cache hit at admission time
+    latency_us: float    # wall time of the admission batch this query rode
+
+
+@dataclasses.dataclass
+class ServingStats:
+    n_queries: int
+    wall_us: float
+    qps: float
+    latencies_us: List[float]
+    route_counts: Dict[str, int]
+    cache: Dict[str, float]
+
+    @property
+    def mean_latency_us(self) -> float:
+        return float(np.mean(self.latencies_us)) if self.latencies_us else 0.0
+
+    @property
+    def p95_latency_us(self) -> float:
+        return (float(np.percentile(self.latencies_us, 95))
+                if self.latencies_us else 0.0)
+
+    def summary(self) -> str:
+        routes = ", ".join(f"{k}={v}" for k, v in
+                           sorted(self.route_counts.items())) or "none"
+        return (f"{self.n_queries} queries in {self.wall_us / 1e3:.1f} ms "
+                f"({self.qps:.0f} qps); latency mean "
+                f"{self.mean_latency_us:.0f} us / p95 "
+                f"{self.p95_latency_us:.0f} us; routes: {routes}; "
+                f"cache hit-rate {self.cache['hit_rate']:.2f}")
+
+
+class QueryService:
+    """Concurrent query serving over one store with both engines attached."""
+
+    def __init__(self, store, *, catalog: Optional[Catalog] = None,
+                 cache_capacity: int = 128, batch_size: int = 64,
+                 row_threshold: float = 2e4,
+                 rbo: bool = True, cbo: bool = True):
+        self.cache = PlanCache(cache_capacity, on_evict=self._on_plan_evicted)
+        self.batch_size = max(1, int(batch_size))
+        self.row_threshold = row_threshold
+        pg = store if isinstance(store, PropertyGraph) \
+            else PropertyGraph(store)     # one facade: engines share the
+        self.gaia = GaiaEngine(pg, catalog=catalog, rbo=rbo, cbo=cbo,
+                               plan_cache=self.cache)   # adjacency caches
+        self.hiactor = HiActorEngine(pg, catalog=self.gaia.catalog)
+        self._queue: List[Request] = []
+        self._proc_names: Dict[Tuple, str] = {}
+        self._proc_seq = 0                # monotonic: names never reused
+        self.last_stats: Optional[ServingStats] = None
+
+    def _on_plan_evicted(self, key) -> None:
+        """Cache eviction drops the matching stored procedure too, so the
+        registry stays bounded by cache capacity and a later recompile
+        never executes a stale registered plan."""
+        pname = self._proc_names.pop(key, None)
+        if pname is not None:
+            self.hiactor.unregister(pname)
+
+    # ------------------------------------------------------------- compile
+    def compile(self, template: str, language: str = "cypher"):
+        """``(plan, cached)`` through the shared plan cache."""
+        return self.gaia.compile_cached(template, language)
+
+    # -------------------------------------------------------------- admit
+    def submit(self, template: str, params: Optional[Dict[str, Any]] = None,
+               language: str = "cypher") -> int:
+        """Enqueue one request; returns its position in the next flush."""
+        self._queue.append(Request(template, dict(params or {}), language))
+        return len(self._queue) - 1
+
+    def flush(self) -> Tuple[List[Response], ServingStats]:
+        """Execute all pending requests; responses in submission order."""
+        pending, self._queue = self._queue, []
+        t0 = time.perf_counter()
+        # same-template requests batch together regardless of submitter
+        groups: "OrderedDict[Tuple, List[Tuple[int, Request]]]" = OrderedDict()
+        for pos, req in enumerate(pending):
+            key = plan_key(req.template, req.language,
+                           self.gaia.rbo, self.gaia.cbo)
+            groups.setdefault(key, []).append((pos, req))
+
+        # admission pass: compile + validate every group before executing
+        # any. Invalid requests (bad template, unbound params) are rejected
+        # — dropped, with the first error raised — while every valid
+        # request goes back on the queue untouched, so one bad tenant can
+        # neither discard nor permanently block the others' work.
+        admitted = []
+        rejected: List[Exception] = []
+        for key, items in groups.items():
+            first = items[0][1]
+            try:
+                plan, cached = self.compile(first.template, first.language)
+            except Exception as e:
+                rejected.extend([e] * len(items))
+                continue
+            needed = plan.param_names()
+            valid = []
+            for pos, req in items:
+                missing = needed - set(req.params)
+                if missing:
+                    rejected.append(KeyError(
+                        f"unbound parameters {sorted(missing)} "
+                        f"for template {first.template!r}"))
+                else:
+                    valid.append((pos, req))
+            if valid:
+                admitted.append((key, valid, plan, cached))
+        if rejected:
+            keep = {pos for _, items, _, _ in admitted for pos, _ in items}
+            self._queue = [req for pos, req in enumerate(pending)
+                           if pos in keep] + self._queue
+            raise rejected[0]
+
+        responses: List[Optional[Response]] = [None] * len(pending)
+        route_counts: Dict[str, int] = {}
+        for key, items, plan, cached in admitted:
+            if is_point_lookup(plan, self.gaia.catalog, self.row_threshold):
+                route = "hiactor"
+                pname = self._proc_names.get(key)
+                if pname is None:
+                    pname = f"__svc_{self._proc_seq}"
+                    self._proc_seq += 1
+                    self.hiactor.register_plan(pname, plan)
+                    self._proc_names[key] = pname
+            else:
+                route = "gaia"
+            route_counts[route] = route_counts.get(route, 0) + len(items)
+
+            if route == "hiactor":
+                # admission batching: chunks of batch_size per vectorized pass
+                for i in range(0, len(items), self.batch_size):
+                    chunk = items[i:i + self.batch_size]
+                    c0 = time.perf_counter()
+                    outs = self.hiactor.submit_batch(
+                        pname, [req.params for _, req in chunk])
+                    c_us = (time.perf_counter() - c0) * 1e6
+                    for (pos, _), out in zip(chunk, outs):
+                        responses[pos] = Response(out, route, cached, c_us)
+            else:
+                # OLAP plans execute per request; batch_size plays no role
+                for pos, req in items:
+                    c0 = time.perf_counter()
+                    out = self.gaia.execute_plan(plan.bind(req.params))
+                    c_us = (time.perf_counter() - c0) * 1e6
+                    responses[pos] = Response(out, route, cached, c_us)
+
+        wall_us = (time.perf_counter() - t0) * 1e6
+        stats = ServingStats(
+            n_queries=len(pending), wall_us=wall_us,
+            qps=len(pending) / (wall_us / 1e6) if wall_us else 0.0,
+            latencies_us=[r.latency_us for r in responses],
+            route_counts=route_counts,
+            cache=self.cache.stats.snapshot())
+        self.last_stats = stats
+        return responses, stats
+
+    def serve(self, requests: Sequence[Union[Request, Tuple]]
+              ) -> Tuple[List[Response], ServingStats]:
+        """Admit a whole stream and flush: the one-call serving loop."""
+        for r in requests:
+            if isinstance(r, Request):
+                self._queue.append(r)
+            else:
+                self.submit(*r)
+        return self.flush()

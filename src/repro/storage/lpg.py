@@ -22,6 +22,11 @@ class PropertyGraph:
         self.vlabels = self.grin.vertex_labels()
         self.elabels = self.grin.edge_labels()
         self._rev: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None
+        # (edge_label, direction) -> label-sliced CSR; built lazily so typed
+        # expansions touch only their own edges instead of filtering the
+        # whole multi-label adjacency per frontier
+        self._label_csr: Dict[Tuple[int, str],
+                              Tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
 
     # --------------------------------------------------------------- lookups
     @property
@@ -57,6 +62,30 @@ class PropertyGraph:
             self._rev = (indptr, indices, emap)
         return self._rev
 
+    def _label_sliced(self, edge_label: int, direction: str):
+        """CSR restricted to one edge label (lazy, cached). Within each
+        source the surviving edges keep their full-CSR relative order, so
+        expansion output order matches the filter-after-materialize path."""
+        key = (edge_label, direction)
+        cached = self._label_csr.get(key)
+        if cached is not None:
+            return cached
+        if direction == "in":
+            indptr, indices, emap = self._reverse()
+            eids = emap
+        else:
+            indptr, indices = self.indptr, self.indices
+            eids = np.arange(len(indices), dtype=np.int64)
+        src = np.repeat(np.arange(self.n_vertices, dtype=np.int64),
+                        np.diff(indptr))
+        keep = self.elabels[eids] == edge_label
+        new_indptr = np.zeros(self.n_vertices + 1, np.int64)
+        np.cumsum(np.bincount(src[keep], minlength=self.n_vertices),
+                  out=new_indptr[1:])
+        sliced = (new_indptr, indices[keep], eids[keep])
+        self._label_csr[key] = sliced
+        return sliced
+
     def expand(self, frontier: np.ndarray, edge_label: Optional[int] = None,
                direction: str = "out",
                edge_pred: Optional[Tuple[str, str, float]] = None
@@ -68,7 +97,9 @@ class PropertyGraph:
         (``tails`` indexes into ``frontier``), the neighbor vertex id, and
         the global edge id (CSR position) for property access.
         """
-        if direction == "in":
+        if edge_label is not None:
+            indptr, indices, emap = self._label_sliced(edge_label, direction)
+        elif direction == "in":
             indptr, indices, emap = self._reverse()
         else:
             indptr, indices, emap = self.indptr, self.indices, None
@@ -82,9 +113,6 @@ class PropertyGraph:
         pos = np.arange(total) - np.repeat(offs, degs) + np.repeat(starts, degs)
         heads = indices[pos].astype(np.int64)
         eids = emap[pos] if emap is not None else pos
-        if edge_label is not None:
-            keep = self.elabels[eids] == edge_label
-            tails, heads, eids = tails[keep], heads[keep], eids[keep]
         if edge_pred is not None:
             name, op, value = edge_pred
             col = self.eprop(name)[eids]

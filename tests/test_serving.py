@@ -1,0 +1,289 @@
+"""Serving layer: plan cache, parameterized plans, QueryService dispatch."""
+
+import numpy as np
+import pytest
+
+from repro.core.ir.cbo import find_indexed_anchor, is_point_lookup
+from repro.core.ir.parser import parse_cypher
+from repro.engines.gaia import GaiaEngine
+from repro.engines.hiactor import HiActorEngine
+from repro.serving import PlanCache, QueryService, Request, plan_key
+from repro.storage.generators import snb_store
+
+POINT = ("MATCH (v:Person {credits: $c})-[:BUY]->(i:Item) "
+         "WITH v, COUNT(i) AS cnt RETURN cnt AS cnt")
+OLAP = ("MATCH (a:Person)-[:KNOWS]->(b:Person) WHERE a.credits > $t "
+        "WITH b, COUNT(a) AS k RETURN k AS k ORDER BY k DESC LIMIT 3")
+
+
+@pytest.fixture(scope="module")
+def store():
+    return snb_store(n_persons=500, n_items=250, n_posts=64, seed=11)
+
+
+class TestPlanCache:
+    def test_hit_miss_accounting(self):
+        cache = PlanCache(capacity=4)
+        k = plan_key("MATCH (a) RETURN a")
+        assert cache.get(k) is None
+        assert cache.stats.misses == 1 and cache.stats.hits == 0
+        cache.put(k, "plan")
+        assert cache.get(k) == "plan"
+        assert cache.stats.hits == 1 and cache.stats.misses == 1
+        assert cache.stats.hit_rate == 0.5
+
+    def test_get_or_compile_compiles_once(self):
+        cache = PlanCache(capacity=4)
+        calls = []
+        k = plan_key("q")
+        for _ in range(3):
+            plan, cached = cache.get_or_compile(
+                k, lambda: calls.append(1) or "p")
+            assert plan == "p"
+        assert len(calls) == 1
+        assert cache.stats.hits == 2 and cache.stats.misses == 1
+
+    def test_eviction_at_capacity(self):
+        cache = PlanCache(capacity=2)
+        k1, k2, k3 = plan_key("q1"), plan_key("q2"), plan_key("q3")
+        cache.put(k1, 1)
+        cache.put(k2, 2)
+        cache.put(k3, 3)                  # evicts k1 (least recently used)
+        assert cache.stats.evictions == 1
+        assert k1 not in cache and k2 in cache and k3 in cache
+
+    def test_lru_order_respects_access(self):
+        cache = PlanCache(capacity=2)
+        k1, k2, k3 = plan_key("q1"), plan_key("q2"), plan_key("q3")
+        cache.put(k1, 1)
+        cache.put(k2, 2)
+        assert cache.get(k1) == 1         # k1 now most-recent
+        cache.put(k3, 3)                  # so k2 is the victim
+        assert k1 in cache and k2 not in cache and k3 in cache
+
+    def test_key_normalizes_whitespace_and_separates_flags(self):
+        assert plan_key("MATCH  (a)\n RETURN a") == plan_key("MATCH (a) RETURN a")
+        assert plan_key("q", rbo=False) != plan_key("q", rbo=True)
+        assert plan_key("q", "cypher") != plan_key("q", "gremlin")
+
+    def test_key_preserves_whitespace_inside_string_literals(self):
+        a = plan_key("MATCH (a:Person {name: 'A  B'}) RETURN a")
+        b = plan_key("MATCH (a:Person {name: 'A B'}) RETURN a")
+        assert a != b
+        # while still normalizing outside the quotes
+        c = plan_key("MATCH   (a:Person {name: 'A  B'})\n RETURN a")
+        assert a == c
+
+    def test_clear_resets(self):
+        cache = PlanCache(capacity=2)
+        cache.put(plan_key("q"), 1)
+        cache.get(plan_key("q"))
+        cache.clear()
+        assert len(cache) == 0 and cache.stats.lookups == 0
+
+
+class TestParameterizedPlans:
+    def test_where_params_parse_and_collect(self):
+        plan = parse_cypher(OLAP)
+        assert plan.param_names() == {"t"}
+        plan = parse_cypher(POINT)
+        assert plan.param_names() == {"c"}
+
+    def test_bind_substitutes_after_optimization(self, store):
+        eng = GaiaEngine(store)
+        plan = eng.compile(OLAP)          # RBO/CBO applied, still parameterized
+        assert plan.param_names() == {"t"}
+        bound = plan.bind({"t": 400})
+        assert bound.param_names() == set()
+        inline = eng.compile(OLAP.replace("$t", "400"))
+        a = eng.execute_plan(bound)
+        b = eng.execute_plan(inline)
+        np.testing.assert_array_equal(a["k"], b["k"])
+
+    def test_bind_missing_param_raises(self):
+        plan = parse_cypher(OLAP)
+        with pytest.raises(KeyError):
+            plan.bind({})
+
+    def test_bind_no_params_is_noop(self):
+        plan = parse_cypher("MATCH (a:Person) RETURN a.credits AS cr")
+        assert plan.bind({}) is plan
+
+    def test_anchor_detection(self, store):
+        eng = GaiaEngine(store)
+        point = eng.compile(POINT)
+        olap = eng.compile(OLAP)
+        assert find_indexed_anchor(point) == ("v", "credits", "c", 0)
+        assert find_indexed_anchor(olap) is None
+        assert is_point_lookup(point, eng.catalog)
+        assert not is_point_lookup(olap, eng.catalog)
+
+
+class TestCachedPlanCorrectness:
+    """A cached plan bound with new params must match a cold compile."""
+
+    def test_gaia_cached_equals_cold(self, store):
+        cache = PlanCache(capacity=8)
+        warm = GaiaEngine(store, plan_cache=cache)
+        cold = GaiaEngine(store)
+        warm.compile(OLAP)
+        assert cache.stats.misses == 1
+        plan = warm.compile(OLAP)         # cache hit
+        assert cache.stats.hits == 1
+        for t in (100, 400, 800):
+            a = warm.execute_plan(plan.bind({"t": t}))
+            b = cold.execute_plan(cold.compile_cold(OLAP).bind({"t": t}))
+            np.testing.assert_array_equal(a["k"], b["k"])
+
+    def test_hiactor_cached_equals_cold(self, store):
+        cache = PlanCache(capacity=8)
+        compiler = GaiaEngine(store, plan_cache=cache)
+        plan = compiler.compile(POINT)
+
+        warm = HiActorEngine(store, catalog=compiler.catalog)
+        warm.register_plan("p", plan)     # precompiled, no re-parse
+        cold = HiActorEngine(store)
+        cold.register("p", POINT)
+
+        params = [{"c": int(c)} for c in range(0, 40)]
+        for a, b in zip(warm.submit_batch("p", params),
+                        cold.submit_batch("p", params)):
+            assert sorted(a["cnt"].tolist()) == sorted(b["cnt"].tolist())
+
+
+class TestQueryService:
+    def test_routing_and_order(self, store):
+        svc = QueryService(store, batch_size=8)
+        reqs = [(POINT, {"c": i}) for i in range(10)] + [(OLAP, {"t": 400})]
+        resps, stats = svc.serve(reqs)
+        assert len(resps) == 11
+        assert all(r.engine == "hiactor" for r in resps[:10])
+        assert resps[10].engine == "gaia"
+        assert stats.route_counts == {"hiactor": 10, "gaia": 1}
+
+    def test_results_match_direct_engines(self, store):
+        svc = QueryService(store, batch_size=4)
+        resps, _ = svc.serve([(POINT, {"c": 3}), (OLAP, {"t": 200})])
+
+        hi = HiActorEngine(store)
+        hi.register("p", POINT)
+        direct_point = hi.submit_batch("p", [{"c": 3}])[0]
+        assert sorted(resps[0].result["cnt"].tolist()) == \
+            sorted(direct_point["cnt"].tolist())
+
+        gaia = GaiaEngine(store)
+        direct_olap = gaia.execute_plan(gaia.compile(OLAP).bind({"t": 200}))
+        np.testing.assert_array_equal(resps[1].result["k"], direct_olap["k"])
+
+    def test_second_flush_hits_cache(self, store):
+        svc = QueryService(store)
+        reqs = [(POINT, {"c": 1}), (OLAP, {"t": 100})]
+        resps, _ = svc.serve(reqs)
+        assert all(not r.cached for r in resps)
+        resps, stats = svc.serve(reqs)
+        assert all(r.cached for r in resps)
+        assert stats.cache["hits"] >= 2
+
+    def test_batching_splits_admission(self, store):
+        svc = QueryService(store, batch_size=4)
+        resps, stats = svc.serve([(POINT, {"c": i}) for i in range(10)])
+        assert stats.n_queries == 10 and stats.qps > 0
+        assert len(stats.latencies_us) == 10
+        # 10 requests over batch_size=4 -> chunks share wall-time latencies
+        assert len({round(r.latency_us, 6) for r in resps}) <= 3
+
+    def test_unbound_param_rejected_without_blocking_others(self, store):
+        svc = QueryService(store)
+        svc.submit(POINT, {"c": 1})
+        svc.submit(OLAP, {})              # invalid: $t unbound
+        with pytest.raises(KeyError):
+            svc.flush()
+        # the invalid request is dropped; the valid one is re-queued and a
+        # retry serves it (a poisoned request must not block the stream)
+        assert len(svc._queue) == 1
+        resps, _ = svc.flush()
+        assert len(resps) == 1 and resps[0].engine == "hiactor"
+
+    def test_limit_template_avoids_batched_route(self, store):
+        """LIMIT must apply per query, so such plans may not ride the
+        single-pass batched path where it would truncate the whole batch."""
+        tmpl = ("MATCH (v:Person {credits: $c})-[:KNOWS]->(f:Person) "
+                "RETURN f.credits AS fc LIMIT 3")
+        svc = QueryService(store, batch_size=8)
+        resps, stats = svc.serve([(tmpl, {"c": c}) for c in range(40, 46)])
+        assert stats.route_counts == {"gaia": 6}
+        gaia = GaiaEngine(store)
+        for c, r in zip(range(40, 46), resps):
+            want = gaia.execute_plan(gaia.compile(tmpl).bind({"c": c}))
+            np.testing.assert_array_equal(r.result["fc"], want["fc"])
+
+    def test_dollar_string_literal_is_not_a_param(self, store):
+        plan = parse_cypher(
+            "MATCH (v:Person) WHERE v.region == '$weird' "
+            "RETURN v.credits AS cr")
+        assert plan.param_names() == set()
+        svc = QueryService(store)
+        resps, _ = svc.serve([
+            ("MATCH (v:Person) WHERE v.region == '$weird' "
+             "RETURN v.credits AS cr", {})])
+        assert len(resps[0].result["cr"]) == 0   # no such region; no KeyError
+
+    def test_eviction_unregisters_procedure(self, store):
+        svc = QueryService(store, cache_capacity=1)
+        t1 = POINT
+        t2 = ("MATCH (v:Person {credits: $c})-[:KNOWS]->(f:Person) "
+              "WITH v, COUNT(f) AS k RETURN k AS k")
+        svc.serve([(t1, {"c": 5})])
+        assert len(svc._proc_names) == 1
+        svc.serve([(t2, {"c": 5})])      # evicts t1's plan and procedure
+        assert len(svc._proc_names) == 1
+        assert len(svc.hiactor._procs) == 1
+        resps, _ = svc.serve([(t1, {"c": 5})])   # recompiles + re-registers
+        assert resps[0].engine == "hiactor"
+
+    def test_eviction_never_reuses_procedure_names(self, store):
+        """After an eviction a new template must not overwrite a live
+        procedure by recycling its name."""
+        t = ("MATCH (v:Person {credits: $c})-[:BUY]->(i:Item) "
+             "WITH v, COUNT(i) AS cnt RETURN cnt AS cnt")
+        t2 = ("MATCH (v:Person {credits: $cr})-[:KNOWS]->(f:Person) "
+              "WITH v, COUNT(f) AS k RETURN k AS k")
+        t3 = ("MATCH (v:Person {id: $i})-[:KNOWS]->(f:Person) "
+              "WITH v, COUNT(f) AS n RETURN n AS n")
+        svc = QueryService(store, cache_capacity=2)
+        svc.serve([(t, {"c": 5})])       # __svc_0
+        svc.serve([(t2, {"cr": 5})])     # __svc_1
+        svc.serve([(t3, {"i": 5})])      # evicts t; must NOT reuse __svc_1
+        assert len(set(svc._proc_names.values())) == len(svc._proc_names)
+        # t2 still executes its own plan with its own param name
+        resps, _ = svc.serve([(t2, {"cr": 7})])
+        assert resps[0].engine == "hiactor"
+
+    def test_cache_clear_releases_procedures(self, store):
+        svc = QueryService(store)
+        svc.serve([(POINT, {"c": 5})])
+        assert len(svc.hiactor._procs) == 1
+        svc.cache.clear()
+        assert len(svc.hiactor._procs) == 0 and len(svc._proc_names) == 0
+
+    def test_param_outside_predicate_on_hiactor_route(self, store):
+        """$params in RETURN/WITH expressions must bind on the batched
+        OLTP path too, not only inside predicates."""
+        tmpl = ("MATCH (v:Person {credits: $c})-[:BUY]->(i:Item) "
+                "WITH v, COUNT(i) AS cnt RETURN cnt + $boost AS total")
+        svc = QueryService(store, batch_size=4)
+        resps, stats = svc.serve([(tmpl, {"c": c, "boost": 100 * c})
+                                  for c in range(1, 6)])
+        assert stats.route_counts == {"hiactor": 5}
+        gaia = GaiaEngine(store)
+        for c, r in zip(range(1, 6), resps):
+            plan = gaia.compile(tmpl).bind({"c": c, "boost": 100 * c})
+            np.testing.assert_array_equal(
+                np.sort(r.result["total"]),
+                np.sort(gaia.execute_plan(plan)["total"]))
+
+    def test_request_objects_and_summary(self, store):
+        svc = QueryService(store)
+        resps, stats = svc.serve([Request(POINT, {"c": 2})])
+        assert resps[0].engine == "hiactor"
+        assert "qps" in stats.summary() or "queries" in stats.summary()
