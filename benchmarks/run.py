@@ -14,10 +14,11 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
-                    help="comma list: storage,query,analytics,learning,kernels")
+                    help="comma list: storage,query,hybrid,analytics,"
+                         "learning,kernels")
     args = ap.parse_args()
     wanted = set(args.only.split(",")) if args.only != "all" else {
-        "storage", "query", "analytics", "learning", "kernels"}
+        "storage", "query", "hybrid", "analytics", "learning", "kernels"}
 
     from benchmarks.common import emit_header
     emit_header()
@@ -29,6 +30,9 @@ def main() -> None:
     if "query" in wanted:
         from benchmarks import query_bench
         sections.append(("query", query_bench.run))
+    if "hybrid" in wanted:
+        from benchmarks import hybrid_bench
+        sections.append(("hybrid", hybrid_bench.run))
     if "analytics" in wanted:
         from benchmarks import analytics_bench
         sections.append(("analytics", analytics_bench.run))

@@ -3,7 +3,7 @@
 ``decode_*`` / ``long_*`` lower ``serve_step`` (one new token against a KV/state
 cache of ``seq_len``), NOT ``train_step``. ``long_500k`` requires sub-quadratic
 attention and is skipped for pure full-attention architectures (see
-DESIGN.md §4 and ModelConfig.subquadratic).
+DESIGN.md §5 and ModelConfig.subquadratic).
 """
 
 from __future__ import annotations

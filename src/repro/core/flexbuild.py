@@ -6,7 +6,8 @@ engines, interfaces and model backends into one :class:`Deployment` object.
 Incompatible combinations fail at *build* time (trait mismatch), not at
 query time — the bricks refuse to interlock, which is the point.
 
-Component ids follow Figure 3 of the paper:
+Component ids follow Figure 3 of the paper (full bricks table and the
+three composition rules: DESIGN.md §3):
   ③ gremlin  ④ cypher      ⑤ builtin-analytics  ⑦ gnn-models
   ⑫ hiactor  ⑬ gaia        ⑭ pie ⑮ flash ⑯ grape  ⑰ graphlearn
   ㉑ vineyard(csr) ㉒ gart  ㉓ graphar

@@ -16,9 +16,10 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.ir.dag import (Agg, Expand, GetVertex, GroupCount, Limit,
-                               LogicalPlan, OrderBy, Pred, Project, Scan,
-                               Select, With, eval_expr)
+from repro.core.ir.dag import (Agg, Const, Expand, GetVertex, GroupCount,
+                               Limit, LogicalPlan, OrderBy, Param, Pred,
+                               ProcedureCall, Project, Scan, Select, With,
+                               eval_expr)
 
 
 @dataclasses.dataclass
@@ -79,14 +80,19 @@ class _LabelAwarePG:
 
 def execute_plan(plan: LogicalPlan, pg, *,
                  params: Optional[Dict[str, Any]] = None,
-                 table: Optional[Table] = None) -> Dict[str, np.ndarray]:
+                 table: Optional[Table] = None,
+                 procedures=None) -> Dict[str, np.ndarray]:
     """Run a (physical) plan over a PropertyGraph. ``params`` substitutes
-    Const placeholders of the form ``$name`` (stored procedures)."""
+    Const placeholders of the form ``$name`` (stored procedures);
+    ``procedures`` is the :class:`ProcedureRegistry` consulted by
+    ``CALL algo.*`` plans (DESIGN.md §7)."""
     pg = _LabelAwarePG(pg)
     out: Dict[str, np.ndarray] = {}
     for op in plan.ops:
         op = _bind_params(op, params)
-        if isinstance(op, Scan):
+        if isinstance(op, ProcedureCall):
+            table = _run_procedure(op, pg, procedures, table)
+        elif isinstance(op, Scan):
             ids = pg.vertices(op.label)
             t = Table({op.alias: ids}, {})
             if table is not None and table.n_rows:
@@ -159,6 +165,35 @@ def execute_plan(plan: LogicalPlan, pg, *,
     if not out and table is not None:
         out = dict(table.columns)
     return out
+
+
+def _run_procedure(op: ProcedureCall, pg, procedures,
+                   table: Optional[Table]) -> Table:
+    """CALL algo.* — run the GRAPE-backed procedure and source the row
+    table from its result: every vertex under the yielded alias, the score
+    both as a row column (`WHERE rank > $t`, `ORDER BY rank`) and as a
+    temporary vertex property on the shared facade (`v.rank`,
+    gremlin `values('rank')`). See DESIGN.md §7 for the lifetime rules."""
+    if procedures is None:
+        raise RuntimeError(
+            "plan contains CALL but the executing engine has no "
+            "ProcedureRegistry attached (pass procedures=…)")
+    if table is not None and table.n_rows:
+        raise NotImplementedError("CALL must be the source of the plan")
+    argvals = []
+    for a in op.args:
+        if isinstance(a, Param):
+            raise ValueError(f"unbound parameter ${a.name} in CALL "
+                             f"{op.proc}: bind(params) before execution")
+        if not isinstance(a, Const):
+            raise ValueError(f"CALL {op.proc} args must be literals or "
+                             f"$params, got {a}")
+        argvals.append(a.value)
+    scores = procedures.run(pg.grin.store, op.proc, tuple(argvals))
+    v_alias, score_name = op.yields
+    pg.set_temp_vprop(score_name, scores)
+    ids = np.arange(pg.n_vertices, dtype=np.int64)
+    return Table({v_alias: ids, score_name: np.asarray(scores)}, {})
 
 
 def _group(op: With, table: Table, pg) -> Table:

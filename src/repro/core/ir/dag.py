@@ -134,6 +134,24 @@ class GroupCount:
 
 
 @dataclasses.dataclass(frozen=True)
+class ProcedureCall:
+    """``CALL algo.<proc>(args…) YIELD v, score`` — the query↔analytics
+    bridge (DESIGN.md §7). Executes a GRAPE-backed built-in algorithm and
+    sources the row table from its result: ``yields[0]`` becomes a vertex
+    alias covering every vertex, ``yields[1]`` both a row column and a
+    temporary vertex property holding the per-vertex score, so the rest of
+    the plan (MATCH / WHERE / ORDER BY) composes over computed analytics.
+
+    ``args`` are ordinary expressions, so ``$param`` placeholders inside
+    CALL survive optimization and bind per request like any other plan
+    parameter."""
+
+    proc: str                            # algorithm name (namespace stripped)
+    args: Tuple[Expr, ...] = ()
+    yields: Tuple[str, ...] = ()         # (vertex alias, score column)
+
+
+@dataclasses.dataclass(frozen=True)
 class OrderBy:
     key: str
     desc: bool = False
@@ -145,7 +163,7 @@ class Limit:
 
 
 Op = Union[Scan, Expand, GetVertex, Select, Project, With, GroupCount,
-           OrderBy, Limit]
+           ProcedureCall, OrderBy, Limit]
 
 
 @dataclasses.dataclass

@@ -15,8 +15,9 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.ir.dag import (Agg, BinExpr, Const, Expand, GetVertex, Limit,
-                               LogicalPlan, OrderBy, Param, Pred, Project,
-                               PropRef, Scan, Select, With)
+                               LogicalPlan, OrderBy, Param, Pred,
+                               ProcedureCall, Project, PropRef, Scan, Select,
+                               With)
 from repro.storage.generators import EDGE_NAMES, LABEL_NAMES
 
 
@@ -196,6 +197,14 @@ def _parse_pattern(pattern: str, seen: set, anon_counter: List[int]) -> List:
     if alias not in seen:
         ops.append(Scan(alias, label, pred))
         seen.add(alias)
+    else:
+        # alias already bound (earlier pattern or a CALL … YIELD): apply the
+        # node's label/props as filters instead of re-scanning
+        if label is not None:
+            ops.append(Select(Pred(BinExpr(
+                "==", PropRef(alias, "__label__"), Const(label)))))
+        if pred is not None:
+            ops.append(Select(pred))
     prev = alias
     pos = m.end()
     while pos < len(pattern):
@@ -217,15 +226,56 @@ def _parse_pattern(pattern: str, seen: set, anon_counter: List[int]) -> List:
         pos = nm.end()
         ops.append(Expand(src=prev, edge_label=e_label, direction=direction,
                           edge=e_alias))
-        ops.append(GetVertex(edge=e_alias, alias=n_alias, label=n_label,
-                             pred=n_pred))
-        seen.add(n_alias)
+        if n_alias in seen:
+            # closing a cycle onto an already-bound alias (earlier pattern,
+            # earlier hop, or a CALL-yielded vertex): materialize the head
+            # under a fresh name and enforce the join equality, instead of
+            # silently rebinding the column
+            anon_counter[0] += 1
+            fresh = f"_j{anon_counter[0]}"
+            ops.append(GetVertex(edge=e_alias, alias=fresh, label=n_label,
+                                 pred=None))
+            ops.append(Select(Pred(BinExpr(
+                "==", PropRef(fresh, None), PropRef(n_alias, None)))))
+            if n_pred is not None:       # props map refs the bound alias
+                ops.append(Select(n_pred))
+        else:
+            ops.append(GetVertex(edge=e_alias, alias=n_alias, label=n_label,
+                                 pred=n_pred))
+            seen.add(n_alias)
         prev = n_alias
     return ops
 
 
 _CLAUSE = re.compile(
-    r"\b(MATCH|WHERE|WITH|RETURN|ORDER BY|LIMIT)\b", re.I)
+    r"\b(CALL|MATCH|WHERE|WITH|RETURN|ORDER BY|LIMIT)\b", re.I)
+
+_CALL_BODY = re.compile(
+    r"^(?P<name>[A-Za-z_][\w.]*)\s*\((?P<args>[^)]*)\)"
+    r"(?:\s+YIELD\s+(?P<yields>.+))?$", re.I)
+
+
+def _parse_call(body: str) -> ProcedureCall:
+    """``algo.pagerank($d) YIELD v, rank`` → ProcedureCall. Args are full
+    expressions (literals or ``$param``); YIELD defaults to
+    ``v, <algorithm's result name>`` when omitted."""
+    from repro.engines.procedures import RESULT_NAMES, normalize_proc_name
+
+    m = _CALL_BODY.match(body.strip())
+    if not m:
+        raise SyntaxError(f"bad CALL clause: {body!r}")
+    name = normalize_proc_name(m.group("name"))
+    raw_args = m.group("args").strip()
+    args = tuple(parse_expr(a.strip())
+                 for a in raw_args.split(",")) if raw_args else ()
+    if m.group("yields"):
+        yields = tuple(y.strip() for y in m.group("yields").split(","))
+        if len(yields) != 2:
+            raise SyntaxError(
+                f"CALL must YIELD exactly (vertex, score), got {yields}")
+    else:
+        yields = ("v", RESULT_NAMES[name])
+    return ProcedureCall(proc=name, args=args, yields=yields)
 
 
 def parse_cypher(query: str) -> LogicalPlan:
@@ -243,7 +293,11 @@ def parse_cypher(query: str) -> LogicalPlan:
     seen: set = set()
     anon = [0]
     for name, body in parts:
-        if name == "MATCH":
+        if name == "CALL":
+            call = _parse_call(body)
+            ops.append(call)
+            seen.update(call.yields)     # YIELDed names are bound columns
+        elif name == "MATCH":
             for pattern in _split_patterns(body):
                 ops.extend(_parse_pattern(pattern, seen, anon))
         elif name == "WHERE":
@@ -306,16 +360,51 @@ _GREMLIN_STEP = re.compile(r"\.(\w+)\(([^)]*)\)")
 
 
 def parse_gremlin(query: str) -> LogicalPlan:
-    """g.V().hasLabel('X').has('p', v).out('E').in_('E').values('p')…"""
+    """g.V().hasLabel('X').has('p', v).out('E').in_('E').values('p')…
+
+    The source step is either ``g.V()`` or the procedure bridge
+    ``g.call('algo.pagerank', $d)`` (GIE's CALL in Gremlin clothing): the
+    call yields every vertex as ``v0`` plus the algorithm's score column
+    (e.g. ``rank``), which later ``where('rank > $t')`` / ``order_by`` /
+    ``values`` steps consume like any traversal column."""
     query = query.strip()
-    if not query.startswith("g.V()"):
-        raise SyntaxError("gremlin query must start with g.V()")
+    if not query.startswith("g."):
+        raise SyntaxError("gremlin query must start with g.V() or g.call()")
+    rest = query[1:]
+    steps = list(_GREMLIN_STEP.finditer(rest))
+    # steps must tile the query (whitespace between them is fine); anything
+    # else is a silent-drop hazard, so reject with the exact leftover text
+    pos = 0
+    for m in steps:
+        if rest[pos:m.start()].strip():
+            raise SyntaxError(
+                f"unparsed gremlin segment: {rest[pos:m.start()]!r}")
+        pos = m.end()
+    if rest[pos:].strip():
+        raise SyntaxError(f"unparsed gremlin trailer: {rest[pos:]!r}")
+    if not steps or steps[0].group(1) not in ("V", "call"):
+        raise SyntaxError("gremlin query must start with g.V() or g.call()")
     ops: List = []
     anon = [0]
     cur_alias = "v0"
-    ops.append(Scan(cur_alias, None, None))
+    head, head_args = steps[0].group(1), steps[0].group(2)
+    if head == "V":
+        if head_args.strip():
+            raise SyntaxError("g.V(ids) is not supported")
+        ops.append(Scan(cur_alias, None, None))
+    else:
+        from repro.engines.procedures import RESULT_NAMES, normalize_proc_name
+
+        raw = [a.strip() for a in head_args.split(",")] \
+            if head_args.strip() else []
+        if not raw:
+            raise SyntaxError("g.call() needs an algorithm name")
+        name = normalize_proc_name(raw[0].strip("'\""))
+        args = tuple(parse_expr(a) for a in raw[1:])
+        ops.append(ProcedureCall(proc=name, args=args,
+                                 yields=(cur_alias, RESULT_NAMES[name])))
     n_v = 0
-    for m in _GREMLIN_STEP.finditer(query[len("g.V()"):]):
+    for m in steps[1:]:
         step, rawargs = m.group(1), m.group(2)
         args = [a.strip().strip("'\"") for a in rawargs.split(",")] \
             if rawargs.strip() else []
@@ -325,12 +414,16 @@ def parse_gremlin(query: str) -> LogicalPlan:
                 "==", PropRef(cur_alias, "__label__"), Const(label)))))
         elif step == "has":
             prop, value = args[0], args[1]
-            try:
-                value = float(value) if "." in value else int(value)
-            except ValueError:
-                pass
+            if isinstance(value, str) and value.startswith("$"):
+                value = Param(value[1:])
+            else:
+                try:
+                    value = Const(float(value) if "." in value
+                                  else int(value))
+                except ValueError:
+                    value = Const(value)
             ops.append(Select(Pred(BinExpr(
-                "==", PropRef(cur_alias, prop), Const(value)))))
+                "==", PropRef(cur_alias, prop), value))))
         elif step in ("out", "in_", "in", "both"):
             direction = "out" if step == "out" else "in"
             elabel = EDGE_NAMES.get(args[0]) if args else None
@@ -348,6 +441,13 @@ def parse_gremlin(query: str) -> LogicalPlan:
             ops.append(With((), (Agg("count", None, "count"),)))
         elif step == "limit":
             ops.append(Limit(int(args[0])))
+        elif step == "where":
+            # where('rank > $t'): a full predicate expression over columns
+            # (CALL score columns, aliases) and vertex properties
+            ops.append(Select(Pred(parse_expr(rawargs.strip().strip("'\"")))))
+        elif step == "order_by":
+            desc = len(args) > 1 and args[1].lower() == "desc"
+            ops.append(OrderBy(args[0].replace(".", "_"), desc))
         else:
             raise SyntaxError(f"unsupported gremlin step {step}")
     return LogicalPlan(ops)

@@ -1,2 +1,3 @@
 from repro.engines.gaia import GaiaEngine  # noqa: F401
 from repro.engines.hiactor import HiActorEngine  # noqa: F401
+from repro.engines.procedures import ProcedureRegistry  # noqa: F401

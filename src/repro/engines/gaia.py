@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.core.ir.cbo import Catalog, apply_cbo
 from repro.core.ir.codegen import Table, execute_plan
-from repro.core.ir.dag import LogicalPlan, Scan
+from repro.core.ir.dag import LogicalPlan, ProcedureCall, Scan
 from repro.core.ir.parser import parse_cypher, parse_gremlin
 from repro.core.ir.rbo import apply_rbo
 from repro.storage.lpg import PropertyGraph
@@ -24,7 +24,8 @@ from repro.storage.lpg import PropertyGraph
 
 class GaiaEngine:
     def __init__(self, store, catalog: Optional[Catalog] = None,
-                 rbo: bool = True, cbo: bool = True, plan_cache=None):
+                 rbo: bool = True, cbo: bool = True, plan_cache=None,
+                 procedures=None):
         # accept a prebuilt facade so co-located engines share one set of
         # adjacency caches (reverse CSR, label slices)
         self.pg = store if isinstance(store, PropertyGraph) \
@@ -35,6 +36,16 @@ class GaiaEngine:
         # optional serving-layer PlanCache (anything with get_or_compile);
         # shared across engines so repeated templates skip parse+RBO+CBO
         self.plan_cache = plan_cache
+        # CALL algo.* executor, created lazily so plain traversal engines
+        # never touch the analytics stack (DESIGN.md §7)
+        self._procedures = procedures
+
+    @property
+    def procedures(self):
+        if self._procedures is None:
+            from repro.engines.procedures import ProcedureRegistry
+            self._procedures = ProcedureRegistry()
+        return self._procedures
 
     # ------------------------------------------------------------- compile
     def compile(self, query: str, language: str = "cypher") -> LogicalPlan:
@@ -63,11 +74,15 @@ class GaiaEngine:
     def execute(self, query: str, language: str = "cypher",
                 params: Optional[Dict[str, Any]] = None) -> Dict[str, np.ndarray]:
         plan = self.compile(query, language)
-        return execute_plan(plan, self.pg, params=params)
+        return self.execute_plan(plan, params=params)
 
     def execute_plan(self, plan: LogicalPlan,
                      params: Optional[Dict[str, Any]] = None):
-        return execute_plan(plan, self.pg, params=params)
+        procs = self._procedures
+        if procs is None and any(isinstance(op, ProcedureCall)
+                                 for op in plan.ops):
+            procs = self.procedures       # lazy-create on first CALL plan
+        return execute_plan(plan, self.pg, params=params, procedures=procs)
 
     def run_partitioned(self, query: str, n_partitions: int = 4,
                         language: str = "cypher") -> List[Dict[str, np.ndarray]]:

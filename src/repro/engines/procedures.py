@@ -1,0 +1,211 @@
+"""Procedure registry — the `CALL algo.*` bridge into GRAPE (DESIGN.md §7).
+
+GIE exposes built-in algorithms as stored procedures callable from the
+query languages; this module is that bridge for the reproduction. A
+:class:`ProcedureRegistry` wraps the GRAPE analytics engine behind a flat
+``name → spec`` table (pagerank / sssp / bfs / wcc / degree_centrality)
+and memoizes converged fixpoints per **(store snapshot, algorithm,
+canonical args)** so repeated serving traffic reuses the result instead of
+re-iterating. Snapshot identity honors GART MVCC: two snapshots of one
+store at the same version share a memo entry, so a query pinned at
+version v always sees analytics computed at version v.
+
+Results come back as dense ``np.ndarray[N]`` host arrays trimmed to the
+store's vertex range (GRAPE pads fragments to a common width; the padding
+tail never leaks into query results). The heavy imports (jax via the
+GRAPE engine) happen lazily on first ``run``, keeping this module — and
+the parser, which reads :data:`RESULT_NAMES` — cheap to import.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ProcedureSpec:
+    """One registered algorithm: argument schema + default YIELD name."""
+
+    name: str
+    params: Tuple[Tuple[str, Any], ...]   # ((arg name, default), ...)
+    result: str                           # default score column name
+    runner: Callable                      # (engine, *args) -> array[N]
+
+    def canonical_args(self, args: Sequence[Any],
+                       kwargs: Optional[Dict[str, Any]] = None) -> Tuple:
+        """Positional args + kwargs + defaults → one canonical tuple (the
+        memo key component). Numeric casts make ``0.85`` and ``.85`` and a
+        numpy scalar all hit the same entry."""
+        kwargs = dict(kwargs or {})
+        if len(args) > len(self.params):
+            raise TypeError(f"{self.name} takes at most {len(self.params)} "
+                            f"args, got {len(args)}")
+        out = []
+        for i, (pname, default) in enumerate(self.params):
+            if i < len(args):
+                val = args[i]
+            elif pname in kwargs:
+                val = kwargs.pop(pname)
+            else:
+                val = default
+            out.append(int(val) if isinstance(default, int) else float(val))
+        if kwargs:
+            raise TypeError(f"{self.name} got unexpected args "
+                            f"{sorted(kwargs)}")
+        return tuple(out)
+
+
+def _run_pagerank(engine, damping):
+    from repro.engines.grape.algorithms import pagerank
+    return pagerank(engine, damping=damping)
+
+
+def _run_sssp(engine, source):
+    from repro.engines.grape.algorithms import sssp
+    return sssp(engine, source=source)
+
+
+def _run_bfs(engine, source):
+    from repro.engines.grape.algorithms import bfs
+    return bfs(engine, source=source)
+
+
+def _run_wcc(engine):
+    from repro.engines.grape.algorithms import wcc
+    return wcc(engine)
+
+
+def _run_degree_centrality(engine):
+    from repro.engines.grape.algorithms import degree_centrality
+    return degree_centrality(engine)
+
+
+SPECS: Dict[str, ProcedureSpec] = {
+    "pagerank": ProcedureSpec("pagerank", (("damping", 0.85),), "rank",
+                              _run_pagerank),
+    "sssp": ProcedureSpec("sssp", (("source", 0),), "dist", _run_sssp),
+    "bfs": ProcedureSpec("bfs", (("source", 0),), "depth", _run_bfs),
+    "wcc": ProcedureSpec("wcc", (), "comp", _run_wcc),
+    "degree_centrality": ProcedureSpec("degree_centrality", (), "centrality",
+                                       _run_degree_centrality),
+}
+
+# parser-facing: default YIELD score column per algorithm
+RESULT_NAMES: Dict[str, str] = {n: s.result for n, s in SPECS.items()}
+
+
+def normalize_proc_name(name: str) -> str:
+    """Strip the ``algo.`` namespace; validate against the registry."""
+    short = name[5:] if name.startswith("algo.") else name
+    if short not in SPECS:
+        raise KeyError(f"unknown procedure {name!r}; available: "
+                       f"{sorted(SPECS)}")
+    return short
+
+
+def snapshot_token(store) -> Tuple:
+    """Identity of a store *state* for memoization. MVCC snapshots expose
+    ``snapshot_token`` (GART: (store uid, version)) so distinct snapshot
+    objects at one version share memoized results; immutable stores fall
+    back to object identity (the registry keeps the store alive through
+    its engine cache, so ids are never recycled underneath us)."""
+    tok = getattr(store, "snapshot_token", None)
+    if tok is not None:
+        return tuple(tok)
+    return ("obj", id(store))
+
+
+@dataclasses.dataclass
+class RegistryStats:
+    hits: int = 0
+    misses: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class ProcedureRegistry:
+    """Memoizing executor for `CALL algo.*` plans.
+
+    One registry can serve many stores/snapshots: the store is passed per
+    ``run`` call, and both the per-snapshot GRAPE engine and every
+    converged result are cached under the snapshot token. Share a single
+    registry across QueryService instances pinned at different GART
+    versions to get cross-version reuse with per-version correctness.
+
+    The cache is LRU-bounded *per snapshot token* (``max_snapshots``): a
+    streaming store minting a new version every wave would otherwise pin
+    one GRAPE engine plus result arrays per version forever. Evicting a
+    token drops its engine and all its memoized results together.
+    """
+
+    def __init__(self, n_frags: int = 1, use_kernels: bool = False,
+                 max_snapshots: int = 8):
+        if max_snapshots < 1:
+            raise ValueError("max_snapshots must be >= 1")
+        self.n_frags = n_frags
+        self.use_kernels = use_kernels
+        self.max_snapshots = max_snapshots
+        self._engines: "OrderedDict[Tuple, Any]" = OrderedDict()
+        self._results: Dict[Tuple, np.ndarray] = {}
+        self.stats = RegistryStats()
+
+    def __contains__(self, name: str) -> bool:
+        try:
+            normalize_proc_name(name)
+            return True
+        except KeyError:
+            return False
+
+    def spec(self, name: str) -> ProcedureSpec:
+        return SPECS[normalize_proc_name(name)]
+
+    def _engine(self, store, token: Tuple):
+        eng = self._engines.get(token)
+        if eng is None:
+            from repro.engines.grape import GrapeEngine
+            eng = GrapeEngine(store, n_frags=self.n_frags,
+                              use_kernels=self.use_kernels)
+            self._engines[token] = eng
+            while len(self._engines) > self.max_snapshots:
+                evicted, _ = self._engines.popitem(last=False)
+                self._results = {k: v for k, v in self._results.items()
+                                 if k[0] != evicted}
+        else:
+            self._engines.move_to_end(token)     # LRU order on reuse
+        return eng
+
+    def run(self, store, name: str, args: Sequence[Any] = (),
+            kwargs: Optional[Dict[str, Any]] = None) -> np.ndarray:
+        """Execute (or reuse) one algorithm against one store snapshot;
+        returns the dense per-vertex result, length ``store.n_vertices``."""
+        spec = self.spec(name)
+        canon = spec.canonical_args(args, kwargs)
+        token = snapshot_token(store)
+        key = (token, spec.name, canon)
+        cached = self._results.get(key)
+        if cached is not None:
+            self.stats.hits += 1
+            if token in self._engines:
+                self._engines.move_to_end(token)   # keep hot tokens alive
+            return cached
+        self.stats.misses += 1
+        engine = self._engine(store, token)
+        result = np.asarray(spec.runner(engine, *canon))
+        result = result[:store.n_vertices]        # drop fragment padding
+        self._results[key] = result
+        return result
+
+    def clear(self, results_only: bool = True) -> None:
+        """Drop memoized fixpoints; with ``results_only=False`` also drop
+        the per-snapshot engines (full cold start, re-partitions)."""
+        self._results.clear()
+        if not results_only:
+            self._engines.clear()
+        self.stats = RegistryStats()

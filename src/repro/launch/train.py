@@ -3,7 +3,7 @@
 ``python -m repro.launch.train --arch gemma-7b --preset smoke --steps 200``
 
 Production behaviours implemented here (validated at laptop scale, designed
-for 1000+ nodes — see DESIGN.md §6):
+for 1000+ nodes — see DESIGN.md §8):
 
 - checkpoint/restart: resumes from the latest complete checkpoint; SIGTERM
   triggers a final save (preemption handling);

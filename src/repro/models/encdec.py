@@ -1,7 +1,7 @@
 """Whisper-style encoder-decoder backbone (audio frontend stubbed).
 
 Per the assignment the conv frontend is a stub: ``input_specs`` provides
-precomputed frame embeddings ``[B, S_enc, d]``. Cell convention (DESIGN.md §4):
+precomputed frame embeddings ``[B, S_enc, d]``. Cell convention (DESIGN.md §5):
 train_4k → enc 4096 / dec 1024; prefill_32k → enc 32768 / dec 8192;
 decode_32k → one token vs self-cache 8192 + cross-cache 32768.
 """

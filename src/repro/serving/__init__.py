@@ -1,8 +1,10 @@
 """Serving layer: parameterized plan cache + concurrent query front door.
 
-Sits above both query engines (DESIGN.md §5): templates compile once, bind
-per request, and same-template traffic admits in vectorized batches routed
-to Gaia (OLAP-shaped) or HiActor (indexed point lookups).
+Sits above the query engines and the analytics bridge (DESIGN.md §6):
+templates compile once, bind per request, and same-template traffic admits
+in vectorized batches routed to Gaia (OLAP-shaped), HiActor (indexed point
+lookups) or the GRAPE procedure executor (hybrid ``CALL algo.*`` plans,
+DESIGN.md §7).
 """
 
 from repro.serving.plan_cache import (CacheStats, PlanCache,  # noqa: F401

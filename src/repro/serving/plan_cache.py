@@ -1,4 +1,4 @@
-"""Parameterized-plan cache for the serving layer (DESIGN.md §5).
+"""Parameterized-plan cache for the serving layer (DESIGN.md §6).
 
 The paper's 2.4× LDBC-interactive throughput comes from the serving path:
 queries are compiled *once* into stored plans and executed concurrently —

@@ -1,5 +1,5 @@
-"""QueryService — the multi-tenant front door over both query engines
-(DESIGN.md §5).
+"""QueryService — the multi-tenant front door over the query engines and
+the analytics bridge (DESIGN.md §6).
 
 A request is ``(template, params)``: a parameterized query template plus the
 values to bind. The service
@@ -9,10 +9,12 @@ values to bind. The service
 2. groups pending requests by template and admits them in vectorized batches
    — HiActor's homogeneous-batch trick extended across tenants: requests
    from *different* clients that share a template ride one batch,
-3. dispatches each template by shape: plans anchored on an indexed
-   ``$param`` equality with a small GLogue-lite cost estimate go to
-   HiActor's batched OLTP path; everything else executes on Gaia's
-   dataflow with the cached plan re-bound per request,
+3. dispatches each template by shape: hybrid ``CALL algo.*`` plans route to
+   the GRAPE-backed procedure executor (memoized fixpoints, DESIGN.md §7);
+   plans anchored on an indexed ``$param`` equality with a small
+   GLogue-lite cost estimate go to HiActor's batched OLTP path; everything
+   else executes on Gaia's dataflow with the cached plan re-bound per
+   request,
 4. reports per-query latency and aggregate QPS per flush.
 """
 
@@ -26,8 +28,10 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.core.ir.cbo import Catalog, is_point_lookup
+from repro.core.ir.dag import ProcedureCall
 from repro.engines.gaia import GaiaEngine
 from repro.engines.hiactor import HiActorEngine
+from repro.engines.procedures import ProcedureRegistry
 from repro.serving.plan_cache import PlanCache, plan_key
 from repro.storage.lpg import PropertyGraph
 
@@ -81,15 +85,21 @@ class QueryService:
     def __init__(self, store, *, catalog: Optional[Catalog] = None,
                  cache_capacity: int = 128, batch_size: int = 64,
                  row_threshold: float = 2e4,
-                 rbo: bool = True, cbo: bool = True):
+                 rbo: bool = True, cbo: bool = True,
+                 procedures: Optional[ProcedureRegistry] = None):
         self.cache = PlanCache(cache_capacity, on_evict=self._on_plan_evicted)
         self.batch_size = max(1, int(batch_size))
         self.row_threshold = row_threshold
         pg = store if isinstance(store, PropertyGraph) \
             else PropertyGraph(store)     # one facade: engines share the
+        # CALL algo.* registry; pass a shared one to reuse memoized
+        # fixpoints across services pinned at different MVCC snapshots
+        self.procedures = procedures or ProcedureRegistry()
         self.gaia = GaiaEngine(pg, catalog=catalog, rbo=rbo, cbo=cbo,
-                               plan_cache=self.cache)   # adjacency caches
-        self.hiactor = HiActorEngine(pg, catalog=self.gaia.catalog)
+                               plan_cache=self.cache,   # adjacency caches
+                               procedures=self.procedures)
+        self.hiactor = HiActorEngine(pg, catalog=self.gaia.catalog,
+                                     procedures=self.procedures)
         self._queue: List[Request] = []
         self._proc_names: Dict[Tuple, str] = {}
         self._proc_seq = 0                # monotonic: names never reused
@@ -161,7 +171,11 @@ class QueryService:
         responses: List[Optional[Response]] = [None] * len(pending)
         route_counts: Dict[str, int] = {}
         for key, items, plan, cached in admitted:
-            if is_point_lookup(plan, self.gaia.catalog, self.row_threshold):
+            if any(isinstance(op, ProcedureCall) for op in plan.ops):
+                # hybrid analytics-in-the-loop plan: GRAPE computes (or
+                # reuses) the fixpoint, Gaia's dataflow runs the rest
+                route = "grape"
+            elif is_point_lookup(plan, self.gaia.catalog, self.row_threshold):
                 route = "hiactor"
                 pname = self._proc_names.get(key)
                 if pname is None:
@@ -184,7 +198,10 @@ class QueryService:
                     for (pos, _), out in zip(chunk, outs):
                         responses[pos] = Response(out, route, cached, c_us)
             else:
-                # OLAP plans execute per request; batch_size plays no role
+                # OLAP and hybrid CALL plans execute per request
+                # (batch_size plays no role; for CALL plans the procedure
+                # memo makes every request after the first reuse the
+                # converged fixpoint)
                 for pos, req in items:
                     c0 = time.perf_counter()
                     out = self.gaia.execute_plan(plan.bind(req.params))

@@ -16,6 +16,7 @@ baseline used by Exp-1c (edge-scan throughput: CSR ≥ GART ≫ linked list).
 
 from __future__ import annotations
 
+import itertools
 import threading
 from typing import Dict, Optional, Tuple
 
@@ -30,9 +31,11 @@ class GARTSnapshot:
 
     def __init__(self, base: CSRStore, d_src, d_dst, d_labels,
                  d_props: Dict[str, np.ndarray], version: int,
-                 vertex_props, vertex_labels, n_vertices: int):
+                 vertex_props, vertex_labels, n_vertices: int,
+                 store_uid: Optional[int] = None):
         self._base = base
         self.version = version
+        self._store_uid = store_uid
         self._n = n_vertices
         self._d_src, self._d_dst = d_src, d_dst
         self._d_labels = d_labels
@@ -54,6 +57,18 @@ class GARTSnapshot:
     @property
     def n_edges(self) -> int:
         return self._base.n_edges + len(self._d_src)
+
+    @property
+    def snapshot_token(self) -> Tuple[str, int, int]:
+        """Identity of this store *state* for analytics memoization
+        (DESIGN.md §7): two snapshots of one GARTStore at one version are
+        interchangeable read views, so procedure results computed at
+        version v are shared by every reader pinned there. The uid is a
+        process-wide monotonic counter (never an ``id()``, which the
+        allocator could recycle into a memo collision across stores)."""
+        uid = self._store_uid if self._store_uid is not None \
+            else id(self)                  # detached snapshot: self-identity
+        return ("gart", uid, self.version)
 
     # merged view is materialized lazily and cached (the paper's snapshots
     # are similarly materialized CSR-ish structures)
@@ -111,6 +126,8 @@ class GARTSnapshot:
 class GARTStore:
     """Mutable MVCC store: thread-safe appends, versioned snapshots."""
 
+    _uids = itertools.count()       # process-wide, never-recycled store ids
+
     def __init__(self, n_vertices: int,
                  src: Optional[np.ndarray] = None,
                  dst: Optional[np.ndarray] = None,
@@ -138,6 +155,7 @@ class GARTStore:
         self._d_len = 0
         self.write_version = 0
         self._lock = threading.Lock()
+        self._store_uid = next(GARTStore._uids)
 
     def traits(self) -> Traits:
         return (Traits.TOPOLOGY_ARRAY | Traits.DEGREE | Traits.MUTABLE |
@@ -214,7 +232,8 @@ class GARTStore:
                 self._d_src[:self._d_len][mask].copy(),
                 self._d_dst[:self._d_len][mask].copy(),
                 self._d_lab[:self._d_len][mask].copy(),
-                props, v, dict(self._vprops), self._vlabels, self._n)
+                props, v, dict(self._vprops), self._vlabels, self._n,
+                store_uid=self._store_uid)
 
     def compact(self):
         """Fold the delta into a new base CSR (background compaction)."""

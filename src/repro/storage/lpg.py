@@ -27,6 +27,9 @@ class PropertyGraph:
         # whole multi-label adjacency per frontier
         self._label_csr: Dict[Tuple[int, str],
                               Tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
+        # analytics results materialized by CALL algo.* (DESIGN.md §7);
+        # overlay the store's own columns, last-writer-wins per name
+        self._temp_vprops: Dict[str, np.ndarray] = {}
 
     # --------------------------------------------------------------- lookups
     @property
@@ -34,7 +37,23 @@ class PropertyGraph:
         return self.grin.n_vertices
 
     def vprop(self, name: str) -> np.ndarray:
+        temp = self._temp_vprops.get(name)
+        if temp is not None:
+            return temp
         return self.grin.vertex_prop(name)
+
+    # ---------------------------------------------------- temp vertex props
+    def set_temp_vprop(self, name: str, values: np.ndarray) -> None:
+        """Install a computed per-vertex column (a procedure result) that
+        shadows any same-named storage property until dropped/replaced."""
+        values = np.asarray(values)
+        if len(values) != self.n_vertices:
+            raise ValueError(f"temp vprop {name!r} has {len(values)} rows, "
+                             f"graph has {self.n_vertices} vertices")
+        self._temp_vprops[name] = values
+
+    def drop_temp_vprop(self, name: str) -> None:
+        self._temp_vprops.pop(name, None)
 
     def eprop(self, name: str) -> np.ndarray:
         return self.grin.edge_prop(name)

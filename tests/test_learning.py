@@ -84,12 +84,16 @@ class TestPipeline:
 
 class TestTraining:
     def test_sage_loss_decreases(self, featured_graph):
+        # fixed PRNG seed end-to-end (model init + per-step sampling) makes
+        # the run reproducible; lr=0.1 for 60 steps converges well past the
+        # 30%-drop bar (observed final/first ≈ 0.52), so the threshold stays
+        # meaningful without being flaky
         s = GraphSampler(featured_graph, label_prop="label")
         tr = SageTrainer(s, hidden=32, n_classes=2, fanouts=[5, 3],
-                         batch_size=128, lr=0.05)
+                         batch_size=128, lr=0.1, seed=0)
         first = tr.train_on(tr.sample(0))
-        losses = [tr.train_on(tr.sample(i)) for i in range(1, 40)]
-        assert np.mean(losses[-5:]) < first * 0.8
+        losses = [tr.train_on(tr.sample(i)) for i in range(1, 60)]
+        assert np.mean(losses[-5:]) < first * 0.7
 
     def test_ncn_scores_finite(self, featured_graph):
         s = GraphSampler(featured_graph, label_prop="label")

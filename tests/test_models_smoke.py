@@ -130,7 +130,7 @@ def test_param_counts_in_range():
 
 
 def test_long_context_applicability():
-    """long_500k runs only for sub-quadratic archs (DESIGN.md §4)."""
+    """long_500k runs only for sub-quadratic archs (DESIGN.md §5)."""
     runs = {a for a in ARCHS
             if cell_applicable(get_config(a), SHAPES["long_500k"])[0]}
     assert runs == {"mixtral-8x22b", "zamba2-1.2b", "rwkv6-7b"}

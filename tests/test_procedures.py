@@ -1,0 +1,288 @@
+"""Hybrid query↔analytics bridge: CALL algo.* parsing, registry
+memoization, serving-layer routing, and GART snapshot pinning."""
+
+import numpy as np
+import pytest
+
+from repro.core.ir.dag import ProcedureCall, Const, Param, Scan, Select
+from repro.core.ir.parser import parse_cypher, parse_gremlin
+from repro.engines.gaia import GaiaEngine
+from repro.engines.grape.algorithms import pagerank_numpy
+from repro.engines.procedures import (ProcedureRegistry, SPECS,
+                                      normalize_proc_name, snapshot_token)
+from repro.serving import QueryService, plan_key
+from repro.storage.gart import GARTStore
+from repro.storage.generators import E_KNOWS, snb_store
+from repro.storage.lpg import PropertyGraph
+
+HYBRID = ("CALL algo.pagerank($d) YIELD v, rank "
+          "MATCH (v:Person) WHERE rank > $t "
+          "RETURN v AS v, rank AS r ORDER BY r DESC LIMIT 10")
+HYBRID_GREMLIN = ("g.call('algo.pagerank', $d).hasLabel('Person')"
+                  ".where('rank > $t').order_by('rank', 'desc')"
+                  ".limit(10).values('rank')")
+
+
+@pytest.fixture(scope="module")
+def store():
+    return snb_store(n_persons=600, n_items=300, n_posts=80, seed=7)
+
+
+@pytest.fixture(scope="module")
+def gart(store):
+    indptr, indices = store.adjacency()
+    src = np.repeat(np.arange(store.n_vertices), np.diff(indptr))
+    return GARTStore(store.n_vertices, src, indices,
+                     vertex_props=store.subgraph_props(),
+                     vertex_labels=store.vertex_labels(),
+                     edge_labels=store.edge_labels(),
+                     edge_props={"date": store.edge_prop("date"),
+                                 "rating": store.edge_prop("rating")})
+
+
+class TestParser:
+    def test_cypher_call_round_trip(self):
+        plan = parse_cypher(HYBRID)
+        call = plan.ops[0]
+        assert isinstance(call, ProcedureCall)
+        assert call.proc == "pagerank"
+        assert call.args == (Param("d"),)
+        assert call.yields == ("v", "rank")
+        # the yielded alias is bound: MATCH (v:Person) filters, not rescans
+        assert not any(isinstance(op, Scan) for op in plan.ops)
+        assert any(isinstance(op, Select) for op in plan.ops)
+
+    def test_cypher_call_literal_args_and_default_yield(self):
+        plan = parse_cypher("CALL algo.sssp(3) RETURN dist AS dist")
+        call = plan.ops[0]
+        assert call.proc == "sssp"
+        assert call.args == (Const(3),)
+        assert call.yields == ("v", "dist")   # registry default
+
+    def test_cypher_call_namespace_optional(self):
+        assert parse_cypher("CALL wcc() RETURN comp AS c").ops[0].proc == "wcc"
+
+    def test_cypher_unknown_procedure_raises(self):
+        with pytest.raises(KeyError):
+            parse_cypher("CALL algo.nope() RETURN x AS x")
+
+    def test_gremlin_call_round_trip(self):
+        plan = parse_gremlin(HYBRID_GREMLIN)
+        call = plan.ops[0]
+        assert isinstance(call, ProcedureCall)
+        assert call.proc == "pagerank"
+        assert call.args == (Param("d"),)
+        assert call.yields == ("v0", "rank")
+
+    def test_gremlin_plain_v_still_parses(self):
+        plan = parse_gremlin("g.V().hasLabel('Person').count()")
+        assert isinstance(plan.ops[0], Scan)
+
+    def test_gremlin_whitespace_between_steps_ok(self):
+        plan = parse_gremlin("g.V() .hasLabel('Person')\n  .count()")
+        assert isinstance(plan.ops[0], Scan)
+
+    def test_gremlin_unparsed_junk_rejected(self):
+        with pytest.raises(SyntaxError, match="frobnicate"):
+            parse_gremlin("g.V().hasLabel('Person')frobnicate.count()")
+
+    def test_cycle_pattern_joins_bound_alias(self, store):
+        """A tail node reusing a bound alias (here: the CALL-yielded v)
+        must enforce join equality, not rebind the column; snb has no
+        self-KNOWS edges, so the cycle query returns 0 rows."""
+        eng = GaiaEngine(store)
+        out = eng.execute("CALL algo.pagerank(0.85) YIELD v, rank "
+                          "MATCH (v:Person)-[:KNOWS]->(v) "
+                          "RETURN v AS v, rank AS r LIMIT 5")
+        assert len(out["v"]) == 0
+        # a genuine 2-cycle closes: KNOWS is symmetric in snb_store
+        out = eng.execute("MATCH (a:Person)-[:KNOWS]->(b:Person)"
+                          "-[:KNOWS]->(a) WITH a, COUNT(b) AS k "
+                          "RETURN k AS k")
+        assert len(out["k"]) > 0
+
+    def test_param_names_include_call_args(self):
+        assert parse_cypher(HYBRID).param_names() == {"d", "t"}
+        assert parse_gremlin(HYBRID_GREMLIN).param_names() == {"d", "t"}
+
+    def test_bind_substitutes_call_args(self):
+        plan = parse_cypher(HYBRID)
+        bound = plan.bind({"d": 0.9, "t": 0.001})
+        assert bound.param_names() == set()
+        assert bound.ops[0].args == (Const(0.9),)
+
+
+class TestRegistry:
+    def test_canonical_args_fill_defaults(self):
+        spec = SPECS["pagerank"]
+        assert spec.canonical_args(()) == (0.85,)
+        assert spec.canonical_args((0.9,)) == (0.9,)
+        assert spec.canonical_args((), {"damping": 0.7}) == (0.7,)
+        with pytest.raises(TypeError):
+            spec.canonical_args((0.9, 1))
+
+    def test_normalize(self):
+        assert normalize_proc_name("algo.bfs") == "bfs"
+        assert normalize_proc_name("bfs") == "bfs"
+        with pytest.raises(KeyError):
+            normalize_proc_name("algo.unknown")
+
+    def test_memoizes_per_args(self, store):
+        reg = ProcedureRegistry()
+        a = reg.run(store, "pagerank", (0.85,))
+        b = reg.run(store, "pagerank", (0.85,))
+        c = reg.run(store, "pagerank", (0.9,))
+        assert a is b                      # memo hit returns the same array
+        assert not np.allclose(a, c)
+        assert reg.stats.hits == 1 and reg.stats.misses == 2
+
+    def test_lru_bounds_snapshots(self, gart):
+        """A streaming store minting versions must not grow the registry
+        without bound: evicting a token drops engine AND results."""
+        reg = ProcedureRegistry(max_snapshots=2)
+        snaps = []
+        for i in range(3):
+            gart.add_edges([i], [i + 1], label=E_KNOWS)
+            snaps.append(gart.snapshot())
+        for s in snaps:
+            reg.run(s, "degree_centrality")
+        assert len(reg._engines) == 2
+        assert len(reg._results) == 2        # oldest token's results gone
+        reg.run(snaps[0], "degree_centrality")   # recompute after eviction
+        assert reg.stats.misses == 4 and reg.stats.hits == 0
+
+    def test_result_matches_numpy_oracle(self, store):
+        reg = ProcedureRegistry()
+        got = reg.run(store, "pagerank", (0.85,))
+        indptr, indices = store.adjacency()
+        want = pagerank_numpy(indptr, indices, damping=0.85)
+        assert len(got) == store.n_vertices
+        np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+class TestTempProps:
+    def test_call_installs_temp_vprop(self, store):
+        pg = PropertyGraph(store)
+        eng = GaiaEngine(pg)
+        eng.execute("CALL algo.pagerank(0.85) YIELD v, rank "
+                    "RETURN rank AS r LIMIT 1")
+        assert len(pg.vprop("rank")) == store.n_vertices
+        # prop refs through the facade see the computed score
+        out = eng.execute("MATCH (x:Person) WHERE x.rank > 0 "
+                          "RETURN x.rank AS r")
+        assert len(out["r"]) > 0
+        pg.drop_temp_vprop("rank")
+        with pytest.raises(KeyError):
+            pg.vprop("rank")
+
+
+class TestHybridExecution:
+    def test_cypher_end_to_end(self, store):
+        svc = QueryService(store)
+        resps, stats = svc.serve([(HYBRID, {"d": 0.85, "t": 0.0005})])
+        assert resps[0].engine == "grape"
+        assert stats.route_counts == {"grape": 1}
+        r = resps[0].result["r"]
+        assert len(r) <= 10
+        assert np.all(np.diff(r) <= 0)          # ORDER BY rank DESC
+        assert np.all(r > 0.0005)               # WHERE over the score
+        # yielded vertices respect the MATCH label filter
+        labs = store.vertex_labels()[resps[0].result["v"]]
+        assert np.all(labs == 0)
+
+    def test_gremlin_matches_cypher(self, store):
+        svc = QueryService(store)
+        params = {"d": 0.85, "t": 0.0005}
+        rc, _ = svc.serve([(HYBRID, params)])
+        rg, _ = svc.serve([(HYBRID_GREMLIN, params, "gremlin")])
+        np.testing.assert_allclose(rg[0].result["rank"],
+                                   rc[0].result["r"], rtol=1e-6)
+
+    def test_plan_continues_with_traversal(self, store):
+        """CALL output is a real row table: Expand works over it."""
+        svc = QueryService(store)
+        q = ("CALL algo.pagerank(0.85) YIELD v, rank "
+             "MATCH (v:Person)-[:KNOWS]->(f:Person) WHERE rank > 0.001 "
+             "WITH f, COUNT(v) AS fans RETURN fans AS fans "
+             "ORDER BY fans DESC LIMIT 5")
+        resps, _ = svc.serve([(q, {})])
+        assert len(resps[0].result["fans"]) <= 5
+
+    def test_plan_cache_hit_on_rebound_param(self, store):
+        """Same template, different $d binding: one compile, two fixpoints."""
+        svc = QueryService(store)
+        svc.serve([(HYBRID, {"d": 0.85, "t": 0.001})])
+        misses0 = svc.cache.stats.misses
+        resps, _ = svc.serve([(HYBRID, {"d": 0.9, "t": 0.001})])
+        assert resps[0].cached
+        assert svc.cache.stats.misses == misses0
+        assert svc.procedures.stats.misses == 2   # new damping → new fixpoint
+
+    def test_plan_cache_miss_on_differing_literal_hyperparams(self, store):
+        """Hyperparameters spelled as literals are part of the template —
+        and therefore of the cache key."""
+        a = plan_key("CALL algo.pagerank(0.85) YIELD v, rank RETURN rank AS r")
+        b = plan_key("CALL algo.pagerank(0.9) YIELD v, rank RETURN rank AS r")
+        assert a != b
+        svc = QueryService(store)
+        svc.serve([("CALL algo.pagerank(0.85) YIELD v, rank "
+                    "RETURN rank AS r LIMIT 1", {})])
+        svc.serve([("CALL algo.pagerank(0.9) YIELD v, rank "
+                    "RETURN rank AS r LIMIT 1", {})])
+        assert svc.cache.stats.misses == 2
+
+    def test_fixpoint_memo_reused_across_requests(self, store):
+        svc = QueryService(store)
+        reqs = [(HYBRID, {"d": 0.85, "t": 0.001})] * 4
+        svc.serve(reqs)
+        assert svc.procedures.stats.misses == 1
+        assert svc.procedures.stats.hits == 3
+
+    def test_point_lookups_still_route_to_hiactor(self, store):
+        svc = QueryService(store)
+        point = ("MATCH (p:Person {credits: $c})-[:BUY]->(i:Item) "
+                 "WITH p, COUNT(i) AS cnt RETURN cnt AS cnt")
+        resps, stats = svc.serve([(HYBRID, {"d": 0.85, "t": 0.001}),
+                                  (point, {"c": 3})])
+        assert stats.route_counts == {"grape": 1, "hiactor": 1}
+
+    def test_unbound_call_param_rejected(self, store):
+        svc = QueryService(store)
+        svc.submit(HYBRID, {"t": 0.001})          # $d missing
+        with pytest.raises(KeyError):
+            svc.flush()
+
+
+class TestSnapshotPinning:
+    def test_tokens_stable_per_version(self, gart):
+        v = gart.write_version
+        assert snapshot_token(gart.snapshot(v)) == \
+            snapshot_token(gart.snapshot(v))
+        gart.add_edges([0], [1], label=E_KNOWS)
+        assert snapshot_token(gart.snapshot()) != \
+            snapshot_token(gart.snapshot(v))
+
+    def test_pinned_hybrid_query(self, gart):
+        """A query pinned at version v sees analytics computed at v, and
+        re-reads at v reuse the memoized fixpoint."""
+        reg = ProcedureRegistry()
+        q = ("CALL algo.degree_centrality() YIELD v, centrality "
+             "MATCH (v:Person) RETURN centrality AS c "
+             "ORDER BY c DESC LIMIT 5")
+        v1 = gart.write_version
+        svc1 = QueryService(gart.snapshot(v1), procedures=reg)
+        r1, _ = svc1.serve([(q, {})])
+
+        hub = int(np.argmax(np.diff(gart.snapshot(v1).adjacency()[0])))
+        gart.add_edges(np.full(200, hub % 10), np.arange(200) % 50,
+                       label=E_KNOWS)
+        svc2 = QueryService(gart.snapshot(), procedures=reg)
+        r2, _ = svc2.serve([(q, {})])
+        assert not np.allclose(r1[0].result["c"], r2[0].result["c"])
+        assert reg.stats.misses == 2
+
+        # pinned back at v1 through a *new* snapshot object: memo hit
+        svc1b = QueryService(gart.snapshot(v1), procedures=reg)
+        r3, _ = svc1b.serve([(q, {})])
+        np.testing.assert_allclose(r3[0].result["c"], r1[0].result["c"])
+        assert reg.stats.hits == 1
