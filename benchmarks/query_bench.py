@@ -9,6 +9,9 @@ Table 2).
 - Serving: plan-cache compile amortization (cold parse+RBO+CBO vs cache
   hit) and QueryService admission-batch QPS sweep (the paper's headline
   2.4x LDBC-interactive throughput lever)
+- Traversal (exp4): batched 2-hop EXPAND+WHERE on the fragment frontier
+  path vs the per-query interpreter, batch 1/8/64 (DESIGN.md §9;
+  acceptance bar ≥ 5x at batch 64)
 """
 
 from __future__ import annotations
@@ -157,3 +160,59 @@ def run():
            f"qps={72 / (us / 1e6):.0f};routes="
            + "/".join(f"{k}:{v}" for k, v in sorted(
                  stats.route_counts.items())))
+
+    run_traversal()
+
+
+def run_traversal():
+    """exp4: vectorized distributed traversal (DESIGN.md §9) — a batched
+    2-hop EXPAND+WHERE template on the fragment frontier path vs the
+    per-query interpreter. The fragment path executes the whole batch as
+    ONE jitted device program over [B, N] path-count matrices; the
+    interpreter re-binds and runs per request (the pre-PR-3 gaia route).
+
+    Dedicated (smaller) store: the zipf KNOWS² expansion materializes
+    millions of interpreter rows per query — exactly the regime the dense
+    path wins in, and the reason the interpreter side times one repeat."""
+    import numpy as np
+
+    from repro.engines.frontier import FragmentFrontierExecutor
+
+    store = snb_store(n_persons=1200, n_items=600, n_posts=128, seed=2)
+    Q4 = ("MATCH (a:Person)-[:KNOWS]->(b:Person)-[:KNOWS]->(c:Person) "
+          "WHERE a.region == $r AND c.credits > $t RETURN c AS c")
+    gaia = GaiaEngine(store)
+    plan = gaia.compile(Q4)
+    rng = np.random.default_rng(13)
+
+    def params_for(batch):
+        return [{"r": int(r), "t": 500} for r in rng.integers(0, 8, batch)]
+
+    speedups = {}
+    for batch in (1, 8, 64):
+        params = params_for(batch)
+        us_interp = timeit(
+            lambda: [gaia.execute_plan(plan.bind(p)) for p in params],
+            repeat=1, warmup=0)          # seconds per pass — once is plenty
+        record(f"exp4_traversal_interp_batch{batch}", us_interp,
+               f"qps={batch / (us_interp / 1e6):.0f}")
+        ex = FragmentFrontierExecutor(gaia.pg, n_frags=1)
+        ex.execute(plan, params)             # warm: build slabs + jit
+        us_frag = timeit(lambda: ex.execute(plan, params), repeat=3)
+        speedups[batch] = us_interp / us_frag
+        record(f"exp4_traversal_fragment_batch{batch}", us_frag,
+               f"qps={batch / (us_frag / 1e6):.0f};"
+               f"speedup={us_interp / us_frag:.1f}x")
+
+    # fragment-count sweep at the big batch: the [F, ...] stacking that
+    # shard_maps over the data axis on a real mesh
+    params = params_for(64)
+    for frags in (2, 4):
+        ex = FragmentFrontierExecutor(gaia.pg, n_frags=frags)
+        ex.execute(plan, params)
+        us = timeit(lambda: ex.execute(plan, params), repeat=3)
+        record(f"exp4_traversal_fragment64_frags{frags}", us,
+               f"qps={64 / (us / 1e6):.0f}")
+    record("exp4_traversal_acceptance", 0,
+           f"batch64_speedup={speedups[64]:.1f}x;bar=5x;"
+           f"pass={speedups[64] >= 5.0}")

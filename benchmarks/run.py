@@ -14,8 +14,8 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
-                    help="comma list: storage,query,hybrid,analytics,"
-                         "learning,kernels")
+                    help="comma list: storage,query,traversal,hybrid,"
+                         "analytics,learning,kernels")
     args = ap.parse_args()
     wanted = set(args.only.split(",")) if args.only != "all" else {
         "storage", "query", "hybrid", "analytics", "learning", "kernels"}
@@ -30,6 +30,9 @@ def main() -> None:
     if "query" in wanted:
         from benchmarks import query_bench
         sections.append(("query", query_bench.run))
+    elif "traversal" in wanted:      # exp4 standalone (query runs it too)
+        from benchmarks import query_bench
+        sections.append(("traversal", query_bench.run_traversal))
     if "hybrid" in wanted:
         from benchmarks import hybrid_bench
         sections.append(("hybrid", hybrid_bench.run))

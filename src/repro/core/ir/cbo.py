@@ -143,6 +143,32 @@ def is_point_lookup(plan: LogicalPlan, catalog: Catalog,
     return plan_cost(plan, catalog) <= row_threshold
 
 
+def should_use_fragment_path(plan: LogicalPlan, catalog: Catalog,
+                             min_cost: float = 256.0,
+                             row_threshold: float = 2e4) -> bool:
+    """Dispatch predicate for the fragment frontier path (DESIGN.md §9):
+    OLAP plans whose match prefix lowers to dense frontier stages AND whose
+    GLogue-lite estimate says the interpreter would materialize enough
+    intermediate rows (≥ ``min_cost``) to pay for [B, N] dense matrices.
+
+    Point lookups are excluded — HiActor's indexed batch wins when the
+    anchor resolves to a handful of rows — and plans whose prefix has no
+    Expand gain nothing from a dense hop. ``row_threshold`` must be the
+    same value the caller's HiActor dispatch uses, so the two predicates
+    partition plans consistently. Anything that does not lower
+    (cross-alias predicates, edge-alias reuse, ``$params`` in edge
+    predicates, a non-Scan source…) falls back to the interpreter, which
+    stays the semantic oracle."""
+    from repro.core.ir.codegen import lower_to_frontier
+
+    if is_point_lookup(plan, catalog, row_threshold):
+        return False
+    program = lower_to_frontier(plan)
+    if program is None or not program.hops:
+        return False
+    return plan_cost(plan, catalog) >= min_cost
+
+
 def plan_cost(plan: LogicalPlan, catalog: Catalog) -> float:
     """Estimated total intermediate-result size (the GLogue cost: sum of
     subgraph frequencies along the execution plan)."""

@@ -6,7 +6,14 @@
 - **HiActor** (OLTP): the plan becomes a *stored procedure* parameterized by
   query arguments; many concurrent queries are batched into one table with
   a ``__qid__`` column and executed in a single pass (TPU adaptation of
-  actor-level concurrency — see DESIGN.md §2).
+  actor-level concurrency — see DESIGN.md §2);
+- **fragment frontier** (OLAP, distributed): ``lower_to_frontier`` compiles
+  the plan's match prefix (Scan → Expand* → head-only WHEREs) into dense
+  frontier stages over the GRAPE fragment substrate — multi-source
+  frontiers as ``[B, N]`` path-count matrices so a whole admission batch
+  executes as one device program; ``finish_frontier`` hands the
+  materialized (much smaller) row table back to the interpreter for the
+  relational tail, which stays the semantic oracle (DESIGN.md §9).
 """
 
 from __future__ import annotations
@@ -16,10 +23,10 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.ir.dag import (Agg, Const, Expand, GetVertex, GroupCount,
-                               Limit, LogicalPlan, OrderBy, Param, Pred,
-                               ProcedureCall, Project, Scan, Select, With,
-                               eval_expr)
+from repro.core.ir.dag import (Agg, BinExpr, Const, Expand, GetVertex,
+                               GroupCount, Limit, LogicalPlan, OrderBy,
+                               Param, Pred, ProcedureCall, Project, Scan,
+                               Select, With, bind_expr, eval_expr)
 
 
 @dataclasses.dataclass
@@ -260,3 +267,236 @@ def _bind_params(op, params: Optional[Dict[str, Any]]):
         return op
     from repro.core.ir.dag import bind_op
     return bind_op(op, params)
+
+
+# ===================================================================== #
+# Frontier lowering — the fragment-substrate compiler (DESIGN.md §9)    #
+# ===================================================================== #
+
+@dataclasses.dataclass(frozen=True)
+class FrontierHop:
+    """One EXPAND stage lowered to a dense hop: multiply the [B, N]
+    path-count matrix by the (edge_label, direction) adjacency, then mask
+    by the head vertex's label/predicate."""
+
+    edge_label: Optional[int]
+    direction: str                       # out | in
+    edge_pred: Optional[Pred]            # refs the edge alias only, no $params
+    edge_alias: Optional[str]
+    vertex_alias: str
+    vertex_label: Optional[int]
+    vertex_pred: Optional[Pred]          # refs vertex_alias only ($params ok)
+
+    @property
+    def cache_key(self) -> Tuple:
+        """Identity of the hop's adjacency arrays (edge preds are baked
+        into the edge weights, so they are part of the key)."""
+        return (self.edge_label, self.direction, repr(self.edge_pred))
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontierProgram:
+    """A lowered match prefix plus the interpreter tail.
+
+    The prefix executes as dense frontier algebra: ``X₀[b, v] = 1`` for
+    every source vertex of query b, each hop is ``X ← (X·A_hop) ⊙ mask``,
+    and after the last hop ``X[b, v]`` counts the matched paths of query b
+    ending at v. ``finish_frontier`` re-materializes rows (vertex ids
+    repeated by path count) and delegates ``tail`` to ``execute_plan`` —
+    only the head alias survives, which ``lower_to_frontier`` guarantees is
+    the only prefix column the tail reads."""
+
+    source_alias: str
+    source_label: Optional[int]
+    source_pred: Optional[Pred]
+    hops: Tuple[FrontierHop, ...]
+    head: str                            # final vertex alias of the prefix
+    tail: Tuple[Any, ...]                # ops for the interpreter
+
+
+def _expr_has_param(e) -> bool:
+    if isinstance(e, Param):
+        return True
+    if isinstance(e, BinExpr):
+        return _expr_has_param(e.left) or _expr_has_param(e.right)
+    return False
+
+
+def _conjoin_preds(a: Optional[Pred], b: Optional[Pred]) -> Optional[Pred]:
+    if a is None:
+        return b
+    if b is None:
+        return a
+    return Pred(BinExpr("and", a.expr, b.expr))
+
+
+def _op_column_refs(op) -> set:
+    """Every row-table column an operator reads: expression refs plus the
+    string-typed column fields (Expand.src, GetVertex.edge, With.keys,
+    OrderBy.key) that ``Expr.refs()`` cannot see."""
+    refs: set = set()
+
+    def collect(e):
+        refs.update(e.refs() if hasattr(e, "refs") else set())
+        return e
+
+    from repro.core.ir.dag import map_op_exprs
+    map_op_exprs(op, collect)
+    if isinstance(op, Expand):
+        refs.add(op.src)
+    elif isinstance(op, GetVertex):
+        refs.add(op.edge)
+    elif isinstance(op, With):
+        refs.update(op.keys)
+    elif isinstance(op, OrderBy):
+        refs.add(op.key)
+    return refs
+
+
+def _normalize_count_aggs(op):
+    """``COUNT(expr)`` counts rows exactly like ``COUNT(*)`` (every row
+    binds every column here — there are no NULLs in the IR data model), so
+    drop the expression: a count over a consumed prefix alias then needs no
+    materialized column."""
+    if isinstance(op, With) and any(
+            a.fn == "count" and a.expr is not None for a in op.aggs):
+        return dataclasses.replace(op, aggs=tuple(
+            Agg("count", None, a.name)
+            if a.fn == "count" and a.expr is not None else a
+            for a in op.aggs))
+    return op
+
+
+def lower_to_frontier(plan: LogicalPlan) -> Optional[FrontierProgram]:
+    """Lower the longest supported match prefix to frontier stages, or
+    return None when the plan has no fragment-executable prefix.
+
+    Supported prefix ops: an anchoring Scan (predicate on its own alias,
+    ``$params`` allowed), fused Expands forming a linear chain (edge
+    predicates must reference only the edge alias and carry no ``$params``
+    — they bake into static edge weights; head predicates may carry
+    ``$params`` — they become per-query masks), and Selects on the current
+    head. Everything after the prefix runs on the interpreter over the
+    materialized table, so the tail must reference no prefix alias other
+    than the head, define no new Scan, and must exist whenever the prefix
+    binds more than one alias (the interpreter's implicit all-columns
+    result cannot be reproduced from a path-count matrix).
+
+    A tail that references the *anchor* instead of the head (e.g. the CBO
+    flipped the chain and the WITH groups by the original source) lowers
+    via the reversed chain: path-count multisets are direction-invariant,
+    so executing the flipped physical chain yields identical results with
+    the referenced alias as the head."""
+    prog = _lower_chain(list(plan.ops))
+    if prog is not None:
+        return prog
+    from repro.core.ir.cbo import _chain_segments, _reverse_chain
+    chain, tail = _chain_segments(plan)
+    if not chain or not isinstance(chain[0], Scan):
+        return None
+    rev = _reverse_chain(chain)
+    if rev is None:
+        return None
+    return _lower_chain(list(rev) + list(tail))
+
+
+def _lower_chain(ops: List) -> Optional[FrontierProgram]:
+    if not ops or not isinstance(ops[0], Scan):
+        return None
+    scan = ops[0]
+    if scan.pred is not None and not scan.pred.refs() <= {scan.alias}:
+        return None
+    source_pred = scan.pred
+    hops: List[FrontierHop] = []
+    head = scan.alias
+    i = 1
+    while i < len(ops):
+        op = ops[i]
+        if isinstance(op, Expand):
+            if (op.fused_vertex is None or op.src != head
+                    or op.direction not in ("out", "in")):
+                break
+            if op.pred is not None and (
+                    not op.pred.refs() <= {op.edge}
+                    or _expr_has_param(op.pred.expr)):
+                break
+            if op.vertex_pred is not None and \
+                    not op.vertex_pred.refs() <= {op.fused_vertex}:
+                break
+            hops.append(FrontierHop(
+                edge_label=op.edge_label, direction=op.direction,
+                edge_pred=op.pred, edge_alias=op.edge,
+                vertex_alias=op.fused_vertex, vertex_label=op.vertex_label,
+                vertex_pred=op.vertex_pred))
+            head = op.fused_vertex
+            i += 1
+        elif isinstance(op, Select) and op.pred.refs() <= {head}:
+            if hops:
+                h = hops[-1]
+                hops[-1] = dataclasses.replace(
+                    h, vertex_pred=_conjoin_preds(h.vertex_pred, op.pred))
+            else:
+                source_pred = _conjoin_preds(source_pred, op.pred)
+            i += 1
+        else:
+            break
+    tail = [_normalize_count_aggs(op) for op in ops[i:]]
+    prefix_aliases = {scan.alias}
+    for h in hops:
+        prefix_aliases.add(h.vertex_alias)
+        if h.edge_alias is not None:
+            prefix_aliases.add(h.edge_alias)
+    if not tail and len(prefix_aliases) > 1:
+        return None
+    for op in tail:
+        if isinstance(op, (Scan, ProcedureCall)):
+            return None
+        if _op_column_refs(op) & (prefix_aliases - {head}):
+            return None
+    return FrontierProgram(
+        source_alias=scan.alias, source_label=scan.label,
+        source_pred=source_pred, hops=tuple(hops), head=head, tail=tuple(tail))
+
+
+def frontier_vertex_mask(alias: str, label: Optional[int],
+                         pred: Optional[Pred], pg,
+                         params: Optional[Dict[str, Any]] = None
+                         ) -> np.ndarray:
+    """[N] bool mask of vertices passing a stage's label + predicate,
+    evaluated once over the whole vertex range (``$params`` bound from
+    ``params``)."""
+    lpg = pg if isinstance(pg, _LabelAwarePG) else _LabelAwarePG(pg)
+    n = lpg.n_vertices
+    mask = np.ones(n, bool)
+    if label is not None:
+        mask &= lpg.vlabels == label
+    if pred is not None:
+        expr = bind_expr(pred.expr, params) if params else pred.expr
+        ids = np.arange(n, dtype=np.int64)
+        mask &= np.asarray(eval_expr(expr, {alias: ids}, lpg, {}), bool)
+    return mask
+
+
+def finish_frontier(program: FrontierProgram, counts: np.ndarray, pg,
+                    params: Optional[Dict[str, Any]] = None,
+                    procedures=None) -> Dict[str, np.ndarray]:
+    """One query's path-count row [N] → result dict: re-materialize the
+    head column (vertex ids repeated by path count) and run the relational
+    tail through the interpreter.
+
+    Path counts ride float32 (the TPU-native dtype): integers are exact
+    only below 2²⁴, so a hub vertex that accumulates more paths than that
+    would silently round. Refuse loudly instead — the serving layer
+    catches OverflowError and re-runs the batch on the interpreter."""
+    counts = np.asarray(counts)
+    if counts.dtype == np.float32 and counts.max(initial=0.0) >= 2 ** 24:
+        raise OverflowError(
+            f"path counts exceed float32 integer range "
+            f"(max {counts.max():.3g} ≥ 2^24); fragment-path multiplicities "
+            f"would be inexact — fall back to the interpreter")
+    nz = np.nonzero(counts > 0.5)[0]
+    mult = np.round(counts[nz]).astype(np.int64)
+    ids = np.repeat(nz.astype(np.int64), mult)
+    table = Table({program.head: ids}, {})
+    return execute_plan(LogicalPlan(list(program.tail)), pg, params=params,
+                        table=table, procedures=procedures)

@@ -1,0 +1,267 @@
+"""Fragment-backed OLAP traversal — Gaia plans on the GRAPE substrate
+(DESIGN.md §9).
+
+``lower_to_frontier`` (core/ir/codegen.py) turns a plan's match prefix into
+dense frontier stages; this executor runs them on the partitioned fragment
+model the analytics engine already uses: the hop adjacency is sliced per
+(edge_label, direction) from the shared ``PropertyGraph`` caches,
+range-partitioned into F fragments of owned *destination* rows, and one
+admission batch of B queries executes as ONE jitted device program over a
+``[B, N]`` path-count matrix:
+
+    X₀[b, v] = 1 ⇔ v matches query b's anchor
+    X ← hop(X) ⊙ mask_hop          (one fused stage per EXPAND/WHERE)
+    X[b, v] = #matched paths of query b ending at v
+
+Fragment execution mirrors ``grape/engine.py``: each fragment computes its
+owned ``[B, v_per]`` slice, then the slices exchange across the ``data``
+mesh axis (``psum`` of disjoint ranges under ``shard_map``; a stacked
+reshape on one device). The hop itself is the batched pull-ELL Pallas
+kernel (``kernels/frontier.py``) on TPU and a jnp gather/scatter with the
+same padding contract (``PAD_SENTINEL``) on CPU. Python-level results come
+from ``finish_frontier``: vertex ids repeated by path count, relational
+tail on the interpreter — which therefore stays the semantic oracle the
+differential tests compare against (``tests/test_traversal.py``,
+``tests/test_property.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import weakref
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ir.codegen import (FrontierHop, FrontierProgram,
+                                   _LabelAwarePG, _expr_has_param,
+                                   finish_frontier, frontier_vertex_mask,
+                                   lower_to_frontier)
+from repro.core.ir.dag import LogicalPlan
+from repro.storage.lpg import PropertyGraph
+
+
+@dataclasses.dataclass
+class _HopArrays:
+    """Device-resident adjacency of one (edge_label, direction) hop.
+
+    Edge-list form (all paths): ``src/row/w [F, Ep]`` — global frontier-side
+    vertex, local owned destination row, weight (0 ⇒ padding).
+    Slab form (kernel path): per-fragment pull-ELL slabs from
+    ``csr_to_ell`` with local ``row_map``."""
+
+    src: jnp.ndarray
+    row: jnp.ndarray
+    w: jnp.ndarray
+    slabs: Optional[List[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]]]
+
+
+class FragmentFrontierExecutor:
+    """Executes lowered ``FrontierProgram``s over F stacked fragments."""
+
+    def __init__(self, pg: PropertyGraph, n_frags: int = 1, mesh=None,
+                 use_kernels: bool = False,
+                 interpret: Optional[bool] = None):
+        self.pg = pg if isinstance(pg, PropertyGraph) else PropertyGraph(pg)
+        self.mesh = mesh
+        if mesh is not None:
+            if "data" not in mesh.axis_names:
+                raise ValueError(
+                    "FragmentFrontierExecutor shard_maps fragments over "
+                    f"the 'data' mesh axis; mesh has {mesh.axis_names}")
+            n_frags = int(mesh.shape["data"])
+        self.n_frags = n_frags
+        n = self.pg.n_vertices
+        self.v_per = -(-n // n_frags)
+        # the Pallas slab path needs stacking-free per-fragment dispatch;
+        # under a mesh the hop runs the edge-list form inside shard_map
+        self.use_kernels = use_kernels and mesh is None
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        self.interpret = interpret
+        self._hops: Dict[Tuple, _HopArrays] = {}
+        self._runners: Dict[Tuple, Any] = {}
+        # static (param-free) [N] stage masks, keyed (label, pred repr) —
+        # rebuilt per execute only when the predicate carries $params
+        self._masks: Dict[Tuple, jnp.ndarray] = {}
+        self._programs: "weakref.WeakKeyDictionary[LogicalPlan, Any]" = \
+            weakref.WeakKeyDictionary()
+
+    # ------------------------------------------------------------ lowering
+    def program_for(self, plan: LogicalPlan) -> Optional[FrontierProgram]:
+        """Lowered program for a (cached) plan object, memoized per plan."""
+        try:
+            prog = self._programs.get(plan, False)
+        except TypeError:                 # unhashable plan, lower fresh
+            return lower_to_frontier(plan)
+        if prog is False:
+            prog = lower_to_frontier(plan)
+            self._programs[plan] = prog
+        return prog
+
+    # ------------------------------------------------------- hop adjacency
+    def _hop_arrays(self, hop: FrontierHop) -> _HopArrays:
+        key = hop.cache_key
+        cached = self._hops.get(key)
+        if cached is not None:
+            return cached
+        # pull orientation: slab/edge rows are the hop's *destination*
+        # vertices, entries the frontier-side sources — so the row range
+        # partition assigns each fragment the vertices it owns
+        opp = "in" if hop.direction == "out" else "out"
+        indptr, indices, emap = self.pg.sliced_csr(hop.edge_label, opp)
+        eids = emap if emap is not None \
+            else np.arange(len(indices), dtype=np.int64)
+        w = np.ones(len(indices), np.float32)
+        if hop.edge_pred is not None:
+            from repro.core.ir.dag import eval_expr
+            keep = eval_expr(hop.edge_pred.expr, {}, _LabelAwarePG(self.pg),
+                             {hop.edge_alias: eids})
+            w = np.asarray(keep, np.float32)
+
+        F, vp, n = self.n_frags, self.v_per, self.pg.n_vertices
+        deg = np.diff(indptr)
+        # tiny graphs can leave trailing fragments with no owned rows
+        bounds = [(min(f * vp, n), min((f + 1) * vp, n)) for f in range(F)]
+        ep = max(1, max(int(indptr[hi] - indptr[lo]) for lo, hi in bounds))
+        f_src = np.zeros((F, ep), np.int32)
+        f_row = np.zeros((F, ep), np.int32)
+        f_w = np.zeros((F, ep), np.float32)      # 0-weight ⇒ padding
+        slabs = [] if self.use_kernels else None
+        for f in range(F):
+            lo, hi = bounds[f]
+            e_lo, e_hi = int(indptr[lo]), int(indptr[hi])
+            ne = e_hi - e_lo
+            f_src[f, :ne] = indices[e_lo:e_hi]
+            f_row[f, :ne] = np.repeat(np.arange(hi - lo),
+                                      deg[lo:hi]).astype(np.int32)
+            f_w[f, :ne] = w[e_lo:e_hi]
+            if slabs is not None:
+                from repro.kernels.ops import csr_to_ell
+                local_ptr = (indptr[lo:hi + 1] - e_lo).astype(np.int64)
+                ell_idx, ell_w, row_map = csr_to_ell(
+                    local_ptr, indices[e_lo:e_hi].astype(np.int32),
+                    w[e_lo:e_hi])
+                slabs.append((jnp.asarray(ell_idx), jnp.asarray(ell_w),
+                              jnp.asarray(row_map)))
+        arrs = _HopArrays(src=jnp.asarray(f_src), row=jnp.asarray(f_row),
+                          w=jnp.asarray(f_w), slabs=slabs)
+        self._hops[key] = arrs
+        return arrs
+
+    # ---------------------------------------------------------- device hop
+    def _owned_edges(self, src, row, w, x):
+        """One fragment, edge-list form: [B, N] → owned [B, v_per]."""
+        vals = jnp.take(x, src, axis=1) * w              # [B, Ep]
+        return jnp.zeros((x.shape[0], self.v_per),
+                         jnp.float32).at[:, row].add(vals)
+
+    def _owned_slab(self, slab, x):
+        """One fragment, pull-ELL Pallas kernel (DESIGN.md §2 balance)."""
+        from repro.kernels.ops import frontier_step
+        ell_idx, ell_w, row_map = slab
+        return frontier_step(ell_idx, ell_w, x, row_map, self.v_per,
+                             interpret=self.interpret)
+
+    def _apply_hop(self, arrs: _HopArrays, x: jnp.ndarray) -> jnp.ndarray:
+        n = self.pg.n_vertices
+        if self.mesh is not None:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+
+            B = x.shape[0]
+            npad = self.n_frags * self.v_per
+            starts = jnp.arange(self.n_frags, dtype=jnp.int32) * self.v_per
+
+            def frag_fn(src, row, w, start, xr):
+                owned = self._owned_edges(src[0], row[0], w[0], xr)
+                buf = jax.lax.dynamic_update_slice(
+                    jnp.zeros((B, npad), jnp.float32), owned, (0, start[0]))
+                # disjoint owned ranges: psum is the fragment exchange
+                return jax.lax.psum(buf, "data")[None]
+
+            fn = shard_map(frag_fn, mesh=self.mesh,
+                           in_specs=(P("data"), P("data"), P("data"),
+                                     P("data"), P()),
+                           out_specs=P("data"))
+            out = fn(arrs.src, arrs.row, arrs.w, starts, x)
+            return out[0][:, :n]
+
+        owned = [self._owned_slab(arrs.slabs[f], x) if self.use_kernels
+                 else self._owned_edges(arrs.src[f], arrs.row[f],
+                                        arrs.w[f], x)
+                 for f in range(self.n_frags)]
+        return jnp.concatenate(owned, axis=1)[:, :n]
+
+    def _runner(self, program: FrontierProgram):
+        skey = tuple(h.cache_key for h in program.hops)
+        fn = self._runners.get(skey)
+        if fn is not None:
+            return fn
+        hop_arrs = [self._hop_arrays(h) for h in program.hops]
+
+        def run(x, masks):
+            for arrs, m in zip(hop_arrs, masks):
+                x = self._apply_hop(arrs, x)
+                if m is not None:       # [N] static or [B, N] per-query
+                    x = x * m
+            return x
+
+        fn = jax.jit(run)
+        self._runners[skey] = fn
+        return fn
+
+    # -------------------------------------------------------------- execute
+    def execute(self, plan: LogicalPlan,
+                params_list: Sequence[Optional[Dict[str, Any]]],
+                procedures=None) -> List[Dict[str, np.ndarray]]:
+        """Run one admission batch (same template, per-query params) as one
+        device program; raises ValueError when the plan does not lower."""
+        program = plan if isinstance(plan, FrontierProgram) \
+            else self.program_for(plan)
+        if program is None:
+            raise ValueError("plan has no fragment-executable prefix; "
+                             "route it to the interpreter instead "
+                             "(cbo.should_use_fragment_path gates this)")
+        params_list = [p or {} for p in params_list]
+        B, n = len(params_list), self.pg.n_vertices
+        src = self._stage_mask(program.source_alias, program.source_label,
+                               program.source_pred, params_list)
+        if src is None:                      # unfiltered scan: all vertices
+            x0 = jnp.ones((B, n), jnp.float32)
+        else:
+            x0 = jnp.broadcast_to(src, (B, n)).astype(jnp.float32)
+        masks = tuple(
+            self._stage_mask(h.vertex_alias, h.vertex_label, h.vertex_pred,
+                             params_list)
+            for h in program.hops)
+        counts = np.asarray(self._runner(program)(x0, masks))
+        return [finish_frontier(program, counts[b], self.pg,
+                                params=params_list[b], procedures=procedures)
+                for b in range(B)]
+
+    def _stage_mask(self, alias: str, label: Optional[int], pred,
+                    params_list: Sequence[Dict[str, Any]]):
+        """One stage's device mask: None when the stage filters nothing,
+        a cached static [N] array when the predicate is param-free, a
+        per-query [B, N] array otherwise."""
+        if label is None and pred is None:
+            return None
+        if pred is None or not _expr_has_param(pred.expr):
+            key = (label, repr(pred))
+            cached = self._masks.get(key)
+            if cached is None:
+                cached = jnp.asarray(frontier_vertex_mask(
+                    alias, label, pred, self.pg,
+                    params_list[0] if params_list else {}
+                ).astype(np.float32))
+                self._masks[key] = cached
+            return cached
+        B, n = len(params_list), self.pg.n_vertices
+        out = np.empty((B, n), np.float32)
+        for b, params in enumerate(params_list):
+            out[b] = frontier_vertex_mask(alias, label, pred, self.pg,
+                                          params).astype(np.float32)
+        return jnp.asarray(out)

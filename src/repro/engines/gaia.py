@@ -84,6 +84,32 @@ class GaiaEngine:
             procs = self.procedures       # lazy-create on first CALL plan
         return execute_plan(plan, self.pg, params=params, procedures=procs)
 
+    # ------------------------------------------------- fragment frontier
+    def fragment_executor(self, n_frags: int = 1, mesh=None,
+                          use_kernels: bool = False):
+        """Lazily-built executor for the dense fragment path (DESIGN.md
+        §9); one per engine so hop adjacencies and jitted programs are
+        shared across templates."""
+        key = (n_frags, id(mesh), use_kernels)
+        cache = getattr(self, "_frontier_execs", None)
+        if cache is None:
+            cache = self._frontier_execs = {}
+        if key not in cache:
+            from repro.engines.frontier import FragmentFrontierExecutor
+            cache[key] = FragmentFrontierExecutor(
+                self.pg, n_frags=n_frags, mesh=mesh, use_kernels=use_kernels)
+        return cache[key]
+
+    def execute_fragment(self, plan: LogicalPlan,
+                         params_list: List[Optional[Dict[str, Any]]],
+                         n_frags: int = 1, mesh=None,
+                         use_kernels: bool = False
+                         ) -> List[Dict[str, np.ndarray]]:
+        """Execute one admission batch of a lowered OLAP template as ONE
+        jitted device program over the [B, N] frontier matrix."""
+        ex = self.fragment_executor(n_frags, mesh, use_kernels)
+        return ex.execute(plan, params_list, procedures=self._procedures)
+
     def run_partitioned(self, query: str, n_partitions: int = 4,
                         language: str = "cypher") -> List[Dict[str, np.ndarray]]:
         """Data-parallel execution: the initial Scan's vertex set is split

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.storage.grin import ANALYTICS_REQUIRED, GRINAdapter
-from repro.storage.partition import Fragments, partition
+from repro.storage.partition import PAD_SENTINEL, Fragments, partition
 
 COMBINERS = {
     "sum": (jnp.zeros, lambda buf, idx, val: buf.at[idx].add(val), "psum"),
@@ -39,7 +39,10 @@ COMBINERS = {
 class FragmentArrays:
     """Device-resident stacked fragment arrays."""
 
-    indices: jnp.ndarray        # [F, E] global neighbor ids (pad: 0, masked)
+    indices: jnp.ndarray        # [F, E] global neighbor ids; PAD_SENTINEL
+    #                             entries are rebased to 0 with e_mask False
+    #                             (scatter-safe: vertex 0 contributions are
+    #                             zeroed by the mask, never by the id)
     e_src: jnp.ndarray          # [F, E] local owned source index
     e_mask: jnp.ndarray         # [F, E] valid edge
     weights: Optional[jnp.ndarray]
@@ -57,7 +60,7 @@ def _prepare(frags: Fragments) -> FragmentArrays:
         e_src[f] = np.clip(
             np.searchsorted(ptr, np.arange(E), side="right") - 1,
             0, frags.v_per_frag - 1)
-    mask = frags.indices >= 0
+    mask = frags.indices != PAD_SENTINEL
     return FragmentArrays(
         indices=jnp.asarray(np.where(mask, frags.indices, 0)),
         e_src=jnp.asarray(e_src),

@@ -6,6 +6,12 @@
                         for the GPU→TPU adaptation: row bucketing replaces
                         warp-per-row / work stealing)
 - ``segment_sum``     — tiled one-hot segment reduction (message combining)
+- ``frontier``        — batched pull-ELL frontier expansion (the Gaia
+                        distributed-traversal hop: a whole admission batch's
+                        [B, N] path-count matrix through one EXPAND;
+                        DESIGN.md §9)
+
+Edge padding everywhere uses ``storage.partition.PAD_SENTINEL``.
 
 Each kernel: ``<name>.py`` (pl.pallas_call + BlockSpec), a jitted wrapper in
 ``ops.py`` (interpret-mode switch + pure-jnp fallback) and an oracle in

@@ -1,0 +1,62 @@
+"""Pallas TPU batched frontier expansion — the Gaia traversal hot loop.
+
+One EXPAND hop over a whole admission batch: the frontier is a dense
+path-count matrix ``x [B, N]`` (row b = query b, column v = number of
+matched paths currently ending at vertex v) and one hop is an SpMV per
+batch row against the hop's adjacency. Like ``spmv.py`` the adjacency is a
+blocked-ELL slab, but in *pull* orientation: slab row r is a destination
+vertex, its entries are the sources that reach it, so the kernel is a pure
+gather + reduction (no scatter — TPU has no dynamic scheduling, see
+DESIGN.md §2) and the whole batch shares one pass over the slab:
+
+    y[b, r] = Σ_w  x[b, indices[r, w]] · weights[r, w]
+
+Padding entries carry ``indices == PAD_SENTINEL`` (< 0) and contribute
+zero; ``weights`` is edge multiplicity (parallel edges stack) and doubles
+as the masked-edge channel (an edge predicate zeroes its weight).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.storage.partition import PAD_SENTINEL
+
+
+def _frontier_kernel(idx_ref, w_ref, x_ref, y_ref):
+    idx = idx_ref[...]                          # [block_rows, W] int32
+    w = w_ref[...].astype(jnp.float32)          # [block_rows, W]
+    x = x_ref[...]                              # [B, N] fp32 (VMEM resident)
+    safe = jnp.maximum(idx, 0)                  # PAD_SENTINEL → 0, masked below
+    # TPU dynamic gather along the vertex axis, batched over B
+    gathered = jnp.take(x, safe.reshape(-1), axis=1)
+    gathered = gathered.reshape(x.shape[0], *idx.shape)   # [B, br, W]
+    vals = jnp.where((idx >= 0)[None, :, :], gathered * w[None, :, :], 0.0)
+    y_ref[...] = jnp.sum(vals, axis=2)          # [B, block_rows]
+
+
+def frontier_ell(indices: jnp.ndarray, weights: jnp.ndarray, x: jnp.ndarray,
+                 *, block_rows: int = 256,
+                 interpret: bool = False) -> jnp.ndarray:
+    """indices/weights: [R, W] pull-ELL slab (pad ``PAD_SENTINEL``);
+    x: [B, N] fp32 frontier matrix → y [B, R] fp32 expanded counts."""
+    R, W = indices.shape
+    B = x.shape[0]
+    assert R % block_rows == 0, (R, block_rows)
+    grid = (R // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_frontier_kernel),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, W), lambda r: (r, 0)),
+            pl.BlockSpec((block_rows, W), lambda r: (r, 0)),
+            pl.BlockSpec(x.shape, lambda r: (0, 0)),  # x fully VMEM-resident
+        ],
+        out_specs=pl.BlockSpec((B, block_rows), lambda r: (0, r)),
+        out_shape=jax.ShapeDtypeStruct((B, R), jnp.float32),
+        interpret=interpret,
+    )(indices, weights, x.astype(jnp.float32))

@@ -20,6 +20,7 @@ from repro.kernels import flash_attention as fa
 from repro.kernels import ref
 from repro.kernels import segment_sum as ss
 from repro.kernels import spmv as sp
+from repro.storage.partition import PAD_SENTINEL
 
 
 def _default_interpret() -> bool:
@@ -95,7 +96,7 @@ def csr_to_ell(indptr: np.ndarray, indices: np.ndarray,
     W = max(1, max(hi - lo for _, lo, hi in rows))
     W = -(-W // 128) * 128 if W > 128 else W      # lane alignment
     Np = -(-len(rows) // 256) * 256               # block_rows alignment
-    ell_idx = np.full((Np, W), -1, np.int32)
+    ell_idx = np.full((Np, W), PAD_SENTINEL, np.int32)
     ell_w = np.zeros((Np, W), np.float32)
     row_map = np.zeros(Np, np.int64)
     for i, (r, lo, hi) in enumerate(rows):
@@ -113,6 +114,20 @@ def spmv(ell_idx: jnp.ndarray, ell_w: jnp.ndarray, x: jnp.ndarray,
     interpret = _default_interpret() if interpret is None else interpret
     y_slab = sp.spmv_ell(ell_idx, ell_w, x, interpret=interpret)
     return jnp.zeros((n_rows,), jnp.float32).at[row_map].add(y_slab)
+
+
+# ------------------------------------------------------------ frontier hop
+def frontier_step(ell_idx: jnp.ndarray, ell_w: jnp.ndarray, x: jnp.ndarray,
+                  row_map: jnp.ndarray, n_rows: int,
+                  interpret: Optional[bool] = None) -> jnp.ndarray:
+    """One batched EXPAND hop: Y [B, n_rows] = X [B, N] pushed through the
+    pull-ELL slab (``csr_to_ell`` of the hop's *reverse* adjacency), slab
+    rows reduced back onto destination vertices with a scatter-add."""
+    interpret = _default_interpret() if interpret is None else interpret
+    from repro.kernels import frontier as fr
+    y_slab = fr.frontier_ell(ell_idx, ell_w, x, interpret=interpret)
+    B = x.shape[0]
+    return jnp.zeros((B, n_rows), jnp.float32).at[:, row_map].add(y_slab)
 
 
 # -------------------------------------------------------------- segment sum

@@ -40,6 +40,18 @@ def spmv_ref(indices: jnp.ndarray, weights: jnp.ndarray,
     return jnp.sum(vals, axis=1)
 
 
+def frontier_ref(indices: jnp.ndarray, weights: jnp.ndarray,
+                 x: jnp.ndarray) -> jnp.ndarray:
+    """Batched pull-ELL frontier oracle. indices/weights [R,W] (pad < 0);
+    x [B,N] → y [B,R]: y[b,r] = Σ_w x[b, indices[r,w]]·weights[r,w]."""
+    safe = jnp.maximum(indices, 0)
+    g = jnp.take(x.astype(jnp.float32), safe.reshape(-1), axis=1)
+    g = g.reshape(x.shape[0], *indices.shape)
+    vals = jnp.where((indices >= 0)[None], g * weights.astype(jnp.float32),
+                     0.0)
+    return jnp.sum(vals, axis=2)
+
+
 def segment_sum_ref(vals: jnp.ndarray, segs: jnp.ndarray,
                     n_out: int) -> jnp.ndarray:
     keep = segs >= 0

@@ -8,7 +8,11 @@ splits ultra-heavy rows), and the kernel tiles ``[block_rows, W]`` slabs
 against an x vector resident in VMEM. The gather ``x[idx]`` is the TPU
 dynamic-gather; everything else is VPU elementwise + row reduction.
 
-y[r] = Σ_w  weights[r, w] · x[indices[r, w]]   (indices < 0 ⇒ padding)
+y[r] = Σ_w  weights[r, w] · x[indices[r, w]]
+
+Padding entries carry ``indices == PAD_SENTINEL`` (`storage/partition.py`,
+i.e. < 0 — the one sentinel shared by fragments, ELL slabs and frontier
+slabs) and contribute zero.
 """
 
 from __future__ import annotations

@@ -3,8 +3,9 @@
 Sits above the query engines and the analytics bridge (DESIGN.md §6):
 templates compile once, bind per request, and same-template traffic admits
 in vectorized batches routed to Gaia (OLAP-shaped), HiActor (indexed point
-lookups) or the GRAPE procedure executor (hybrid ``CALL algo.*`` plans,
-DESIGN.md §7).
+lookups), the fragment frontier path (heavy traversals executed as one
+batched device program, DESIGN.md §9) or the GRAPE procedure executor
+(hybrid ``CALL algo.*`` plans, DESIGN.md §7).
 """
 
 from repro.serving.plan_cache import (CacheStats, PlanCache,  # noqa: F401

@@ -12,9 +12,12 @@ values to bind. The service
 3. dispatches each template by shape: hybrid ``CALL algo.*`` plans route to
    the GRAPE-backed procedure executor (memoized fixpoints, DESIGN.md §7);
    plans anchored on an indexed ``$param`` equality with a small
-   GLogue-lite cost estimate go to HiActor's batched OLTP path; everything
-   else executes on Gaia's dataflow with the cached plan re-bound per
-   request,
+   GLogue-lite cost estimate go to HiActor's batched OLTP path; OLAP
+   traversals whose match prefix lowers to dense frontier stages and whose
+   estimate clears ``cbo.should_use_fragment_path`` execute as ONE batched
+   device program on the partitioned fragment substrate (DESIGN.md §9);
+   everything else executes on Gaia's interpreter with the cached plan
+   re-bound per request,
 4. reports per-query latency and aggregate QPS per flush.
 """
 
@@ -27,7 +30,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core.ir.cbo import Catalog, is_point_lookup
+from repro.core.ir.cbo import (Catalog, is_point_lookup,
+                               should_use_fragment_path)
 from repro.core.ir.dag import ProcedureCall
 from repro.engines.gaia import GaiaEngine
 from repro.engines.hiactor import HiActorEngine
@@ -46,7 +50,7 @@ class Request:
 @dataclasses.dataclass
 class Response:
     result: Dict[str, np.ndarray]
-    engine: str          # "gaia" | "hiactor"
+    engine: str          # "gaia" | "hiactor" | "fragment" | "grape"
     cached: bool         # plan-cache hit at admission time
     latency_us: float    # wall time of the admission batch this query rode
 
@@ -86,10 +90,16 @@ class QueryService:
                  cache_capacity: int = 128, batch_size: int = 64,
                  row_threshold: float = 2e4,
                  rbo: bool = True, cbo: bool = True,
-                 procedures: Optional[ProcedureRegistry] = None):
+                 procedures: Optional[ProcedureRegistry] = None,
+                 fragment: bool = True, n_frags: int = 1,
+                 fragment_min_cost: float = 256.0):
         self.cache = PlanCache(cache_capacity, on_evict=self._on_plan_evicted)
         self.batch_size = max(1, int(batch_size))
         self.row_threshold = row_threshold
+        # dense fragment path for eligible OLAP traversals (DESIGN.md §9)
+        self.fragment = fragment
+        self.n_frags = max(1, int(n_frags))
+        self.fragment_min_cost = fragment_min_cost
         pg = store if isinstance(store, PropertyGraph) \
             else PropertyGraph(store)     # one facade: engines share the
         # CALL algo.* registry; pass a shared one to reuse memoized
@@ -103,12 +113,16 @@ class QueryService:
         self._queue: List[Request] = []
         self._proc_names: Dict[Tuple, str] = {}
         self._proc_seq = 0                # monotonic: names never reused
+        # route is a pure function of the compiled plan + service config;
+        # memoized per plan key so flushes skip the lowering/cost analysis
+        self._routes: Dict[Tuple, str] = {}
         self.last_stats: Optional[ServingStats] = None
 
     def _on_plan_evicted(self, key) -> None:
         """Cache eviction drops the matching stored procedure too, so the
         registry stays bounded by cache capacity and a later recompile
         never executes a stale registered plan."""
+        self._routes.pop(key, None)
         pname = self._proc_names.pop(key, None)
         if pname is not None:
             self.hiactor.unregister(pname)
@@ -171,23 +185,34 @@ class QueryService:
         responses: List[Optional[Response]] = [None] * len(pending)
         route_counts: Dict[str, int] = {}
         for key, items, plan, cached in admitted:
-            if any(isinstance(op, ProcedureCall) for op in plan.ops):
-                # hybrid analytics-in-the-loop plan: GRAPE computes (or
-                # reuses) the fixpoint, Gaia's dataflow runs the rest
-                route = "grape"
-            elif is_point_lookup(plan, self.gaia.catalog, self.row_threshold):
-                route = "hiactor"
+            route = self._routes.get(key)
+            if route is None:
+                if any(isinstance(op, ProcedureCall) for op in plan.ops):
+                    # hybrid analytics-in-the-loop plan: GRAPE computes (or
+                    # reuses) the fixpoint, Gaia's dataflow runs the rest
+                    route = "grape"
+                elif is_point_lookup(plan, self.gaia.catalog,
+                                     self.row_threshold):
+                    route = "hiactor"
+                elif self.fragment and should_use_fragment_path(
+                        plan, self.gaia.catalog, self.fragment_min_cost,
+                        self.row_threshold):
+                    # heavy traversal template: the whole admission batch
+                    # becomes ONE jitted device program over the fragment
+                    # substrate's [B, N] frontier matrices (DESIGN.md §9)
+                    route = "fragment"
+                else:
+                    route = "gaia"
+                self._routes[key] = route
+            route_counts[route] = route_counts.get(route, 0) + len(items)
+
+            if route == "hiactor":
                 pname = self._proc_names.get(key)
                 if pname is None:
                     pname = f"__svc_{self._proc_seq}"
                     self._proc_seq += 1
                     self.hiactor.register_plan(pname, plan)
                     self._proc_names[key] = pname
-            else:
-                route = "gaia"
-            route_counts[route] = route_counts.get(route, 0) + len(items)
-
-            if route == "hiactor":
                 # admission batching: chunks of batch_size per vectorized pass
                 for i in range(0, len(items), self.batch_size):
                     chunk = items[i:i + self.batch_size]
@@ -197,6 +222,29 @@ class QueryService:
                     c_us = (time.perf_counter() - c0) * 1e6
                     for (pos, _), out in zip(chunk, outs):
                         responses[pos] = Response(out, route, cached, c_us)
+            elif route == "fragment":
+                for i in range(0, len(items), self.batch_size):
+                    chunk = items[i:i + self.batch_size]
+                    c0 = time.perf_counter()
+                    try:
+                        outs = self.gaia.execute_fragment(
+                            plan, [req.params for _, req in chunk],
+                            n_frags=self.n_frags)
+                        eng = route
+                    except OverflowError:
+                        # path counts blew past float32 exactness
+                        # (finish_frontier refuses): interpreter rerun
+                        outs = [self.gaia.execute_plan(plan.bind(req.params))
+                                for _, req in chunk]
+                        eng = "gaia"
+                        route_counts[route] -= len(chunk)
+                        if not route_counts[route]:
+                            del route_counts[route]
+                        route_counts["gaia"] = \
+                            route_counts.get("gaia", 0) + len(chunk)
+                    c_us = (time.perf_counter() - c0) * 1e6
+                    for (pos, _), out in zip(chunk, outs):
+                        responses[pos] = Response(out, eng, cached, c_us)
             else:
                 # OLAP and hybrid CALL plans execute per request
                 # (batch_size plays no role; for CALL plans the procedure

@@ -105,6 +105,19 @@ class PropertyGraph:
         self._label_csr[key] = sliced
         return sliced
 
+    def sliced_csr(self, edge_label: Optional[int], direction: str
+                   ) -> Tuple[np.ndarray, np.ndarray, Optional[np.ndarray]]:
+        """(indptr, indices, edge_ids) of the adjacency restricted to
+        ``edge_label`` (None = all labels) in ``direction``: rows are the
+        ``direction``-side endpoints. ``edge_ids`` is None when rows are the
+        raw forward CSR (position == edge id). Shared by the interpreter's
+        ``expand`` and the fragment frontier builder (DESIGN.md §9)."""
+        if edge_label is not None:
+            return self._label_sliced(edge_label, direction)
+        if direction == "in":
+            return self._reverse()
+        return self.indptr, self.indices, None
+
     def expand(self, frontier: np.ndarray, edge_label: Optional[int] = None,
                direction: str = "out",
                edge_pred: Optional[Tuple[str, str, float]] = None
@@ -116,12 +129,7 @@ class PropertyGraph:
         (``tails`` indexes into ``frontier``), the neighbor vertex id, and
         the global edge id (CSR position) for property access.
         """
-        if edge_label is not None:
-            indptr, indices, emap = self._label_sliced(edge_label, direction)
-        elif direction == "in":
-            indptr, indices, emap = self._reverse()
-        else:
-            indptr, indices, emap = self.indptr, self.indices, None
+        indptr, indices, emap = self.sliced_csr(edge_label, direction)
 
         starts = indptr[frontier]
         degs = (indptr[frontier + 1] - starts).astype(np.int64)

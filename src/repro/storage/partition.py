@@ -14,6 +14,12 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+# THE padding sentinel for every stacked/slabbed edge array in the stack
+# (fragment indices, ELL slabs, frontier slabs). Kernels and engines test
+# ``index < 0`` / ``index != PAD_SENTINEL``; real vertex ids are never
+# negative, so edges *into vertex 0* are always distinguishable from pad.
+PAD_SENTINEL = -1
+
 
 @dataclasses.dataclass
 class Fragments:
@@ -23,7 +29,8 @@ class Fragments:
     n_vertices: int                 # global
     v_per_frag: int                 # owned vertices per fragment (padded)
     indptr: np.ndarray              # [F, v_per_frag+1] local CSR over owned rows
-    indices: np.ndarray             # [F, max_edges] global neighbor ids (pad -1)
+    indices: np.ndarray             # [F, max_edges] global neighbor ids
+    #                                 (pad PAD_SENTINEL)
     weights: Optional[np.ndarray]   # [F, max_edges]
     owned_start: np.ndarray         # [F] first owned vertex id
     out_degree: np.ndarray          # [N] global out-degrees (replicated)
@@ -92,7 +99,7 @@ def partition(store, n_frags: int, reorder: bool = False) -> Fragments:
     max_edges = max(max_edges, 1)
 
     f_indptr = np.zeros((n_frags, v_per + 1), np.int64)
-    f_indices = np.full((n_frags, max_edges), -1, np.int64)
+    f_indices = np.full((n_frags, max_edges), PAD_SENTINEL, np.int64)
     f_weights = (np.zeros((n_frags, max_edges), np.float32)
                  if weights is not None else None)
     starts = np.zeros(n_frags, np.int64)

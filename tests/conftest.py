@@ -6,3 +6,42 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# CI runs the hypothesis suites (differential traversal tests included)
+# under a fixed derandomized profile so a red build is reproducible;
+# select it with HYPOTHESIS_PROFILE=ci (the workflow does).
+try:
+    from hypothesis import settings as _hyp_settings
+
+    _hyp_settings.register_profile("ci", derandomize=True, deadline=None,
+                                   max_examples=25, print_blob=True)
+    if os.environ.get("HYPOTHESIS_PROFILE") == "ci":
+        _hyp_settings.load_profile("ci")
+except ImportError:          # hypothesis is optional outside CI
+    pass
+
+
+def assert_results_bag_equal(ref, got):
+    """Order-insensitive query-result equality (graph query outputs are
+    bags): same columns and the same multiset of *rows* — columns compare
+    jointly (lexsorted row tuples), so values mis-associated across
+    correlated columns (e.g. GroupCount's key/cnt) cannot false-pass the
+    way independent per-column sorts would. The shared oracle comparison
+    of the fragment-vs-interpreter differential suites
+    (tests/test_traversal.py, tests/test_property.py)."""
+    import numpy as np
+
+    assert set(ref) == set(got), (set(ref), set(got))
+    keys = sorted(ref)
+    if not keys:
+        return
+    a_cols = [np.asarray(ref[k], dtype=np.float64).ravel() for k in keys]
+    b_cols = [np.asarray(got[k], dtype=np.float64).ravel() for k in keys]
+    for k, a, b in zip(keys, a_cols, b_cols):
+        assert a.shape == b.shape, (k, a.shape, b.shape)
+    a_rows = np.stack(a_cols, axis=1)
+    b_rows = np.stack(b_cols, axis=1)
+    a_rows = a_rows[np.lexsort(a_rows.T[::-1])]
+    b_rows = b_rows[np.lexsort(b_rows.T[::-1])]
+    np.testing.assert_allclose(a_rows, b_rows, rtol=1e-6,
+                               err_msg=f"rows over columns {keys}")

@@ -124,6 +124,108 @@ class TestCompressionProperties:
                                    4 * x, rtol=1e-4, atol=1e-4)
 
 
+@st.composite
+def labeled_graphs(draw, max_n=20, max_e=60, n_vlabels=2, n_elabels=2):
+    """Random labeled property multigraph (self loops and parallel edges
+    included on purpose — the frontier path must count them identically)."""
+    n = draw(st.integers(2, max_n))
+    e = draw(st.integers(1, max_e))
+    src = draw(hnp.arrays(np.int64, (e,), elements=st.integers(0, n - 1)))
+    dst = draw(hnp.arrays(np.int64, (e,), elements=st.integers(0, n - 1)))
+    vlab = draw(hnp.arrays(np.int32, (n,),
+                           elements=st.integers(0, n_vlabels - 1)))
+    elab = draw(hnp.arrays(np.int32, (e,),
+                           elements=st.integers(0, n_elabels - 1)))
+    credits = draw(hnp.arrays(np.int32, (n,), elements=st.integers(0, 9)))
+    return CSRStore(n, src, dst, vertex_labels=vlab, edge_labels=elab,
+                    vertex_props={"credits": credits})
+
+
+@st.composite
+def traversal_plans(draw, n_vlabels=2, n_elabels=2):
+    """Random 1–3-hop linear match chain + head filter + terminal."""
+    from repro.core.ir.dag import (Agg, BinExpr, Const, Expand, GroupCount,
+                                   LogicalPlan, Param, Pred, Project,
+                                   PropRef, Scan, Select, With)
+
+    n_hops = draw(st.integers(1, 3))
+    maybe_label = st.one_of(st.none(), st.integers(0, n_vlabels - 1))
+    ops = [Scan("v0", draw(maybe_label), None)]
+    head = "v0"
+    for h in range(1, n_hops + 1):
+        alias = f"v{h}"
+        ops.append(Expand(
+            src=head,
+            edge_label=draw(st.one_of(st.none(),
+                                      st.integers(0, n_elabels - 1))),
+            direction=draw(st.sampled_from(["out", "in"])),
+            edge=f"e{h}", fused_vertex=alias,
+            vertex_label=draw(maybe_label)))
+        head = alias
+    threshold = draw(st.one_of(st.none(), st.integers(0, 9)))
+    param_filter = draw(st.booleans())
+    if threshold is not None:
+        rhs = Param("t") if param_filter else Const(threshold)
+        ops.append(Select(Pred(BinExpr(
+            ">", PropRef(head, "credits"), rhs))))
+    terminal = draw(st.sampled_from(["project", "group", "count"]))
+    if terminal == "project":
+        ops.append(Project(((PropRef(head, None), "out"),)))
+    elif terminal == "group":
+        ops.append(GroupCount(PropRef(head, None), "cnt"))
+    else:
+        ops.append(With((), (Agg("count", None, "k"),)))
+        ops.append(Project(((PropRef("k", None), "k"),)))
+    return LogicalPlan(ops), threshold
+
+
+class TestTraversalDifferential:
+    """The fragment frontier path (DESIGN.md §9) against the interpreter
+    oracle over random graphs × random plans × fragment counts × batch
+    sizes — the differential surface the hybrid execution stands on."""
+
+    @staticmethod
+    def _assert_bag_equal(ref, got):
+        from conftest import assert_results_bag_equal
+        assert_results_bag_equal(ref, got)
+
+    @pytest.mark.parametrize("n_frags", [1, 2, 4])
+    @given(labeled_graphs(), traversal_plans())
+    @settings(**SETTINGS)
+    def test_fragment_equals_interpreter(self, n_frags, store, plan_t):
+        from repro.core.ir.codegen import execute_plan, lower_to_frontier
+        from repro.engines.frontier import FragmentFrontierExecutor
+        from repro.storage.lpg import PropertyGraph
+
+        plan, threshold = plan_t
+        pg = PropertyGraph(store)
+        program = lower_to_frontier(plan)
+        assert program is not None       # generator stays in supported IR
+        params = {"t": threshold if threshold is not None else 0}
+        ex = FragmentFrontierExecutor(pg, n_frags=n_frags)
+        got = ex.execute(plan, [params])[0]
+        self._assert_bag_equal(execute_plan(plan, pg, params=params), got)
+
+    @pytest.mark.parametrize("batch", [1, 8])
+    @given(labeled_graphs(max_n=12, max_e=36), traversal_plans())
+    @settings(max_examples=10, deadline=None,
+              suppress_health_check=[hypothesis.HealthCheck.too_slow])
+    def test_batched_queries_independent(self, batch, store, plan_t):
+        """B queries in one [B, N] program == B solo interpreter runs."""
+        from repro.core.ir.codegen import execute_plan
+        from repro.engines.frontier import FragmentFrontierExecutor
+        from repro.storage.lpg import PropertyGraph
+
+        plan, _ = plan_t
+        pg = PropertyGraph(store)
+        params_list = [{"t": b % 10} for b in range(batch)]
+        outs = FragmentFrontierExecutor(pg, n_frags=2).execute(
+            plan, params_list)
+        for params, got in zip(params_list, outs):
+            self._assert_bag_equal(
+                execute_plan(plan, pg, params=params), got)
+
+
 class TestRWKVProperties:
     @given(st.integers(1, 2), st.integers(1, 3), st.integers(8, 16))
     @settings(max_examples=10, deadline=None)

@@ -158,8 +158,14 @@ class TestQueryService:
         resps, stats = svc.serve(reqs)
         assert len(resps) == 11
         assert all(r.engine == "hiactor" for r in resps[:10])
-        assert resps[10].engine == "gaia"
-        assert stats.route_counts == {"hiactor": 10, "gaia": 1}
+        # the OLAP template lowers to the fragment frontier path (PR 3);
+        # with the path disabled it still lands on the interpreter
+        assert resps[10].engine == "fragment"
+        assert stats.route_counts == {"hiactor": 10, "fragment": 1}
+        svc_off = QueryService(store, batch_size=8, fragment=False)
+        resps_off, stats_off = svc_off.serve(reqs)
+        assert resps_off[10].engine == "gaia"
+        assert stats_off.route_counts == {"hiactor": 10, "gaia": 1}
 
     def test_results_match_direct_engines(self, store):
         svc = QueryService(store, batch_size=4)
@@ -287,3 +293,85 @@ class TestQueryService:
         resps, stats = svc.serve([Request(POINT, {"c": 2})])
         assert resps[0].engine == "hiactor"
         assert "qps" in stats.summary() or "queries" in stats.summary()
+
+
+FRAG = ("MATCH (a:Person)-[:KNOWS]->(b:Person)-[:BUY]->(c:Item) "
+        "WHERE a.credits > $t AND c.price > $p RETURN c AS c")
+LIMIT_POINT = ("MATCH (v:Person {id: $c})-[:KNOWS]->(f:Person) "
+               "RETURN f AS f LIMIT 2")
+
+
+class TestFragmentRoute:
+    """Heavy OLAP traversals execute as ONE batched device program on the
+    fragment substrate (DESIGN.md §9); results match per-request Gaia."""
+
+    def test_routes_and_matches_interpreter(self, store):
+        svc = QueryService(store, batch_size=8, n_frags=2)
+        reqs = [(FRAG, {"t": 100 + 10 * i, "p": 50}) for i in range(12)]
+        resps, stats = svc.serve(reqs)
+        assert stats.route_counts == {"fragment": 12}
+        plan, _ = svc.compile(FRAG)
+        for (_, params), r in zip(reqs, resps):
+            assert r.engine == "fragment"
+            ref = svc.gaia.execute_plan(plan.bind(params))
+            np.testing.assert_array_equal(np.sort(r.result["c"]),
+                                          np.sort(ref["c"]))
+
+    def test_fragment_disabled_falls_back_to_gaia(self, store):
+        svc = QueryService(store, fragment=False)
+        resps, stats = svc.serve([(FRAG, {"t": 100, "p": 50})])
+        assert stats.route_counts == {"gaia": 1}
+
+    def test_point_lookup_still_beats_fragment(self, store):
+        """Indexed $param-equality anchors keep going to HiActor even when
+        the plan would lower to the frontier path."""
+        svc = QueryService(store, n_frags=2)
+        resps, stats = svc.serve([(POINT, {"c": 5})])
+        assert stats.route_counts == {"hiactor": 1}
+
+
+class TestLimitRegression:
+    """PR 1 regression: a LIMIT plan admitted in a cross-tenant batch must
+    truncate per query, never across the batch — so LIMIT plans are
+    excluded from HiActor's single-pass batched route
+    (``cbo.is_point_lookup``) and from nowhere else."""
+
+    def test_limit_excluded_from_point_lookup(self, store):
+        from repro.core.ir.cbo import Catalog
+        gaia = GaiaEngine(store)
+        plan = gaia.compile(LIMIT_POINT)
+        assert find_indexed_anchor(plan) is not None   # anchor qualifies…
+        assert not is_point_lookup(plan, gaia.catalog)  # …but LIMIT vetoes
+
+    def test_cross_tenant_limit_batch_truncates_per_query(self, store):
+        svc = QueryService(store, batch_size=8)
+        # 8 tenants share the LIMIT template in one admission batch
+        reqs = [(LIMIT_POINT, {"c": c}) for c in range(8)]
+        resps, stats = svc.serve(reqs)
+        assert "hiactor" not in stats.route_counts
+        plan, _ = svc.compile(LIMIT_POINT)
+        for (_, params), r in zip(reqs, resps):
+            solo = svc.gaia.execute_plan(plan.bind(params))
+            assert len(r.result["f"]) == len(solo["f"]) <= 2
+            np.testing.assert_array_equal(np.sort(r.result["f"]),
+                                          np.sort(solo["f"]))
+
+    def test_float32_overflow_falls_back_to_interpreter(self, store,
+                                                        monkeypatch):
+        """finish_frontier refuses counts past float32 integer exactness
+        (2^24); the service reruns the chunk on the interpreter."""
+        svc = QueryService(store, batch_size=4)
+
+        def boom(*a, **k):
+            raise OverflowError("counts past 2^24")
+
+        monkeypatch.setattr(svc.gaia, "execute_fragment", boom)
+        reqs = [(FRAG, {"t": 100, "p": 40}), (FRAG, {"t": 200, "p": 40})]
+        resps, stats = svc.serve(reqs)
+        assert stats.route_counts == {"gaia": 2}
+        assert all(r.engine == "gaia" for r in resps)
+        plan, _ = svc.compile(FRAG)
+        for (_, p), r in zip(reqs, resps):
+            ref = svc.gaia.execute_plan(plan.bind(p))
+            np.testing.assert_array_equal(np.sort(r.result["c"]),
+                                          np.sort(ref["c"]))

@@ -1,0 +1,289 @@
+"""Vectorized distributed traversal: the fragment frontier path
+(DESIGN.md §9) against the interpreter oracle, the batched pull-ELL Pallas
+kernel against its jnp oracle, and the PAD_SENTINEL contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import assert_results_bag_equal
+
+from repro.core.ir.cbo import Catalog, should_use_fragment_path
+from repro.core.ir.codegen import execute_plan, lower_to_frontier
+from repro.core.ir.dag import (Agg, BinExpr, Const, Expand, GroupCount,
+                               LogicalPlan, Pred, Project, PropRef, Scan,
+                               Select, With)
+from repro.engines.frontier import FragmentFrontierExecutor
+from repro.engines.gaia import GaiaEngine
+from repro.engines.grape import GrapeEngine
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.kernels.frontier import frontier_ell
+from repro.storage.csr import CSRStore
+from repro.storage.generators import snb_store
+from repro.storage.lpg import PropertyGraph
+from repro.storage.partition import PAD_SENTINEL, partition
+
+
+assert_results_equal = assert_results_bag_equal    # shared oracle compare
+
+
+@pytest.fixture(scope="module")
+def store():
+    return snb_store(n_persons=300, n_items=150, n_posts=40, seed=3)
+
+
+@pytest.fixture(scope="module")
+def engine(store):
+    return GaiaEngine(store)
+
+
+QUERIES = [
+    # 1 hop, head predicate
+    "MATCH (i:Item)<-[:BUY]-(p:Person) WHERE p.credits > 500 RETURN p AS p",
+    # 2 hops, pure traversal
+    ("MATCH (a:Person)-[:KNOWS]->(b:Person)-[:BUY]->(c:Item) "
+     "RETURN c AS c"),
+    # 2 hops + WHERE on the head + property projection
+    ("MATCH (a:Person)-[:KNOWS]->(b:Person)-[:BUY]->(c:Item) "
+     "WHERE c.price > 100 RETURN c.price AS pr"),
+    # 3 hops + mid-chain filter
+    ("MATCH (a:Person)-[:KNOWS]->(b:Person)-[:KNOWS]->(c:Person)"
+     "-[:BUY]->(i:Item) WHERE b.credits > 200 RETURN i AS i"),
+    # edge-property predicate (bakes into edge weights)
+    ("MATCH (a:Person)-[:KNOWS]->(b:Person)-[e:BUY]->(i:Item) "
+     "WHERE e.rating > 3 RETURN i.price AS pr"),
+    # grouped aggregate over the head (CBO may flip → reversed lowering)
+    ("MATCH (a:Person)-[:BUY]->(i:Item) WITH i, COUNT(a) AS k "
+     "RETURN k AS k ORDER BY k DESC LIMIT 5"),
+    # global count
+    ("MATCH (a:Person)-[:KNOWS]->(b:Person)-[:BUY]->(c:Item) "
+     "WITH c, COUNT(a) AS k RETURN k AS k"),
+]
+
+
+class TestFragmentDifferential:
+    @pytest.mark.parametrize("n_frags", [1, 2, 4])
+    @pytest.mark.parametrize("query", QUERIES)
+    def test_matches_interpreter(self, engine, query, n_frags):
+        plan = engine.compile(query)
+        ex = FragmentFrontierExecutor(engine.pg, n_frags=n_frags)
+        got = ex.execute(plan, [None])[0]
+        assert_results_equal(engine.execute_plan(plan), got)
+
+    @pytest.mark.parametrize("n_frags", [1, 2, 4])
+    @pytest.mark.parametrize("batch", [1, 8])
+    def test_parameterized_batch(self, engine, n_frags, batch):
+        q = ("MATCH (a:Person {region: $r})-[:KNOWS]->(b:Person)"
+             "-[:KNOWS]->(c:Person) WHERE c.credits > $t RETURN c AS c")
+        plan = engine.compile(q)
+        params = [{"r": b % 8, "t": 200 + 40 * b} for b in range(batch)]
+        ex = FragmentFrontierExecutor(engine.pg, n_frags=n_frags)
+        outs = ex.execute(plan, params)
+        assert len(outs) == batch
+        for p, got in zip(params, outs):
+            assert_results_equal(engine.execute_plan(plan, params=p), got)
+
+    def test_kernel_path_matches(self, engine):
+        q = ("MATCH (a:Person)-[:KNOWS]->(b:Person)-[:BUY]->(c:Item) "
+             "WHERE c.price > 100 RETURN c AS c")
+        plan = engine.compile(q)
+        ex = FragmentFrontierExecutor(engine.pg, n_frags=2,
+                                      use_kernels=True, interpret=True)
+        got = ex.execute(plan, [None, None])
+        ref = engine.execute_plan(plan)
+        assert_results_equal(ref, got[0])
+        assert_results_equal(ref, got[1])
+
+    def test_mesh_shard_map_path(self, engine):
+        from jax.sharding import Mesh
+
+        mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+        q = ("MATCH (a:Person {region: $r})-[:KNOWS]->(b:Person) "
+             "RETURN b AS b")
+        plan = engine.compile(q)
+        ex = FragmentFrontierExecutor(engine.pg, mesh=mesh)
+        outs = ex.execute(plan, [{"r": 1}, {"r": 5}])
+        for p, got in zip(({"r": 1}, {"r": 5}), outs):
+            assert_results_equal(engine.execute_plan(plan, params=p), got)
+
+    def test_multigraph_self_loops_and_vertex0(self):
+        """Parallel edges multiply path counts; self loops and edges into
+        vertex 0 survive both representations."""
+        src = np.array([1, 2, 2, 3, 0, 5, 5, 5, 4])
+        dst = np.array([0, 0, 0, 3, 1, 2, 2, 4, 0])
+        store = CSRStore(6, src, dst,
+                         vertex_labels=np.zeros(6, np.int32),
+                         edge_labels=np.zeros(len(src), np.int32),
+                         vertex_props={"x": np.arange(6, dtype=np.int64)})
+        pg = PropertyGraph(store)
+        plan = LogicalPlan([
+            Scan("a", 0, None),
+            Expand("a", 0, "out", edge="_e", fused_vertex="b",
+                   vertex_label=0),
+            GroupCount(PropRef("b", None), "cnt"),
+        ])
+        ref = execute_plan(plan, pg)
+        for n_frags in (1, 2, 4):
+            got = FragmentFrontierExecutor(pg, n_frags=n_frags).execute(
+                plan, [None])[0]
+            assert_results_equal(ref, got)
+
+    def test_empty_result_shapes(self, engine):
+        q = ("MATCH (a:Person)-[:KNOWS]->(b:Person) "
+             "WHERE b.credits > 100000 RETURN b AS b")
+        plan = engine.compile(q)
+        got = FragmentFrontierExecutor(engine.pg, n_frags=2).execute(
+            plan, [None])[0]
+        ref = engine.execute_plan(plan)
+        assert got["b"].shape == ref["b"].shape == (0,)
+        assert got["b"].dtype == ref["b"].dtype
+
+
+class TestLoweringEligibility:
+    def test_cross_alias_predicate_falls_back(self, engine):
+        q = ("MATCH (a:Person)-[:KNOWS]->(b:Person) "
+             "WHERE a.credits > b.credits RETURN b AS b")
+        plan = engine.compile(q)
+        prog = lower_to_frontier(plan)
+        # the cross-alias WHERE stays in the tail, which references the
+        # consumed anchor alias — not lowerable in either direction
+        assert prog is None
+
+    def test_call_plan_falls_back(self, engine):
+        plan = engine.compile("CALL algo.pagerank(0.85) YIELD v, rank "
+                              "RETURN rank AS rank")
+        assert lower_to_frontier(plan) is None
+
+    def test_param_edge_pred_falls_back(self, engine):
+        q = ("MATCH (a:Person)-[e:BUY]->(i:Item) WHERE e.rating > $t "
+             "RETURN i AS i")
+        plan = engine.compile(q)
+        prog = lower_to_frontier(plan)
+        assert prog is None or not any(
+            h.edge_pred is not None for h in prog.hops)
+
+    def test_bare_match_without_return_tail_falls_back(self):
+        plan = LogicalPlan([
+            Scan("a", 0, None),
+            Expand("a", 0, "out", edge="_e", fused_vertex="b",
+                   vertex_label=None),
+        ])
+        # interpreter would return BOTH alias columns — not reproducible
+        # from a path-count matrix
+        assert lower_to_frontier(plan) is None
+
+    def test_routing_predicate(self, engine):
+        cat = engine.catalog
+        heavy = engine.compile(
+            "MATCH (a:Person)-[:KNOWS]->(b:Person)-[:BUY]->(c:Item) "
+            "WHERE a.credits > $t RETURN c AS c")
+        assert should_use_fragment_path(heavy, cat)
+        point = engine.compile(
+            "MATCH (v:Person {id: $c})-[:KNOWS]->(f:Person) "
+            "WITH v, COUNT(f) AS k RETURN k AS k")
+        assert not should_use_fragment_path(point, cat)  # HiActor's
+        scan_only = engine.compile("MATCH (a:Person) RETURN a AS a")
+        assert not should_use_fragment_path(scan_only, cat)  # no hops
+
+
+class TestFrontierKernel:
+    @pytest.mark.parametrize("B,R,W", [(1, 256, 4), (8, 256, 8),
+                                       (3, 512, 130)])
+    def test_matches_oracle(self, B, R, W):
+        rng = np.random.default_rng(R * 31 + W)
+        idx = rng.integers(0, 64, (R, W)).astype(np.int32)
+        idx[rng.random((R, W)) < 0.3] = PAD_SENTINEL   # padding slots
+        w = rng.random((R, W)).astype(np.float32)
+        x = rng.random((B, 64)).astype(np.float32)
+        got = frontier_ell(jnp.asarray(idx), jnp.asarray(w),
+                           jnp.asarray(x), interpret=True)
+        want = kref.frontier_ref(jnp.asarray(idx), jnp.asarray(w),
+                                 jnp.asarray(x))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_frontier_step_split_rows(self):
+        """csr_to_ell splits heavy rows; frontier_step reduces them back."""
+        n = 8
+        indptr = np.array([0, 5, 5, 5, 5, 5, 5, 5, 5], np.int64)
+        indices = np.array([0, 1, 2, 3, 4], np.int32)
+        ell_idx, ell_w, row_map = kops.csr_to_ell(indptr, indices,
+                                                  row_split=2)
+        x = np.ones((2, n), np.float32)
+        y = kops.frontier_step(jnp.asarray(ell_idx), jnp.asarray(ell_w),
+                               jnp.asarray(x), jnp.asarray(row_map), n,
+                               interpret=True)
+        np.testing.assert_allclose(np.asarray(y)[:, 0], [5.0, 5.0])
+        np.testing.assert_allclose(np.asarray(y)[:, 1:], 0.0)
+
+
+class TestPadSentinel:
+    """The one sentinel (PAD_SENTINEL = -1) across fragments, ELL slabs and
+    frontier slabs: a graph with real edges *into vertex 0* must not have
+    them confused with padding on any path."""
+
+    def _store(self):
+        # 5 vertices, every edge points at vertex 0; 2 fragments pad the
+        # second fragment's edge slab
+        src = np.array([1, 2, 3, 4, 4])
+        dst = np.array([0, 0, 0, 0, 0])
+        return CSRStore(5, src, dst)
+
+    def test_partition_uses_sentinel(self):
+        frags = partition(self._store(), 2)
+        assert (frags.indices[frags.indices < 0] == PAD_SENTINEL).all()
+        # all real entries point at vertex 0 and survive
+        assert (frags.indices[frags.indices >= 0] == 0).all()
+        assert (frags.indices >= 0).sum() == 5
+
+    def test_grape_superstep_not_corrupted(self):
+        eng = GrapeEngine(self._store(), n_frags=2)
+        ones = eng.owned_view(jnp.ones(5, jnp.float32))
+        msgs = np.asarray(eng.superstep(ones, combiner="sum"))
+        # vertex 0 receives exactly its 5 in-edges — padding adds nothing
+        np.testing.assert_allclose(msgs, [5.0, 0, 0, 0, 0])
+
+    def test_spmv_ell_not_corrupted(self):
+        indptr, indices = self._store().adjacency()
+        ell_idx, ell_w, row_map = kops.csr_to_ell(indptr, indices)
+        x = np.zeros(5, np.float32)
+        x[0] = 7.0                       # only vertex 0 carries signal
+        y = kops.spmv(jnp.asarray(ell_idx), jnp.asarray(ell_w),
+                      jnp.asarray(x), jnp.asarray(row_map), 5,
+                      interpret=True)
+        np.testing.assert_allclose(np.asarray(y), [0, 7, 7, 7, 14, ][:5])
+
+    def test_frontier_hop_not_corrupted(self):
+        pg = PropertyGraph(CSRStore(
+            5, np.array([1, 2, 3, 4, 4]), np.zeros(5, np.int64),
+            vertex_labels=np.zeros(5, np.int32),
+            edge_labels=np.zeros(5, np.int32)))
+        plan = LogicalPlan([
+            Scan("a", 0, None),
+            Expand("a", 0, "out", edge="_e", fused_vertex="b",
+                   vertex_label=0),
+            GroupCount(PropRef("b", None), "cnt"),
+        ])
+        ref = execute_plan(plan, pg)
+        for kw in ({}, {"use_kernels": True, "interpret": True}):
+            got = FragmentFrontierExecutor(pg, n_frags=2, **kw).execute(
+                plan, [None])[0]
+            assert_results_equal(ref, got)
+        assert ref["key"].tolist() == [0] and ref["cnt"].tolist() == [5]
+
+
+class TestOverflowGuard:
+    def test_finish_frontier_refuses_inexact_counts(self, engine):
+        from repro.core.ir.codegen import finish_frontier, lower_to_frontier
+
+        plan = engine.compile(
+            "MATCH (a:Person)-[:KNOWS]->(b:Person) RETURN b AS b")
+        program = lower_to_frontier(plan)
+        counts = np.zeros(engine.pg.n_vertices, np.float32)
+        counts[1] = 2.0 ** 24            # first inexact float32 integer
+        with pytest.raises(OverflowError):
+            finish_frontier(program, counts, engine.pg)
+        counts[1] = 2.0 ** 24 - 1        # still exact: fine
+        out = finish_frontier(program, counts, engine.pg)
+        assert len(out["b"]) == 2 ** 24 - 1
