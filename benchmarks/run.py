@@ -15,7 +15,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
                     help="comma list: storage,query,traversal,hybrid,"
-                         "analytics,learning,kernels")
+                         "analytics,learning,exp5,kernels")
     args = ap.parse_args()
     wanted = set(args.only.split(",")) if args.only != "all" else {
         "storage", "query", "hybrid", "analytics", "learning", "kernels"}
@@ -42,6 +42,9 @@ def main() -> None:
     if "learning" in wanted:
         from benchmarks import learning_bench
         sections.append(("learning", learning_bench.run))
+    elif "exp5" in wanted:           # exp5 standalone (learning runs it too)
+        from benchmarks import learning_bench
+        sections.append(("exp5", learning_bench.run_exp5))
     if "kernels" in wanted:
         from benchmarks import kernel_bench
         sections.append(("kernels", kernel_bench.run))

@@ -1,4 +1,5 @@
 from repro.engines.frontier import FragmentFrontierExecutor  # noqa: F401
+from repro.engines.sample import FragmentSampleExecutor  # noqa: F401
 from repro.engines.gaia import GaiaEngine  # noqa: F401
 from repro.engines.hiactor import HiActorEngine  # noqa: F401
 from repro.engines.procedures import ProcedureRegistry  # noqa: F401

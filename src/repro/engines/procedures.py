@@ -1,4 +1,5 @@
-"""Procedure registry — the `CALL algo.*` bridge into GRAPE (DESIGN.md §7).
+"""Procedure registry — the `CALL algo.*` / `CALL gnn.infer` bridge
+(DESIGN.md §7, §10).
 
 GIE exposes built-in algorithms as stored procedures callable from the
 query languages; this module is that bridge for the reproduction. A
@@ -9,6 +10,14 @@ canonical args)** so repeated serving traffic reuses the result instead of
 re-iterating. Snapshot identity honors GART MVCC: two snapshots of one
 store at the same version share a memo entry, so a query pinned at
 version v always sees analytics computed at version v.
+
+The learning stack plugs into the same bridge from the other side:
+``register_model`` installs a trained model's ``(store) → scores[N]``
+serving function under a name, and ``CALL gnn.infer($model) YIELD v,
+score`` runs it like any procedure — memoized per **(snapshot, model name,
+model registration version)**, so re-registering a retrained model never
+serves a stale memo entry while an unchanged registration reuses its
+scores across serving traffic (lifetimes: DESIGN.md §10).
 
 Results come back as dense ``np.ndarray[N]`` host arrays trimmed to the
 store's vertex range (GRAPE pads fragments to a common width; the padding
@@ -52,7 +61,12 @@ class ProcedureSpec:
                 val = kwargs.pop(pname)
             else:
                 val = default
-            out.append(int(val) if isinstance(default, int) else float(val))
+            if isinstance(default, str):
+                out.append(str(val))
+            elif isinstance(default, int):
+                out.append(int(val))
+            else:
+                out.append(float(val))
         if kwargs:
             raise TypeError(f"{self.name} got unexpected args "
                             f"{sorted(kwargs)}")
@@ -84,6 +98,22 @@ def _run_degree_centrality(engine):
     return degree_centrality(engine)
 
 
+# the learning↔query bridge: runs a model registered with
+# ``ProcedureRegistry.register_model`` (no GRAPE engine involved)
+GNN_INFER = "gnn.infer"
+
+
+class _StorePin:
+    """LRU slot for a snapshot seen only by ``gnn.infer``: no GRAPE engine
+    exists, but the store must stay alive while its memo entries do —
+    identity-fallback tokens are ids, and a recycled id must never serve a
+    dead graph's scores."""
+
+    __slots__ = ("store",)
+
+    def __init__(self, store):
+        self.store = store
+
 SPECS: Dict[str, ProcedureSpec] = {
     "pagerank": ProcedureSpec("pagerank", (("damping", 0.85),), "rank",
                               _run_pagerank),
@@ -92,6 +122,8 @@ SPECS: Dict[str, ProcedureSpec] = {
     "wcc": ProcedureSpec("wcc", (), "comp", _run_wcc),
     "degree_centrality": ProcedureSpec("degree_centrality", (), "centrality",
                                        _run_degree_centrality),
+    GNN_INFER: ProcedureSpec(GNN_INFER, (("model", "default"),), "score",
+                             None),
 }
 
 # parser-facing: default YIELD score column per algorithm
@@ -152,8 +184,15 @@ class ProcedureRegistry:
         self.n_frags = n_frags
         self.use_kernels = use_kernels
         self.max_snapshots = max_snapshots
+        # token → GrapeEngine, or a _StorePin for tokens only seen by
+        # gnn.infer (no engine needed, but the slot shares the LRU
+        # accounting and keeps the store alive for its memo entries)
         self._engines: "OrderedDict[Tuple, Any]" = OrderedDict()
         self._results: Dict[Tuple, np.ndarray] = {}
+        # name → (serving fn, registration version); versions are monotonic
+        # so a re-registered model never hits the old version's memo entries
+        self._models: Dict[str, Tuple[Callable, int]] = {}
+        self._model_seq = 0
         self.stats = RegistryStats()
 
     def __contains__(self, name: str) -> bool:
@@ -166,45 +205,95 @@ class ProcedureRegistry:
     def spec(self, name: str) -> ProcedureSpec:
         return SPECS[normalize_proc_name(name)]
 
+    # ------------------------------------------------------- trained models
+    def register_model(self, name: str, infer_fn: Callable) -> None:
+        """Install (or replace) a trained model's ``(store) → scores[N]``
+        serving function as the target of ``CALL gnn.infer(name)``."""
+        self._model_seq += 1
+        self._models[str(name)] = (infer_fn, self._model_seq)
+        # old-version memo entries are unreachable once the version bumps;
+        # purge them or a retrain loop leaks one score array per cycle
+        self._drop_model_results(str(name))
+
+    def unregister_model(self, name: str) -> None:
+        self._models.pop(str(name), None)
+        self._drop_model_results(str(name))
+
+    def _drop_model_results(self, name: str) -> None:
+        self._results = {
+            k: v for k, v in self._results.items()
+            if not (k[1] == GNN_INFER and k[2][0] == name
+                    and k[2][1] != self._models.get(name, (None, -1))[1])}
+
+    # --------------------------------------------------------- LRU plumbing
+    def _evict(self) -> None:
+        while len(self._engines) > self.max_snapshots:
+            evicted, _ = self._engines.popitem(last=False)
+            self._results = {k: v for k, v in self._results.items()
+                             if k[0] != evicted}
+
+    def _touch_token(self, token: Tuple, store=None,
+                     create: bool = True) -> None:
+        if token in self._engines:
+            self._engines.move_to_end(token)     # keep hot tokens alive
+            return
+        if create:
+            # identity-fallback tokens (('obj', id(store))) are only valid
+            # while the store object lives: pin it, or a recycled id could
+            # serve another graph's memoized scores
+            self._engines[token] = _StorePin(store)
+            self._evict()
+
     def _engine(self, store, token: Tuple):
         eng = self._engines.get(token)
-        if eng is None:
+        if eng is None or isinstance(eng, _StorePin):
             from repro.engines.grape import GrapeEngine
             eng = GrapeEngine(store, n_frags=self.n_frags,
                               use_kernels=self.use_kernels)
             self._engines[token] = eng
-            while len(self._engines) > self.max_snapshots:
-                evicted, _ = self._engines.popitem(last=False)
-                self._results = {k: v for k, v in self._results.items()
-                                 if k[0] != evicted}
-        else:
-            self._engines.move_to_end(token)     # LRU order on reuse
+            self._evict()
+        self._engines.move_to_end(token)         # LRU order on reuse
         return eng
 
     def run(self, store, name: str, args: Sequence[Any] = (),
             kwargs: Optional[Dict[str, Any]] = None) -> np.ndarray:
-        """Execute (or reuse) one algorithm against one store snapshot;
+        """Execute (or reuse) one procedure against one store snapshot;
         returns the dense per-vertex result, length ``store.n_vertices``."""
         spec = self.spec(name)
         canon = spec.canonical_args(args, kwargs)
+        infer_fn = None
+        if spec.name == GNN_INFER:
+            entry = self._models.get(canon[0])
+            if entry is None:
+                raise KeyError(f"no model {canon[0]!r} registered for "
+                               f"gnn.infer; registered: "
+                               f"{sorted(self._models)}")
+            infer_fn, version = entry
+            canon = (canon[0], version)
         token = snapshot_token(store)
         key = (token, spec.name, canon)
         cached = self._results.get(key)
         if cached is not None:
             self.stats.hits += 1
-            if token in self._engines:
-                self._engines.move_to_end(token)   # keep hot tokens alive
+            self._touch_token(token, create=False)
             return cached
         self.stats.misses += 1
-        engine = self._engine(store, token)
-        result = np.asarray(spec.runner(engine, *canon))
+        if infer_fn is not None:
+            # LRU slot pinning the store; no GRAPE engine needed
+            self._touch_token(token, store)
+            result = np.asarray(infer_fn(store))
+        else:
+            engine = self._engine(store, token)
+            result = np.asarray(spec.runner(engine, *canon))
         result = result[:store.n_vertices]        # drop fragment padding
         self._results[key] = result
         return result
 
     def clear(self, results_only: bool = True) -> None:
         """Drop memoized fixpoints; with ``results_only=False`` also drop
-        the per-snapshot engines (full cold start, re-partitions)."""
+        the per-snapshot engines (full cold start, re-partitions).
+        Registered models survive — they are registrations, not caches
+        (``unregister_model`` removes one)."""
         self._results.clear()
         if not results_only:
             self._engines.clear()

@@ -1,0 +1,292 @@
+"""Device-resident GNN sampling on the partitioned fragment substrate
+(DESIGN.md §10).
+
+The learning stack's sampling hot path, rebuilt on the same storage + kernel
+layer the query engines use: the adjacency is range-partitioned into F
+fragments of owned vertex rows (the ``engines/frontier.py`` fragment model),
+each fragment holding the per-vertex pull-ELL *sampling slab* of its owned
+rows plus the owned slice of the vertex feature matrix. One layered
+GraphSAGE batch — fixed-fanout draws per hop, feature gather per frontier —
+executes as ONE jitted device program:
+
+    hop l:   nbrs[m, k] = draw(slab_row(frontier[m]), u_l[m, k])
+    gather:  feats[m]   = features[frontier[m]]        (0-rows for PAD)
+
+Fragment execution mirrors the frontier executor's exchange rules
+(DESIGN.md §9): under a mesh, each fragment computes draws/features only
+for the frontier entries whose vertex it owns and the disjoint
+contributions combine with a single ``psum`` across the ``data`` axis
+under ``shard_map``; on ONE device the same range partition collapses to
+a stacked reshape — fragment f's row r IS global row ``f·v_per + r`` — so
+the default single-device path (``exchange="stacked"``) draws and gathers
+against the flat stacked tables directly, with no per-fragment mask
+arithmetic on the hot path. ``exchange="psum"`` keeps the owned-slice
+exchange arithmetic selectable on one device so the differential suite
+(``tests/test_sampler_diff.py``) can pin stacked ≡ psum ≡ oracle for
+F ∈ {1, 2, 4}. Draws ride the psum exchange as ``nbr + 1`` with 0 for
+unowned entries, so the sum minus one recovers the owner's draw and
+leaves ``PAD_SENTINEL`` (−1) for invalid seeds and isolated vertices —
+the stack-wide padding contract (``storage/partition.py``).
+
+Randomness is a threaded ``jax.random`` key: hop l draws its uniforms from
+``fold_in(key, l)`` over the FULL frontier (replicated across fragments), so
+results are bit-identical for any F and either exchange — the property the
+differential suite pins against the numpy ``sampler_ref`` oracle.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.sampler import (SLAB_VMEM_BYTES, csr_to_sample_ell,
+                                   layer_uniforms, sample_csr_jnp,
+                                   sample_ell, sample_ell_jnp,
+                                   sample_ell_width)
+from repro.storage.grin import GRINAdapter, LEARNING_REQUIRED
+from repro.storage.partition import PAD_SENTINEL
+
+EXCHANGES = ("stacked", "psum")
+
+# ceiling for the dense [F, v_per, W] psum-exchange slab (per §9's fragment
+# model it is O(N·d_max)); beyond this, construction refuses with a pointer
+# at the O(E) stacked path rather than OOM-ing mid-__init__
+PSUM_SLAB_LIMIT_BYTES = 2 ** 31
+
+
+class FragmentSampleExecutor:
+    """Layered fixed-fanout sampling + feature gather over F fragments."""
+
+    def __init__(self, store, n_frags: int = 1, mesh=None,
+                 feature_prop: str = "feat",
+                 label_prop: Optional[str] = None,
+                 use_kernels: bool = False,
+                 interpret: Optional[bool] = None, pg=None,
+                 exchange: str = "stacked"):
+        # ``pg`` shares the query engines' PropertyGraph adjacency caches so
+        # learning runs off the same partitioned store as traversal
+        if pg is not None:
+            store = pg.grin.store
+            indptr, indices, _ = pg.sliced_csr(None, "out")
+        else:
+            indptr, indices = store.adjacency()
+        grin = GRINAdapter(store, LEARNING_REQUIRED)
+        self.store = store
+        n = grin.n_vertices
+        self.n_vertices = n
+        self.mesh = mesh
+        if mesh is not None:
+            if "data" not in mesh.axis_names:
+                raise ValueError(
+                    "FragmentSampleExecutor shard_maps fragments over the "
+                    f"'data' mesh axis; mesh has {mesh.axis_names}")
+            n_frags = int(mesh.shape["data"])
+        if exchange not in EXCHANGES:
+            raise ValueError(f"unknown exchange {exchange!r}; "
+                             f"one of {EXCHANGES}")
+        self.exchange = "psum" if mesh is not None else exchange
+        self.n_frags = n_frags
+        self.v_per = -(-n // n_frags)
+        # the Pallas slab path needs stacking-free per-fragment dispatch;
+        # under a mesh the hop runs the jnp form inside shard_map (the same
+        # rule as FragmentFrontierExecutor)
+        self.use_kernels = use_kernels and mesh is None
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        self.interpret = interpret
+
+        F, vp = self.n_frags, self.v_per
+        deg = np.diff(indptr).astype(np.int32)
+        feats = np.asarray(grin.vertex_prop(feature_prop), np.float32)
+        if feats.ndim == 1:
+            feats = feats[:, None]
+        self.feature_dim = feats.shape[1]
+        lab = None
+        if label_prop is not None:
+            lab = np.asarray(grin.vertex_prop(label_prop)).astype(np.int32)
+        # the Pallas kernel needs the whole slab VMEM-resident; gate on the
+        # lane-aligned slab size BEFORE anything is allocated
+        W = sample_ell_width(deg)
+        if self.use_kernels:
+            self.use_kernels = n * W * 4 <= SLAB_VMEM_BYTES
+
+        if self.exchange == "psum":
+            # the fragment model is dense per owned row (the §9 ELL
+            # convention) — O(N·d_max); refuse absurd builds BEFORE the
+            # slab is materialized, with a pointer at the O(E) path
+            slab_bytes = F * vp * W * 4
+            if slab_bytes > PSUM_SLAB_LIMIT_BYTES:
+                raise ValueError(
+                    f"psum fragment slab would be {slab_bytes / 2**30:.1f} "
+                    f"GiB ([{F}, {vp}, {W}] int32); this graph's "
+                    "max degree is too skewed for the dense fragment "
+                    "exchange — use exchange='stacked' (O(E) CSR draws) "
+                    "or raise repro.engines.sample.PSUM_SLAB_LIMIT_BYTES")
+            ell, _ = csr_to_sample_ell(indptr, indices)
+            self._W = ell.shape[1]
+            # fragment-stacked tables: [F, v_per, ...] owned slices
+            f_ell = np.full((F, vp, self._W), PAD_SENTINEL, np.int32)
+            f_deg = np.zeros((F, vp), np.int32)
+            f_feat = np.zeros((F, vp, self.feature_dim), np.float32)
+            f_lab = None if lab is None else np.zeros((F, vp), np.int32)
+            for f in range(F):
+                lo, hi = f * vp, min((f + 1) * vp, n)
+                if hi <= lo:                    # fragment past the last row
+                    continue
+                f_ell[f, :hi - lo] = ell[lo:hi]
+                f_deg[f, :hi - lo] = deg[lo:hi]
+                f_feat[f, :hi - lo] = feats[lo:hi]
+                if f_lab is not None:
+                    f_lab[f, :hi - lo] = lab[lo:hi]
+            self.ell = jnp.asarray(f_ell)
+            self.deg = jnp.asarray(f_deg)
+            self.feats = jnp.asarray(f_feat)
+            self.labels = None if f_lab is None else jnp.asarray(f_lab)
+            self.starts = jnp.arange(F, dtype=jnp.int32) * vp
+        else:
+            # stacked-reshape fast path: the F fragments ARE rows
+            # [0, n) of the flat tables (range partition is contiguous);
+            # ids < 0 or ≥ n gather the all-zero pad row n. Draws come
+            # straight off CSR at O(E) memory — the dense [N, max_deg]
+            # slab (an O(N·d_max) blowup on power-law graphs) is built
+            # only for the Pallas-kernel path, which the VMEM gate bounds
+            self.deg = jnp.asarray(deg)
+            if self.use_kernels:
+                ell, _ = csr_to_sample_ell(indptr, indices)
+                self.ell = jnp.asarray(ell)
+                self.csr_starts = self.csr_indices = None
+            else:
+                self.ell = None
+                self.csr_starts = jnp.asarray(indptr[:-1].astype(np.int32))
+                # one trailing sentinel: degree-0 tail rows gather
+                # in-bounds (masked by deg == 0 anyway)
+                self.csr_indices = jnp.asarray(np.concatenate(
+                    [indices, [PAD_SENTINEL]]).astype(np.int32))
+            feats_pad = np.zeros((n + 1, self.feature_dim), np.float32)
+            feats_pad[:n] = feats
+            self.feats = jnp.asarray(feats_pad)
+            self.labels = None
+            if lab is not None:
+                lab_pad = np.zeros(n + 1, np.int32)
+                lab_pad[:n] = lab
+                self.labels = jnp.asarray(lab_pad)
+        self._jit_sample = jax.jit(self._sample_impl,
+                                   static_argnames=("fanouts",))
+
+    # ------------------------------------------------------------ one hop
+    def _frag_draws(self, ell, deg, start, ids, u):
+        """One fragment's exchange contribution: draws for owned frontier
+        entries as ``nbr + 1``, 0 elsewhere (psum-combinable)."""
+        local = ids - start
+        owned = (ids >= 0) & (local >= 0) & (local < self.v_per)
+        rows = jnp.where(owned, local, -1).astype(jnp.int32)
+        if self.use_kernels:
+            nbr = sample_ell(ell, deg, rows, u, interpret=self.interpret)
+        else:
+            nbr = sample_ell_jnp(ell, deg, rows, u)
+        return jnp.where(nbr >= 0, nbr + 1, 0)
+
+    def _layer(self, ids: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+        """ids [M] global (< 0 ⇒ PAD), u [M, K] → sampled neighbors [M, K]."""
+        if self.mesh is not None:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+
+            def frag_fn(ell, deg, start, ids, u):
+                # disjoint owned seeds: psum is the fragment exchange
+                # (use_kernels is forced off under a mesh, so _frag_draws
+                # runs the jnp form here)
+                contrib = self._frag_draws(ell[0], deg[0], start[0], ids, u)
+                return jax.lax.psum(contrib, "data")[None]
+
+            fn = shard_map(frag_fn, mesh=self.mesh,
+                           in_specs=(P("data"), P("data"), P("data"),
+                                     P(), P()),
+                           out_specs=P("data"))
+            return fn(self.ell, self.deg, self.starts, ids, u)[0] - 1
+
+        if self.exchange == "psum":
+            acc = self._frag_draws(self.ell[0], self.deg[0], 0, ids, u)
+            for f in range(1, self.n_frags):
+                acc = acc + self._frag_draws(self.ell[f], self.deg[f],
+                                             f * self.v_per, ids, u)
+            return acc - 1
+
+        # stacked fast path: one draw against the flat tables; out-of-range
+        # ids (< 0 or ≥ n) become invalid rows, matching the psum contract
+        rows = jnp.where((ids >= 0) & (ids < self.n_vertices), ids,
+                         -1).astype(jnp.int32)
+        if self.use_kernels:
+            return sample_ell(self.ell, self.deg, rows, u,
+                              interpret=self.interpret)
+        return sample_csr_jnp(self.csr_starts, self.deg, self.csr_indices,
+                              rows, u)
+
+    # ------------------------------------------------------ feature gather
+    def _frag_gather(self, table, start, ids):
+        """One fragment's owned rows of a [v_per, ...] sharded table."""
+        local = ids - start
+        owned = (ids >= 0) & (local >= 0) & (local < self.v_per)
+        safe = jnp.clip(local, 0, self.v_per - 1)
+        rows = jnp.take(table, safe, axis=0)
+        mask = owned.reshape((-1,) + (1,) * (rows.ndim - 1))
+        return rows * mask.astype(rows.dtype)
+
+    def _gather(self, table_stacked, ids: jnp.ndarray) -> jnp.ndarray:
+        """Cross-fragment gather of sharded per-vertex data (features or
+        labels): psum of disjoint owned slices; PAD ids get zero rows. On
+        the stacked path the same contract is one padded-row take."""
+        if self.mesh is not None:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+
+            def frag_fn(table, start, ids):
+                rows = self._frag_gather(table[0], start[0], ids)
+                return jax.lax.psum(rows, "data")[None]
+
+            fn = shard_map(frag_fn, mesh=self.mesh,
+                           in_specs=(P("data"), P("data"), P()),
+                           out_specs=P("data"))
+            return fn(table_stacked, self.starts, ids)[0]
+
+        if self.exchange == "psum":
+            acc = self._frag_gather(table_stacked[0], 0, ids)
+            for f in range(1, self.n_frags):
+                acc = acc + self._frag_gather(table_stacked[f],
+                                              f * self.v_per, ids)
+            return acc
+
+        # stacked fast path: invalid ids hit the all-zero pad row n
+        safe = jnp.where((ids >= 0) & (ids < self.n_vertices), ids,
+                         self.n_vertices).astype(jnp.int32)
+        return jnp.take(table_stacked, safe, axis=0)
+
+    def gather_features(self, ids) -> jnp.ndarray:
+        """[M] global vertex ids → [M, D] features (0-rows for PAD ids)."""
+        return self._gather(self.feats, jnp.asarray(ids, jnp.int32))
+
+    # ------------------------------------------------------------- batch
+    def _sample_impl(self, seeds, key, fanouts: Tuple[int, ...]):
+        frontiers = [seeds.astype(jnp.int32)]
+        layers = []
+        for l, k in enumerate(fanouts):
+            u = layer_uniforms(key, l, frontiers[-1].shape[0], k)
+            nbrs = self._layer(frontiers[-1], u)
+            layers.append(nbrs)
+            frontiers.append(nbrs.reshape(-1))
+        feats = [self._gather(self.feats, fr) for fr in frontiers]
+        labels = (self._gather(self.labels, frontiers[0])
+                  if self.labels is not None else None)
+        return layers, feats, labels
+
+    def sample(self, seeds, key, fanouts: Sequence[int]):
+        """One jitted layered batch: seeds [B] → (layers, feats, labels).
+
+        layers[l]: [B·∏f[:l], f[l]] int32 draws (PAD_SENTINEL for invalid);
+        feats[l]: frontier-l features [B·∏f[:l], D]; labels [B] int32 (None
+        without a label property). All device-resident jnp arrays."""
+        seeds = jnp.asarray(np.asarray(seeds, np.int32))
+        return self._jit_sample(seeds, key, tuple(int(f) for f in fanouts))

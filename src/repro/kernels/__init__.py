@@ -10,6 +10,10 @@
                         distributed-traversal hop: a whole admission batch's
                         [B, N] path-count matrix through one EXPAND;
                         DESIGN.md §9)
+- ``sampler``         — batched fixed-fanout neighbor sampling over the
+                        per-vertex pull-ELL sampling slab (the GraphLearn
+                        hot loop: threaded-key uniforms → unbiased
+                        floor-multiply draws; DESIGN.md §10)
 
 Edge padding everywhere uses ``storage.partition.PAD_SENTINEL``.
 

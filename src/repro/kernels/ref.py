@@ -7,6 +7,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
@@ -50,6 +51,29 @@ def frontier_ref(indices: jnp.ndarray, weights: jnp.ndarray,
     vals = jnp.where((indices >= 0)[None], g * weights.astype(jnp.float32),
                      0.0)
     return jnp.sum(vals, axis=2)
+
+
+def sampler_ref(ell_idx: np.ndarray, deg: np.ndarray, rows: np.ndarray,
+                u: np.ndarray) -> np.ndarray:
+    """NumPy fixed-fanout neighbor-sampling oracle (``kernels/sampler.py``).
+
+    ell_idx [R, W] / deg [R]: per-vertex sampling slab (pad < 0);
+    rows [M] slab rows (out of [0, R) ⇒ no draw); u [M, K] float32
+    uniforms → [M, K] int32 draws, −1 (PAD_SENTINEL) for invalid/isolated
+    rows. Shares the kernel's exact float32 floor-multiply arithmetic, so
+    comparisons against the device sampler are bit-exact, not statistical.
+    """
+    ell_idx = np.asarray(ell_idx)
+    rows = np.asarray(rows)
+    u = np.asarray(u, np.float32)
+    in_range = (rows >= 0) & (rows < ell_idx.shape[0])
+    safe = np.where(in_range, rows, 0).astype(np.int64)
+    d = np.asarray(deg, np.int32)[safe][:, None]                # [M, 1]
+    col = np.minimum((u * d.astype(np.float32)).astype(np.int32),
+                     np.maximum(d - 1, 0))
+    nbr = np.take_along_axis(ell_idx[safe], col, axis=1)
+    valid = in_range[:, None] & (d > 0)
+    return np.where(valid, nbr, -1).astype(np.int32)
 
 
 def segment_sum_ref(vals: jnp.ndarray, segs: jnp.ndarray,

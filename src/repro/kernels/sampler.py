@@ -1,0 +1,170 @@
+"""Pallas TPU batched fixed-fanout neighbor sampling — the GraphLearn hot
+loop (DESIGN.md §10).
+
+One sampling hop draws ``fanout`` neighbors (with replacement) for a batch
+of seed vertices against a *sampling slab*: a pull-ELL layout with exactly
+one row per vertex (``csr_to_sample_ell`` — NO row splitting, unlike
+``csr_to_ell``, because the sampler indexes slab rows by vertex id) plus a
+dense degree vector. Like ``frontier.py`` the kernel is a pure gather — no
+scatter, no dynamic shapes:
+
+    col[m, k]  = min(floor(u[m, k] · deg[row_m]), deg[row_m] − 1)
+    out[m, k]  = ell_idx[row_m, col[m, k]]        (PAD_SENTINEL if invalid)
+
+The uniforms ``u ∈ [0, 1)`` come from a threaded ``jax.random`` key
+(``layer_uniforms`` is the per-hop key-folding contract), so draws are
+reproducible and the floor-multiply draw is free of the modulo bias of
+``bits % deg``. Because kernel, jnp fallback and the numpy ``sampler_ref``
+oracle share this exact float32 arithmetic, differential tests compare
+bit-exactly, not statistically. Padding follows the stack-wide contract:
+``ell_idx == PAD_SENTINEL`` (< 0) marks missing entries, rows with
+``deg == 0`` (isolated vertices) and invalid seed rows (``row < 0``) yield
+``PAD_SENTINEL`` draws; real vertex ids — including vertex 0 — are never
+negative, so edges *into vertex 0* survive the padding.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.storage.partition import PAD_SENTINEL
+
+# the Pallas kernel keeps the WHOLE [R, W] slab VMEM-resident (one block);
+# callers must fall back to the jnp/CSR path for slabs that cannot fit —
+# ~8 MB leaves headroom under a ~16 MB/core TPU VMEM budget
+SLAB_VMEM_BYTES = 8 * 2 ** 20
+
+
+def sample_ell_width(deg: np.ndarray) -> int:
+    """The slab width ``csr_to_sample_ell`` will use for a degree vector:
+    lane-aligned max degree. One rule, shared with size gates — computable
+    without allocating anything."""
+    W = int(deg.max()) if len(deg) else 0
+    W = max(1, W)
+    return -(-W // 128) * 128 if W > 128 else W   # lane alignment
+
+
+def csr_to_sample_ell(indptr: np.ndarray, indices: np.ndarray
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """CSR → (ell_idx [N, W], deg [N]) sampling slab (host-side, once).
+
+    Row r holds vertex r's neighbors in CSR order, padded to the
+    lane-aligned max degree with ``PAD_SENTINEL``."""
+    n = len(indptr) - 1
+    deg = np.diff(indptr).astype(np.int32)
+    W = sample_ell_width(deg)
+    ell = np.full((n, W), PAD_SENTINEL, np.int32)
+    if len(indices):
+        rows = np.repeat(np.arange(n), deg)
+        cols = np.arange(len(indices)) - np.repeat(indptr[:-1], deg)
+        ell[rows, cols] = indices
+    return ell, deg
+
+
+def layer_uniforms(key, layer: int, m: int, fanout: int) -> jnp.ndarray:
+    """The reproducible per-hop uniforms contract shared by the engine and
+    the differential tests: hop ``layer`` draws ``[m, fanout]`` float32
+    uniforms from ``fold_in(key, layer)``."""
+    return jax.random.uniform(jax.random.fold_in(key, layer),
+                              (m, fanout), jnp.float32)
+
+
+def _sampler_kernel(idx_ref, deg_ref, rows_ref, u_ref, out_ref):
+    idx = idx_ref[...]                          # [R, W] int32 (VMEM resident)
+    deg = deg_ref[...]                          # [1, R] int32
+    rows = rows_ref[...]                        # [block_m, 1] int32
+    u = u_ref[...]                              # [block_m, K] f32
+    in_range = (rows >= 0) & (rows < idx.shape[0])
+    safe = jnp.where(in_range, rows, 0)[:, 0]   # invalid rows gather row 0,
+    d = jnp.take(deg[0], safe)[:, None]         # masked below
+    col = jnp.minimum((u * d.astype(jnp.float32)).astype(jnp.int32),
+                      jnp.maximum(d - 1, 0))    # [block_m, K]
+    # TPU dynamic gather: flatten the slab, one 1-D take per block
+    pos = safe[:, None] * idx.shape[1] + col
+    nbr = jnp.take(idx.reshape(-1), pos.reshape(-1)).reshape(pos.shape)
+    valid = in_range & (d > 0)                  # [block_m, 1]
+    out_ref[...] = jnp.where(valid, nbr, PAD_SENTINEL)
+
+
+def sample_ell(ell_idx: jnp.ndarray, deg: jnp.ndarray, rows: jnp.ndarray,
+               u: jnp.ndarray, *, block_m: int = 256,
+               interpret: bool = False) -> jnp.ndarray:
+    """One sampling hop via the Pallas kernel.
+
+    ell_idx [R, W] / deg [R]: sampling slab; rows [M] slab-row ids (< 0 ⇒
+    no draw); u [M, K] uniforms in [0, 1) → out [M, K] int32 neighbor ids
+    (``PAD_SENTINEL`` where the row is invalid or isolated)."""
+    M, K = u.shape
+    if M == 0:
+        return jnp.full((0, K), PAD_SENTINEL, jnp.int32)
+    pad = (-M) % block_m
+    rows = rows.astype(jnp.int32)
+    if pad:
+        rows = jnp.concatenate([rows, jnp.full((pad,), -1, jnp.int32)])
+        u = jnp.concatenate([u, jnp.zeros((pad, K), u.dtype)])
+    Mp = M + pad
+    R = ell_idx.shape[0]
+    out = pl.pallas_call(
+        _sampler_kernel,
+        grid=(Mp // block_m,),
+        in_specs=[
+            pl.BlockSpec(ell_idx.shape, lambda r: (0, 0)),  # slab resident
+            pl.BlockSpec((1, R), lambda r: (0, 0)),
+            pl.BlockSpec((block_m, 1), lambda r: (r, 0)),
+            pl.BlockSpec((block_m, K), lambda r: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, K), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((Mp, K), jnp.int32),
+        interpret=interpret,
+    )(ell_idx, deg.reshape(1, -1).astype(jnp.int32),
+      rows.reshape(-1, 1), u.astype(jnp.float32))
+    return out[:M]
+
+
+def sample_ell_jnp(ell_idx: jnp.ndarray, deg: jnp.ndarray, rows: jnp.ndarray,
+                   u: jnp.ndarray) -> jnp.ndarray:
+    """Pure-jnp fallback with the kernel's exact float32 draw arithmetic.
+
+    Gathers by flat slab position (``row · W + col``, the kernel's own
+    addressing) rather than materializing whole ``[M, W]`` slab rows — at
+    fanout K ≪ W that's the difference between touching K and W entries
+    per draw row."""
+    in_range = (rows >= 0) & (rows < ell_idx.shape[0])
+    safe = jnp.where(in_range, rows, 0).astype(jnp.int32)
+    d = jnp.take(deg.astype(jnp.int32), safe)[:, None]          # [M, 1]
+    col = jnp.minimum((u.astype(jnp.float32)
+                       * d.astype(jnp.float32)).astype(jnp.int32),
+                      jnp.maximum(d - 1, 0))
+    pos = safe[:, None] * ell_idx.shape[1] + col
+    nbr = jnp.take(ell_idx.reshape(-1), pos)
+    valid = in_range[:, None] & (d > 0)
+    return jnp.where(valid, nbr, PAD_SENTINEL).astype(jnp.int32)
+
+
+def sample_csr_jnp(starts: jnp.ndarray, deg: jnp.ndarray,
+                   indices: jnp.ndarray, rows: jnp.ndarray,
+                   u: jnp.ndarray) -> jnp.ndarray:
+    """O(E)-memory draw straight off CSR, bit-identical to the slab paths.
+
+    An ELL slab row holds vertex r's neighbors in CSR order, so
+    ``indices[starts[r] + col] ≡ ell_idx[r, col]`` for every in-degree
+    column — same float32 floor-multiply ``col``, same result, without the
+    [N, max_degree] densification (160-800x memory on power-law graphs).
+    ``starts`` is ``indptr[:-1]``; ``indices`` should carry one trailing
+    sentinel element so degree-0 tail rows gather in-bounds (masked out
+    by ``deg == 0`` regardless)."""
+    in_range = (rows >= 0) & (rows < starts.shape[0])
+    safe = jnp.where(in_range, rows, 0).astype(jnp.int32)
+    d = jnp.take(deg.astype(jnp.int32), safe)[:, None]          # [M, 1]
+    col = jnp.minimum((u.astype(jnp.float32)
+                       * d.astype(jnp.float32)).astype(jnp.int32),
+                      jnp.maximum(d - 1, 0))
+    pos = jnp.take(starts.astype(jnp.int32), safe)[:, None] + col
+    nbr = jnp.take(indices, pos)
+    valid = in_range[:, None] & (d > 0)
+    return jnp.where(valid, nbr, PAD_SENTINEL).astype(jnp.int32)

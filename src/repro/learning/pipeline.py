@@ -9,7 +9,15 @@ Single-host adaptation preserving the architecture:
 - the trainer consumes from a prefetch cache; it blocks only when the
   channel is empty (sampler-bound) — the ratio of workers to one trainer is
   the paper's independent-scaling knob and is what the Exp-4 analogue
-  benchmark sweeps.
+  benchmark sweeps;
+- ``prefetch="device"`` moves each produced batch onto the accelerator from
+  the worker thread (``jax.device_put`` on every array leaf), so the
+  trainer's jitted step starts without a host→device copy on its critical
+  path — the paper's prefetch channel landing in device memory.
+
+Counters in ``stats`` are updated under a lock (workers race otherwise) and
+satisfy ``produced == consumed + drained`` after ``close()`` — the liveness
+tests in ``tests/test_learning.py`` pin both properties.
 """
 
 from __future__ import annotations
@@ -22,19 +30,52 @@ from typing import Any, Callable, Dict, List, Optional
 import numpy as np
 
 
+def _device_put_tree(batch):
+    """jax.device_put every ndarray leaf of a nested batch structure.
+
+    Descends through containers AND plain dataclasses (``SampledBatch`` is
+    not a registered pytree, so ``jax.tree_util`` alone would treat it as
+    one opaque leaf and silently skip the transfer)."""
+    import dataclasses
+
+    import jax
+
+    def put(x):
+        if isinstance(x, np.ndarray):
+            return jax.device_put(x)
+        if isinstance(x, dict):
+            return {k: put(v) for k, v in x.items()}
+        if isinstance(x, tuple) and hasattr(x, "_fields"):
+            return type(x)(*(put(v) for v in x))    # NamedTuple
+        if isinstance(x, (list, tuple)):
+            return type(x)(put(v) for v in x)
+        if dataclasses.is_dataclass(x) and not isinstance(x, type):
+            return dataclasses.replace(x, **{
+                f.name: put(getattr(x, f.name))
+                for f in dataclasses.fields(x)})
+        return x
+
+    return put(batch)
+
+
 class DecoupledPipeline:
     def __init__(self, sample_fn: Callable[[int], Any], n_workers: int = 2,
-                 depth: int = 8, seed: int = 0):
+                 depth: int = 8, seed: int = 0, prefetch: str = "host"):
+        if prefetch not in ("host", "device"):
+            raise ValueError(f"unknown prefetch mode {prefetch!r}")
         self._sample_fn = sample_fn
+        self._prefetch = prefetch
         self._q: "queue.Queue" = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
         self._lock = threading.Lock()
+        self._stats_lock = threading.Lock()
+        self._error: Optional[BaseException] = None
         self._next_step = 0
         self._workers = [
             threading.Thread(target=self._run, daemon=True)
             for _ in range(n_workers)
         ]
-        self.stats = {"produced": 0, "consumed": 0,
+        self.stats = {"produced": 0, "consumed": 0, "drained": 0,
                       "sampler_wait_s": 0.0, "trainer_wait_s": 0.0}
         for w in self._workers:
             w.start()
@@ -48,33 +89,80 @@ class DecoupledPipeline:
     def _run(self):
         while not self._stop.is_set():
             step = self._claim_step()
-            batch = self._sample_fn(step)
+            try:
+                batch = self._sample_fn(step)
+                if self._prefetch == "device":
+                    batch = _device_put_tree(batch)
+            except BaseException as e:           # noqa: BLE001 — a dying
+                # daemon worker would otherwise hang the trainer in get()
+                # until its full timeout with no hint of the real cause
+                with self._stats_lock:
+                    if self._error is None:
+                        self._error = e
+                self._stop.set()                 # stop siblings too
+                return
             t0 = time.perf_counter()
             while not self._stop.is_set():
                 try:
                     self._q.put((step, batch), timeout=0.05)
-                    self.stats["produced"] += 1
+                    with self._stats_lock:
+                        self.stats["produced"] += 1
                     break
                 except queue.Full:
                     continue
-            self.stats["sampler_wait_s"] += time.perf_counter() - t0
+            with self._stats_lock:
+                self.stats["sampler_wait_s"] += time.perf_counter() - t0
 
     def get(self, timeout: float = 120.0):
         t0 = time.perf_counter()
-        item = self._q.get(timeout=timeout)
-        self.stats["trainer_wait_s"] += time.perf_counter() - t0
-        self.stats["consumed"] += 1
+        deadline = t0 + timeout
+        while True:
+            try:
+                # short polls so a failed sampler surfaces promptly instead
+                # of after the trainer's full timeout
+                item = self._q.get(timeout=min(
+                    0.1, max(0.0, deadline - time.perf_counter())))
+                break
+            except queue.Empty:
+                if self._error is not None:
+                    raise RuntimeError(
+                        "sampler worker failed") from self._error
+                if time.perf_counter() >= deadline:
+                    raise
+        with self._stats_lock:
+            self.stats["trainer_wait_s"] += time.perf_counter() - t0
+            self.stats["consumed"] += 1
         return item
 
-    def close(self):
-        self._stop.set()
+    def _drain(self) -> int:
+        n = 0
         try:
             while True:
                 self._q.get_nowait()
+                n += 1
         except queue.Empty:
             pass
-        for w in self._workers:
-            w.join(timeout=2.0)
+        return n
+
+    def close(self, timeout: float = 5.0) -> bool:
+        """Stop workers and join them, draining the queue throughout so a
+        worker blocked on a full channel always unblocks. Returns True when
+        every worker terminated within ``timeout`` (a worker stuck inside a
+        long ``sample_fn`` call is left as a daemon)."""
+        self._stop.set()
+        drained = 0
+        deadline = time.monotonic() + timeout
+        alive = [w for w in self._workers if w.is_alive()]
+        while alive and time.monotonic() < deadline:
+            drained += self._drain()
+            for w in alive[:]:
+                w.join(timeout=0.05)
+                if not w.is_alive():
+                    alive.remove(w)
+        drained += self._drain()          # items put during the last joins
+        with self._stats_lock:
+            self.stats["drained"] += drained
+        return not alive
 
 
 def run_serial(sample_fn, train_fn, steps: int) -> float:
@@ -87,9 +175,10 @@ def run_serial(sample_fn, train_fn, steps: int) -> float:
 
 
 def run_pipelined(sample_fn, train_fn, steps: int, n_workers: int = 2,
-                  depth: int = 8) -> float:
+                  depth: int = 8, prefetch: str = "host") -> float:
     """Decoupled: samplers overlap training (the paper's design)."""
-    pipe = DecoupledPipeline(sample_fn, n_workers=n_workers, depth=depth)
+    pipe = DecoupledPipeline(sample_fn, n_workers=n_workers, depth=depth,
+                             prefetch=prefetch)
     t0 = time.perf_counter()
     try:
         for _ in range(steps):

@@ -1,8 +1,25 @@
-"""GNN trainer gluing sampler → pipeline → jitted update (paper §7)."""
+"""GNN trainer gluing sampler → pipeline → jitted update (paper §7).
+
+Two backends:
+
+- ``backend="numpy"`` — the paper's decoupled architecture: CPU sampler
+  workers produce host batches, the jitted update consumes them (optionally
+  through :class:`DecoupledPipeline`, with device prefetch).
+- ``backend="device"`` — sample → gather → SGD is ONE jitted device program
+  per step on the fragment substrate (``engines/sample.py``): no host numpy
+  round-trip per layer, draws keyed by ``fold_in(base_key, step)``.
+
+Trained models serve from queries through the procedure bridge:
+``register_inference`` freezes the current parameters into a
+``CALL gnn.infer($model)`` procedure (DESIGN.md §10) whose full-graph
+forward pass is deterministic under a fixed key — so serving scores equal
+the offline ``infer_scores`` of the same snapshot bit-for-bit.
+"""
 
 from __future__ import annotations
 
 import functools
+from collections import OrderedDict
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
@@ -17,7 +34,7 @@ from repro.learning.sampler import GraphSampler
 class SageTrainer:
     def __init__(self, sampler: GraphSampler, hidden: int, n_classes: int,
                  fanouts: Sequence[int], batch_size: int = 256,
-                 lr: float = 1e-2, seed: int = 0):
+                 lr: float = 1e-2, seed: int = 0, backend: str = "numpy"):
         self.sampler = sampler
         self.model = GraphSAGE(sampler.feature_dim, hidden, n_classes, fanouts)
         self.fanouts = tuple(fanouts)
@@ -25,7 +42,25 @@ class SageTrainer:
         self.lr = lr
         self.params = self.model.init(jax.random.PRNGKey(seed))
         self.rng = np.random.default_rng(seed)
+        if backend not in ("numpy", "device"):
+            raise ValueError(f"unknown trainer backend {backend!r}")
+        self.backend = backend
+        self._base_key = jax.random.PRNGKey(seed)
         self._update = jax.jit(self._update_fn)
+        self._executor = None
+        self._device_step = None
+        self._infer_runners: Dict[int, Tuple] = {}
+        # foreign-snapshot executors each pin a device copy of the feature
+        # matrix + sampling slab; LRU-bounded so a stream of MVCC snapshots
+        # served through gnn.infer cannot grow memory without bound
+        self._ext_executors: "OrderedDict[int, Tuple]" = OrderedDict()
+        self.max_ext_executors = 4
+        if backend == "device":
+            self._executor = sampler.device_executor()
+            if sampler.label_prop is None:
+                raise ValueError("backend='device' training needs the "
+                                 "sampler's label_prop")
+            self._device_step = jax.jit(self._device_step_fn)
 
     def sample(self, step: int) -> Dict[str, np.ndarray]:
         n = self.sampler.grin.n_vertices
@@ -52,11 +87,43 @@ class SageTrainer:
                                       batch["nbrs"], batch["labels"])
         return float(l)
 
+    # -------------------------------------------------- device-resident path
+    def _device_step_fn(self, params, step, seeds):
+        """sample → gather → SGD as one traced program (DESIGN.md §10).
+        The per-step key folds INSIDE the jit — an eager fold_in costs more
+        than the whole sampled batch on CPU."""
+        key = jax.random.fold_in(self._base_key, step)
+        layers, feats, labels = self._executor._sample_impl(
+            seeds, key, self.fanouts)
+
+        def loss(p):
+            return self.model.loss(p, feats, layers, labels)
+
+        l, g = jax.value_and_grad(loss)(params)
+        params = jax.tree_util.tree_map(lambda p, gg: p - self.lr * gg,
+                                        params, g)
+        return params, l
+
+    def train_step_device(self, step: int) -> float:
+        # same per-step seed schedule as the numpy path's ``sample``
+        rng = np.random.default_rng(step)
+        seeds = rng.integers(0, self._executor.n_vertices,
+                             self.batch_size).astype(np.int32)
+        self.params, l = self._device_step(self.params, np.uint32(step),
+                                           seeds)
+        return float(l)
+
     def train(self, steps: int, pipelined: bool = True,
-              n_workers: int = 2) -> Tuple[float, list]:
+              n_workers: int = 2, prefetch: str = "host"
+              ) -> Tuple[float, list]:
         losses = []
-        if pipelined:
-            pipe = DecoupledPipeline(self.sample, n_workers=n_workers)
+        if self.backend == "device":
+            # sampling lives inside the jitted step; nothing to pipeline
+            for step in range(steps):
+                losses.append(self.train_step_device(step))
+        elif pipelined:
+            pipe = DecoupledPipeline(self.sample, n_workers=n_workers,
+                                     prefetch=prefetch)
             try:
                 for _ in range(steps):
                     _, batch = pipe.get()
@@ -67,3 +134,84 @@ class SageTrainer:
             for step in range(steps):
                 losses.append(self.train_on(self.sample(step)))
         return losses[-1], losses
+
+    # ------------------------------------------------- query-serving bridge
+    def _executor_for(self, store):
+        """A sampling executor over ``store`` (the trainer's own store reuses
+        its engine; foreign snapshots get one each, LRU-cached by identity up
+        to ``max_ext_executors``)."""
+        if store is None or store is self.sampler.grin.store:
+            return self.sampler.device_executor()
+        cached = self._ext_executors.get(id(store))
+        if cached is not None and cached[0] is store:
+            self._ext_executors.move_to_end(id(store))
+            return cached[1]
+        from repro.engines.sample import FragmentSampleExecutor
+        ex = FragmentSampleExecutor(
+            store, n_frags=self.sampler.n_frags,
+            feature_prop=self.sampler.feature_prop, label_prop=None,
+            use_kernels=self.sampler.use_kernels)
+        self._ext_executors[id(store)] = (store, ex)
+        while len(self._ext_executors) > self.max_ext_executors:
+            _, (_, old_ex) = self._ext_executors.popitem(last=False)
+            self._infer_runners.pop(id(old_ex), None)
+        return ex
+
+    def _infer_runner(self, ex):
+        cached = self._infer_runners.get(id(ex))
+        if cached is not None and cached[0] is ex:
+            return cached[1]
+
+        def score(params, base_key, i, seeds):
+            key = jax.random.fold_in(base_key, i)
+            layers, feats, _ = ex._sample_impl(seeds, key, self.fanouts)
+            lg = self.model.logits(params, feats, layers)
+            return jnp.max(lg, axis=-1)          # max-logit confidence
+
+        fn = jax.jit(score)
+        self._infer_runners[id(ex)] = (ex, fn)
+        return fn
+
+    # the fixed serving chunk: draws fold per chunk index, so the grid must
+    # never move or offline scores would diverge from served ones
+    INFER_CHUNK = 2048
+
+    def infer_scores(self, store=None, params=None,
+                     key: int = 0) -> np.ndarray:
+        """Deterministic full-graph forward pass: per-vertex max-logit score
+        [N], neighbor draws keyed by ``fold_in(PRNGKey(key), chunk_index)``
+        on the fixed ``INFER_CHUNK`` grid — the exact computation
+        ``CALL gnn.infer`` serves, bit for bit."""
+        params = self.params if params is None else params
+        ex = self._executor_for(store)
+        n = ex.n_vertices
+        chunk = self.INFER_CHUNK
+        fn = self._infer_runner(ex)
+        base = jax.random.PRNGKey(key)
+        out = np.empty(n, np.float32)
+        for i, lo in enumerate(range(0, n, chunk)):
+            hi = min(lo + chunk, n)
+            seeds = np.full(chunk, -1, np.int32)
+            seeds[:hi - lo] = np.arange(lo, hi)
+            s = fn(params, base, np.uint32(i), seeds)
+            out[lo:hi] = np.asarray(s)[:hi - lo]
+        return out
+
+    def as_procedure(self, key: int = 0):
+        """Freeze the CURRENT parameters into a ``(store) → scores[N]``
+        serving function. Later training steps do NOT change an
+        already-created procedure — re-register to serve new parameters
+        (lifetime rules: DESIGN.md §10)."""
+        params = self.params
+
+        def infer_fn(store):
+            return self.infer_scores(store=store, params=params, key=key)
+
+        return infer_fn
+
+    def register_inference(self, registry, name: str = "default",
+                           key: int = 0) -> str:
+        """Register this model in a :class:`ProcedureRegistry` so queries
+        serve it: ``CALL gnn.infer($model) YIELD v, score``."""
+        registry.register_model(name, self.as_procedure(key))
+        return name

@@ -113,3 +113,218 @@ class TestTraining:
         scores = model.score(params, batch)
         assert scores.shape == (8,)
         assert np.isfinite(np.asarray(scores)).all()
+
+
+class TestPipelineLifecycle:
+    """Shutdown/liveness contract (ISSUE 4): close() always joins workers —
+    even when they are blocked on a full channel — and the counters satisfy
+    produced == consumed + drained afterwards."""
+
+    def test_close_joins_workers_under_full_queue(self):
+        pipe = DecoupledPipeline(lambda step: step, n_workers=3, depth=2)
+        deadline = time.time() + 5
+        while pipe.stats["produced"] < 2 and time.time() < deadline:
+            time.sleep(0.01)                 # channel fills; workers block
+        assert pipe.close() is True
+        assert all(not w.is_alive() for w in pipe._workers)
+        s = pipe.stats
+        assert s["produced"] == s["consumed"] + s["drained"]
+
+    def test_stats_conserved_under_concurrency(self):
+        pipe = DecoupledPipeline(lambda step: step, n_workers=4, depth=8)
+        for _ in range(100):
+            pipe.get()
+        assert pipe.close() is True
+        s = pipe.stats
+        assert s["consumed"] == 100
+        assert s["produced"] == s["consumed"] + s["drained"]
+
+    def test_trainer_starved_regime_terminates(self):
+        """Slow sampler, eager trainer: the trainer blocks in get(); close()
+        still joins the worker once its in-flight sample returns."""
+        def slow_sample(step):
+            time.sleep(0.05)
+            return step
+
+        pipe = DecoupledPipeline(slow_sample, n_workers=1, depth=4)
+        step, _ = pipe.get(timeout=10.0)
+        assert step == 0
+        assert pipe.close() is True
+        assert pipe.stats["trainer_wait_s"] > 0
+
+    def test_sampler_starved_regime_terminates(self):
+        """Eager samplers, slow trainer: workers park on the full channel
+        and accumulate sampler_wait; close() drains and joins them."""
+        pipe = DecoupledPipeline(lambda step: step, n_workers=2, depth=1)
+        pipe.get(timeout=10.0)
+        time.sleep(0.1)                       # let both workers block on put
+        assert pipe.close() is True
+        assert pipe.stats["sampler_wait_s"] > 0
+        assert pipe.stats["produced"] == (pipe.stats["consumed"]
+                                          + pipe.stats["drained"])
+
+    def test_device_prefetch_batches_are_device_resident(self):
+        def sample(step):
+            return {"x": np.ones(4, np.float32), "step": step}
+
+        pipe = DecoupledPipeline(sample, n_workers=1, depth=2,
+                                 prefetch="device")
+        try:
+            _, batch = pipe.get(timeout=10.0)
+            assert isinstance(batch["x"], jax.Array)
+            np.testing.assert_array_equal(np.asarray(batch["x"]), np.ones(4))
+        finally:
+            pipe.close()
+
+    def test_invalid_prefetch_mode_rejected(self):
+        with pytest.raises(ValueError):
+            DecoupledPipeline(lambda s: s, prefetch="nope")
+
+    def test_run_pipelined_device_prefetch(self):
+        seen = []
+        t = run_pipelined(lambda s: np.full(2, s, np.float32),
+                          lambda b: seen.append(np.asarray(b).sum()),
+                          steps=6, n_workers=2, prefetch="device")
+        assert t > 0 and len(seen) == 6
+
+
+class TestDeviceTraining:
+    def test_device_loss_decreases(self, featured_graph):
+        s = GraphSampler(featured_graph, label_prop="label",
+                         backend="device")
+        tr = SageTrainer(s, hidden=32, n_classes=2, fanouts=[5, 3],
+                         batch_size=128, lr=0.1, seed=0, backend="device")
+        _, losses = tr.train(40)
+        assert np.mean(losses[-5:]) < losses[0] * 0.8
+
+    def test_device_backend_requires_labels(self, featured_graph):
+        s = GraphSampler(featured_graph, backend="device")
+        with pytest.raises(ValueError):
+            SageTrainer(s, hidden=8, n_classes=2, fanouts=[3],
+                        backend="device")
+
+    def test_invalid_backends_rejected(self, featured_graph):
+        with pytest.raises(ValueError):
+            GraphSampler(featured_graph, backend="gpu")
+        s = GraphSampler(featured_graph, label_prop="label")
+        with pytest.raises(ValueError):
+            SageTrainer(s, hidden=8, n_classes=2, fanouts=[3],
+                        backend="quantum")
+
+    def test_device_batch_shares_host_contract(self, featured_graph):
+        """backend="device" sample_batch returns the host SampledBatch
+        layout: same shapes/dtypes, identical labels, -1 padding."""
+        sd = GraphSampler(featured_graph, label_prop="label",
+                          backend="device")
+        sh = GraphSampler(featured_graph, label_prop="label")
+        bd = sd.sample_batch(np.arange(8), [3, 2])
+        bh = sh.sample_batch(np.arange(8), [3, 2])
+        assert [l.shape for l in bd.layers] == [l.shape for l in bh.layers]
+        assert [f.shape for f in bd.features] == \
+            [f.shape for f in bh.features]
+        assert all(l.dtype == np.int64 for l in bd.layers)
+        assert all(f.dtype == np.float32 for f in bd.features)
+        np.testing.assert_array_equal(bd.labels, bh.labels)
+        indptr, indices = featured_graph.adjacency()
+        for i in range(8):
+            nbrs = set(indices[indptr[i]:indptr[i + 1]].tolist())
+            assert set(int(x) for x in bd.layers[0][i] if x >= 0) <= nbrs
+
+    def test_device_trainer_reproducible(self, featured_graph):
+        mk = lambda: SageTrainer(
+            GraphSampler(featured_graph, label_prop="label",
+                         backend="device"),
+            hidden=16, n_classes=2, fanouts=[4, 2], batch_size=32,
+            lr=0.05, seed=9, backend="device")
+        a, b = mk(), mk()
+        la = [a.train_step_device(i) for i in range(3)]
+        lb = [b.train_step_device(i) for i in range(3)]
+        assert la == lb
+
+
+class TestReviewRegressions:
+    def test_device_prefetch_descends_into_sampled_batch(self, featured_graph):
+        """SampledBatch is a plain dataclass, not a registered pytree:
+        prefetch="device" must still land its array fields on device."""
+        s = GraphSampler(featured_graph, label_prop="label")
+        pipe = DecoupledPipeline(
+            lambda step: s.sample_batch(np.arange(8), [3, 2]),
+            n_workers=1, depth=2, prefetch="device")
+        try:
+            _, batch = pipe.get(timeout=10.0)
+            assert all(isinstance(l, jax.Array) for l in batch.layers)
+            assert all(isinstance(f, jax.Array) for f in batch.features)
+            assert isinstance(batch.labels, jax.Array)
+        finally:
+            pipe.close()
+
+    def test_concurrent_device_sampling_unique_steps(self, featured_graph):
+        """Pipeline workers draw through one device sampler: every batch
+        must come from a distinct fold_in step (no replayed keys)."""
+        s = GraphSampler(featured_graph, label_prop="label",
+                         backend="device", seed=0)
+        pipe = DecoupledPipeline(
+            lambda step: s.sample_batch(np.arange(64), [15]),
+            n_workers=4, depth=4)
+        try:
+            batches = [pipe.get(timeout=30.0)[1] for _ in range(12)]
+        finally:
+            pipe.close()
+        fingerprints = {b.layers[0].tobytes() for b in batches}
+        assert len(fingerprints) == 12
+
+    def test_foreign_executor_cache_is_bounded(self, featured_graph):
+        s = GraphSampler(featured_graph, label_prop="label",
+                         backend="device")
+        tr = SageTrainer(s, hidden=8, n_classes=2, fanouts=[3],
+                         batch_size=16, backend="device")
+        stores = []
+        for i in range(tr.max_ext_executors + 3):
+            g = rmat_store(scale=5, edge_factor=4, seed=i)
+            rng = np.random.default_rng(i)
+            g._vprops["feat"] = rng.standard_normal(
+                (g.n_vertices, 16)).astype(np.float32)
+            stores.append(g)
+            tr.infer_scores(store=g)
+        assert len(tr._ext_executors) == tr.max_ext_executors
+        assert len(tr._infer_runners) <= tr.max_ext_executors + 1
+
+    def test_infer_scores_chunk_grid_fixed(self, featured_graph):
+        """Serving equality is unconditional: infer_scores exposes no chunk
+        knob that could move the fold_in grid away from the served path."""
+        import inspect
+
+        assert "chunk" not in inspect.signature(
+            SageTrainer.infer_scores).parameters
+
+    def test_device_prefetch_handles_namedtuples(self):
+        """NamedTuple batches must reconstruct field-wise — the generic
+        tuple rebuild would pass one generator to the N-field ctor."""
+        from typing import NamedTuple
+
+        class Batch(NamedTuple):
+            x: np.ndarray
+            tag: str
+
+        pipe = DecoupledPipeline(
+            lambda step: Batch(np.ones(3, np.float32), "b"),
+            n_workers=1, depth=2, prefetch="device")
+        try:
+            _, batch = pipe.get(timeout=10.0)
+            assert isinstance(batch, Batch)
+            assert isinstance(batch.x, jax.Array) and batch.tag == "b"
+        finally:
+            pipe.close()
+
+    def test_failed_sampler_surfaces_promptly(self):
+        """A sampler worker that raises must not hang the trainer for the
+        full get() timeout — the error propagates with the real cause."""
+        def bad_sample(step):
+            raise RuntimeError("boom")
+
+        pipe = DecoupledPipeline(bad_sample, n_workers=2, depth=2)
+        t0 = time.time()
+        with pytest.raises(RuntimeError, match="sampler worker failed"):
+            pipe.get(timeout=60.0)
+        assert time.time() - t0 < 10        # surfaced early, not at timeout
+        assert pipe.close() is True

@@ -286,3 +286,161 @@ class TestSnapshotPinning:
         r3, _ = svc1b.serve([(q, {})])
         np.testing.assert_allclose(r3[0].result["c"], r1[0].result["c"])
         assert reg.stats.hits == 1
+
+
+class TestGnnInferBridge:
+    """The learning↔query bridge (DESIGN.md §10): trained models served as
+    ``CALL gnn.infer($model)`` through the same registry/memoization path
+    as the GRAPE procedures."""
+
+    @pytest.fixture(scope="class")
+    def trained(self):
+        from repro.learning.sampler import GraphSampler
+        from repro.learning.trainer import SageTrainer
+        from repro.storage.generators import rmat_store
+
+        g = rmat_store(scale=7, edge_factor=8, seed=3)
+        n = g.n_vertices
+        rng = np.random.default_rng(0)
+        g._vprops["feat"] = rng.standard_normal((n, 8)).astype(np.float32)
+        g._vprops["label"] = rng.integers(0, 2, n).astype(np.int32)
+        s = GraphSampler(g, label_prop="label", backend="device")
+        tr = SageTrainer(s, hidden=16, n_classes=2, fanouts=[4, 3],
+                         batch_size=64, lr=0.1, seed=0, backend="device")
+        tr.train(10)
+        reg = ProcedureRegistry()
+        tr.register_inference(reg, "sage")
+        return g, tr, reg
+
+    def test_call_equals_offline_forward(self, trained):
+        """Acceptance bar: CALL gnn.infer scores == the offline trainer's
+        forward pass on the same snapshot, bit for bit."""
+        g, tr, reg = trained
+        served = reg.run(g, "gnn.infer", ("sage",))
+        np.testing.assert_array_equal(served, tr.infer_scores())
+
+    def test_service_roundtrip_matches_offline(self, trained):
+        g, tr, reg = trained
+        svc = QueryService(g, procedures=reg)
+        resps, stats = svc.serve([
+            ("CALL gnn.infer('sage') YIELD v, score "
+             "RETURN v AS v, score AS s", {})])
+        r = resps[0].result
+        vs = np.asarray(r["v"], np.int64)
+        assert len(vs) == g.n_vertices
+        np.testing.assert_array_equal(np.asarray(r["s"], np.float32),
+                                      tr.infer_scores()[vs])
+        assert stats.route_counts == {"grape": 1}
+
+    def test_param_bound_model_name(self, trained):
+        g, tr, reg = trained
+        svc = QueryService(g, procedures=reg)
+        resps, _ = svc.serve([
+            ("CALL gnn.infer($m) YIELD v, score "
+             "RETURN v AS v, score AS s ORDER BY s DESC LIMIT 5",
+             {"m": "sage"})])
+        top = np.sort(tr.infer_scores())[-5:][::-1]
+        np.testing.assert_allclose(
+            np.asarray(resps[0].result["s"], np.float32), top, rtol=1e-6)
+
+    def test_memoized_per_snapshot_and_registration(self, trained):
+        g, tr, reg = trained
+        reg.run(g, "gnn.infer", ("sage",))
+        h0, m0 = reg.stats.hits, reg.stats.misses
+        reg.run(g, "gnn.infer", ("sage",))
+        assert (reg.stats.hits, reg.stats.misses) == (h0 + 1, m0)
+
+    def test_reregistration_serves_fresh_scores(self, trained):
+        """Re-registering after more training must not serve the stale
+        memo entry (the registration-version part of the memo key)."""
+        g, tr, reg = trained
+        tr.register_inference(reg, "sage2")
+        before = reg.run(g, "gnn.infer", ("sage2",)).copy()
+        tr.train(5)
+        tr.register_inference(reg, "sage2")
+        after = reg.run(g, "gnn.infer", ("sage2",))
+        np.testing.assert_array_equal(after, tr.infer_scores())
+        assert not np.array_equal(before, after)
+
+    def test_unknown_model_raises(self, trained):
+        g, _, reg = trained
+        with pytest.raises(KeyError, match="no model"):
+            reg.run(g, "gnn.infer", ("nope",))
+
+    def test_unregister_model(self, trained):
+        g, tr, reg = trained
+        tr.register_inference(reg, "tmp")
+        reg.run(g, "gnn.infer", ("tmp",))
+        reg.unregister_model("tmp")
+        with pytest.raises(KeyError):
+            reg.run(g, "gnn.infer", ("tmp",))
+
+    def test_clear_keeps_registrations(self, trained):
+        """clear() drops memoized scores but not model registrations — a
+        registration freezes its params, so recomputation is identical."""
+        g, tr, reg = trained
+        before = reg.run(g, "gnn.infer", ("sage",)).copy()
+        reg.clear()
+        m0 = reg.stats.misses
+        after = reg.run(g, "gnn.infer", ("sage",))
+        assert reg.stats.misses == m0 + 1        # recomputed, not memoized
+        np.testing.assert_array_equal(before, after)
+
+    def test_infer_spec_in_registry(self):
+        assert "gnn.infer" in SPECS
+        assert normalize_proc_name("gnn.infer") == "gnn.infer"
+
+    def test_stale_version_memos_purged(self, trained):
+        """Re-registering (or unregistering) a model drops the previous
+        version's memo entries — a retrain loop must not leak one score
+        array per cycle."""
+        g, tr, reg = trained
+        tr.register_inference(reg, "leakcheck")
+        reg.run(g, "gnn.infer", ("leakcheck",))
+
+        def entries():
+            return [k for k in reg._results
+                    if k[1] == "gnn.infer" and k[2][0] == "leakcheck"]
+
+        assert len(entries()) == 1
+        for _ in range(3):
+            tr.register_inference(reg, "leakcheck")
+            reg.run(g, "gnn.infer", ("leakcheck",))
+            assert len(entries()) == 1        # old versions purged
+        reg.unregister_model("leakcheck")
+        assert entries() == []
+
+    def test_infer_memo_pins_store(self, trained):
+        """Identity-fallback snapshot tokens are object ids: the registry
+        must hold the store alive while gnn.infer memo entries exist, or a
+        recycled id could serve a dead graph's scores."""
+        import gc
+
+        from repro.engines.procedures import _StorePin
+        from repro.storage.generators import rmat_store
+
+        _, tr, reg = trained
+        g2 = rmat_store(scale=6, edge_factor=4, seed=42)
+        rng = np.random.default_rng(1)
+        g2._vprops["feat"] = rng.standard_normal(
+            (g2.n_vertices, 8)).astype(np.float32)
+        scores = reg.run(g2, "gnn.infer", ("sage",)).copy()
+        token = snapshot_token(g2)
+        pin = reg._engines[token]
+        assert isinstance(pin, _StorePin) and pin.store is g2
+        # even after the caller drops its reference the memo entry stays
+        # valid because the registry's pin keeps the id from recycling
+        gid = id(g2)
+        del g2
+        gc.collect()
+        assert id(pin.store) == gid
+        np.testing.assert_array_equal(
+            reg.run(pin.store, "gnn.infer", ("sage",)), scores)
+
+    def test_grape_after_infer_same_token(self, trained):
+        """A token first seen by gnn.infer (pin slot) must still build a
+        real GRAPE engine when an algo.* runs on the same snapshot."""
+        g, tr, reg = trained
+        reg.run(g, "gnn.infer", ("sage",))
+        rank = reg.run(g, "pagerank", (0.85,))
+        assert len(rank) == g.n_vertices and np.isfinite(rank).all()

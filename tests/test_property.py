@@ -268,3 +268,117 @@ class TestSSDProperties:
                                    np.asarray(y_s), rtol=2e-4, atol=2e-4)
         np.testing.assert_allclose(np.asarray(st_c), np.asarray(st_s),
                                    rtol=2e-4, atol=2e-4)
+
+
+@st.composite
+def sampler_graphs(draw, max_n=20, max_e=50):
+    """Random graph with three pinned vertices for the sampling edge cases:
+    vertex n-1 is ISOLATED, vertex n-2's only out-edge points at vertex 0
+    (the edges-into-vertex-0 PAD regression), and general edges run among
+    the rest."""
+    n = draw(st.integers(4, max_n))
+    e = draw(st.integers(1, max_e))
+    src = draw(hnp.arrays(np.int64, (e,), elements=st.integers(0, n - 3)))
+    dst = draw(hnp.arrays(np.int64, (e,), elements=st.integers(0, n - 3)))
+    src = np.concatenate([src, [n - 2]])
+    dst = np.concatenate([dst, [0]])
+    rng = np.random.default_rng(n * 31 + e)
+    feats = rng.standard_normal((n, 3)).astype(np.float32)
+    return CSRStore(n, src, dst, vertex_props={"feat": feats}), feats
+
+
+@pytest.mark.slow
+class TestSamplerProperties:
+    """Device-sampler edge cases (ISSUE 4): PAD isolation, vertex-0 edges
+    under ELL padding, with-replacement draws below degree, empty batches —
+    each against the numpy oracle walk on random graphs. Slow-marked (many
+    executor builds ⇒ many jit compiles); CI runs it in the `-m slow` job
+    next to the statistical sampler suite."""
+
+    @given(sampler_graphs(), st.sampled_from([1, 2, 4]),
+           st.sampled_from([1, 4, 15]),
+           st.sampled_from(["stacked", "psum"]))
+    @settings(**SETTINGS)
+    def test_matches_oracle_walk(self, g, n_frags, fanout, exchange):
+        from repro.engines.sample import FragmentSampleExecutor
+        from repro.kernels.ref import sampler_ref
+        from repro.kernels.sampler import csr_to_sample_ell, layer_uniforms
+
+        store, _ = g
+        ex = FragmentSampleExecutor(store, n_frags=n_frags,
+                                    exchange=exchange)
+        key = jax.random.PRNGKey(store.n_vertices)
+        seeds = np.arange(store.n_vertices, dtype=np.int32)
+        layers, _, _ = ex.sample(seeds, key, (fanout,))
+        indptr, indices = store.adjacency()
+        ell, deg = csr_to_sample_ell(indptr, indices)
+        u = np.asarray(layer_uniforms(key, 0, len(seeds), fanout))
+        np.testing.assert_array_equal(np.asarray(layers[0]),
+                                      sampler_ref(ell, deg, seeds, u))
+
+    @given(sampler_graphs(), st.sampled_from([1, 2, 4]))
+    @settings(**SETTINGS)
+    def test_isolated_vertex_stays_pad(self, g, n_frags):
+        from repro.engines.sample import FragmentSampleExecutor
+
+        store, feats = g
+        n = store.n_vertices
+        ex = FragmentSampleExecutor(store, n_frags=n_frags)
+        seeds = np.array([n - 1, -1], np.int32)   # isolated + explicit PAD
+        layers, fts, _ = ex.sample(seeds, jax.random.PRNGKey(0), (4, 2))
+        assert (np.asarray(layers[0]) == -1).all()
+        assert (np.asarray(layers[1]) == -1).all()
+        # the isolated vertex still has features; PAD rows are zero
+        np.testing.assert_array_equal(np.asarray(fts[0][0]), feats[n - 1])
+        assert (np.asarray(fts[0][1]) == 0).all()
+        assert (np.asarray(fts[1]) == 0).all()
+
+    @given(sampler_graphs(), st.sampled_from([1, 2, 4]),
+           st.sampled_from([1, 4, 15]))
+    @settings(**SETTINGS)
+    def test_edges_into_vertex_zero_survive(self, g, n_frags, fanout):
+        """deg(n-2) == 1 with its single neighbor being vertex 0: every
+        draw must be 0 — if ELL padding corrupted id 0 these would come
+        back PAD_SENTINEL."""
+        from repro.engines.sample import FragmentSampleExecutor
+
+        store, _ = g
+        n = store.n_vertices
+        ex = FragmentSampleExecutor(store, n_frags=n_frags)
+        seeds = np.full(3, n - 2, np.int32)
+        layers, _, _ = ex.sample(seeds, jax.random.PRNGKey(1), (fanout,))
+        assert (np.asarray(layers[0]) == 0).all()
+
+    @given(sampler_graphs(), st.sampled_from([4, 15]))
+    @settings(**SETTINGS)
+    def test_below_degree_resolves_with_replacement(self, g, fanout):
+        """Whenever deg < fanout the draw is with-replacement: every slot
+        of a non-isolated seed is a valid neighbor, never PAD."""
+        from repro.engines.sample import FragmentSampleExecutor
+
+        store, _ = g
+        indptr, indices = store.adjacency()
+        deg = np.diff(indptr)
+        ex = FragmentSampleExecutor(store, n_frags=2)
+        seeds = np.arange(store.n_vertices, dtype=np.int32)
+        layers, _, _ = ex.sample(seeds, jax.random.PRNGKey(2), (fanout,))
+        out = np.asarray(layers[0])
+        for v in range(store.n_vertices):
+            if deg[v] == 0:
+                assert (out[v] == -1).all()
+                continue
+            assert (out[v] >= 0).all()            # replacement fills fanout
+            nbrs = set(indices[indptr[v]:indptr[v + 1]].tolist())
+            assert set(out[v].tolist()) <= nbrs
+
+    @given(sampler_graphs(), st.sampled_from(["stacked", "psum"]))
+    @settings(**SETTINGS)
+    def test_empty_seed_batch(self, g, exchange):
+        from repro.engines.sample import FragmentSampleExecutor
+
+        store, _ = g
+        ex = FragmentSampleExecutor(store, n_frags=2, exchange=exchange)
+        layers, fts, _ = ex.sample(np.zeros((0,), np.int32),
+                                   jax.random.PRNGKey(0), (4, 2))
+        assert [tuple(l.shape) for l in layers] == [(0, 4), (0, 2)]
+        assert [tuple(f.shape) for f in fts] == [(0, 3), (0, 3), (0, 3)]

@@ -1,0 +1,477 @@
+"""Differential suite: device neighbor sampler vs the numpy oracle
+(DESIGN.md §10).
+
+Three tiers, all sharing the float32 floor-multiply draw so comparisons
+are bit-exact, not statistical:
+
+- kernel level: ``sample_ell`` (Pallas, interpret mode) and
+  ``sample_ell_jnp`` against ``kernels.ref.sampler_ref``;
+- executor level: ``FragmentSampleExecutor``'s layered walk across
+  F ∈ {1, 2, 4} fragments, both exchanges (stacked fast path / psum
+  owned-slice), and fanouts {1, 4, 15}, against an oracle walk driven by
+  the same ``layer_uniforms`` key contract;
+- draw statistics: exact-proportionality of the unbiased floor-multiply
+  map (the ``bits % deg`` modulo-bias regression) and chi-square-style
+  neighbor-frequency agreement (slow-marked, in ``-m slow`` CI).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.engines.sample import FragmentSampleExecutor
+from repro.kernels.ref import sampler_ref
+from repro.kernels.sampler import (csr_to_sample_ell, layer_uniforms,
+                                   sample_ell, sample_ell_jnp)
+from repro.learning.sampler import GraphSampler, uniform_index
+from repro.storage.csr import CSRStore
+from repro.storage.generators import rmat_store
+from repro.storage.partition import PAD_SENTINEL
+
+FANOUTS = (1, 4, 15)
+FRAGS = (1, 2, 4)
+
+
+def featured(scale=8, n_feat=8, seed=4):
+    g = rmat_store(scale=scale, edge_factor=8, seed=seed)
+    n = g.n_vertices
+    rng = np.random.default_rng(0)
+    g._vprops["feat"] = rng.standard_normal((n, n_feat)).astype(np.float32)
+    g._vprops["label"] = rng.integers(0, 3, n).astype(np.int32)
+    return g
+
+
+def simple_store(n=32, seed=0):
+    """Small SIMPLE graph (no parallel edges) so per-neighbor draw
+    frequencies are exactly uniform — the chi-square null hypothesis."""
+    rng = np.random.default_rng(seed)
+    edges = set()
+    for _ in range(n * 6):
+        a, b = rng.integers(0, n, 2)
+        edges.add((int(a), int(b)))
+    src, dst = np.array(sorted(edges)).T
+    return CSRStore(n, src, dst,
+                    vertex_props={"feat": rng.standard_normal(
+                        (n, 4)).astype(np.float32)})
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return featured()
+
+
+@pytest.fixture(scope="module")
+def slab(graph):
+    indptr, indices = graph.adjacency()
+    return csr_to_sample_ell(indptr, indices)
+
+
+def mixed_rows(n, m=130):
+    """Row ids exercising every validity class: real rows, PAD (-1),
+    out-of-range — deliberately NOT a multiple of any kernel block."""
+    rng = np.random.default_rng(3)
+    rows = rng.integers(0, n, m).astype(np.int32)
+    rows[5] = -1
+    rows[17] = -1
+    rows[29] = n + 1000          # out of range ⇒ invalid
+    return rows
+
+
+class TestKernelVsOracle:
+    @pytest.mark.parametrize("fanout", FANOUTS)
+    def test_jnp_matches_oracle(self, slab, fanout):
+        ell, deg = slab
+        rows = mixed_rows(len(deg))
+        u = np.asarray(jax.random.uniform(jax.random.PRNGKey(1),
+                                          (len(rows), fanout)))
+        want = sampler_ref(ell, deg, rows, u)
+        got = np.asarray(sample_ell_jnp(jnp.asarray(ell), jnp.asarray(deg),
+                                        jnp.asarray(rows), jnp.asarray(u)))
+        np.testing.assert_array_equal(got, want)
+
+    @pytest.mark.parametrize("fanout", FANOUTS)
+    def test_pallas_interpret_matches_oracle(self, slab, fanout):
+        ell, deg = slab
+        rows = mixed_rows(len(deg))          # 130 rows: forces block padding
+        u = np.asarray(jax.random.uniform(jax.random.PRNGKey(2),
+                                          (len(rows), fanout)))
+        want = sampler_ref(ell, deg, rows, u)
+        got = np.asarray(sample_ell(jnp.asarray(ell), jnp.asarray(deg),
+                                    jnp.asarray(rows), jnp.asarray(u),
+                                    block_m=64, interpret=True))
+        np.testing.assert_array_equal(got, want)
+
+    def test_shapes_dtype_padding(self, slab):
+        ell, deg = slab
+        rows = mixed_rows(len(deg))
+        u = np.asarray(jax.random.uniform(jax.random.PRNGKey(3), (130, 4)))
+        out = np.asarray(sample_ell_jnp(jnp.asarray(ell), jnp.asarray(deg),
+                                        jnp.asarray(rows), jnp.asarray(u)))
+        assert out.shape == (130, 4) and out.dtype == np.int32
+        # PAD rows and out-of-range rows yield PAD_SENTINEL everywhere
+        assert (out[5] == PAD_SENTINEL).all()
+        assert (out[17] == PAD_SENTINEL).all()
+        assert (out[29] == PAD_SENTINEL).all()
+        # valid draws are real vertex ids, never slab padding
+        valid = out[(rows >= 0) & (rows < len(deg))]
+        d = deg[rows[(rows >= 0) & (rows < len(deg))]]
+        assert (valid[d > 0] >= 0).all()
+
+    def test_empty_batch(self, slab):
+        ell, deg = slab
+        out = sample_ell(jnp.asarray(ell), jnp.asarray(deg),
+                         jnp.zeros((0,), jnp.int32),
+                         jnp.zeros((0, 3), jnp.float32), interpret=True)
+        assert out.shape == (0, 3) and out.dtype == jnp.int32
+
+
+def oracle_walk(graph, seeds, key, fanouts):
+    """The full layered reference walk: layer_uniforms + sampler_ref."""
+    indptr, indices = graph.adjacency()
+    ell, deg = csr_to_sample_ell(indptr, indices)
+    fr = np.asarray(seeds, np.int64)
+    layers = []
+    for l, k in enumerate(fanouts):
+        u = np.asarray(layer_uniforms(key, l, len(fr), k))
+        nbrs = sampler_ref(ell, deg, fr, u)
+        layers.append(nbrs)
+        fr = nbrs.reshape(-1)
+    return layers
+
+
+class TestFragmentDifferential:
+    @pytest.mark.parametrize("n_frags", FRAGS)
+    @pytest.mark.parametrize("exchange", ("stacked", "psum"))
+    def test_layers_match_oracle(self, graph, n_frags, exchange):
+        ex = FragmentSampleExecutor(graph, n_frags=n_frags,
+                                    label_prop="label", exchange=exchange)
+        key = jax.random.PRNGKey(11)
+        seeds = np.concatenate([np.arange(30),
+                                [-1, graph.n_vertices + 5]]).astype(np.int32)
+        layers, _, _ = ex.sample(seeds, key, (4, 3))
+        want = oracle_walk(graph, seeds, key, (4, 3))
+        for got, ref in zip(layers, want):
+            np.testing.assert_array_equal(np.asarray(got), ref)
+
+    @pytest.mark.parametrize("fanout", FANOUTS)
+    def test_fanouts_match_oracle(self, graph, fanout):
+        ex = FragmentSampleExecutor(graph, n_frags=2, exchange="psum")
+        key = jax.random.PRNGKey(13)
+        seeds = np.arange(48, dtype=np.int32)
+        layers, _, _ = ex.sample(seeds, key, (fanout,))
+        want = oracle_walk(graph, seeds, key, (fanout,))
+        np.testing.assert_array_equal(np.asarray(layers[0]), want[0])
+
+    def test_pallas_executor_matches_oracle(self, graph):
+        ex = FragmentSampleExecutor(graph, n_frags=2, exchange="psum",
+                                    use_kernels=True, interpret=True)
+        key = jax.random.PRNGKey(17)
+        seeds = np.arange(40, dtype=np.int32)
+        layers, _, _ = ex.sample(seeds, key, (4,))
+        want = oracle_walk(graph, seeds, key, (4,))
+        np.testing.assert_array_equal(np.asarray(layers[0]), want[0])
+
+    def test_features_and_labels_gather(self, graph):
+        feats = np.asarray(graph._vprops["feat"])
+        labels = np.asarray(graph._vprops["label"])
+        for exchange in ("stacked", "psum"):
+            ex = FragmentSampleExecutor(graph, n_frags=2,
+                                        label_prop="label",
+                                        exchange=exchange)
+            key = jax.random.PRNGKey(19)
+            seeds = np.concatenate([np.arange(20), [-1]]).astype(np.int32)
+            layers, fts, lab = ex.sample(seeds, key, (3,))
+            # frontier-0 features: rows of the property matrix, 0-rows at PAD
+            want0 = np.where(seeds[:, None] >= 0,
+                             feats[np.maximum(seeds, 0)], 0.0)
+            np.testing.assert_array_equal(np.asarray(fts[0]), want0)
+            # frontier-1 features follow the sampled ids
+            ids1 = np.asarray(layers[0]).reshape(-1)
+            want1 = np.where(ids1[:, None] >= 0,
+                             feats[np.maximum(ids1, 0)], 0.0)
+            np.testing.assert_array_equal(np.asarray(fts[1]), want1)
+            np.testing.assert_array_equal(np.asarray(lab)[:-1],
+                                          labels[seeds[:-1]])
+
+    def test_batch_shapes_and_dtypes(self, graph):
+        ex = FragmentSampleExecutor(graph, n_frags=2, label_prop="label")
+        layers, fts, lab = ex.sample(np.arange(6, dtype=np.int32),
+                                     jax.random.PRNGKey(0), (5, 2))
+        assert [tuple(l.shape) for l in layers] == [(6, 5), (30, 2)]
+        assert [tuple(f.shape) for f in fts] == [(6, 8), (30, 8), (60, 8)]
+        assert lab.shape == (6,)
+        assert all(l.dtype == jnp.int32 for l in layers)
+        assert all(f.dtype == jnp.float32 for f in fts)
+
+    def test_empty_seed_batch(self, graph):
+        ex = FragmentSampleExecutor(graph, n_frags=2, label_prop="label")
+        layers, fts, lab = ex.sample(np.zeros((0,), np.int32),
+                                     jax.random.PRNGKey(0), (4, 2))
+        assert [tuple(l.shape) for l in layers] == [(0, 4), (0, 2)]
+        assert [tuple(f.shape) for f in fts] == [(0, 8), (0, 8), (0, 8)]
+        assert lab.shape == (0,)
+
+
+class TestDeterminism:
+    def test_fixed_key_is_reproducible(self, graph):
+        key = jax.random.PRNGKey(23)
+        seeds = np.arange(64, dtype=np.int32)
+        a = FragmentSampleExecutor(graph, n_frags=1)
+        b = FragmentSampleExecutor(graph, n_frags=4, exchange="psum")
+        la, _, _ = a.sample(seeds, key, (15, 4))
+        lb, _, _ = b.sample(seeds, key, (15, 4))
+        for x, y in zip(la, lb):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_distinct_keys_differ(self, graph):
+        ex = FragmentSampleExecutor(graph, n_frags=1)
+        seeds = np.arange(64, dtype=np.int32)
+        la, _, _ = ex.sample(seeds, jax.random.PRNGKey(0), (15,))
+        lb, _, _ = ex.sample(seeds, jax.random.PRNGKey(1), (15,))
+        assert not np.array_equal(np.asarray(la[0]), np.asarray(lb[0]))
+
+    @pytest.mark.parametrize("backend", ("host", "device"))
+    def test_seeded_sampler_reproducible(self, graph, backend):
+        """Two samplers with one seed replay the same draw sequence — the
+        per-seed determinism contract of both backends."""
+        a = GraphSampler(graph, label_prop="label", seed=5, backend=backend)
+        b = GraphSampler(graph, label_prop="label", seed=5, backend=backend)
+        for _ in range(3):                    # sequence, not just first draw
+            ba = a.sample_batch(np.arange(16), [4, 3])
+            bb = b.sample_batch(np.arange(16), [4, 3])
+            for x, y in zip(ba.layers, bb.layers):
+                np.testing.assert_array_equal(x, y)
+
+    def test_device_sampler_steps_differ(self, graph):
+        s = GraphSampler(graph, label_prop="label", seed=5, backend="device")
+        b0 = s.sample_batch(np.arange(32), [15])
+        b1 = s.sample_batch(np.arange(32), [15])
+        assert not np.array_equal(b0.layers[0], b1.layers[0])
+
+
+class TestUnbiasedDraw:
+    """Regression for the ``bits % deg`` modulo-bias draw (ISSUE 4)."""
+
+    @pytest.mark.parametrize("deg", (3, 5, 7))
+    def test_floor_multiply_exactly_proportional(self, deg):
+        # on any equispaced grid whose size deg divides, every bucket gets
+        # exactly the same count — the modulo draw cannot do this for
+        # bucket counts that don't divide the bit range
+        m = 240 // deg * deg
+        u = (np.arange(m) + 0.5) / m
+        cols = uniform_index(u, np.full(m, deg))
+        counts = np.bincount(cols, minlength=deg)
+        assert (counts == m // deg).all()
+
+    def test_modulo_draw_is_biased(self):
+        """The bug being regressed: ``r % deg`` over a 2^b counter space is
+        provably non-uniform whenever deg ∤ 2^b (low residues win)."""
+        bits = np.arange(256)                  # the full 8-bit space
+        counts = np.bincount(bits % 6, minlength=6)
+        assert counts.max() > counts.min()     # biased…
+        u = (np.arange(252) + 0.5) / 252       # 6 | 252
+        fixed = np.bincount(uniform_index(u, np.full(252, 6)), minlength=6)
+        assert fixed.max() == fixed.min()      # …the floor map is not
+
+    def test_uniform_index_clips_to_degree(self):
+        u = np.array([0.0, 0.999999, 1.0 - 1e-7])
+        assert uniform_index(u, np.full(3, 7)).max() == 6
+        assert uniform_index(np.zeros(3), np.full(3, 7)).min() == 0
+
+    def test_sample_neighbors_draws_are_neighbors(self, graph):
+        s = GraphSampler(graph, label_prop="label", seed=1)
+        indptr, indices = graph.adjacency()
+        out = s.sample_neighbors(np.arange(64), 15)
+        for i in range(64):
+            nbrs = set(indices[indptr[i]:indptr[i + 1]].tolist())
+            drawn = set(int(x) for x in out[i] if x >= 0)
+            assert drawn <= nbrs
+
+    def test_sample_neighbors_uniformity(self):
+        """Chi-square-style bound on the host sampler's per-neighbor draw
+        frequencies for a degree that divides no power of two."""
+        n = 8
+        src = np.zeros(3, np.int64)
+        dst = np.array([1, 2, 3])              # deg(0) == 3
+        g = CSRStore(n, src, dst,
+                     vertex_props={"feat": np.ones((n, 2), np.float32)})
+        s = GraphSampler(g, seed=7)
+        draws = s.sample_neighbors(np.zeros(2000, np.int64), 3).reshape(-1)
+        counts = np.bincount(draws, minlength=4)[1:4]
+        e = len(draws) / 3
+        chi2 = float(((counts - e) ** 2 / e).sum())
+        assert chi2 < 13.8                     # p≈0.001 at df=2
+
+
+@pytest.mark.slow
+class TestStatisticalAgreement:
+    """Neighbor-frequency uniformity of the device sampler: draws against a
+    SIMPLE graph are multinomial-uniform over each vertex's neighbors, so
+    the pooled chi-square statistic over all vertices stays within a
+    normal-approximation band of its degrees of freedom."""
+
+    @pytest.mark.parametrize("n_frags", FRAGS)
+    @pytest.mark.parametrize("fanout", FANOUTS)
+    def test_device_draw_frequencies(self, n_frags, fanout):
+        g = simple_store()
+        n = g.n_vertices
+        indptr, indices = g.adjacency()
+        ex = FragmentSampleExecutor(g, n_frags=n_frags, exchange="psum")
+        reps = -(-600 // fanout)               # ≈600 draws per vertex
+        seeds = np.tile(np.arange(n, dtype=np.int32), reps)
+        draws = np.asarray(ex.sample(seeds, jax.random.PRNGKey(fanout),
+                                     (fanout,))[0]).reshape(reps, n, fanout)
+        chi2_tot, df_tot = 0.0, 0
+        for v in range(n):
+            nbrs = indices[indptr[v]:indptr[v + 1]]
+            if len(nbrs) < 2:
+                continue
+            got = draws[:, v, :].reshape(-1)
+            counts = np.array([(got == u).sum() for u in nbrs])
+            assert counts.sum() == got.size    # nothing drawn off-list
+            e = got.size / len(nbrs)
+            chi2_tot += float(((counts - e) ** 2 / e).sum())
+            df_tot += len(nbrs) - 1
+        # pooled X² ~ χ²(df): mean df, var 2·df; allow a wide z < 5 band
+        z = (chi2_tot - df_tot) / np.sqrt(2 * df_tot)
+        assert abs(z) < 5.0, (chi2_tot, df_tot, z)
+
+    def test_device_and_host_frequencies_agree(self):
+        """Two-sample agreement: device and host samplers draw from the
+        same per-vertex uniform law (chi-square-style bound on the pooled
+        frequency difference)."""
+        g = simple_store(seed=3)
+        n = g.n_vertices
+        indptr, indices = g.adjacency()
+        ex = FragmentSampleExecutor(g, n_frags=2, exchange="psum")
+        host = GraphSampler(g, seed=11)
+        reps = 150
+        seeds = np.tile(np.arange(n), reps)
+        dev = np.asarray(ex.sample(seeds.astype(np.int32),
+                                   jax.random.PRNGKey(0),
+                                   (4,))[0]).reshape(reps, n, 4)
+        hst = host.sample_neighbors(seeds, 4).reshape(reps, n, 4)
+        chi2_tot, df_tot = 0.0, 0
+        for v in range(n):
+            nbrs = indices[indptr[v]:indptr[v + 1]]
+            if len(nbrs) < 2:
+                continue
+            a = np.array([(dev[:, v, :] == u).sum() for u in nbrs])
+            b = np.array([(hst[:, v, :] == u).sum() for u in nbrs])
+            e = (a + b) / 2.0
+            chi2_tot += float((((a - e) ** 2 + (b - e) ** 2) / e).sum())
+            df_tot += len(nbrs) - 1
+        z = (chi2_tot - df_tot) / np.sqrt(2 * df_tot)
+        assert abs(z) < 5.0, (chi2_tot, df_tot, z)
+
+
+class TestMeshPath:
+    def test_one_device_mesh_matches_stacked(self, graph):
+        """The shard_map psum exchange on a 1-device 'data' mesh is
+        bit-identical to the stacked fast path (the 2-device variant is
+        covered by the same arithmetic through exchange="psum")."""
+        from jax.sharding import Mesh
+
+        mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+        exm = FragmentSampleExecutor(graph, mesh=mesh, label_prop="label")
+        exs = FragmentSampleExecutor(graph, n_frags=1, label_prop="label")
+        key = jax.random.PRNGKey(5)
+        seeds = np.concatenate([np.arange(20), [-1]]).astype(np.int32)
+        lm, fm, labm = exm.sample(seeds, key, (4, 3))
+        ls, fs, labs = exs.sample(seeds, key, (4, 3))
+        for a, b in zip(lm + fm + [labm], ls + fs + [labs]):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_mesh_requires_data_axis(self, graph):
+        from jax.sharding import Mesh
+
+        mesh = Mesh(np.array(jax.devices()[:1]), ("model",))
+        with pytest.raises(ValueError, match="data"):
+            FragmentSampleExecutor(graph, mesh=mesh)
+
+
+class TestMemoryAndGates:
+    def test_stacked_path_skips_slab(self, graph):
+        """The default stacked path draws at O(E) straight off CSR — the
+        dense [N, max_deg] slab only exists for the gated kernel path."""
+        ex = FragmentSampleExecutor(graph, n_frags=1)
+        assert ex.ell is None and ex.csr_indices is not None
+
+    def test_csr_draw_matches_slab_oracle(self, graph):
+        """sample_csr_jnp ≡ sampler_ref on the slab, bit for bit (an ELL
+        row IS the CSR segment)."""
+        from repro.kernels.sampler import sample_csr_jnp
+
+        indptr, indices = graph.adjacency()
+        ell, deg = csr_to_sample_ell(indptr, indices)
+        rows = mixed_rows(graph.n_vertices)
+        u = np.asarray(jax.random.uniform(jax.random.PRNGKey(8), (130, 6)))
+        got = np.asarray(sample_csr_jnp(
+            jnp.asarray(indptr[:-1].astype(np.int32)),
+            jnp.asarray(deg),
+            jnp.asarray(np.concatenate([indices, [-1]]).astype(np.int32)),
+            jnp.asarray(rows), jnp.asarray(u)))
+        np.testing.assert_array_equal(got, sampler_ref(ell, deg, rows, u))
+
+    def test_vmem_gate_disables_kernel_for_huge_slabs(self, graph,
+                                                      monkeypatch):
+        import repro.engines.sample as es
+
+        monkeypatch.setattr(es, "SLAB_VMEM_BYTES", 16)   # everything is big
+        ex = es.FragmentSampleExecutor(graph, use_kernels=True)
+        assert ex.use_kernels is False                   # fell back to CSR
+        layers, _, _ = ex.sample(np.arange(16, dtype=np.int32),
+                                 jax.random.PRNGKey(0), (3,))
+        want = oracle_walk(graph, np.arange(16, dtype=np.int32),
+                           jax.random.PRNGKey(0), (3,))
+        np.testing.assert_array_equal(np.asarray(layers[0]), want[0])
+
+    def test_pad_seed_labels_match_across_backends(self, graph):
+        """PAD (-1) seeds get label 0 on BOTH backends (one contract)."""
+        seeds = np.array([0, -1, 3])
+        h = GraphSampler(graph, label_prop="label")
+        d = GraphSampler(graph, label_prop="label", backend="device")
+        bh = h.sample_batch(seeds, [2])
+        bd = d.sample_batch(seeds, [2])
+        np.testing.assert_array_equal(bh.labels, bd.labels)
+        assert bh.labels[1] == 0
+
+
+class TestOutOfRangeRows:
+    """rows ≥ R must draw PAD in every implementation, exactly like the
+    oracle — a clamped gather from the last row would silently diverge."""
+
+    def test_all_paths_pad_high_rows(self):
+        from repro.kernels.sampler import sample_csr_jnp
+
+        # 2 vertices, both with real neighbors (deg > 0 everywhere, so a
+        # clamp-to-last-row bug cannot hide behind an isolated vertex)
+        indptr = np.array([0, 2, 4])
+        indices = np.array([1, 1, 0, 0])
+        ell, deg = csr_to_sample_ell(indptr, indices)
+        rows = np.array([0, 1, 2, 5, -1], np.int32)
+        u = np.full((5, 3), 0.4, np.float32)
+        want = sampler_ref(ell, deg, rows, u)
+        assert (want[2] == PAD_SENTINEL).all()       # row == R
+        assert (want[3] == PAD_SENTINEL).all()       # row > R
+        got_jnp = np.asarray(sample_ell_jnp(
+            jnp.asarray(ell), jnp.asarray(deg), jnp.asarray(rows),
+            jnp.asarray(u)))
+        got_pl = np.asarray(sample_ell(
+            jnp.asarray(ell), jnp.asarray(deg), jnp.asarray(rows),
+            jnp.asarray(u), block_m=4, interpret=True))
+        got_csr = np.asarray(sample_csr_jnp(
+            jnp.asarray(indptr[:-1].astype(np.int32)), jnp.asarray(deg),
+            jnp.asarray(np.concatenate([indices, [-1]]).astype(np.int32)),
+            jnp.asarray(rows), jnp.asarray(u)))
+        np.testing.assert_array_equal(got_jnp, want)
+        np.testing.assert_array_equal(got_pl, want)
+        np.testing.assert_array_equal(got_csr, want)
+
+    def test_psum_slab_limit_guard(self, graph, monkeypatch):
+        import repro.engines.sample as es
+
+        monkeypatch.setattr(es, "PSUM_SLAB_LIMIT_BYTES", 1024)
+        with pytest.raises(ValueError, match="stacked"):
+            es.FragmentSampleExecutor(graph, n_frags=2, exchange="psum")
