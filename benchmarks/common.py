@@ -21,6 +21,25 @@ def timeit(fn: Callable, *, repeat: int = 5, warmup: int = 1) -> float:
     return times[len(times) // 2]
 
 
+def interleaved_medians(fns, rounds: int = 5, iters: int = 1):
+    """Median per-call seconds for each thunk, measured round-robin so all
+    contenders see the same machine phases (this box's allocator/cache
+    behaviour drifts by minutes, not microseconds). Each thunk runs once
+    for warmup/compile before timing."""
+    import numpy as np
+
+    for fn in fns:
+        fn()
+    acc = [[] for _ in fns]
+    for _ in range(rounds):
+        for i, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                fn()
+            acc[i].append((time.perf_counter() - t0) / iters)
+    return [float(np.median(a)) for a in acc]
+
+
 def record(name: str, us: float, derived: str = ""):
     ROWS.append((name, us, derived))
     print(f"{name},{us:.1f},{derived}", flush=True)

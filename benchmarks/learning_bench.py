@@ -88,19 +88,9 @@ def run_exp4():
 
 
 def _interleaved_medians(fns, rounds=5, iters=3):
-    """Median per-call seconds for each thunk, measured round-robin so all
-    contenders see the same machine phases (this box's allocator/cache
-    behaviour drifts by minutes, not microseconds)."""
-    for fn in fns:
-        fn()                                     # warmup / compile
-    acc = [[] for _ in fns]
-    for _ in range(rounds):
-        for i, fn in enumerate(fns):
-            t0 = time.perf_counter()
-            for _ in range(iters):
-                fn()
-            acc[i].append((time.perf_counter() - t0) / iters)
-    return [float(np.median(a)) for a in acc]
+    from benchmarks.common import interleaved_medians
+
+    return interleaved_medians(fns, rounds=rounds, iters=iters)
 
 
 def run_exp5():

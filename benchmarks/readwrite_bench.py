@@ -1,0 +1,134 @@
+"""Exp-6: read-write serving through one FlexSession (DESIGN.md §11).
+
+The paper's 2.4× LDBC-SNB *interactive* result is measured on a mixed
+update/read workload. This section serves that shape through the session
+façade: point lookups + 2-hop traversals + CREATE/SET updates in one
+multi-tenant flush, against a GART store.
+
+Rows (interleaved-median timing — contenders run round-robin so they see
+the same machine phases, the established convention of exp5):
+
+- ``exp6_readwrite_mixed{N}``: one flush of N requests (~10%% writes);
+  us/query + QPS + route mix.
+- ``exp6_readwrite_batched`` vs ``exp6_readwrite_perflush``: the same
+  mixed workload admitted as ONE flush (one commit + one rebind epoch)
+  vs one flush per request (a rebind per write) — the lever batched
+  per-flush commits buy.
+- ``exp6_write_only_batch``: pure update stream, one flush.
+- ``exp6_timetravel_read``: a pinned ``session.at(v)`` read (memoized
+  snapshot reuse) vs the live-version read.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import interleaved_medians as _interleaved_medians
+from benchmarks.common import record
+from repro.serving.session import FlexSession
+from repro.storage.gart import GARTStore
+from repro.storage.generators import snb_store
+
+
+N_PERSONS = 2000
+
+
+def _fresh_session() -> FlexSession:
+    cs = snb_store(n_persons=N_PERSONS, n_items=1000, n_posts=256, seed=11)
+    return FlexSession(GARTStore.from_csr(cs))
+
+
+def _mixed_requests(n: int, seed: int):
+    """LDBC-interactive-ish mix: ~70% point lookups, ~20% short
+    traversals, ~10% updates (half CREATE, half SET)."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        r = rng.random()
+        x = int(rng.integers(0, N_PERSONS))
+        if r < 0.70:
+            reqs.append(("MATCH (a:Person {id: $x}) RETURN a.credits AS c",
+                         {"x": x}))
+        elif r < 0.90:
+            reqs.append(("MATCH (a:Person {id: $x})-[:KNOWS]->(b:Person) "
+                         "WITH a, COUNT(b) AS k RETURN k AS k", {"x": x}))
+        elif r < 0.95:
+            reqs.append(("MATCH (a:Person {id: $x}), (b:Person {id: $y}) "
+                         "CREATE (a)-[:KNOWS {date: $d}]->(b)",
+                         {"x": x, "y": int(rng.integers(0, N_PERSONS)),
+                          "d": i}))
+        else:
+            reqs.append(("MATCH (a:Person {id: $x}) "
+                         "SET a.credits = a.credits + $c",
+                         {"x": x, "c": int(rng.integers(1, 10))}))
+    return reqs
+
+
+def run():
+    session = _fresh_session()
+    svc = session.interactive()
+
+    # ---- mixed multi-tenant flush at two admission sizes
+    for n in (64, 256):
+        reqs = _mixed_requests(n, seed=n)
+        svc.serve(reqs)                          # warm plans + routes
+        t0 = time.perf_counter()
+        _, stats = svc.serve(reqs)
+        dt = time.perf_counter() - t0
+        routes = "/".join(f"{k}:{v}" for k, v in
+                          sorted(stats.route_counts.items()))
+        record(f"exp6_readwrite_mixed{n}", dt / n * 1e6,
+               f"qps={n / dt:.0f};routes={routes}")
+
+    # ---- batched per-flush commit vs one flush per request
+    reqs = _mixed_requests(64, seed=7)
+    s_batched = _fresh_session()
+    s_perflush = _fresh_session()
+
+    def batched():
+        s_batched.interactive().serve(reqs)      # one commit + one rebind
+
+    def perflush():
+        sv = s_perflush.interactive()
+        for template, params in reqs:            # a rebind per write flush
+            sv.serve([(template, params)])
+
+    t_b, t_p = _interleaved_medians([batched, perflush], rounds=5)
+    record("exp6_readwrite_batched", t_b / 64 * 1e6,
+           f"qps={64 / t_b:.0f}")
+    record("exp6_readwrite_perflush", t_p / 64 * 1e6,
+           f"qps={64 / t_p:.0f};batched_speedup={t_p / t_b:.1f}x")
+
+    # ---- pure update stream, one flush
+    writes = [r for r in _mixed_requests(256, seed=3) if "CREATE" in r[0]
+              or "SET" in r[0]]
+    svc.serve(writes)
+    t0 = time.perf_counter()
+    _, stats = svc.serve(writes)
+    dt = time.perf_counter() - t0
+    record("exp6_write_only_batch", dt / len(writes) * 1e6,
+           f"writes={len(writes)};qps={len(writes) / dt:.0f}")
+
+    # ---- time-travel read vs live read (interleaved)
+    v_old = max(0, (session.version or 0) - 1)
+    pinned = session.at(v_old)
+    lookup = ("MATCH (a:Person {id: $x}) RETURN a.credits AS c", {"x": 5})
+
+    def live():
+        session.interactive().serve([lookup])
+
+    def timetravel():
+        pinned.interactive().serve([lookup])
+
+    t_live, t_tt = _interleaved_medians([live, timetravel], rounds=5)
+    record("exp6_timetravel_read", t_tt * 1e6,
+           f"live_us={t_live * 1e6:.0f};overhead={t_tt / t_live:.2f}x")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit_header
+
+    emit_header()
+    run()

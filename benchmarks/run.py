@@ -15,10 +15,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
                     help="comma list: storage,query,traversal,hybrid,"
-                         "analytics,learning,exp5,kernels")
+                         "analytics,learning,exp5,exp6,readwrite,kernels")
     args = ap.parse_args()
     wanted = set(args.only.split(",")) if args.only != "all" else {
-        "storage", "query", "hybrid", "analytics", "learning", "kernels"}
+        "storage", "query", "hybrid", "analytics", "learning",
+        "readwrite", "kernels"}
 
     from benchmarks.common import emit_header
     emit_header()
@@ -45,6 +46,9 @@ def main() -> None:
     elif "exp5" in wanted:           # exp5 standalone (learning runs it too)
         from benchmarks import learning_bench
         sections.append(("exp5", learning_bench.run_exp5))
+    if wanted & {"readwrite", "exp6"}:
+        from benchmarks import readwrite_bench
+        sections.append(("readwrite", readwrite_bench.run))
     if "kernels" in wanted:
         from benchmarks import kernel_bench
         sections.append(("kernels", kernel_bench.run))

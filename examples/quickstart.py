@@ -1,41 +1,73 @@
-"""Quickstart: build a LEGO-brick deployment and run the three workloads.
+"""Quickstart: one read-write FlexSession driving all four verbs
+(DESIGN.md §11).
 
     PYTHONPATH=src python examples/quickstart.py
+
+Builds an LDBC-SNB-flavoured property graph in a mutable GART store,
+composes the stack with flexbuild(serve=True), and runs: an interactive
+query, a write (CREATE + SET), analytics before/after the write, a
+time-travel read pinned at the pre-write version, and GNN sampling —
+all through the same session. CI runs this file as a smoke test.
 """
 
 import numpy as np
 
 from repro.core import flexbuild
-from repro.engines.grape import algorithms as alg
+from repro.storage.gart import GARTStore
 from repro.storage.generators import snb_store
 
 
 def main():
-    # 1. a labeled property graph (LDBC-SNB-flavoured synthetic data)
-    store = snb_store(n_persons=2000, n_items=1000, n_posts=300, seed=0)
-    store._vprops["feat"] = np.random.default_rng(0).standard_normal(
-        (store.n_vertices, 16)).astype(np.float32)
+    # 1. a labeled property graph in the mutable MVCC store (GART)
+    cs = snb_store(n_persons=2000, n_items=1000, n_posts=300, seed=0)
+    cs._vprops["feat"] = np.random.default_rng(0).standard_normal(
+        (cs.n_vertices, 16)).astype(np.float32)
+    store = GARTStore.from_csr(cs)
 
-    # 2. compose the stack: Cypher+Gaia (queries), Pregel+GRAPE (analytics),
-    #    GraphLearn sampling — all over the same Vineyard-like CSR store
-    dep = flexbuild(store, ["cypher", "gaia", "pregel", "grape",
-                            "sage", "graphlearn"],
-                    n_frags=4, feature_prop="feat")
-    print(dep.describe())
+    # 2. compose the stack into ONE session: Cypher+Gaia/HiActor (queries
+    #    and writes), GRAPE (analytics), GraphLearn sampling — all sharing
+    #    the store, the PropertyGraph facade and the plan cache
+    session = flexbuild(store, ["cypher", "gremlin", "gaia", "hiactor",
+                                "pregel", "grape", "sage", "graphlearn"],
+                        n_frags=4, feature_prop="feat", serve=True)
+    print(session.describe())
 
     # 3a. interactive query (OLAP)
-    result = dep.engine("gaia").execute(
+    result = session.execute(
         "MATCH (a:Person)-[:BUY]->(c:Item) WHERE a.credits > 900 "
         "WITH c, COUNT(a) AS buyers "
-        "RETURN buyers AS buyers ORDER BY buyers DESC LIMIT 5")
-    print("top item buyer-counts:", result["buyers"])
+        "RETURN c.id AS item, buyers AS buyers "
+        "ORDER BY buyers DESC LIMIT 5")
+    print("top items:", result["item"], "buyer-counts:", result["buyers"])
 
-    # 3b. analytics
-    pr = np.asarray(alg.pagerank(dep.engine("grape"), max_steps=30))
-    print("pagerank: top vertex", int(pr.argmax()), "mass", float(pr.max()))
+    # 3b. analytics at the pre-write version (memoized per snapshot)
+    pr0 = session.analytical().run("pagerank", damping=0.85)
+    v0 = session.version
+    print(f"pagerank@v{v0}: top vertex", int(pr0.argmax()),
+          "mass", float(pr0.max()))
 
-    # 3c. GNN sampling
-    batch = dep.engine("graphlearn").sample_batch(np.arange(32), [10, 5])
+    # 4. WRITE: recommend the top item to person 0 — one CREATE and one
+    #    SET through the same serving loop, committed at flush end
+    top_item = int(result["item"][0])       # rows arrive ORDER BY DESC
+    write = session.execute(
+        "MATCH (a:Person {id: $x}), (b {id: $y}) "
+        "CREATE (a)-[:BUY {date: $d}]->(b)",
+        {"x": 0, "y": top_item, "d": 42})
+    session.execute("MATCH (a:Person {id: $x}) "
+                    "SET a.credits = a.credits - 100", {"x": 0})
+    print(f"write committed: +{int(write['inserted'][0])} edge, "
+          f"now at version {session.version}")
+
+    # 5. the bus rebound everything: analytics at the NEW version differ,
+    #    while a session pinned at v0 reproduces the old result bit-for-bit
+    pr1 = session.analytical().run("pagerank", damping=0.85)
+    pinned = session.at(v0)
+    pr0_again = pinned.analytical().run("pagerank", damping=0.85)
+    print("post-write pagerank differs:", not np.array_equal(pr0, pr1),
+          "| pinned@v0 bit-for-bit:", np.array_equal(pr0, pr0_again))
+
+    # 6. GNN sampling over the current snapshot (refreshed on commit)
+    batch = session.learning().sampler().sample_batch(np.arange(32), [10, 5])
     print("sampled batch frontier sizes:",
           [f.shape for f in batch.features])
 

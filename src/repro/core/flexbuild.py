@@ -51,9 +51,27 @@ class Deployment:
     store: Any
     components: List[str]
     engines: Dict[str, Any]
+    n_frags: int = 1
+    feature_prop: Optional[str] = None
+    label_prop: Optional[str] = None
 
     def engine(self, name: str):
         return self.engines[name]
+
+    def session(self, **kwargs):
+        """The user-facing surface over this deployment: one
+        :class:`~repro.serving.session.FlexSession` driving queries,
+        writes, analytics and learning over the deployment's store
+        (DESIGN.md §11). Keyword arguments override the session knobs
+        (``n_frags``, ``feature_prop``, …) inherited from the build."""
+        from repro.serving.session import FlexSession
+
+        kwargs.setdefault("n_frags", self.n_frags)
+        if self.feature_prop is not None:
+            kwargs.setdefault("feature_prop", self.feature_prop)
+        if self.label_prop is not None:
+            kwargs.setdefault("label_prop", self.label_prop)
+        return FlexSession(self.store, **kwargs)
 
     def describe(self) -> str:
         lines = [f"storage: {type(self.store).__name__} "
@@ -66,14 +84,24 @@ class Deployment:
 def flexbuild(store, components: Sequence[str], *,
               mesh=None, n_frags: int = 1,
               feature_prop: Optional[str] = None,
-              label_prop: Optional[str] = None) -> Deployment:
-    """Validate the selection and build the composed deployment."""
+              label_prop: Optional[str] = None,
+              serve: bool = False, **session_kwargs):
+    """Validate the selection and build the composed deployment.
+
+    With ``serve=True`` the composed stack is returned as a ready
+    :class:`~repro.serving.session.FlexSession` (the recommended surface:
+    one façade over queries, writes, analytics and learning —
+    DESIGN.md §11) instead of the loose-engine :class:`Deployment`;
+    extra keyword arguments pass through to the session."""
     comps = list(components)
     unknown = [c for c in comps
                if c not in STORAGE_COMPONENTS | ENGINE_COMPONENTS
                | INTERFACE_COMPONENTS]
     if unknown:
         raise ValueError(f"unknown components: {unknown}")
+    if session_kwargs and not serve:
+        raise TypeError(f"unexpected arguments {sorted(session_kwargs)} "
+                        f"(session knobs need serve=True)")
 
     # interfaces pull in their engines implicitly
     engines_wanted = {c for c in comps if c in ENGINE_COMPONENTS}
@@ -82,21 +110,40 @@ def flexbuild(store, components: Sequence[str], *,
             if not engines_wanted & INTERFACE_ENGINE[itf]:
                 engines_wanted.add(sorted(INTERFACE_ENGINE[itf])[0])
 
-    # trait validation happens inside each engine's GRINAdapter; build them
+    # trait validation happens inside each engine's GRINAdapter; build them.
+    # A mutable MVCC store interlocks through a *pinned snapshot* — loose
+    # engines read one consistent version (the session rebinds on commit)
+    eng_store = store
+    t = store.traits()
+    if (t & Traits.MUTABLE) and (t & Traits.MVCC_SNAPSHOT) \
+            and hasattr(store, "snapshot"):
+        eng_store = store.snapshot()
+    dep = Deployment(store=store, components=comps, engines={},
+                     n_frags=n_frags, feature_prop=feature_prop,
+                     label_prop=label_prop)
+    if serve:
+        # the session builds (and rebinds) its own engines over its own
+        # pinned snapshots — constructing the loose ones here would be
+        # pure waste. Bricks still refuse to interlock at build time:
+        # validate each selected engine's trait requirements now.
+        for name in sorted(engines_wanted):
+            GRINAdapter(eng_store, ENGINE_TRAITS[name])
+        return dep.session(**session_kwargs)
     engines: Dict[str, Any] = {}
     for name in sorted(engines_wanted):
         if name == "grape":
             from repro.engines.grape import GrapeEngine
-            engines[name] = GrapeEngine(store, n_frags=n_frags, mesh=mesh)
+            engines[name] = GrapeEngine(eng_store, n_frags=n_frags, mesh=mesh)
         elif name == "gaia":
             from repro.engines.gaia import GaiaEngine
-            engines[name] = GaiaEngine(store)
+            engines[name] = GaiaEngine(eng_store)
         elif name == "hiactor":
             from repro.engines.hiactor import HiActorEngine
-            engines[name] = HiActorEngine(store)
+            engines[name] = HiActorEngine(eng_store)
         elif name == "graphlearn":
             from repro.learning.sampler import GraphSampler
-            engines[name] = GraphSampler(store,
+            engines[name] = GraphSampler(eng_store,
                                          feature_prop=feature_prop or "feat",
                                          label_prop=label_prop)
-    return Deployment(store=store, components=comps, engines=engines)
+    dep.engines = engines
+    return dep

@@ -17,7 +17,7 @@ import numpy as np
 
 from repro.core.ir.dag import (Const, BinExpr, Expand, GetVertex, Limit,
                                LogicalPlan, Param, Pred, PropRef, Scan,
-                               Select)
+                               Select, plan_is_write)
 
 
 @dataclasses.dataclass
@@ -135,7 +135,10 @@ def is_point_lookup(plan: LogicalPlan, catalog: Catalog,
 
     Plans containing LIMIT are excluded: the batched pass executes the
     whole multi-query table in one shot, so a LIMIT would truncate
-    across the batch instead of per query."""
+    across the batch instead of per query. Write plans never batch here —
+    mutations go down the serving layer's write route (DESIGN.md §11)."""
+    if plan_is_write(plan):
+        return False
     if find_indexed_anchor(plan) is None:
         return False
     if any(isinstance(op, Limit) for op in plan.ops):
@@ -161,6 +164,8 @@ def should_use_fragment_path(plan: LogicalPlan, catalog: Catalog,
     stays the semantic oracle."""
     from repro.core.ir.codegen import lower_to_frontier
 
+    if plan_is_write(plan):
+        return False
     if is_point_lookup(plan, catalog, row_threshold):
         return False
     program = lower_to_frontier(plan)

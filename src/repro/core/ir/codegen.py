@@ -168,6 +168,13 @@ def execute_plan(plan: LogicalPlan, pg, *,
             out["key"] = uniq
             out[op.name] = counts
         else:
+            from repro.core.ir.dag import MUTATION_OPS
+            if isinstance(op, MUTATION_OPS):
+                raise NotImplementedError(
+                    f"{type(op).__name__} is a mutation: write plans "
+                    f"execute through the serving layer's write route "
+                    f"(FlexSession.interactive(), DESIGN.md §11), not the "
+                    f"read-only interpreter")
             raise NotImplementedError(op)
     if not out and table is not None:
         out = dict(table.columns)
@@ -340,7 +347,7 @@ def _op_column_refs(op) -> set:
         refs.update(e.refs() if hasattr(e, "refs") else set())
         return e
 
-    from repro.core.ir.dag import map_op_exprs
+    from repro.core.ir.dag import InsertEdge, SetProp, map_op_exprs
     map_op_exprs(op, collect)
     if isinstance(op, Expand):
         refs.add(op.src)
@@ -350,6 +357,10 @@ def _op_column_refs(op) -> set:
         refs.update(op.keys)
     elif isinstance(op, OrderBy):
         refs.add(op.key)
+    elif isinstance(op, InsertEdge):
+        refs.update({op.src, op.dst})
+    elif isinstance(op, SetProp):
+        refs.add(op.alias)
     return refs
 
 

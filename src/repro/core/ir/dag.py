@@ -151,6 +151,57 @@ class ProcedureCall:
     yields: Tuple[str, ...] = ()         # (vertex alias, score column)
 
 
+# ------------------------------------------------------------ mutation IR
+@dataclasses.dataclass(frozen=True)
+class InsertEdge:
+    """``CREATE (a)-[:R {p: $x}]->(b)`` / gremlin ``add_e`` — append edges
+    to a mutable store (DESIGN.md §11). Endpoints are vertex *aliases*:
+    bound by the plan's MATCH prefix (row-aligned inserts, one edge per
+    surviving row), or self-resolving via ``*_label``/``*_pred`` when the
+    alias is unbound (the CREATE pattern's own label / property map
+    identifies existing vertices — the stack has no vertex allocation).
+
+    ``props`` values and the endpoint predicates are ordinary expressions,
+    so ``$param`` placeholders bind per request through the plan cache
+    exactly like read plans. The optimizers treat mutations as opaque
+    sinks: RBO never fuses/pushes across them, CBO keeps them in the
+    relational tail, and the serving router sends any plan containing one
+    down the ``write`` path before the read-route predicates ever run."""
+
+    src: str
+    dst: str
+    edge_label: int
+    props: Tuple[Tuple[str, Expr], ...] = ()
+    src_label: Optional[int] = None      # unbound-endpoint resolution
+    src_pred: Optional[Pred] = None
+    dst_label: Optional[int] = None
+    dst_pred: Optional[Pred] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class SetProp:
+    """``SET a.prop = <expr>`` / gremlin ``property`` — update (or create)
+    a vertex property column on a mutable store (DESIGN.md §11). ``alias``
+    rows come from the bound MATCH prefix, or resolve via ``label``/
+    ``pred`` when unbound. ``value`` is any expression over the prefix
+    columns (``$params``, other aliases' properties, WITH aggregates)."""
+
+    alias: str
+    prop: str
+    value: Expr
+    label: Optional[int] = None          # unbound-alias resolution
+    pred: Optional[Pred] = None
+
+
+MUTATION_OPS = (InsertEdge, SetProp)
+
+
+def plan_is_write(plan: "LogicalPlan") -> bool:
+    """True when the plan contains any mutation operator — such plans only
+    execute through the serving layer's ``write`` route (DESIGN.md §11)."""
+    return any(isinstance(op, MUTATION_OPS) for op in plan.ops)
+
+
 @dataclasses.dataclass(frozen=True)
 class OrderBy:
     key: str
@@ -163,7 +214,7 @@ class Limit:
 
 
 Op = Union[Scan, Expand, GetVertex, Select, Project, With, GroupCount,
-           ProcedureCall, OrderBy, Limit]
+           ProcedureCall, InsertEdge, SetProp, OrderBy, Limit]
 
 
 @dataclasses.dataclass

@@ -14,10 +14,10 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.ir.dag import (Agg, BinExpr, Const, Expand, GetVertex, Limit,
-                               LogicalPlan, OrderBy, Param, Pred,
-                               ProcedureCall, Project, PropRef, Scan, Select,
-                               With)
+from repro.core.ir.dag import (Agg, BinExpr, Const, Expand, GetVertex,
+                               InsertEdge, Limit, LogicalPlan, OrderBy,
+                               Param, Pred, ProcedureCall, Project, PropRef,
+                               Scan, Select, SetProp, With)
 from repro.storage.generators import EDGE_NAMES, LABEL_NAMES
 
 
@@ -151,7 +151,7 @@ def parse_expr(s: str):
 _NODE = re.compile(r"\(\s*(?P<alias>\w+)?\s*(?::(?P<label>\w+))?"
                    r"\s*(?P<props>\{[^}]*\})?\s*\)")
 _EDGE = re.compile(r"(?P<l><)?-\s*(?:\[\s*(?P<alias>\w+)?\s*(?::(?P<label>\w+))?"
-                   r"\s*\])?\s*-(?P<r>>)?")
+                   r"\s*(?P<props>\{[^}]*\})?\s*\])?\s*-(?P<r>>)?")
 
 
 def _props_to_pred(alias: str, props: Optional[str]):
@@ -177,6 +177,32 @@ def _props_to_pred(alias: str, props: Optional[str]):
     return Pred(out)
 
 
+def _props_to_items(props: Optional[str]) -> Tuple:
+    """``{date: $d, rating: 5}`` → ((name, Expr), …) — the property map of
+    a CREATE edge. Values are full expressions (``$params``, literals,
+    arithmetic over matched aliases' properties)."""
+    if not props:
+        return ()
+    inner = props.strip()[1:-1]
+    items = []
+    for kv in inner.split(","):
+        if not kv.strip():
+            continue
+        k, v = kv.split(":", 1)
+        items.append((k.strip(), parse_expr(v.strip())))
+    return tuple(items)
+
+
+def _node_info(m, anon_counter: List[int]):
+    """(alias, label, props-pred) of one matched ``_NODE`` group."""
+    alias = m.group("alias")
+    if alias is None:
+        anon_counter[0] += 1
+        alias = f"_v{anon_counter[0]}"
+    label = LABEL_NAMES.get(m.group("label")) if m.group("label") else None
+    return alias, label, _props_to_pred(alias, m.group("props"))
+
+
 def _parse_pattern(pattern: str, seen: set, anon_counter: List[int]) -> List:
     """One comma-separated MATCH pattern → list of Scan/Expand+GetVertex."""
     ops: List = []
@@ -186,12 +212,7 @@ def _parse_pattern(pattern: str, seen: set, anon_counter: List[int]) -> List:
         raise SyntaxError(f"pattern must start with a node: {pattern!r}")
 
     def node_info(m):
-        alias = m.group("alias")
-        if alias is None:
-            anon_counter[0] += 1
-            alias = f"_v{anon_counter[0]}"
-        label = LABEL_NAMES.get(m.group("label")) if m.group("label") else None
-        return alias, label, _props_to_pred(alias, m.group("props"))
+        return _node_info(m, anon_counter)
 
     alias, label, pred = node_info(m)
     if alias not in seen:
@@ -226,6 +247,10 @@ def _parse_pattern(pattern: str, seen: set, anon_counter: List[int]) -> List:
         pos = nm.end()
         ops.append(Expand(src=prev, edge_label=e_label, direction=direction,
                           edge=e_alias))
+        if em.group("props"):
+            # inline edge property map: a filter on the edge alias (RBO
+            # pushes it into the Expand as a storage-level predicate)
+            ops.append(Select(_props_to_pred(e_alias, em.group("props"))))
         if n_alias in seen:
             # closing a cycle onto an already-bound alias (earlier pattern,
             # earlier hop, or a CALL-yielded vertex): materialize the head
@@ -247,8 +272,107 @@ def _parse_pattern(pattern: str, seen: set, anon_counter: List[int]) -> List:
     return ops
 
 
+def _parse_create(pattern: str, seen: set, anon_counter: List[int]) -> List:
+    """One CREATE pattern → InsertEdge ops (DESIGN.md §11).
+
+    ``CREATE (a)-[:KNOWS {since: $s}]->(b)`` appends one edge per row of
+    the bound prefix when ``a``/``b`` were MATCHed; an *unbound* endpoint
+    resolves through its own label / property map against existing
+    vertices (``CREATE (x {id: $src})-[:KNOWS]->(y {id: $dst})``). There
+    is no vertex allocation — GART's write surface is edges + vertex
+    properties — so a CREATE pattern without an edge is rejected."""
+    ops: List = []
+    pos = 0
+    m = _NODE.match(pattern, pos)
+    if not m:
+        raise SyntaxError(f"CREATE pattern must start with a node: "
+                          f"{pattern!r}")
+
+    def endpoint(nm):
+        alias, label, pred = _node_info(nm, anon_counter)
+        if alias in seen:
+            if label is not None or pred is not None:
+                raise SyntaxError(
+                    f"CREATE endpoint {alias!r} is already bound; it "
+                    f"cannot carry a label or property map")
+            return alias, None, None
+        if label is None and pred is None:
+            # openCypher would allocate a new node here; this stack has
+            # no vertex allocation, and resolving a bare alias against
+            # every vertex would fan one CREATE into N edges
+            raise SyntaxError(
+                f"CREATE endpoint {alias!r} is unbound and carries no "
+                f"label or property map to identify existing vertices "
+                f"(vertex creation is not supported; DESIGN.md §11)")
+        return alias, label, pred
+
+    prev = endpoint(m)
+    pos = m.end()
+    made_edge = False
+    while pos < len(pattern):
+        em = _EDGE.match(pattern, pos)
+        if not em:
+            break
+        raw_label = em.group("label")
+        if raw_label is None:
+            raise SyntaxError(f"CREATE edge needs a label: {pattern!r}")
+        e_label = EDGE_NAMES.get(raw_label)
+        if e_label is None:
+            raise SyntaxError(f"unknown edge label {raw_label!r}; known: "
+                              f"{sorted(EDGE_NAMES)}")
+        props = _props_to_items(em.group("props"))
+        pos = em.end()
+        nm = _NODE.match(pattern, pos)
+        if not nm:
+            raise SyntaxError(f"expected node after CREATE edge at "
+                              f"{pattern[pos:]!r}")
+        cur = endpoint(nm)
+        pos = nm.end()
+        # `<-[:R]-` points the edge at prev; `-[:R]->` at cur
+        (s_alias, s_label, s_pred), (d_alias, d_label, d_pred) = \
+            ((cur, prev) if em.group("l") else (prev, cur))
+        ops.append(InsertEdge(
+            src=s_alias, dst=d_alias, edge_label=e_label, props=props,
+            src_label=s_label, src_pred=s_pred,
+            dst_label=d_label, dst_pred=d_pred))
+        made_edge = True
+        prev = cur
+    if not made_edge:
+        raise SyntaxError(
+            "CREATE without an edge pattern is not supported (the store "
+            "has no vertex allocation; see DESIGN.md §11)")
+    return ops
+
+
+_SET_ITEM = re.compile(r"(?P<alias>\w+)\.(?P<prop>\w+)\s*=\s*(?P<value>.+)$")
+
+
+def _parse_set(body: str, seen: set) -> List:
+    """``SET a.credits = $c, a.flag = 1`` → SetProp ops. The alias must
+    be bound by the MATCH/CALL prefix — an unbound alias would silently
+    update every vertex (a typo'd alias zeroing a whole column), so it is
+    rejected; a deliberate whole-column backfill is ``MATCH (a) SET
+    a.x = v`` (DESIGN.md §11)."""
+    ops: List = []
+    for item in body.split(","):
+        m = _SET_ITEM.match(item.strip())
+        if not m:
+            raise SyntaxError(f"bad SET item {item!r}; expected "
+                              f"alias.prop = <expr>")
+        if m.group("alias") not in seen:
+            raise SyntaxError(
+                f"SET alias {m.group('alias')!r} is not bound by the "
+                f"MATCH/CALL prefix (bound: {sorted(seen) or 'none'})")
+        ops.append(SetProp(alias=m.group("alias"), prop=m.group("prop"),
+                           value=parse_expr(m.group("value"))))
+    return ops
+
+
+# clause keywords split the query; the lookbehinds keep property accesses
+# (`a.limit`) and parameters (`$set`) from being mistaken for clauses
 _CLAUSE = re.compile(
-    r"\b(CALL|MATCH|WHERE|WITH|RETURN|ORDER BY|LIMIT)\b", re.I)
+    r"(?<![.$])\b(CALL|CREATE|MATCH|WHERE|WITH|RETURN|ORDER BY|LIMIT|SET)\b",
+    re.I)
 
 _CALL_BODY = re.compile(
     r"^(?P<name>[A-Za-z_][\w.]*)\s*\((?P<args>[^)]*)\)"
@@ -300,6 +424,11 @@ def parse_cypher(query: str) -> LogicalPlan:
         elif name == "MATCH":
             for pattern in _split_patterns(body):
                 ops.extend(_parse_pattern(pattern, seen, anon))
+        elif name == "CREATE":
+            for pattern in _split_patterns(body):
+                ops.extend(_parse_create(pattern, seen, anon))
+        elif name == "SET":
+            ops.extend(_parse_set(body, seen))
         elif name == "WHERE":
             ops.append(Select(Pred(parse_expr(body))))
         elif name == "WITH":
@@ -448,6 +577,37 @@ def parse_gremlin(query: str) -> LogicalPlan:
         elif step == "order_by":
             desc = len(args) > 1 and args[1].lower() == "desc"
             ops.append(OrderBy(args[0].replace(".", "_"), desc))
+        elif step == "add_e":
+            # add_e('KNOWS', <dst>, [prop, value, ...]): append an edge
+            # from every frontier vertex to the vertex whose internal id
+            # the second argument evaluates to (DESIGN.md §11)
+            raw = [p.strip() for p in rawargs.split(",")]
+            if len(raw) < 2:
+                raise SyntaxError("add_e needs (edge_label, dst_id)")
+            label_name = raw[0].strip("'\"")
+            if label_name not in EDGE_NAMES:
+                raise SyntaxError(f"unknown edge label {label_name!r}; "
+                                  f"known: {sorted(EDGE_NAMES)}")
+            if len(raw[2:]) % 2:
+                raise SyntaxError("add_e property args must be "
+                                  "(name, value) pairs")
+            props = tuple((raw[j].strip("'\""), parse_expr(raw[j + 1]))
+                          for j in range(2, len(raw), 2))
+            anon[0] += 1
+            d_alias = f"_w{anon[0]}"
+            ops.append(InsertEdge(
+                src=cur_alias, dst=d_alias,
+                edge_label=EDGE_NAMES[label_name], props=props,
+                dst_pred=Pred(BinExpr("==", PropRef(d_alias, None),
+                                      parse_expr(raw[1])))))
+        elif step == "property":
+            # property('credits', <expr>): set a vertex property on every
+            # frontier vertex (DESIGN.md §11)
+            raw = [p.strip() for p in rawargs.split(",")]
+            if len(raw) != 2:
+                raise SyntaxError("property needs (name, value)")
+            ops.append(SetProp(alias=cur_alias, prop=raw[0].strip("'\""),
+                               value=parse_expr(raw[1])))
         else:
             raise SyntaxError(f"unsupported gremlin step {step}")
     return LogicalPlan(ops)

@@ -17,8 +17,9 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Set, Tuple
 
-from repro.core.ir.dag import (BinExpr, Expand, GetVertex, LogicalPlan, Op,
-                               Pred, PropRef, Scan, Select)
+from repro.core.ir.dag import (BinExpr, Expand, GetVertex, InsertEdge,
+                               LogicalPlan, Op, Pred, PropRef, Scan, Select,
+                               SetProp)
 
 
 def _conjuncts(expr) -> List:
@@ -53,6 +54,12 @@ def _later_refs(ops: List[Op], start: int) -> Set[str]:
                                 refs |= sub.refs()
         if isinstance(op, Select):
             refs |= op.pred.refs()
+        # mutation sinks reference aliases through plain string fields the
+        # generic walk above cannot see (DESIGN.md §11: opaque to RBO)
+        if isinstance(op, InsertEdge):
+            refs |= {op.src, op.dst}
+        elif isinstance(op, SetProp):
+            refs.add(op.alias)
     return refs
 
 

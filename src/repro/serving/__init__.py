@@ -1,14 +1,21 @@
-"""Serving layer: parameterized plan cache + concurrent query front door.
+"""Serving layer: parameterized plan cache + concurrent query front door
++ the read-write session façade.
 
 Sits above the query engines and the analytics bridge (DESIGN.md §6):
 templates compile once, bind per request, and same-template traffic admits
 in vectorized batches routed to Gaia (OLAP-shaped), HiActor (indexed point
 lookups), the fragment frontier path (heavy traversals executed as one
-batched device program, DESIGN.md §9) or the GRAPE procedure executor
-(hybrid ``CALL algo.*`` plans, DESIGN.md §7).
+batched device program, DESIGN.md §9), the GRAPE procedure executor
+(hybrid ``CALL algo.*`` plans, DESIGN.md §7) or the write route (mutation
+plans staged against the pinned snapshot, committed per flush,
+DESIGN.md §11). :class:`FlexSession` is the user-facing surface wrapping
+all of it — interactive / analytical / learning verbs over one store.
 """
 
 from repro.serving.plan_cache import (CacheStats, PlanCache,  # noqa: F401
                                       plan_key)
 from repro.serving.service import (QueryService, Request,  # noqa: F401
                                    Response, ServingStats)
+from repro.serving.session import (AnalyticalContext,  # noqa: F401
+                                   FlexSession, LearningContext, VersionBus)
+from repro.serving.writes import WriteSet, stage_writes  # noqa: F401

@@ -32,11 +32,13 @@ import numpy as np
 
 from repro.core.ir.cbo import (Catalog, is_point_lookup,
                                should_use_fragment_path)
-from repro.core.ir.dag import ProcedureCall
+from repro.core.ir.dag import ProcedureCall, plan_is_write
 from repro.engines.gaia import GaiaEngine
 from repro.engines.hiactor import HiActorEngine
 from repro.engines.procedures import ProcedureRegistry
 from repro.serving.plan_cache import PlanCache, plan_key
+from repro.serving.writes import split_write_plan, stage_writes
+from repro.storage.grin import Traits
 from repro.storage.lpg import PropertyGraph
 
 
@@ -50,7 +52,7 @@ class Request:
 @dataclasses.dataclass
 class Response:
     result: Dict[str, np.ndarray]
-    engine: str          # "gaia" | "hiactor" | "fragment" | "grape"
+    engine: str          # "gaia" | "hiactor" | "fragment" | "grape" | "write"
     cached: bool         # plan-cache hit at admission time
     latency_us: float    # wall time of the admission batch this query rode
 
@@ -92,7 +94,8 @@ class QueryService:
                  rbo: bool = True, cbo: bool = True,
                  procedures: Optional[ProcedureRegistry] = None,
                  fragment: bool = True, n_frags: int = 1,
-                 fragment_min_cost: float = 256.0):
+                 fragment_min_cost: float = 256.0,
+                 write_store=None, on_commit=None):
         self.cache = PlanCache(cache_capacity, on_evict=self._on_plan_evicted)
         self.batch_size = max(1, int(batch_size))
         self.row_threshold = row_threshold
@@ -100,6 +103,21 @@ class QueryService:
         self.fragment = fragment
         self.n_frags = max(1, int(n_frags))
         self.fragment_min_cost = fragment_min_cost
+        # mutable substrate behind the write route (DESIGN.md §11): a
+        # MUTABLE MVCC store given as `store` serves reads through a
+        # pinned snapshot and writes through itself; `on_commit(version)`
+        # fires after each writing flush rebinds the snapshot (the
+        # session's version-epoch bus hangs off it). ``write_store=False``
+        # forces a read-only service over a mutable store (pinned views).
+        if not isinstance(store, PropertyGraph) \
+                and hasattr(store, "traits") \
+                and (store.traits() & Traits.MUTABLE) \
+                and (store.traits() & Traits.MVCC_SNAPSHOT):
+            if write_store is None:
+                write_store = store
+            store = store.snapshot()      # reads always pin a version
+        self.write_store = write_store if write_store is not False else None
+        self.on_commit = on_commit
         pg = store if isinstance(store, PropertyGraph) \
             else PropertyGraph(store)     # one facade: engines share the
         # CALL algo.* registry; pass a shared one to reuse memoized
@@ -110,6 +128,7 @@ class QueryService:
                                procedures=self.procedures)
         self.hiactor = HiActorEngine(pg, catalog=self.gaia.catalog,
                                      procedures=self.procedures)
+        self._bound_version = getattr(pg.grin.store, "version", None)
         self._queue: List[Request] = []
         self._proc_names: Dict[Tuple, str] = {}
         self._proc_seq = 0                # monotonic: names never reused
@@ -127,6 +146,36 @@ class QueryService:
         if pname is not None:
             self.hiactor.unregister(pname)
 
+    # -------------------------------------------------------------- rebind
+    def rebind(self, store=None, catalog: Optional[Catalog] = None) -> None:
+        """Re-pin the read side on a fresh snapshot (DESIGN.md §11).
+
+        Called after every writing flush (and lazily when an external
+        writer advanced the store between flushes): rebuilds the
+        PropertyGraph facade, catalog and engines over the new version, and
+        drops the derived state that was computed against the old one —
+        memoized routes and HiActor's registered stored procedures (their
+        indexes bake in old property values). The compiled-plan cache
+        survives: plans are data-independent. Fragment frontier and slab
+        caches live inside the old engines, so they can never serve the new
+        version by accident — eligible plans rebuild their slabs on first
+        use at the new snapshot."""
+        if store is None:
+            if self.write_store is None:
+                raise ValueError("rebind() needs a store when the service "
+                                 "has no mutable write_store")
+            store = self.write_store.snapshot()
+        pg = store if isinstance(store, PropertyGraph) \
+            else PropertyGraph(store)
+        self.gaia = GaiaEngine(pg, catalog=catalog, rbo=self.gaia.rbo,
+                               cbo=self.gaia.cbo, plan_cache=self.cache,
+                               procedures=self.procedures)
+        self.hiactor = HiActorEngine(pg, catalog=self.gaia.catalog,
+                                     procedures=self.procedures)
+        self._bound_version = getattr(pg.grin.store, "version", None)
+        self._routes.clear()
+        self._proc_names.clear()          # old engine died with its indexes
+
     # ------------------------------------------------------------- compile
     def compile(self, template: str, language: str = "cypher"):
         """``(plan, cached)`` through the shared plan cache."""
@@ -140,7 +189,18 @@ class QueryService:
         return len(self._queue) - 1
 
     def flush(self) -> Tuple[List[Response], ServingStats]:
-        """Execute all pending requests; responses in submission order."""
+        """Execute all pending requests; responses in submission order.
+
+        Reads (and write-plan MATCH prefixes) all observe the snapshot the
+        service is bound to at admission time; staged writes commit once at
+        the end of the flush, after which the service rebinds to the new
+        version (DESIGN.md §11)."""
+        # epoch guard: a writer that bypassed the write route (direct
+        # GARTStore calls) advanced the store; refresh rather than serve
+        # the stale snapshot by accident
+        if self.write_store is not None and \
+                self.write_store.write_version != self._bound_version:
+            self.rebind()
         pending, self._queue = self._queue, []
         t0 = time.perf_counter()
         # same-template requests batch together regardless of submitter
@@ -151,12 +211,18 @@ class QueryService:
             groups.setdefault(key, []).append((pos, req))
 
         # admission pass: compile + validate every group before executing
-        # any. Invalid requests (bad template, unbound params) are rejected
-        # — dropped, with the first error raised — while every valid
-        # request goes back on the queue untouched, so one bad tenant can
-        # neither discard nor permanently block the others' work.
+        # any. Invalid requests (bad template, unbound params, write plans
+        # whose staging fails — e.g. an endpoint matching no vertices) are
+        # rejected — dropped, with the first error raised — while every
+        # valid request goes back on the queue untouched, so one bad
+        # tenant can neither discard nor permanently block the others'
+        # work. Write staging runs here, against the pinned snapshot: it
+        # is pure (WriteSets commit only at flush end), and staging at
+        # admission keeps data-dependent write errors on the same
+        # reject-and-requeue path as every other invalid request.
         admitted = []
         rejected: List[Exception] = []
+        staged_ws: Dict[int, Tuple[Any, float]] = {}   # pos → (WriteSet, us)
         for key, items in groups.items():
             first = items[0][1]
             try:
@@ -164,6 +230,20 @@ class QueryService:
             except Exception as e:
                 rejected.extend([e] * len(items))
                 continue
+            is_write = plan_is_write(plan)
+            if is_write:
+                if self.write_store is None:
+                    rejected.extend([PermissionError(
+                        f"template {first.template!r} mutates the graph "
+                        f"but this service is read-only (no mutable "
+                        f"write_store; pinned views from FlexSession.at() "
+                        f"reject writes)")] * len(items))
+                    continue
+                try:                       # shape check: mutations tail-only
+                    split_write_plan(plan)
+                except Exception as e:
+                    rejected.extend([e] * len(items))
+                    continue
             needed = plan.param_names()
             valid = []
             for pos, req in items:
@@ -172,8 +252,18 @@ class QueryService:
                     rejected.append(KeyError(
                         f"unbound parameters {sorted(missing)} "
                         f"for template {first.template!r}"))
-                else:
-                    valid.append((pos, req))
+                    continue
+                if is_write:
+                    c0 = time.perf_counter()
+                    try:
+                        ws = stage_writes(plan, self.gaia.pg, req.params,
+                                          procedures=self.procedures)
+                    except Exception as e:
+                        rejected.append(e)
+                        continue
+                    staged_ws[pos] = (ws,
+                                      (time.perf_counter() - c0) * 1e6)
+                valid.append((pos, req))
             if valid:
                 admitted.append((key, valid, plan, cached))
         if rejected:
@@ -184,10 +274,15 @@ class QueryService:
 
         responses: List[Optional[Response]] = [None] * len(pending)
         route_counts: Dict[str, int] = {}
+        # staged mutations commit together after every read of this flush
+        # has executed against the pinned snapshot (DESIGN.md §11)
+        staged: List[Tuple[int, Any, bool, float]] = []
         for key, items, plan, cached in admitted:
             route = self._routes.get(key)
             if route is None:
-                if any(isinstance(op, ProcedureCall) for op in plan.ops):
+                if plan_is_write(plan):
+                    route = "write"
+                elif any(isinstance(op, ProcedureCall) for op in plan.ops):
                     # hybrid analytics-in-the-loop plan: GRAPE computes (or
                     # reuses) the fixpoint, Gaia's dataflow runs the rest
                     route = "grape"
@@ -206,7 +301,13 @@ class QueryService:
                 self._routes[key] = route
             route_counts[route] = route_counts.get(route, 0) + len(items)
 
-            if route == "hiactor":
+            if route == "write":
+                # staged at admission against the pinned snapshot; the
+                # commit happens after every read of this flush executed
+                for pos, _req in items:
+                    ws, c_us = staged_ws[pos]
+                    staged.append((pos, ws, cached, c_us))
+            elif route == "hiactor":
                 pname = self._proc_names.get(key)
                 if pname is None:
                     pname = f"__svc_{self._proc_seq}"
@@ -255,6 +356,26 @@ class QueryService:
                     out = self.gaia.execute_plan(plan.bind(req.params))
                     c_us = (time.perf_counter() - c0) * 1e6
                     responses[pos] = Response(out, route, cached, c_us)
+
+        if staged:
+            # batched per-flush commit in submission order, then advance
+            # the bound snapshot so the next flush reads the new version.
+            # A flush whose writes all staged empty (MATCH matched zero
+            # rows) commits nothing: no version bump, no rebind epoch.
+            staged.sort(key=lambda s: s[0])
+            committed = False
+            for pos, ws, cached, c_us in staged:
+                if ws.n_edges or ws.n_set:
+                    v = ws.apply(self.write_store)
+                    committed = True
+                else:
+                    v = self.write_store.write_version
+                responses[pos] = Response(ws.result(v), "write", cached,
+                                          c_us)
+            if committed:
+                self.rebind()
+                if self.on_commit is not None:
+                    self.on_commit(self._bound_version)
 
         wall_us = (time.perf_counter() - t0) * 1e6
         stats = ServingStats(

@@ -1,0 +1,283 @@
+"""FlexSession — one read-write façade over queries, writes, analytics and
+learning (DESIGN.md §11).
+
+The LEGO bricks compose at build time (``flexbuild``); this is the surface
+they compose *into*: a single session over a single store through which
+every workload runs.
+
+- ``session.interactive()`` — the submit/flush serving loop
+  (:class:`~repro.serving.service.QueryService`), now read-write: Cypher
+  ``CREATE`` / ``SET`` and Gremlin ``add_e`` / ``property`` templates
+  compile into mutation IR, stage against the flush's pinned snapshot and
+  commit batched per flush;
+- ``session.analytical()`` — the GRAPE procedures, memoized per snapshot
+  version through the shared :class:`ProcedureRegistry`;
+- ``session.learning()`` — samplers / trainers / the ``gnn.infer`` bridge,
+  always bound to the current version;
+- ``session.at(version)`` — a read-only session pinned at an older MVCC
+  version (time travel); writes through it are rejected.
+
+All four share one store, one ``PropertyGraph`` façade, one ``PlanCache``
+and one ``ProcedureRegistry``. Coherence is enforced by the
+**version-epoch invalidation bus**: a committed write advances the store
+version, the service rebinds onto the new snapshot (dropping memoized
+routes, stored-procedure indexes, fragment slab caches with the old
+engines), the session refreshes its learning handles, and subscribers are
+notified — stale state is evicted by policy (LRU bounds on procedure memos
+and pinned views), never served by accident (snapshot-token keying plus
+the epoch guard in ``flush``).
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.engines.procedures import ProcedureRegistry
+from repro.serving.service import QueryService, Request
+from repro.storage.grin import Traits
+
+
+class VersionBus:
+    """The session's invalidation bus: named subscribers notified, in
+    subscription order, each time a write commits and the session has
+    rebound onto the new version. Subscribers see a consistent session
+    (the new snapshot is already live when they fire). A raising
+    subscriber never silences the others — every callback runs, then the
+    first error propagates."""
+
+    def __init__(self):
+        self._subs: "OrderedDict[str, Callable[[int], None]]" = OrderedDict()
+        self.epoch = 0                       # count of published commits
+
+    def subscribe(self, name: str, fn: Callable[[int], None]) -> None:
+        self._subs[name] = fn
+
+    def unsubscribe(self, name: str) -> None:
+        self._subs.pop(name, None)
+
+    def publish(self, version: int) -> None:
+        self.epoch += 1
+        errors: List[Exception] = []
+        for fn in list(self._subs.values()):
+            try:
+                fn(version)
+            except Exception as e:            # noqa: BLE001
+                errors.append(e)
+        if errors:
+            raise errors[0]
+
+
+class AnalyticalContext:
+    """``session.analytical()`` — GRAPE built-ins over the session's
+    *current* snapshot. Results are memoized per (snapshot version, algo,
+    args) in the shared registry, so a query's ``CALL algo.*`` at the same
+    version reuses the fixpoint computed here and vice versa."""
+
+    def __init__(self, session: "FlexSession"):
+        self._session = session
+
+    def run(self, name: str, *args, **kwargs) -> np.ndarray:
+        """Run (or reuse) one built-in, e.g. ``run("pagerank",
+        damping=0.85)``; returns the dense per-vertex result."""
+        s = self._session
+        return s.procedures.run(s.snapshot_store, name, args, kwargs)
+
+
+class LearningContext:
+    """``session.learning()`` — sampling / training / serving bound to the
+    current snapshot. Handles are cached per version and dropped by the
+    invalidation bus when a write commits, so a sampler can never feed a
+    trainer edges from a superseded snapshot. Trained models plug back
+    into the query surface through ``register_inference`` →
+    ``CALL gnn.infer($model)`` (DESIGN.md §10)."""
+
+    def __init__(self, session: "FlexSession"):
+        self._session = session
+        self._samplers: Dict[Tuple, Any] = {}
+
+    def _invalidate(self, _version: int) -> None:
+        self._samplers.clear()
+
+    def sampler(self, feature_prop: Optional[str] = None,
+                label_prop: Optional[str] = None, **kwargs):
+        """A :class:`GraphSampler` over the current snapshot (cached per
+        version + configuration)."""
+        from repro.learning.sampler import GraphSampler
+
+        s = self._session
+        key = (s.version, feature_prop or s.feature_prop,
+               label_prop if label_prop is not None else s.label_prop,
+               tuple(sorted(kwargs.items())))
+        if key not in self._samplers:
+            self._samplers[key] = GraphSampler(
+                s.snapshot_store, feature_prop=key[1], label_prop=key[2],
+                **kwargs)
+        return self._samplers[key]
+
+    def trainer(self, hidden: int, n_classes: int, fanouts,
+                sampler=None, **kwargs):
+        """A :class:`SageTrainer` over the current snapshot's sampler."""
+        from repro.learning.trainer import SageTrainer
+
+        return SageTrainer(sampler or self.sampler(), hidden=hidden,
+                           n_classes=n_classes, fanouts=fanouts, **kwargs)
+
+    def register_inference(self, trainer, name: str = "default",
+                           key: int = 0) -> str:
+        """Freeze the trainer's current parameters into the shared
+        registry: queries at any snapshot can now ``CALL gnn.infer``."""
+        return trainer.register_inference(self._session.procedures,
+                                          name=name, key=key)
+
+    def infer(self, name: str = "default") -> np.ndarray:
+        """Serve a registered model over the current snapshot (memoized
+        per version — exactly what ``CALL gnn.infer`` answers with)."""
+        s = self._session
+        return s.procedures.run(s.snapshot_store, "gnn.infer", (name,))
+
+
+class FlexSession:
+    """One session, four verbs, one store (DESIGN.md §11).
+
+    Build it from a deployment (``flexbuild(store, comps, serve=True)`` or
+    ``Deployment.session()``) or directly over a store. A MUTABLE MVCC
+    store (GART) makes the session read-write; an immutable store serves
+    the same surface read-only."""
+
+    def __init__(self, store, *, catalog=None, cache_capacity: int = 128,
+                 batch_size: int = 64, row_threshold: float = 2e4,
+                 rbo: bool = True, cbo: bool = True,
+                 fragment: bool = True, n_frags: int = 1,
+                 fragment_min_cost: float = 256.0,
+                 feature_prop: str = "feat",
+                 label_prop: Optional[str] = None,
+                 procedures: Optional[ProcedureRegistry] = None,
+                 max_pinned: int = 4,
+                 _read_only: bool = False):
+        self.store = store
+        self.feature_prop = feature_prop
+        self.label_prop = label_prop
+        self.bus = VersionBus()
+        self.procedures = procedures or ProcedureRegistry()
+        self.max_pinned = max(1, int(max_pinned))
+        self._pinned: "OrderedDict[int, FlexSession]" = OrderedDict()
+        traits = store.traits()
+        self.mutable = bool(traits & Traits.MUTABLE) and not _read_only
+        self._service = QueryService(
+            store, catalog=catalog, cache_capacity=cache_capacity,
+            batch_size=batch_size, row_threshold=row_threshold,
+            rbo=rbo, cbo=cbo, procedures=self.procedures,
+            fragment=fragment, n_frags=n_frags,
+            fragment_min_cost=fragment_min_cost,
+            write_store=store if self.mutable else False,
+            on_commit=self._on_commit)
+        self._learning: Optional[LearningContext] = None
+        self._analytical: Optional[AnalyticalContext] = None
+        self.last_publish_error: Optional[Exception] = None
+
+    # ------------------------------------------------------------ the verbs
+    def interactive(self) -> QueryService:
+        """The serving loop: ``submit``/``flush``/``serve`` — reads AND
+        writes (``CREATE``/``SET``/``add_e``/``property`` templates)."""
+        return self._service
+
+    def analytical(self) -> AnalyticalContext:
+        if self._analytical is None:
+            self._analytical = AnalyticalContext(self)
+        return self._analytical
+
+    def learning(self) -> LearningContext:
+        if self._learning is None:
+            self._learning = LearningContext(self)
+            self.bus.subscribe("__learning__", self._learning._invalidate)
+        return self._learning
+
+    # --------------------------------------------------------- shared state
+    @property
+    def pg(self):
+        """The one PropertyGraph façade every engine of this session
+        shares, pinned at the current bound version."""
+        return self._service.gaia.pg
+
+    @property
+    def snapshot_store(self):
+        """The pinned read view (a GARTSnapshot for MVCC stores, the store
+        itself otherwise) — what analytics/learning memo keys hang off."""
+        return self.pg.grin.store
+
+    @property
+    def version(self) -> Optional[int]:
+        """The MVCC version reads are currently pinned at (None for
+        non-versioned stores)."""
+        return self._service._bound_version
+
+    @property
+    def plan_cache(self):
+        return self._service.cache
+
+    # ------------------------------------------------------------- serving
+    def execute(self, template: str,
+                params: Optional[Dict[str, Any]] = None,
+                language: str = "cypher") -> Dict[str, np.ndarray]:
+        """One-shot convenience: submit + flush a single request. The
+        flush drains anything already queued on the service too; this
+        request is last in, so its response is last out."""
+        responses, _ = self._service.serve(
+            [Request(template, dict(params or {}), language)])
+        return responses[-1].result
+
+    # ---------------------------------------------------------- time travel
+    def at(self, version: int) -> "FlexSession":
+        """A read-only session pinned at ``version`` — shares this
+        session's ProcedureRegistry (so analytics memoized at that version
+        are reused bit-for-bit) but owns its plan cache and engines.
+        Pinned sessions are LRU-bounded (``max_pinned``)."""
+        if not (self.store.traits() & Traits.MVCC_SNAPSHOT) \
+                or not hasattr(self.store, "snapshot"):
+            raise TypeError("time-travel reads need an MVCC store "
+                            "(a live GARTStore, not a detached snapshot)")
+        version = int(version)
+        cached = self._pinned.get(version)
+        if cached is not None:
+            self._pinned.move_to_end(version)
+            return cached
+        snap = self.store.snapshot(version=version)
+        pinned = FlexSession(
+            snap, feature_prop=self.feature_prop,
+            label_prop=self.label_prop, procedures=self.procedures,
+            _read_only=True)
+        self._pinned[version] = pinned
+        while len(self._pinned) > self.max_pinned:
+            self._pinned.popitem(last=False)
+        return pinned
+
+    # ------------------------------------------------------- invalidation
+    def _on_commit(self, version: Optional[int]) -> None:
+        """The write route committed and the service already rebound onto
+        the new snapshot: publish the epoch so learning handles and user
+        subscribers refresh (DESIGN.md §11 invalidation rules).
+
+        Subscriber errors must not propagate out of the flush — by this
+        point the writes ARE committed, and raising would discard every
+        co-flushed tenant's response (a retry would double-apply). They
+        are recorded on ``last_publish_error`` and warned instead."""
+        import warnings
+
+        self.last_publish_error = None
+        try:
+            self.bus.publish(version if version is not None else -1)
+        except Exception as e:                    # noqa: BLE001
+            self.last_publish_error = e
+            warnings.warn(f"VersionBus subscriber raised after a "
+                          f"committed flush: {e!r}", RuntimeWarning,
+                          stacklevel=2)
+
+    def describe(self) -> str:
+        mode = "read-write" if self.mutable else "read-only"
+        return (f"FlexSession({mode}) over {type(self.store).__name__} "
+                f"at version {self.version}; verbs: interactive (Cypher/"
+                f"Gremlin, reads+writes), analytical (CALL algo.*), "
+                f"learning (samplers/trainers/gnn.infer)")

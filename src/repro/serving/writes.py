@@ -1,0 +1,193 @@
+"""The write route — staging and committing mutation plans (DESIGN.md §11).
+
+A write plan is a read prefix (MATCH / WHERE / WITH / CALL — anything the
+interpreter runs) followed by mutation sinks (:class:`InsertEdge`,
+:class:`SetProp`). Execution is two-phase, which is what gives the serving
+layer its snapshot semantics:
+
+- **stage** (:func:`stage_writes`) runs the read prefix against the
+  flush's *pinned admission-time snapshot* and evaluates every mutation's
+  endpoint ids / property values into a :class:`WriteSet` of dense arrays.
+  Nothing touches the mutable store, so reads and write-prefixes admitted
+  in the same flush all observe one consistent version;
+- **commit** (:meth:`WriteSet.apply`) appends the staged arrays onto the
+  mutable :class:`~repro.storage.gart.GARTStore` — the serving layer does
+  this once per flush, in submission order, then advances its bound
+  snapshot (the version-epoch bus refreshes dependents).
+
+Uncorrelated MATCH patterns in a write prefix (``MATCH (a {id:$x}),
+(b {id:$y}) CREATE (a)-[:R]->(b)``) evaluate as independent scan-rooted
+segments — there is no cartesian product; mutation endpoints broadcast
+across segments (each side must resolve to one row, or both to the same
+row count).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.ir.codegen import _LabelAwarePG, execute_plan
+from repro.core.ir.dag import (InsertEdge, LogicalPlan, MUTATION_OPS,
+                               Pred, Project, Scan, ProcedureCall, SetProp,
+                               eval_expr)
+
+
+@dataclasses.dataclass
+class WriteSet:
+    """Staged mutations of one request: dense arrays ready to append.
+
+    ``edges`` rows are ``(src_ids, dst_ids, edge_label, props)``;
+    ``vprops`` rows are ``(name, vertex_ids, values)``. Ordering inside a
+    WriteSet (and across WriteSets of one flush) follows plan / submission
+    order, so within-flush last-writer-wins is deterministic."""
+
+    edges: List[Tuple[np.ndarray, np.ndarray, int, Dict[str, np.ndarray]]] \
+        = dataclasses.field(default_factory=list)
+    vprops: List[Tuple[str, np.ndarray, np.ndarray]] \
+        = dataclasses.field(default_factory=list)
+
+    @property
+    def n_edges(self) -> int:
+        return int(sum(len(s) for s, _, _, _ in self.edges))
+
+    @property
+    def n_set(self) -> int:
+        return int(sum(len(ids) for _, ids, _ in self.vprops))
+
+    def apply(self, store) -> int:
+        """Append everything onto the mutable store; returns the store's
+        write_version after the last sub-commit."""
+        v = store.write_version
+        for src, dst, label, props in self.edges:
+            v = store.add_edges(src, dst, label=label, props=props or None)
+        for name, ids, vals in self.vprops:
+            v = store.set_vertex_prop(name, ids, vals)
+        return v
+
+    def result(self, version: int) -> Dict[str, np.ndarray]:
+        """The row a write request answers with (shape-compatible with
+        read results: 1-element columns)."""
+        return {"inserted": np.array([self.n_edges], np.int64),
+                "updated": np.array([self.n_set], np.int64),
+                "version": np.array([version], np.int64)}
+
+
+def split_write_plan(plan: LogicalPlan) -> Tuple[List, List]:
+    """(read prefix, mutation tail). Mutations must form a contiguous
+    tail — a read operator after the first mutation would observe neither
+    the pinned snapshot nor the committed state coherently, so it is
+    rejected at compile time."""
+    ops = list(plan.ops)
+    idx = next((i for i, op in enumerate(ops)
+                if isinstance(op, MUTATION_OPS)), len(ops))
+    prefix, tail = ops[:idx], ops[idx:]
+    bad = [op for op in tail if not isinstance(op, MUTATION_OPS)]
+    if bad:
+        raise NotImplementedError(
+            f"{type(bad[0]).__name__} after a mutation: write plans end "
+            f"with their CREATE/SET sinks (read the new state in the next "
+            f"flush; DESIGN.md §11)")
+    if any(isinstance(op, Project) for op in prefix):
+        raise NotImplementedError(
+            "RETURN before a mutation is not supported: the write path "
+            "needs the bound row table, not a projection (DESIGN.md §11)")
+    return prefix, tail
+
+
+def _segments(prefix: List) -> List[List]:
+    """Split the prefix at Scan/CALL boundaries: each uncorrelated MATCH
+    pattern (or CALL source) evaluates independently."""
+    segs: List[List] = []
+    for op in prefix:
+        if isinstance(op, (Scan, ProcedureCall)) or not segs:
+            segs.append([op])
+        else:
+            segs[-1].append(op)
+    return segs
+
+
+def _resolve(alias: str, label: Optional[int], pred: Optional[Pred],
+             cols: Dict[str, np.ndarray], pg) -> np.ndarray:
+    """Vertex ids of one mutation target: the bound prefix column, or a
+    label/pred-filtered scan for a self-resolving endpoint."""
+    if alias in cols:
+        return np.asarray(cols[alias], np.int64)
+    if label is None and pred is None:
+        # the parsers reject this shape; guard IR-level callers too — a
+        # bare unbound alias would resolve to every vertex in the graph
+        raise ValueError(f"write target {alias!r} is unbound and has no "
+                         f"label/predicate to resolve against")
+    ids = pg.vertices(label)
+    if pred is not None:
+        lpg = pg if isinstance(pg, _LabelAwarePG) else _LabelAwarePG(pg)
+        mask = np.asarray(eval_expr(pred.expr, {alias: ids}, lpg, {}), bool)
+        ids = ids[mask]
+    if len(ids) == 0:
+        raise ValueError(f"write endpoint {alias!r} matched no vertices")
+    return np.asarray(ids, np.int64)
+
+
+def _broadcast(a: np.ndarray, b: np.ndarray, what: str):
+    if len(a) == len(b):
+        return a, b
+    if len(a) == 1:
+        return np.broadcast_to(a, b.shape).copy(), b
+    if len(b) == 1:
+        return a, np.broadcast_to(b, a.shape).copy()
+    raise ValueError(f"{what}: sides resolve to {len(a)} and {len(b)} rows "
+                     f"— they must match or one must be a single vertex")
+
+
+def _values(expr, cols, lpg, n: int, what: str) -> np.ndarray:
+    vals = np.asarray(eval_expr(expr, cols, lpg, {}))
+    if vals.ndim == 0:
+        return np.broadcast_to(vals, (n,)).copy()
+    if len(vals) == n:
+        return vals
+    if len(vals) == 1:
+        return np.broadcast_to(vals, (n,)).copy()
+    raise ValueError(f"{what}: value column has {len(vals)} rows for "
+                     f"{n} target rows")
+
+
+def stage_writes(plan: LogicalPlan, pg, params: Optional[Dict] = None,
+                 procedures=None) -> WriteSet:
+    """Run the read prefix on the pinned snapshot ``pg`` and evaluate the
+    mutation tail into a :class:`WriteSet`. Pure staging: the mutable
+    store is untouched until ``WriteSet.apply``."""
+    bound = plan.bind(params) if params is not None else plan
+    prefix, tail = split_write_plan(bound)
+    cols: Dict[str, np.ndarray] = {}
+    for seg in _segments(prefix):
+        seg_cols = execute_plan(LogicalPlan(seg), pg, procedures=procedures)
+        for k, v in seg_cols.items():
+            if k in cols:
+                raise ValueError(f"alias {k!r} bound by two uncorrelated "
+                                 f"MATCH segments")
+            cols[k] = v
+    lpg = pg if isinstance(pg, _LabelAwarePG) else _LabelAwarePG(pg)
+    ws = WriteSet()
+    for op in tail:
+        if isinstance(op, InsertEdge):
+            src = _resolve(op.src, op.src_label, op.src_pred, cols, lpg)
+            dst = _resolve(op.dst, op.dst_label, op.dst_pred, cols, lpg)
+            if len(src) == 0 or len(dst) == 0:
+                continue            # prefix matched nothing: a no-op write
+            src, dst = _broadcast(src, dst, f"CREATE ({op.src})-...")
+            props = {name: _values(expr, cols, lpg, len(src),
+                                   f"CREATE prop {name!r}")
+                     for name, expr in op.props}
+            ws.edges.append((src, dst, op.edge_label, props))
+        elif isinstance(op, SetProp):
+            ids = _resolve(op.alias, op.label, op.pred, cols, lpg)
+            if len(ids) == 0:
+                continue
+            vals = _values(op.value, cols, lpg, len(ids),
+                           f"SET {op.alias}.{op.prop}")
+            ws.vprops.append((op.prop, ids, vals))
+        else:                                    # split_write_plan guards
+            raise AssertionError(op)
+    return ws

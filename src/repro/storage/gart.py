@@ -143,6 +143,14 @@ class GARTStore:
                               vertex_labels=vertex_labels,
                               edge_labels=edge_labels, build_csc=False)
         self._vprops = dict(vertex_props or {})
+        # vertex-property MVCC: every committed set_vertex_prop appends a
+        # (version, column) copy-on-write entry, so snapshot(version=v)
+        # reconstructs the columns as of v instead of leaking later writes
+        # into a pinned reader (DESIGN.md §11). Initial columns are v0.
+        self._vprop_hist: Dict[str, list] = {
+            name: [(0, col)] for name, col in self._vprops.items()}
+        self._hist_floor = 0        # compact() raises it (no time travel
+        #                             below the last compaction point)
         self._vlabels = (np.asarray(vertex_labels, np.int32)
                          if vertex_labels is not None
                          else np.zeros(self._n, np.int32))
@@ -156,6 +164,21 @@ class GARTStore:
         self.write_version = 0
         self._lock = threading.Lock()
         self._store_uid = next(GARTStore._uids)
+
+    @classmethod
+    def from_csr(cls, csr: CSRStore) -> "GARTStore":
+        """Wrap an immutable CSR store (e.g. a generator's output) into a
+        mutable MVCC store with the same topology, labels and properties —
+        the migration path onto the read-write session (DESIGN.md §11)."""
+        src = np.repeat(np.arange(csr.n_vertices, dtype=np.int64),
+                        np.diff(csr.indptr))
+        return cls(csr.n_vertices, src, csr.indices.astype(np.int64),
+                   vertex_props={k: v.copy()
+                                 for k, v in csr._vprops.items()},
+                   vertex_labels=csr.vertex_labels().copy(),
+                   edge_labels=csr.edge_labels().copy(),
+                   edge_props={k: csr.edge_prop(k).copy()
+                               for k in csr._eprops})
 
     def traits(self) -> Traits:
         return (Traits.TOPOLOGY_ARRAY | Traits.DEGREE | Traits.MUTABLE |
@@ -191,10 +214,13 @@ class GARTStore:
 
     def add_edges(self, src, dst, label: int = 0,
                   props: Optional[Dict[str, np.ndarray]] = None) -> int:
-        """Append edges; returns the new write_version (commit id)."""
+        """Append edges; returns the new write_version (commit id).
+        Appending nothing commits nothing (no version bump)."""
         src = np.atleast_1d(np.asarray(src, np.int64))
         dst = np.atleast_1d(np.asarray(dst, np.int64))
         with self._lock:
+            if len(src) == 0:
+                return self.write_version
             self.write_version += 1
             v = self.write_version
             k = len(src)
@@ -214,34 +240,97 @@ class GARTStore:
             return v
 
     def set_vertex_prop(self, name: str, ids, values):
+        """Update (or create) a vertex-property column; returns the new
+        write_version. A name the store has never seen becomes a fresh
+        column backfilled with NaN (float dtypes) or 0 (integer/bool), so
+        mutable stores can grow their schema at runtime."""
         with self._lock:
-            self._vprops[name] = self._vprops[name].copy()
-            self._vprops[name][ids] = values
+            vals = np.asarray(values)
+            if np.size(np.asarray(ids)) == 0:
+                return self.write_version     # no rows: no commit
+            if name not in self._vprops:
+                dtype = vals.dtype if vals.dtype != object else np.float64
+                fill = np.nan if np.issubdtype(dtype, np.floating) else 0
+                self._vprops[name] = np.full(self._n, fill, dtype)
+            else:
+                self._vprops[name] = self._vprops[name].copy()
+            self._vprops[name][ids] = vals
             self.write_version += 1
+            self._vprop_hist.setdefault(name, []).append(
+                (self.write_version, self._vprops[name]))
             return self.write_version
+
+    def _vprops_at(self, version: int) -> Dict[str, np.ndarray]:
+        """Columns as of ``version``: the newest history entry with
+        commit version ≤ it; columns created later are absent."""
+        out: Dict[str, np.ndarray] = {}
+        for name, hist in self._vprop_hist.items():
+            for ver, col in reversed(hist):
+                if ver <= version:
+                    out[name] = col
+                    break
+        return out
 
     # ------------------------------------------------------------- snapshots
     def snapshot(self, version: Optional[int] = None) -> GARTSnapshot:
         with self._lock:
-            v = self.write_version if version is None else version
-            mask = self._d_ver[:self._d_len] <= v
-            props = {k: col[:self._d_len][mask]
-                     for k, col in self._d_props.items()}
-            return GARTSnapshot(
-                self._base,
-                self._d_src[:self._d_len][mask].copy(),
-                self._d_dst[:self._d_len][mask].copy(),
-                self._d_lab[:self._d_len][mask].copy(),
-                props, v, dict(self._vprops), self._vlabels, self._n,
-                store_uid=self._store_uid)
+            return self._snapshot_locked(version)
+
+    def _snapshot_locked(self, version: Optional[int]) -> GARTSnapshot:
+        """Body of :meth:`snapshot`; caller holds ``self._lock`` (the lock
+        is non-reentrant, and ``compact`` must snapshot + install under
+        ONE critical section or a concurrent commit between the two would
+        be silently discarded)."""
+        v = self.write_version if version is None else int(version)
+        if v > self.write_version:
+            # a snapshot of a version that does not exist yet would
+            # carry today's data under tomorrow's snapshot_token and
+            # poison every (uid, version)-keyed memo once the store
+            # really reaches v (DESIGN.md §11)
+            raise ValueError(f"version {v} is in the future "
+                             f"(write_version={self.write_version})")
+        if v < self._hist_floor:
+            raise ValueError(
+                f"version {v} predates the last compact() "
+                f"(history floor {self._hist_floor}): compaction folds "
+                f"deltas into the base and discards time-travel state")
+        mask = self._d_ver[:self._d_len] <= v
+        props = {k: col[:self._d_len][mask]
+                 for k, col in self._d_props.items()}
+        # vertex properties as of v — a reader pinned at an older
+        # version must never observe later set_vertex_prop commits
+        # (copy-on-write history; current columns are the fast path)
+        vprops = (dict(self._vprops) if v >= self.write_version
+                  else self._vprops_at(v))
+        return GARTSnapshot(
+            self._base,
+            self._d_src[:self._d_len][mask].copy(),
+            self._d_dst[:self._d_len][mask].copy(),
+            self._d_lab[:self._d_len][mask].copy(),
+            props, v, vprops, self._vlabels, self._n,
+            store_uid=self._store_uid)
 
     def compact(self):
-        """Fold the delta into a new base CSR (background compaction)."""
-        snap = self.snapshot()        # takes the (non-reentrant) lock itself
-        merged = snap._merge()
+        """Fold the delta into a new base CSR (background compaction).
+
+        Compaction is the time-travel floor: edge deltas fold into the
+        base and the vertex-property history trims to one entry per name,
+        so ``snapshot(version=v)`` for v below the floor raises. Pinned
+        snapshot objects taken earlier are unaffected (they hold their own
+        resolved arrays). This bounds history memory — without it a
+        long-running writer accumulates one column copy per
+        ``set_vertex_prop`` commit (DESIGN.md §11)."""
         with self._lock:
-            self._base = merged
+            # snapshot + merge + install under ONE critical section: a
+            # commit landing between them would otherwise be erased by
+            # the _d_len reset below
+            snap = self._snapshot_locked(None)
+            self._base = snap._merge()
             self._d_len = 0
+            self._hist_floor = self.write_version
+            self._vprop_hist = {
+                name: [(self._hist_floor, col)]
+                for name, col in self._vprops.items()}
         return self
 
 

@@ -111,6 +111,134 @@ class TestGART:
         assert g.snapshot().vertex_prop("credits")[1] == 99
         assert snap_before.vertex_prop("credits")[1] == 0
 
+    def test_vprop_time_travel_sees_old_values(self):
+        """MVCC hole regression (DESIGN.md §11): snapshot(version=v)
+        minted *after* later writes must reconstruct the columns as of v,
+        not hand out the current ones."""
+        g = GARTStore(4, np.array([0]), np.array([1]),
+                      vertex_props={"credits": np.zeros(4, np.int32)})
+        v1 = g.set_vertex_prop("credits", [1], [11])
+        v2 = g.set_vertex_prop("credits", [1], [22])
+        g.set_vertex_prop("credits", [2], [33])
+        assert g.snapshot(version=v1).vertex_prop("credits")[1] == 11
+        assert g.snapshot(version=v2).vertex_prop("credits")[1] == 22
+        assert g.snapshot(version=v2).vertex_prop("credits")[2] == 0
+        assert g.snapshot().vertex_prop("credits")[2] == 33
+        # version 0 predates every write
+        assert (g.snapshot(version=0).vertex_prop("credits") == 0).all()
+
+    def test_pinned_snapshot_props_immutable_across_writes(self):
+        """A pinned reader's property columns never move, no matter how
+        many commits follow (the regression the ISSUE names)."""
+        g = GARTStore(4, np.array([0]), np.array([1]),
+                      vertex_props={"credits": np.arange(4, dtype=np.int32)})
+        v1 = g.set_vertex_prop("credits", [3], [77])
+        pinned = g.snapshot(version=v1)
+        frozen = pinned.vertex_prop("credits").copy()
+        for k in range(3):
+            g.set_vertex_prop("credits", [k], [1000 + k])
+            g.add_edges([k], [k + 1])
+        np.testing.assert_array_equal(pinned.vertex_prop("credits"), frozen)
+        # a re-minted snapshot at v1 reproduces the same columns
+        np.testing.assert_array_equal(
+            g.snapshot(version=v1).vertex_prop("credits"), frozen)
+
+    def test_set_vertex_prop_creates_new_column(self):
+        """set_vertex_prop on a never-seen name creates the column with
+        zero (int) / NaN (float) backfill instead of KeyError."""
+        g = GARTStore(4, np.array([0]), np.array([1]))
+        g.set_vertex_prop("score", [1], [2.5])
+        col = g.snapshot().vertex_prop("score")
+        assert col[1] == 2.5 and np.isnan(col[0]) and np.isnan(col[3])
+        g.set_vertex_prop("hits", [2], [7])
+        coli = g.snapshot().vertex_prop("hits")
+        assert coli[2] == 7 and coli[0] == 0 and coli.dtype.kind == "i"
+        # the column did not exist before its creation version
+        v_created = g.write_version - 1           # after "score", before "hits"
+        with pytest.raises(KeyError):
+            g.snapshot(version=0).vertex_prop("score")
+        assert "hits" not in g.snapshot(version=v_created)._vprops
+
+    def test_future_version_snapshot_rejected(self):
+        """A snapshot of a not-yet-existing version would carry today's
+        data under tomorrow's snapshot_token and poison version-keyed
+        memos once the store reaches it (DESIGN.md §11)."""
+        g = GARTStore(4, np.array([0]), np.array([1]))
+        g.add_edges([1], [2])
+        with pytest.raises(ValueError, match="future"):
+            g.snapshot(version=g.write_version + 1)
+
+    def test_compact_sets_history_floor(self):
+        """compact() bounds vprop history: one entry per name survives,
+        and time travel below the compaction point raises instead of
+        answering wrong."""
+        g = GARTStore(4, np.array([0]), np.array([1]),
+                      vertex_props={"credits": np.zeros(4, np.int32)})
+        v1 = g.set_vertex_prop("credits", [1], [11])
+        pinned = g.snapshot(version=v1)
+        g.set_vertex_prop("credits", [1], [22])
+        g.add_edges([2], [3])
+        g.compact()
+        assert all(len(h) == 1 for h in g._vprop_hist.values())
+        with pytest.raises(ValueError, match="compact"):
+            g.snapshot(version=v1)
+        # snapshots taken before the compaction keep their own arrays
+        assert pinned.vertex_prop("credits")[1] == 11
+        assert g.snapshot().vertex_prop("credits")[1] == 22
+        # writes after compaction are time-travelable again
+        v4 = g.set_vertex_prop("credits", [3], [44])
+        g.set_vertex_prop("credits", [3], [55])
+        assert g.snapshot(version=v4).vertex_prop("credits")[3] == 44
+
+    def test_empty_writes_do_not_commit(self):
+        g = GARTStore(4, np.array([0]), np.array([1]),
+                      vertex_props={"credits": np.zeros(4, np.int32)})
+        v = g.write_version
+        assert g.add_edges([], []) == v
+        assert g.set_vertex_prop("credits", [], []) == v
+        assert g.write_version == v
+        assert len(g._vprop_hist["credits"]) == 1
+
+    def test_compact_keeps_concurrent_commits(self):
+        """compact() snapshots + installs under one critical section, so
+        a racing writer's acknowledged commit can never be erased."""
+        import threading
+
+        g = GARTStore(64, np.array([0]), np.array([1]))
+
+        def writer(tid):
+            for i in range(50):
+                g.add_edges([(tid * 50 + i) % 64], [(i + 1) % 64])
+
+        threads = [threading.Thread(target=writer, args=(t,))
+                   for t in range(4)]
+        for t in threads:
+            t.start()
+        for _ in range(20):
+            g.compact()
+        for t in threads:
+            t.join()
+        g.compact()
+        assert g.n_edges == 1 + 4 * 50
+        assert g.snapshot().n_edges == 1 + 4 * 50
+
+    def test_from_csr_roundtrip(self):
+        cs = CSRStore(5, np.array([0, 1, 2]), np.array([1, 2, 3]),
+                      vertex_props={"p": np.arange(5, dtype=np.int64)},
+                      edge_props={"w": np.array([1., 2., 3.],
+                                                np.float32)},
+                      vertex_labels=np.array([0, 1, 0, 1, 0], np.int32),
+                      edge_labels=np.array([0, 1, 0], np.int32))
+        g = GARTStore.from_csr(cs)
+        snap = g.snapshot()
+        assert snap.n_edges == cs.n_edges
+        np.testing.assert_array_equal(snap.vertex_prop("p"),
+                                      cs.vertex_prop("p"))
+        np.testing.assert_array_equal(snap.edge_labels(), cs.edge_labels())
+        np.testing.assert_array_equal(snap.edge_prop("w"), cs.edge_prop("w"))
+        np.testing.assert_array_equal(snap.vertex_labels(),
+                                      cs.vertex_labels())
+
 
 class TestGraphAr:
     def test_roundtrip(self, tmp_path):
