@@ -15,11 +15,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
                     help="comma list: storage,query,traversal,hybrid,"
-                         "analytics,learning,exp5,exp6,readwrite,kernels")
+                         "analytics,learning,exp5,exp6,readwrite,"
+                         "exp7,serving,kernels")
     args = ap.parse_args()
     wanted = set(args.only.split(",")) if args.only != "all" else {
         "storage", "query", "hybrid", "analytics", "learning",
-        "readwrite", "kernels"}
+        "readwrite", "serving", "kernels"}
 
     from benchmarks.common import emit_header
     emit_header()
@@ -49,6 +50,9 @@ def main() -> None:
     if wanted & {"readwrite", "exp6"}:
         from benchmarks import readwrite_bench
         sections.append(("readwrite", readwrite_bench.run))
+    if wanted & {"serving", "exp7"}:
+        from benchmarks import serving_bench
+        sections.append(("serving", serving_bench.run))
     if "kernels" in wanted:
         from benchmarks import kernel_bench
         sections.append(("kernels", kernel_bench.run))

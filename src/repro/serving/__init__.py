@@ -14,8 +14,12 @@ all of it — interactive / analytical / learning verbs over one store.
 
 from repro.serving.plan_cache import (CacheStats, PlanCache,  # noqa: F401
                                       plan_key)
-from repro.serving.service import (QueryService, Request,  # noqa: F401
-                                   Response, ServingStats)
+from repro.serving.scheduler import (FlexScheduler,  # noqa: F401
+                                     SchedulerBusy, SchedulerClosed,
+                                     TenantClass)
+from repro.serving.service import (EngineBinding,  # noqa: F401
+                                   QueryService, Request, Response,
+                                   ServingStats)
 from repro.serving.session import (AnalyticalContext,  # noqa: F401
                                    FlexSession, LearningContext, VersionBus)
 from repro.serving.writes import WriteSet, stage_writes  # noqa: F401

@@ -15,6 +15,7 @@ module-load time.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import OrderedDict
 from typing import Any, Callable, Dict, Hashable, Optional, Tuple
 
@@ -84,6 +85,15 @@ class PlanCache:
     ``on_evict(key)`` is called for each LRU-evicted entry so owners of
     derived state (e.g. the serving layer's registered stored procedures)
     can drop it and stay bounded by cache capacity.
+
+    Thread safety: the always-on scheduler (DESIGN.md §12) compiles on its
+    dispatcher thread while user threads may call ``session.execute``
+    concurrently, so LRU reordering and the hit/miss counters are guarded
+    by one reentrant lock (``move_to_end`` during a concurrent iteration
+    corrupts the OrderedDict; ``stats.hits += 1`` drops increments).
+    ``on_evict`` fires while the lock is held — keep eviction callbacks
+    lock-free (the serving layer's only pops dicts and unregisters a
+    stored procedure).
     """
 
     def __init__(self, capacity: int = 128,
@@ -93,35 +103,44 @@ class PlanCache:
         self.capacity = capacity
         self.on_evict = on_evict
         self._entries: "OrderedDict[Hashable, Any]" = OrderedDict()
+        self._lock = threading.RLock()
         self.stats = CacheStats()
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     def __contains__(self, key: Hashable) -> bool:
-        return key in self._entries
+        with self._lock:
+            return key in self._entries
 
     def get(self, key: Hashable):
         """Return the cached plan or ``None``; counts a hit or a miss."""
-        if key in self._entries:
-            self._entries.move_to_end(key)
-            self.stats.hits += 1
-            return self._entries[key]
-        self.stats.misses += 1
-        return None
+        with self._lock:
+            if key in self._entries:
+                self._entries.move_to_end(key)
+                self.stats.hits += 1
+                return self._entries[key]
+            self.stats.misses += 1
+            return None
 
     def put(self, key: Hashable, plan: Any) -> None:
-        if key in self._entries:
-            self._entries.move_to_end(key)
-        self._entries[key] = plan
-        while len(self._entries) > self.capacity:
-            evicted_key, _ = self._entries.popitem(last=False)
-            self.stats.evictions += 1
-            if self.on_evict is not None:
-                self.on_evict(evicted_key)
+        with self._lock:
+            if key in self._entries:
+                self._entries.move_to_end(key)
+            self._entries[key] = plan
+            while len(self._entries) > self.capacity:
+                evicted_key, _ = self._entries.popitem(last=False)
+                self.stats.evictions += 1
+                if self.on_evict is not None:
+                    self.on_evict(evicted_key)
 
     def get_or_compile(self, key: Hashable, compile_fn: Callable[[], Any]):
-        """``(plan, cached)`` — compile and insert on miss."""
+        """``(plan, cached)`` — compile and insert on miss.
+
+        The compile runs *outside* the lock so a slow cold compile never
+        stalls concurrent lookups; two racing threads may both compile the
+        same key (plans are pure values — last insert wins)."""
         plan = self.get(key)
         if plan is not None:
             return plan, True
@@ -132,9 +151,10 @@ class PlanCache:
     def clear(self) -> None:
         """Drop all entries (each through ``on_evict``, so derived state
         like registered procedures is released too) and reset counters."""
-        keys = list(self._entries)
-        self._entries.clear()
-        if self.on_evict is not None:
-            for key in keys:
-                self.on_evict(key)
-        self.stats = CacheStats()
+        with self._lock:
+            keys = list(self._entries)
+            self._entries.clear()
+            if self.on_evict is not None:
+                for key in keys:
+                    self.on_evict(key)
+            self.stats = CacheStats()

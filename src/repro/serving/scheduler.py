@@ -1,0 +1,662 @@
+"""FlexScheduler — the always-on continuous-batching front door
+(DESIGN.md §12).
+
+The synchronous :meth:`QueryService.flush` admits in whole cycles: one
+slow OLAP chunk stalls every point lookup queued behind it, and nothing
+models sustained arrival rates. This module rebuilds admission as an
+always-on scheduler over the same service:
+
+- **submit path**: thread-safe ``submit() -> Future`` from many tenants
+  into per-tenant bounded FIFO queues. A full queue rejects with
+  :class:`SchedulerBusy` (carrying a ``retry_after`` estimate) rather
+  than growing without bound — backpressure, never silent drops.
+- **dispatcher**: a weighted deficit round-robin loop drains tenant
+  queues, compiles/classifies through the shared plan cache, and
+  coalesces same-template runs into micro-batches. Point lookups ride
+  the **fast lane**; OLAP / fragment / GRAPE / write work rides the
+  **slow lane** — in-flight batching, the TensorRT-LLM ``gpt_attention``
+  trick of keeping short work flowing through one running batch while
+  long work proceeds beside it, applied to graph serving.
+- **lanes**: one worker thread each. Fast micro-batches return
+  continuously while a long fragment program or write epoch runs in the
+  slow lane; neither blocks the other.
+- **write epochs**: writes serialize in the slow lane. A write unit
+  stages against the current epoch's pinned snapshot, applies to the
+  mutable store, then *prepares* a fresh :class:`EngineBinding`
+  off-thread and installs it with a single attribute swap — readers
+  never block on a commit's rebind longer than the epoch swap (they
+  simply finish on the superseded binding, a consistent snapshot).
+- **equivalence**: execution goes through the same
+  ``exec_point_batch`` / ``exec_fragment_batch`` / ``exec_interpreted``
+  / ``stage_writes`` helpers as ``flush``, so every scheduled response
+  is bag-equal to what the synchronous path returns for the same
+  request set — ``flush`` stays the semantic oracle
+  (tests/test_scheduler.py asserts this under true concurrency).
+
+Ordering contract: within one tenant, requests bound for the same lane
+are dispatched — and complete — in submission order (each lane is a FIFO
+of units executed by one worker, and the dispatcher never reorders a
+tenant's items within a lane). Cross-lane ordering is not guaranteed — a
+point lookup submitted after a long OLAP query may (by design) complete
+first, and when the slow lane is saturated the dispatcher deliberately
+pops a tenant's fast-lane items past its blocked slow-lane backlog. A
+write and any subsequent slow-lane read from the same tenant keep their
+order, which is what makes read-your-writes hold on the slow lane.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import OrderedDict, deque
+from concurrent.futures import Future
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+from repro.serving.plan_cache import plan_key
+from repro.serving.service import QueryService, Response, ServingStats
+from repro.serving.writes import split_write_plan, stage_writes
+
+
+class SchedulerClosed(RuntimeError):
+    """The scheduler no longer accepts work (close() was called)."""
+
+
+class SchedulerBusy(RuntimeError):
+    """Bounded-queue backpressure: the tenant's queue is full. Carries
+    ``retry_after`` (seconds) — an estimate of when capacity frees up —
+    so callers back off instead of spinning."""
+
+    def __init__(self, tenant: str, queued: int, retry_after: float):
+        super().__init__(
+            f"tenant {tenant!r} queue full ({queued} waiting); "
+            f"retry in ~{retry_after:.3f}s")
+        self.tenant = tenant
+        self.queued = queued
+        self.retry_after = retry_after
+
+
+@dataclasses.dataclass
+class TenantClass:
+    """Per-tenant service class: ``weight`` scales the deficit
+    round-robin quantum (a weight-2 tenant drains twice as fast under
+    contention); ``max_queue`` bounds its submit queue (backpressure)."""
+
+    name: str
+    weight: float = 1.0
+    max_queue: int = 256
+
+
+class _Item:
+    __slots__ = ("tenant", "template", "params", "language", "key",
+                 "future", "t_submit")
+
+    def __init__(self, tenant, template, params, language, key):
+        self.tenant = tenant
+        self.template = template
+        self.params = params
+        self.language = language
+        self.key = key
+        self.future: Future = Future()
+        self.t_submit = time.perf_counter()
+
+
+class _Unit:
+    """One lane work unit: a consecutive same-template run of items
+    (micro-batch), pinned to the binding captured at dispatch time."""
+
+    __slots__ = ("route", "key", "plan", "cached", "items", "binding")
+
+    def __init__(self, route, key, plan, cached, items, binding):
+        self.route = route
+        self.key = key
+        self.plan = plan
+        self.cached = cached
+        self.items = items
+        self.binding = binding
+
+
+class _StatsWindow:
+    """Thread-safe completion accumulator; ``snapshot()`` renders the
+    window as a :class:`ServingStats` (0.0 latencies on an empty window —
+    the closed-loop benchmark's warmup edge)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.reset()
+
+    def reset(self) -> None:
+        with self._lock:
+            self._t0 = time.perf_counter()
+            self._latencies: List[float] = []
+            self._queue_us: List[float] = []
+            self._service_us: List[float] = []
+            self._routes: Dict[str, int] = {}
+            self._by_tenant: Dict[str, int] = {}
+            self.ewma_us = 1000.0     # per-request service time estimate
+
+    def record(self, resp: Response, tenant: str) -> None:
+        with self._lock:
+            self._latencies.append(resp.latency_us)
+            self._queue_us.append(resp.queue_us)
+            self._service_us.append(resp.service_us)
+            self._routes[resp.engine] = self._routes.get(resp.engine, 0) + 1
+            self._by_tenant[tenant] = self._by_tenant.get(tenant, 0) + 1
+            self.ewma_us = 0.9 * self.ewma_us + 0.1 * max(resp.service_us,
+                                                          1.0)
+
+    def completed_by_tenant(self) -> Dict[str, int]:
+        with self._lock:
+            return dict(self._by_tenant)
+
+    def snapshot(self, cache_stats: Dict[str, float]) -> ServingStats:
+        with self._lock:
+            wall_us = (time.perf_counter() - self._t0) * 1e6
+            n = len(self._latencies)
+            return ServingStats(
+                n_queries=n, wall_us=wall_us,
+                qps=n / (wall_us / 1e6) if wall_us else 0.0,
+                latencies_us=list(self._latencies),
+                route_counts=dict(self._routes),
+                cache=cache_stats)
+
+
+class FlexScheduler:
+    """Always-on continuous-batching admission over one
+    :class:`QueryService`.
+
+    While a scheduler is running it owns the service's admission state
+    (binding maps, stored-procedure registration); calling
+    ``service.flush()`` concurrently is unsupported — use a separate
+    session as the synchronous oracle.
+    """
+
+    def __init__(self, service: QueryService, *,
+                 batch_size: Optional[int] = None,
+                 fast_capacity: Optional[int] = None,
+                 slow_capacity: Optional[int] = None,
+                 quantum: int = 8,
+                 default_weight: float = 1.0,
+                 default_max_queue: int = 256):
+        self.service = service
+        self.batch_size = int(batch_size or service.batch_size)
+        # lane watermarks (requests): the dispatcher leaves work in the
+        # tenant queues — where backpressure is accounted — once a lane's
+        # buffer is this deep
+        self.fast_capacity = int(fast_capacity or 2 * self.batch_size)
+        self.slow_capacity = int(slow_capacity or self.batch_size)
+        self.quantum = max(1, int(quantum))
+        self.default_weight = float(default_weight)
+        self.default_max_queue = int(default_max_queue)
+
+        self._cv = threading.Condition()
+        self._close_lock = threading.Lock()
+        self._tenants: Dict[str, TenantClass] = {}
+        self._queues: "OrderedDict[str, Deque[_Item]]" = OrderedDict()
+        self._deficit: Dict[str, float] = {}
+        self._lane_memo: Dict[Tuple, str] = {}     # plan key -> fast|slow
+        self._fast_buf: Deque[_Unit] = deque()
+        self._slow_buf: Deque[_Unit] = deque()
+        self._fast_pending = 0      # requests buffered or executing per lane
+        self._slow_pending = 0
+        self._outstanding = 0       # accepted futures not yet resolved
+        self._units_dispatched = 0  # micro-batches formed (coalescing gauge)
+        self._closed = False
+        self._stopping = False
+        self._dispatcher_done = False
+        self._started = False
+        self._threads: List[threading.Thread] = []
+        self._stats = _StatsWindow()
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> "FlexScheduler":
+        with self._cv:
+            if self._started:
+                return self
+            if self._closed:
+                raise SchedulerClosed("scheduler was closed")
+            self._stopping = False
+            self._dispatcher_done = False
+            self._threads = [
+                threading.Thread(target=self._dispatch_loop,
+                                 name="flex-dispatch", daemon=True),
+                threading.Thread(target=self._lane_loop, args=("fast",),
+                                 name="flex-fast", daemon=True),
+                threading.Thread(target=self._lane_loop, args=("slow",),
+                                 name="flex-slow", daemon=True),
+            ]
+            self._started = True
+        for t in self._threads:
+            t.start()
+        return self
+
+    @property
+    def is_running(self) -> bool:
+        return self._started and not self._stopping
+
+    def __enter__(self) -> "FlexScheduler":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def register_tenant(self, name: str, weight: float = 1.0,
+                        max_queue: Optional[int] = None) -> TenantClass:
+        """Declare a tenant's service class (idempotent; re-registration
+        updates the class). Unregistered tenants get the defaults on
+        first submit."""
+        tc = TenantClass(name, float(weight),
+                         int(max_queue or self.default_max_queue))
+        with self._cv:
+            self._tenants[name] = tc
+        return tc
+
+    # --------------------------------------------------------------- submit
+    def submit(self, template: str, params: Optional[Dict[str, Any]] = None,
+               *, tenant: str = "default",
+               language: str = "cypher") -> Future:
+        """Enqueue one request; returns a Future resolving to a
+        :class:`Response` (or raising the request's error). Raises
+        :class:`SchedulerBusy` when the tenant's bounded queue is full
+        and :class:`SchedulerClosed` after ``close()`` — an accepted
+        future ALWAYS resolves, a rejected submit never creates one."""
+        key = plan_key(template, language, self.service.rbo,
+                       self.service.cbo)
+        item = _Item(tenant, template, dict(params or {}), language, key)
+        with self._cv:
+            if self._closed:
+                raise SchedulerClosed(
+                    "scheduler is closed; no new work accepted")
+            tc = self._tenants.get(tenant)
+            if tc is None:
+                tc = TenantClass(tenant, self.default_weight,
+                                 self.default_max_queue)
+                self._tenants[tenant] = tc
+            q = self._queues.get(tenant)
+            if q is None:
+                q = self._queues[tenant] = deque()
+                self._deficit[tenant] = 0.0
+            if len(q) >= tc.max_queue:
+                raise SchedulerBusy(tenant, len(q),
+                                    self._retry_after(len(q)))
+            q.append(item)
+            self._outstanding += 1
+            self._cv.notify_all()
+        return item.future
+
+    def _retry_after(self, queued: int) -> float:
+        return min(5.0, max(1e-3, queued * self._stats.ewma_us / 1e6))
+
+    # ---------------------------------------------------------------- stats
+    def stats(self) -> ServingStats:
+        """The completion window since start (or the last reset)."""
+        return self._stats.snapshot(self.service.cache.stats.snapshot())
+
+    def reset_stats(self) -> None:
+        self._stats.reset()
+
+    def completed_by_tenant(self) -> Dict[str, int]:
+        return self._stats.completed_by_tenant()
+
+    @property
+    def outstanding(self) -> int:
+        with self._cv:
+            return self._outstanding
+
+    @property
+    def units_dispatched(self) -> int:
+        with self._cv:
+            return self._units_dispatched
+
+    # ---------------------------------------------------------- drain/close
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Block until every accepted future has resolved (True) or the
+        timeout elapsed (False). Concurrent submits keep the drain open —
+        pair with ``close()`` to quiesce."""
+        deadline = None if timeout is None \
+            else time.perf_counter() + timeout
+        with self._cv:
+            if not self._started:
+                return self._outstanding == 0
+            while self._outstanding > 0:
+                if deadline is not None:
+                    left = deadline - time.perf_counter()
+                    if left <= 0:
+                        return False
+                    self._cv.wait(min(0.05, left))
+                else:
+                    self._cv.wait(0.05)
+            return True
+
+    def close(self, timeout: Optional[float] = 30.0,
+              drain: bool = True) -> bool:
+        """Graceful shutdown: stop accepting, optionally drain, stop the
+        threads. Idempotent and safe under concurrent ``submit`` — every
+        future accepted before the close either resolves with its result
+        or fails with :class:`SchedulerClosed`; none is dropped silently.
+        Returns True when everything drained."""
+        with self._close_lock:
+            with self._cv:
+                self._closed = True
+                self._cv.notify_all()
+            drained = True
+            if drain and self._started:
+                drained = self.drain(timeout)
+            with self._cv:
+                self._stopping = True
+                if not drained or not drain or not self._started:
+                    self._abort_locked()
+                self._cv.notify_all()
+            for t in self._threads:
+                t.join(timeout=timeout)
+            self._threads = []
+            self._started = False
+            return drained
+
+    def _abort_locked(self) -> None:
+        """Fail everything still queued or buffered (caller holds _cv).
+        In-flight units finish on their worker before it exits."""
+        err = SchedulerClosed("scheduler closed before this request ran")
+        items: List[_Item] = []
+        for q in self._queues.values():
+            items.extend(q)
+            q.clear()
+        for buf in (self._fast_buf, self._slow_buf):
+            for unit in buf:
+                items.extend(unit.items)
+            buf.clear()
+        self._fast_pending = 0
+        self._slow_pending = 0
+        for item in items:
+            if item.future.set_running_or_notify_cancel():
+                item.future.set_exception(err)
+            self._outstanding -= 1
+
+    # ------------------------------------------------------------ dispatcher
+    def _dispatch_loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._stopping \
+                        and not self._selectable_locked():
+                    self._cv.wait(0.05)
+                if self._stopping and not any(self._queues.values()):
+                    self._dispatcher_done = True
+                    self._cv.notify_all()
+                    return
+                popped = self._select_locked()
+                if not popped:
+                    # every queued item targets a lane at capacity: sleep
+                    # until a worker frees room (it notifies) — don't spin
+                    self._cv.wait(0.05)
+            if popped:
+                self._classify_and_enqueue(popped)
+
+    def _selectable_locked(self) -> bool:
+        if self._fast_pending >= self.fast_capacity \
+                and self._slow_pending >= self.slow_capacity:
+            return False
+        return any(self._queues.values())
+
+    def _select_locked(self) -> List[_Item]:
+        """Weighted deficit round-robin pop across tenants. Per tenant the
+        pop is FIFO *per lane*: when an item's lane is at capacity it (and
+        every later item bound for that lane) stays queued, but later
+        items bound for the OTHER lane still pop — a tenant's heavy OLAP
+        backlog must not head-of-line-block its own point lookups, which
+        is the whole point of the two-lane door. Per-tenant per-lane
+        relative order is preserved exactly (the ordering contract);
+        cross-lane order within a tenant is already unspecified."""
+        fast_room = self.fast_capacity - self._fast_pending
+        slow_room = self.slow_capacity - self._slow_pending
+        popped: List[_Item] = []
+        for tenant in list(self._queues):
+            q = self._queues[tenant]
+            if not q:
+                continue
+            tc = self._tenants[tenant]
+            credit = self._deficit[tenant] + tc.weight * self.quantum
+            blocked: set = set()
+            kept: List[_Item] = []
+            items = list(q)
+            for idx, item in enumerate(items):
+                if credit < 1.0 or len(blocked) >= 2:
+                    kept.extend(items[idx:])
+                    break
+                lane = self._lane_memo.get(item.key)
+                if lane is None:
+                    # unknown template: its lane is undecidable, so items
+                    # behind it can't be reordered safely — take it only
+                    # when nothing was skipped and both lanes have room
+                    if blocked or fast_room <= 0 or slow_room <= 0:
+                        kept.extend(items[idx:])
+                        break
+                    fast_room -= 1
+                    slow_room -= 1
+                elif lane == "fast":
+                    if fast_room <= 0:
+                        blocked.add("fast")
+                    if "fast" in blocked:
+                        kept.append(item)
+                        continue
+                    fast_room -= 1
+                else:
+                    if slow_room <= 0:
+                        blocked.add("slow")
+                    if "slow" in blocked:
+                        kept.append(item)
+                        continue
+                    slow_room -= 1
+                popped.append(item)
+                credit -= 1.0
+            if len(kept) != len(q):
+                q.clear()
+                q.extend(kept)
+            # an empty queue carries no deficit into its idle time —
+            # otherwise a returning tenant would burst unfairly
+            self._deficit[tenant] = credit if q else 0.0
+        return popped
+
+    def _classify_and_enqueue(self, popped: List[_Item]) -> None:
+        """Compile + route each popped item (outside the lock — cold
+        compiles must not stall submitters), then coalesce consecutive
+        same-template runs into micro-batch units and hand them to the
+        lanes. Invalid requests resolve their futures immediately."""
+        svc = self.service
+        annotated: List[Tuple[_Item, Any, bool, str]] = []
+        for item in popped:
+            try:
+                plan, cached = svc.compile(item.template, item.language)
+                binding = svc._binding
+                route = svc.resolve_route(binding, item.key, plan)
+                if route == "write":
+                    if svc.write_store is None:
+                        raise PermissionError(
+                            f"template {item.template!r} mutates the graph "
+                            f"but this service is read-only")
+                    split_write_plan(plan)   # shape check: mutations tail-only
+                missing = plan.param_names() - set(item.params)
+                if missing:
+                    raise KeyError(f"unbound parameters {sorted(missing)} "
+                                   f"for template {item.template!r}")
+            except Exception as e:          # noqa: BLE001 — per-request fail
+                self._resolve_error(item, e)
+                continue
+            self._lane_memo[item.key] = \
+                "fast" if route == "hiactor" else "slow"
+            annotated.append((item, plan, cached, route, binding))
+
+        units: List[Tuple[str, _Unit]] = []
+        run: List[Tuple[_Item, Any, bool, str]] = []
+
+        def _close_run():
+            if not run:
+                return
+            item0, plan0, cached0, route0, binding0 = run[0]
+            lane = "fast" if route0 == "hiactor" else "slow"
+            for i in range(0, len(run), self.batch_size):
+                chunk = [r[0] for r in run[i:i + self.batch_size]]
+                units.append((lane, _Unit(route0, item0.key, plan0,
+                                          cached0, chunk, binding0)))
+            run.clear()
+
+        prev_key = object()
+        for item, plan, cached, route, binding in annotated:
+            if item.key != prev_key:
+                _close_run()
+                prev_key = item.key
+            run.append((item, plan, cached, route, binding))
+        _close_run()
+
+        if units:
+            with self._cv:
+                for lane, unit in units:
+                    if lane == "fast":
+                        self._fast_buf.append(unit)
+                        self._fast_pending += len(unit.items)
+                    else:
+                        self._slow_buf.append(unit)
+                        self._slow_pending += len(unit.items)
+                    self._units_dispatched += 1
+                self._cv.notify_all()
+
+    # ----------------------------------------------------------------- lanes
+    def _lane_loop(self, lane: str) -> None:
+        buf = self._fast_buf if lane == "fast" else self._slow_buf
+        while True:
+            with self._cv:
+                while not buf and not (self._stopping
+                                       and self._dispatcher_done):
+                    self._cv.wait(0.05)
+                if not buf:
+                    return
+                unit = buf.popleft()
+            try:
+                self._run_unit(unit)
+            finally:
+                with self._cv:
+                    if lane == "fast":
+                        self._fast_pending -= len(unit.items)
+                    else:
+                        self._slow_pending -= len(unit.items)
+                    self._cv.notify_all()
+
+    # -------------------------------------------------------------- execute
+    def _resolve_error(self, item: _Item, err: Exception) -> None:
+        if item.future.set_running_or_notify_cancel():
+            item.future.set_exception(err)
+        with self._cv:
+            self._outstanding -= 1
+            self._cv.notify_all()
+
+    def _resolve(self, item: _Item, result: Dict, engine: str,
+                 cached: bool, service_us: float, t_exec: float) -> None:
+        queue_us = max(0.0, (t_exec - item.t_submit) * 1e6)
+        resp = Response(result, engine, cached,
+                        latency_us=queue_us + service_us,
+                        queue_us=queue_us, service_us=service_us)
+        self._stats.record(resp, item.tenant)
+        if item.future.set_running_or_notify_cancel():
+            item.future.set_result(resp)
+        with self._cv:
+            self._outstanding -= 1
+            self._cv.notify_all()
+
+    def _run_unit(self, unit: _Unit) -> None:
+        t_exec = time.perf_counter()
+        if unit.route == "write":
+            self._run_write_unit(unit, t_exec)
+        elif unit.route in ("hiactor", "fragment"):
+            self._run_batched_unit(unit, t_exec)
+        else:                                   # gaia | grape: per request
+            self._run_interpreted_unit(unit, t_exec)
+
+    def _run_batched_unit(self, unit: _Unit, t_exec: float) -> None:
+        svc = self.service
+        params = [it.params for it in unit.items]
+        t0 = time.perf_counter()
+        try:
+            if unit.route == "hiactor":
+                outs = svc.exec_point_batch(unit.binding, unit.key,
+                                            unit.plan, params)
+                eng = "hiactor"
+            else:
+                outs, eng = svc.exec_fragment_batch(unit.binding, unit.plan,
+                                                    params)
+        except Exception as e:                  # noqa: BLE001
+            for it in unit.items:
+                self._resolve_error(it, e)
+            return
+        c_us = (time.perf_counter() - t0) * 1e6
+        # batch wall time attributed to each rider — the flush convention
+        for it, out in zip(unit.items, outs):
+            self._resolve(it, out, eng, unit.cached, c_us, t_exec)
+
+    def _run_interpreted_unit(self, unit: _Unit, t_exec: float) -> None:
+        svc = self.service
+        for it in unit.items:
+            t0 = time.perf_counter()
+            try:
+                out = svc.exec_interpreted(unit.binding, unit.plan,
+                                           it.params)
+            except Exception as e:              # noqa: BLE001
+                self._resolve_error(it, e)
+                continue
+            c_us = (time.perf_counter() - t0) * 1e6
+            self._resolve(it, out, unit.route, unit.cached, c_us, t_exec)
+
+    def _run_write_unit(self, unit: _Unit, t_exec: float) -> None:
+        """One write epoch: stage every item against the current pinned
+        snapshot, apply in submission order, prepare the next epoch's
+        binding off the readers' path, swap, publish. Writes serialize
+        here because the slow lane is one worker; readers never wait —
+        in-flight units keep their captured binding, new dispatches see
+        the fresh one after the single-store swap."""
+        svc = self.service
+        store = svc.write_store
+        try:
+            binding = svc._binding
+            # epoch guard (the flush guard's twin): an external writer
+            # advanced the store — refresh before staging against it
+            if store.write_version != binding.version:
+                binding = svc.prepare_binding()
+                svc.install_binding(binding)
+        except Exception as e:                  # noqa: BLE001
+            for it in unit.items:
+                self._resolve_error(it, e)
+            return
+        staged = []
+        for it in unit.items:
+            t0 = time.perf_counter()
+            try:
+                ws = stage_writes(unit.plan, binding.gaia.pg, it.params,
+                                  procedures=svc.procedures)
+            except Exception as e:              # noqa: BLE001
+                self._resolve_error(it, e)
+                continue
+            staged.append((it, ws, (time.perf_counter() - t0) * 1e6))
+        results = []
+        committed = False
+        for it, ws, c_us in staged:
+            try:
+                if ws.n_edges or ws.n_set:
+                    v = ws.apply(store)
+                    committed = True
+                else:
+                    v = store.write_version
+            except Exception as e:              # noqa: BLE001
+                self._resolve_error(it, e)
+                continue
+            results.append((it, ws.result(v), c_us))
+        if committed:
+            try:
+                svc.install_binding(svc.prepare_binding())
+                if svc.on_commit is not None:
+                    svc.on_commit(svc._bound_version)
+            except Exception as e:              # noqa: BLE001
+                for it, _res, _c in results:
+                    self._resolve_error(it, e)
+                return
+        # futures resolve after the swap: a tenant that sees its write's
+        # response can immediately read-its-write through the new epoch
+        for it, res, c_us in results:
+            self._resolve(it, res, "write", unit.cached, c_us, t_exec)

@@ -19,11 +19,23 @@ values to bind. The service
    everything else executes on Gaia's interpreter with the cached plan
    re-bound per request,
 4. reports per-query latency and aggregate QPS per flush.
+
+Epoch bindings (DESIGN.md §12): everything the read side derives from one
+pinned snapshot — both engines, the memoized routes, HiActor's registered
+stored procedures — lives in one immutable :class:`EngineBinding`. A
+committed write builds a *fresh* binding off-thread and installs it with a
+single attribute swap, so concurrent readers either finish on the old
+binding (a consistent superseded snapshot) or start on the new one;
+nobody ever observes a half-rebound service. The synchronous ``flush``
+loop is single-threaded and uses the same bindings, which keeps it the
+semantic oracle for the always-on :class:`~repro.serving.scheduler.
+FlexScheduler` built on top of these helpers.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
@@ -54,7 +66,14 @@ class Response:
     result: Dict[str, np.ndarray]
     engine: str          # "gaia" | "hiactor" | "fragment" | "grape" | "write"
     cached: bool         # plan-cache hit at admission time
-    latency_us: float    # wall time of the admission batch this query rode
+    latency_us: float    # submit-to-resolve wall time (sync path: the
+    #                      admission batch this query rode)
+    # p99 attribution (exp7): time spent waiting for dispatch vs executing.
+    # The synchronous flush path has no queue of its own (admission IS the
+    # flush), so it reports queue_us=0 and service_us=latency_us; the
+    # scheduler fills in the real split.
+    queue_us: float = 0.0
+    service_us: float = 0.0
 
 
 @dataclasses.dataclass
@@ -66,14 +85,19 @@ class ServingStats:
     route_counts: Dict[str, int]
     cache: Dict[str, float]
 
+    # empty-window guards use len() rather than truthiness: callers hand in
+    # lists OR numpy arrays, and a 2+-element ndarray raises on bool()
+    # while an empty one is falsy either way. An empty window (e.g. the
+    # closed-loop benchmark's warmup edge) reports 0.0, never raises.
     @property
     def mean_latency_us(self) -> float:
-        return float(np.mean(self.latencies_us)) if self.latencies_us else 0.0
+        return (float(np.mean(self.latencies_us))
+                if len(self.latencies_us) else 0.0)
 
     @property
     def p95_latency_us(self) -> float:
         return (float(np.percentile(self.latencies_us, 95))
-                if self.latencies_us else 0.0)
+                if len(self.latencies_us) else 0.0)
 
     def summary(self) -> str:
         routes = ", ".join(f"{k}={v}" for k, v in
@@ -83,6 +107,23 @@ class ServingStats:
                 f"{self.mean_latency_us:.0f} us / p95 "
                 f"{self.p95_latency_us:.0f} us; routes: {routes}; "
                 f"cache hit-rate {self.cache['hit_rate']:.2f}")
+
+
+@dataclasses.dataclass
+class EngineBinding:
+    """One epoch's read-side state: engines pinned on one snapshot plus
+    the derived maps computed against it. A binding is never mutated after
+    it is superseded — in-flight work that captured it keeps executing on
+    a consistent (if no-longer-current) version, exactly like a reader
+    that was admitted in the previous flush. ``routes``/``proc_names``
+    grow monotonically while the binding is current (resolution is
+    memoized, never invalidated in place)."""
+
+    gaia: GaiaEngine
+    hiactor: HiActorEngine
+    version: Optional[int]
+    routes: Dict[Tuple, str] = dataclasses.field(default_factory=dict)
+    proc_names: Dict[Tuple, str] = dataclasses.field(default_factory=dict)
 
 
 class QueryService:
@@ -99,6 +140,8 @@ class QueryService:
         self.cache = PlanCache(cache_capacity, on_evict=self._on_plan_evicted)
         self.batch_size = max(1, int(batch_size))
         self.row_threshold = row_threshold
+        self.rbo = rbo
+        self.cbo = cbo
         # dense fragment path for eligible OLAP traversals (DESIGN.md §9)
         self.fragment = fragment
         self.n_frags = max(1, int(n_frags))
@@ -118,33 +161,83 @@ class QueryService:
             store = store.snapshot()      # reads always pin a version
         self.write_store = write_store if write_store is not False else None
         self.on_commit = on_commit
-        pg = store if isinstance(store, PropertyGraph) \
-            else PropertyGraph(store)     # one facade: engines share the
         # CALL algo.* registry; pass a shared one to reuse memoized
         # fixpoints across services pinned at different MVCC snapshots
         self.procedures = procedures or ProcedureRegistry()
-        self.gaia = GaiaEngine(pg, catalog=catalog, rbo=rbo, cbo=cbo,
-                               plan_cache=self.cache,   # adjacency caches
-                               procedures=self.procedures)
-        self.hiactor = HiActorEngine(pg, catalog=self.gaia.catalog,
-                                     procedures=self.procedures)
-        self._bound_version = getattr(pg.grin.store, "version", None)
         self._queue: List[Request] = []
-        self._proc_names: Dict[Tuple, str] = {}
         self._proc_seq = 0                # monotonic: names never reused
-        # route is a pure function of the compiled plan + service config;
-        # memoized per plan key so flushes skip the lowering/cost analysis
-        self._routes: Dict[Tuple, str] = {}
+        # stored-procedure registration is the one binding mutation that
+        # can race (fast-lane execution re-registers after an eviction
+        # while the dispatcher resolves a new template)
+        self._reg_lock = threading.Lock()
+        self._binding = self._make_binding(store, catalog)
         self.last_stats: Optional[ServingStats] = None
+
+    # ---------------------------------------------------------- bindings
+    def _make_binding(self, store, catalog: Optional[Catalog]
+                      ) -> EngineBinding:
+        pg = store if isinstance(store, PropertyGraph) \
+            else PropertyGraph(store)     # one facade: engines share the
+        # adjacency caches (reverse CSR, label slices)
+        gaia = GaiaEngine(pg, catalog=catalog, rbo=self.rbo, cbo=self.cbo,
+                          plan_cache=self.cache,
+                          procedures=self.procedures)
+        hiactor = HiActorEngine(pg, catalog=gaia.catalog,
+                                procedures=self.procedures)
+        return EngineBinding(gaia, hiactor,
+                             getattr(pg.grin.store, "version", None))
+
+    def prepare_binding(self, store=None,
+                        catalog: Optional[Catalog] = None) -> EngineBinding:
+        """Build a fresh binding over a new snapshot WITHOUT installing
+        it. The expensive part of a rebind (facade + catalog + engine
+        construction) runs here, off the readers' critical path; the
+        epoch swap itself is :meth:`install_binding`'s single store."""
+        if store is None:
+            if self.write_store is None:
+                raise ValueError("rebind() needs a store when the service "
+                                 "has no mutable write_store")
+            store = self.write_store.snapshot()
+        return self._make_binding(store, catalog)
+
+    def install_binding(self, binding: EngineBinding) -> None:
+        """Atomically swap the current epoch's binding. Old engines (and
+        their fragment slab caches, stored-procedure indexes, memoized
+        routes) die with the superseded binding, so they can never serve
+        the new version by accident."""
+        self._binding = binding
+
+    # back-compat accessors: the rest of the stack (and the tests) address
+    # the *current* binding through the service
+    @property
+    def gaia(self) -> GaiaEngine:
+        return self._binding.gaia
+
+    @property
+    def hiactor(self) -> HiActorEngine:
+        return self._binding.hiactor
+
+    @property
+    def _bound_version(self) -> Optional[int]:
+        return self._binding.version
+
+    @property
+    def _routes(self) -> Dict[Tuple, str]:
+        return self._binding.routes
+
+    @property
+    def _proc_names(self) -> Dict[Tuple, str]:
+        return self._binding.proc_names
 
     def _on_plan_evicted(self, key) -> None:
         """Cache eviction drops the matching stored procedure too, so the
         registry stays bounded by cache capacity and a later recompile
         never executes a stale registered plan."""
-        self._routes.pop(key, None)
-        pname = self._proc_names.pop(key, None)
+        b = self._binding
+        b.routes.pop(key, None)
+        pname = b.proc_names.pop(key, None)
         if pname is not None:
-            self.hiactor.unregister(pname)
+            b.hiactor.unregister(pname)
 
     # -------------------------------------------------------------- rebind
     def rebind(self, store=None, catalog: Optional[Catalog] = None) -> None:
@@ -156,30 +249,95 @@ class QueryService:
         drops the derived state that was computed against the old one —
         memoized routes and HiActor's registered stored procedures (their
         indexes bake in old property values). The compiled-plan cache
-        survives: plans are data-independent. Fragment frontier and slab
-        caches live inside the old engines, so they can never serve the new
-        version by accident — eligible plans rebuild their slabs on first
-        use at the new snapshot."""
-        if store is None:
-            if self.write_store is None:
-                raise ValueError("rebind() needs a store when the service "
-                                 "has no mutable write_store")
-            store = self.write_store.snapshot()
-        pg = store if isinstance(store, PropertyGraph) \
-            else PropertyGraph(store)
-        self.gaia = GaiaEngine(pg, catalog=catalog, rbo=self.gaia.rbo,
-                               cbo=self.gaia.cbo, plan_cache=self.cache,
-                               procedures=self.procedures)
-        self.hiactor = HiActorEngine(pg, catalog=self.gaia.catalog,
-                                     procedures=self.procedures)
-        self._bound_version = getattr(pg.grin.store, "version", None)
-        self._routes.clear()
-        self._proc_names.clear()          # old engine died with its indexes
+        survives: plans are data-independent."""
+        self.install_binding(self.prepare_binding(store, catalog))
 
     # ------------------------------------------------------------- compile
     def compile(self, template: str, language: str = "cypher"):
         """``(plan, cached)`` through the shared plan cache."""
         return self.gaia.compile_cached(template, language)
+
+    # ----------------------------------------------------- route + execute
+    # Shared by the synchronous flush loop (the oracle) and the always-on
+    # FlexScheduler, so both paths execute a request identically and
+    # differ only in admission policy.
+
+    def resolve_route(self, binding: EngineBinding, key: Tuple,
+                      plan) -> str:
+        """The route of one compiled template, memoized per binding: a
+        pure function of the plan + service config + catalog stats."""
+        route = binding.routes.get(key)
+        if route is None:
+            if plan_is_write(plan):
+                route = "write"
+            elif any(isinstance(op, ProcedureCall) for op in plan.ops):
+                # hybrid analytics-in-the-loop plan: GRAPE computes (or
+                # reuses) the fixpoint, Gaia's dataflow runs the rest
+                route = "grape"
+            elif is_point_lookup(plan, binding.gaia.catalog,
+                                 self.row_threshold):
+                route = "hiactor"
+            elif self.fragment and should_use_fragment_path(
+                    plan, binding.gaia.catalog, self.fragment_min_cost,
+                    self.row_threshold):
+                # heavy traversal template: the whole admission batch
+                # becomes ONE jitted device program over the fragment
+                # substrate's [B, N] frontier matrices (DESIGN.md §9)
+                route = "fragment"
+            else:
+                route = "gaia"
+            binding.routes[key] = route
+        return route
+
+    def ensure_procedure(self, binding: EngineBinding, key: Tuple,
+                         plan) -> str:
+        """Register ``plan`` as a HiActor stored procedure on ``binding``
+        (idempotent, thread-safe): the fast lane re-registers lazily if a
+        plan-cache eviction dropped the procedure between dispatch and
+        execution."""
+        with self._reg_lock:
+            pname = binding.proc_names.get(key)
+            if pname is None or not binding.hiactor.has_procedure(pname):
+                pname = f"__svc_{self._proc_seq}"
+                self._proc_seq += 1
+                binding.hiactor.register_plan(pname, plan)
+                binding.proc_names[key] = pname
+            return pname
+
+    def exec_point_batch(self, binding: EngineBinding, key: Tuple, plan,
+                         params_list: Sequence[Dict[str, Any]]
+                         ) -> List[Dict[str, np.ndarray]]:
+        """One vectorized HiActor pass over a same-template micro-batch."""
+        pname = self.ensure_procedure(binding, key, plan)
+        try:
+            return binding.hiactor.submit_batch(pname, params_list)
+        except KeyError:
+            # an eviction raced us between ensure and submit: re-register
+            # (names are never reused, so a stale plan cannot answer)
+            pname = self.ensure_procedure(binding, key, plan)
+            return binding.hiactor.submit_batch(pname, params_list)
+
+    def exec_fragment_batch(self, binding: EngineBinding, plan,
+                            params_list: Sequence[Dict[str, Any]]
+                            ) -> Tuple[List[Dict[str, np.ndarray]], str]:
+        """One batched device program over the fragment substrate;
+        returns ``(results, engine)`` — falls back to the interpreter when
+        path counts blow past float32 exactness (finish_frontier
+        refuses)."""
+        try:
+            outs = binding.gaia.execute_fragment(plan, list(params_list),
+                                                 n_frags=self.n_frags)
+            return outs, "fragment"
+        except OverflowError:
+            return [binding.gaia.execute_plan(plan.bind(p))
+                    for p in params_list], "gaia"
+
+    def exec_interpreted(self, binding: EngineBinding, plan,
+                         params: Dict[str, Any]) -> Dict[str, np.ndarray]:
+        """One OLAP / hybrid CALL request on Gaia's interpreter (for CALL
+        plans the procedure memo makes every request after the first reuse
+        the converged fixpoint)."""
+        return binding.gaia.execute_plan(plan.bind(params))
 
     # -------------------------------------------------------------- admit
     def submit(self, template: str, params: Optional[Dict[str, Any]] = None,
@@ -201,13 +359,13 @@ class QueryService:
         if self.write_store is not None and \
                 self.write_store.write_version != self._bound_version:
             self.rebind()
+        b = self._binding                 # this flush's pinned epoch
         pending, self._queue = self._queue, []
         t0 = time.perf_counter()
         # same-template requests batch together regardless of submitter
         groups: "OrderedDict[Tuple, List[Tuple[int, Request]]]" = OrderedDict()
         for pos, req in enumerate(pending):
-            key = plan_key(req.template, req.language,
-                           self.gaia.rbo, self.gaia.cbo)
+            key = plan_key(req.template, req.language, self.rbo, self.cbo)
             groups.setdefault(key, []).append((pos, req))
 
         # admission pass: compile + validate every group before executing
@@ -226,7 +384,8 @@ class QueryService:
         for key, items in groups.items():
             first = items[0][1]
             try:
-                plan, cached = self.compile(first.template, first.language)
+                plan, cached = b.gaia.compile_cached(first.template,
+                                                     first.language)
             except Exception as e:
                 rejected.extend([e] * len(items))
                 continue
@@ -256,7 +415,7 @@ class QueryService:
                 if is_write:
                     c0 = time.perf_counter()
                     try:
-                        ws = stage_writes(plan, self.gaia.pg, req.params,
+                        ws = stage_writes(plan, b.gaia.pg, req.params,
                                           procedures=self.procedures)
                     except Exception as e:
                         rejected.append(e)
@@ -278,27 +437,7 @@ class QueryService:
         # has executed against the pinned snapshot (DESIGN.md §11)
         staged: List[Tuple[int, Any, bool, float]] = []
         for key, items, plan, cached in admitted:
-            route = self._routes.get(key)
-            if route is None:
-                if plan_is_write(plan):
-                    route = "write"
-                elif any(isinstance(op, ProcedureCall) for op in plan.ops):
-                    # hybrid analytics-in-the-loop plan: GRAPE computes (or
-                    # reuses) the fixpoint, Gaia's dataflow runs the rest
-                    route = "grape"
-                elif is_point_lookup(plan, self.gaia.catalog,
-                                     self.row_threshold):
-                    route = "hiactor"
-                elif self.fragment and should_use_fragment_path(
-                        plan, self.gaia.catalog, self.fragment_min_cost,
-                        self.row_threshold):
-                    # heavy traversal template: the whole admission batch
-                    # becomes ONE jitted device program over the fragment
-                    # substrate's [B, N] frontier matrices (DESIGN.md §9)
-                    route = "fragment"
-                else:
-                    route = "gaia"
-                self._routes[key] = route
+            route = self.resolve_route(b, key, plan)
             route_counts[route] = route_counts.get(route, 0) + len(items)
 
             if route == "write":
@@ -308,54 +447,41 @@ class QueryService:
                     ws, c_us = staged_ws[pos]
                     staged.append((pos, ws, cached, c_us))
             elif route == "hiactor":
-                pname = self._proc_names.get(key)
-                if pname is None:
-                    pname = f"__svc_{self._proc_seq}"
-                    self._proc_seq += 1
-                    self.hiactor.register_plan(pname, plan)
-                    self._proc_names[key] = pname
                 # admission batching: chunks of batch_size per vectorized pass
                 for i in range(0, len(items), self.batch_size):
                     chunk = items[i:i + self.batch_size]
                     c0 = time.perf_counter()
-                    outs = self.hiactor.submit_batch(
-                        pname, [req.params for _, req in chunk])
+                    outs = self.exec_point_batch(
+                        b, key, plan, [req.params for _, req in chunk])
                     c_us = (time.perf_counter() - c0) * 1e6
                     for (pos, _), out in zip(chunk, outs):
-                        responses[pos] = Response(out, route, cached, c_us)
+                        responses[pos] = Response(out, route, cached, c_us,
+                                                  service_us=c_us)
             elif route == "fragment":
                 for i in range(0, len(items), self.batch_size):
                     chunk = items[i:i + self.batch_size]
                     c0 = time.perf_counter()
-                    try:
-                        outs = self.gaia.execute_fragment(
-                            plan, [req.params for _, req in chunk],
-                            n_frags=self.n_frags)
-                        eng = route
-                    except OverflowError:
-                        # path counts blew past float32 exactness
-                        # (finish_frontier refuses): interpreter rerun
-                        outs = [self.gaia.execute_plan(plan.bind(req.params))
-                                for _, req in chunk]
-                        eng = "gaia"
+                    outs, eng = self.exec_fragment_batch(
+                        b, plan, [req.params for _, req in chunk])
+                    if eng != route:
                         route_counts[route] -= len(chunk)
                         if not route_counts[route]:
                             del route_counts[route]
-                        route_counts["gaia"] = \
-                            route_counts.get("gaia", 0) + len(chunk)
+                        route_counts[eng] = \
+                            route_counts.get(eng, 0) + len(chunk)
                     c_us = (time.perf_counter() - c0) * 1e6
                     for (pos, _), out in zip(chunk, outs):
-                        responses[pos] = Response(out, eng, cached, c_us)
+                        responses[pos] = Response(out, eng, cached, c_us,
+                                                  service_us=c_us)
             else:
                 # OLAP and hybrid CALL plans execute per request
-                # (batch_size plays no role; for CALL plans the procedure
-                # memo makes every request after the first reuse the
-                # converged fixpoint)
+                # (batch_size plays no role)
                 for pos, req in items:
                     c0 = time.perf_counter()
-                    out = self.gaia.execute_plan(plan.bind(req.params))
+                    out = self.exec_interpreted(b, plan, req.params)
                     c_us = (time.perf_counter() - c0) * 1e6
-                    responses[pos] = Response(out, route, cached, c_us)
+                    responses[pos] = Response(out, route, cached, c_us,
+                                              service_us=c_us)
 
         if staged:
             # batched per-flush commit in submission order, then advance
@@ -371,7 +497,7 @@ class QueryService:
                 else:
                     v = self.write_store.write_version
                 responses[pos] = Response(ws.result(v), "write", cached,
-                                          c_us)
+                                          c_us, service_us=c_us)
             if committed:
                 self.rebind()
                 if self.on_commit is not None:

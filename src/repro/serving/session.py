@@ -176,6 +176,7 @@ class FlexSession:
             on_commit=self._on_commit)
         self._learning: Optional[LearningContext] = None
         self._analytical: Optional[AnalyticalContext] = None
+        self._scheduler = None            # lazy FlexScheduler (serve_async)
         self.last_publish_error: Optional[Exception] = None
 
     # ------------------------------------------------------------ the verbs
@@ -228,6 +229,41 @@ class FlexSession:
         responses, _ = self._service.serve(
             [Request(template, dict(params or {}), language)])
         return responses[-1].result
+
+    # ------------------------------------------------- always-on front door
+    def serve_async(self, **scheduler_kwargs):
+        """The always-on continuous-batching front door (DESIGN.md §12):
+        a started :class:`~repro.serving.scheduler.FlexScheduler` over
+        this session's service. ``submit()`` from any thread returns a
+        Future; point lookups coalesce into micro-batches on the fast
+        lane while OLAP / fragment / GRAPE / write work runs in the slow
+        lane. The synchronous ``interactive()`` flush loop stays the
+        semantic oracle — don't drive both concurrently on one session.
+
+        Created once and reused; ``scheduler_kwargs`` (tenant classes,
+        batch sizes, queue bounds) apply only on first creation. Call
+        :meth:`close` (or use the session as a context manager) to drain
+        and stop it."""
+        if self._scheduler is None or not self._scheduler.is_running:
+            from repro.serving.scheduler import FlexScheduler
+
+            self._scheduler = FlexScheduler(self._service,
+                                            **scheduler_kwargs)
+            self._scheduler.start()
+        return self._scheduler
+
+    def close(self, timeout: Optional[float] = 30.0) -> None:
+        """Drain and stop the async front door (no-op when none is
+        running). The synchronous verbs stay usable after close."""
+        if self._scheduler is not None:
+            self._scheduler.close(timeout=timeout)
+            self._scheduler = None
+
+    def __enter__(self) -> "FlexSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # ---------------------------------------------------------- time travel
     def at(self, version: int) -> "FlexSession":

@@ -1,0 +1,956 @@
+"""Concurrency tier for the always-on front door (DESIGN.md §12).
+
+FlexScheduler under true concurrency: N producer threads × mixed tenants
+asserting bag-equality against the synchronous-flush oracle, weighted-DRR
+fairness and no-starvation, bounded-queue backpressure (reject, never
+drop), deadlock-free drain/close under concurrent submit, write/read
+interleaving on the PR 5 snapshot semantics, plus barrier-driven
+regression tests for the PlanCache and stats-window thread-safety fixes.
+
+Every wait is bounded (``future.result(timeout=...)``); the module-level
+``timeout`` mark is a second watchdog enforced by pytest-timeout in CI
+(inert locally where the plugin isn't installed).
+"""
+
+import random
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from conftest import assert_results_bag_equal
+from repro.serving import (FlexScheduler, PlanCache, Response, SchedulerBusy,
+                           SchedulerClosed, plan_key)
+from repro.serving.scheduler import _StatsWindow
+from repro.serving.session import FlexSession
+from repro.storage.gart import GARTStore
+from repro.storage.generators import snb_store
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:               # hypothesis is CI-only (conftest profile)
+    HAVE_HYPOTHESIS = False
+
+pytestmark = pytest.mark.timeout(120)
+
+WAIT = 30                         # bounded future waits everywhere
+
+POINT = "MATCH (a:Person {id: $x}) RETURN a.credits AS c"
+POINT2 = "MATCH (p:Person {id: $x}) RETURN p.credits AS cc"
+COUNT_K = ("MATCH (a:Person {id: $x})-[:KNOWS]->(b:Person) "
+           "WITH a, COUNT(b) AS k RETURN k AS k")
+OLAP = ("MATCH (a:Person)-[:KNOWS]->(b:Person) WHERE a.credits > $t "
+        "WITH a, COUNT(b) AS d RETURN a, d")
+HYBRID = ("CALL algo.pagerank($d) YIELD v, rank "
+          "MATCH (v:Person) WHERE rank > $t "
+          "RETURN v AS v, rank AS r ORDER BY r DESC LIMIT 10")
+CREATE = ("MATCH (a:Person {id: $x}), (b:Person {id: $y}) "
+          "CREATE (a)-[:KNOWS {date: $d}]->(b)")
+SETQ = "MATCH (a:Person {id: $x}) SET a.credits = a.credits + $c"
+
+N_PERSONS = 200
+
+
+def mk_session(**kw) -> FlexSession:
+    """Fresh read-write session over a fresh 200-person SNB GART store —
+    write tests mutate it, so nothing is shared between tests."""
+    cs = snb_store(n_persons=N_PERSONS, n_items=100, n_posts=32, seed=11)
+    return FlexSession(GARTStore.from_csr(cs), **kw)
+
+
+def oracle_results(reqs, **kw):
+    """The synchronous-flush oracle: the same requests through a FRESH
+    session's one-shot flush; returns results in submission order."""
+    s = mk_session(**kw)
+    svc = s.interactive()
+    for t, p in reqs:
+        svc.submit(t, p)
+    resps, _ = svc.flush()
+    return [r.result for r in resps]
+
+
+def results_of(futs):
+    return [f.result(timeout=WAIT).result for f in futs]
+
+
+# --------------------------------------------------------------------------
+# submit / resolve basics
+# --------------------------------------------------------------------------
+class TestSubmitAndResolve:
+    def test_future_resolves_to_response(self):
+        with mk_session() as s:
+            sched = s.serve_async()
+            resp = sched.submit(POINT, {"x": 7}).result(timeout=WAIT)
+            assert isinstance(resp, Response)
+            assert resp.engine == "hiactor"
+            assert resp.result["c"].shape == (1,)
+
+    def test_point_lookups_match_sync_oracle(self):
+        reqs = [(POINT, {"x": i % N_PERSONS}) for i in range(40)]
+        ref = oracle_results(reqs)
+        with mk_session() as s:
+            sched = s.serve_async()
+            got = results_of([sched.submit(t, p) for t, p in reqs])
+        for r, g in zip(ref, got):
+            assert_results_bag_equal(r, g)
+
+    def test_all_read_routes_match_sync_oracle(self):
+        reqs = [(POINT, {"x": 3}), (OLAP, {"t": 400}),
+                (HYBRID, {"d": 0.85, "t": 0.0}), (COUNT_K, {"x": 9}),
+                (POINT2, {"x": 5})]
+        ref = oracle_results(reqs)
+        with mk_session() as s:
+            sched = s.serve_async()
+            got = results_of([sched.submit(t, p) for t, p in reqs])
+        for r, g in zip(ref, got):
+            assert_results_bag_equal(r, g)
+
+    def test_latency_breakdown(self):
+        with mk_session() as s:
+            sched = s.serve_async()
+            resp = sched.submit(POINT, {"x": 1}).result(timeout=WAIT)
+            assert resp.queue_us >= 0.0
+            assert resp.service_us > 0.0
+            assert resp.latency_us == pytest.approx(
+                resp.queue_us + resp.service_us)
+
+    def test_unbound_param_fails_only_that_future(self):
+        with mk_session() as s:
+            sched = s.serve_async()
+            good = sched.submit(POINT, {"x": 2})
+            bad = sched.submit(POINT, {})           # $x unbound
+            with pytest.raises(KeyError):
+                bad.result(timeout=WAIT)
+            assert good.result(timeout=WAIT).result["c"].shape == (1,)
+
+    def test_bad_template_fails_future(self):
+        with mk_session() as s:
+            sched = s.serve_async()
+            f = sched.submit("MATCH (a:Nope m RETURN", {})
+            with pytest.raises(Exception):
+                f.result(timeout=WAIT)
+            assert sched.drain(WAIT)
+
+    def test_gremlin_dialect(self):
+        with mk_session() as s:
+            sched = s.serve_async()
+            f = sched.submit("g.V().hasLabel('Person').has('id', $x)"
+                             ".values('credits')", {"x": 4},
+                             language="gremlin")
+            ref = oracle_results([(POINT, {"x": 4})])[0]
+            got = f.result(timeout=WAIT).result
+            assert list(got.values())[0] == pytest.approx(ref["c"])
+
+    def test_submit_after_close_raises(self):
+        s = mk_session()
+        sched = s.serve_async()
+        s.close()
+        with pytest.raises(SchedulerClosed):
+            sched.submit(POINT, {"x": 0})
+
+
+# --------------------------------------------------------------------------
+# continuous batching: coalescing into micro-batches
+# --------------------------------------------------------------------------
+class TestCoalescing:
+    def test_point_lookups_coalesce_into_units(self):
+        s = mk_session()
+        try:
+            sched = FlexScheduler(s.interactive())
+            futs = [sched.submit(POINT, {"x": i % N_PERSONS})
+                    for i in range(50)]
+            sched.start()                 # queued-before-start: one big pop
+            results_of(futs)
+            assert sched.units_dispatched < 50   # micro-batches, not 1:1
+        finally:
+            sched.close()
+
+    def test_cross_tenant_same_template_coalesces(self):
+        s = mk_session()
+        try:
+            sched = FlexScheduler(s.interactive(), quantum=64)
+            futs = [sched.submit(POINT, {"x": i}, tenant=f"t{i % 4}")
+                    for i in range(48)]
+            sched.start()
+            results_of(futs)
+            # 48 requests from 4 tenants, one template: adjacent runs from
+            # different tenants merge — far fewer units than requests
+            assert sched.units_dispatched <= 8
+        finally:
+            sched.close()
+
+    def test_batch_size_chunks_units(self):
+        s = mk_session()
+        try:
+            sched = FlexScheduler(s.interactive(), batch_size=8, quantum=32)
+            futs = [sched.submit(POINT, {"x": i}) for i in range(24)]
+            sched.start()
+            got = results_of(futs)
+            assert len(got) == 24
+            assert sched.units_dispatched >= 3   # ceil(24 / 8)
+        finally:
+            sched.close()
+
+    def test_stats_route_counts(self):
+        with mk_session() as s:
+            sched = s.serve_async()
+            sched.reset_stats()
+            futs = [sched.submit(POINT, {"x": i}) for i in range(10)]
+            futs += [sched.submit(OLAP, {"t": 300}) for _ in range(3)]
+            results_of(futs)
+            st_ = sched.stats()
+            assert st_.n_queries == 13
+            assert st_.route_counts.get("hiactor", 0) == 10
+            assert sum(v for k, v in st_.route_counts.items()
+                       if k != "hiactor") == 3
+            assert st_.p95_latency_us > 0.0
+
+
+# --------------------------------------------------------------------------
+# N producer threads × mixed tenants vs the flush oracle
+# --------------------------------------------------------------------------
+class TestConcurrentProducers:
+    def test_producer_threads_bag_equal_oracle(self):
+        """4 threads × 30 read requests each, mixed tenants and routes:
+        every response equals what a synchronous flush of the same
+        request returns (reads are deterministic on a quiesced store)."""
+        rng = random.Random(5)
+        per_thread = []
+        for t in range(4):
+            reqs = []
+            for i in range(30):
+                if rng.random() < 0.8:
+                    reqs.append((POINT, {"x": rng.randrange(N_PERSONS)}))
+                else:
+                    reqs.append((COUNT_K, {"x": rng.randrange(N_PERSONS)}))
+            per_thread.append(reqs)
+        flat = [r for reqs in per_thread for r in reqs]
+        ref = {self._key(r): res
+               for r, res in zip(flat, oracle_results(flat))}
+
+        with mk_session() as s:
+            sched = s.serve_async()
+            out = [None] * 4
+            barrier = threading.Barrier(4)
+
+            def producer(tid):
+                barrier.wait()
+                futs = [sched.submit(t, p, tenant=f"tenant{tid}")
+                        for t, p in per_thread[tid]]
+                out[tid] = [f.result(timeout=WAIT).result for f in futs]
+
+            threads = [threading.Thread(target=producer, args=(t,))
+                       for t in range(4)]
+            for th in threads:
+                th.start()
+            for th in threads:
+                th.join(timeout=WAIT)
+                assert not th.is_alive()
+            for tid in range(4):
+                for req, got in zip(per_thread[tid], out[tid]):
+                    assert_results_bag_equal(ref[self._key(req)], got)
+
+    @staticmethod
+    def _key(req):
+        return (req[0], tuple(sorted(req[1].items())))
+
+    def test_fast_lane_per_tenant_completion_order(self):
+        with mk_session() as s:
+            sched = s.serve_async()
+            done, lock = [], threading.Lock()
+
+            def mark(i):
+                def cb(_f):
+                    with lock:
+                        done.append(i)
+                return cb
+
+            futs = []
+            for i in range(60):
+                f = sched.submit(POINT, {"x": i % N_PERSONS},
+                                 tenant=f"t{i % 3}")
+                f.add_done_callback(mark(i))
+                futs.append(f)
+            results_of(futs)
+            for tid in range(3):
+                seq = [i for i in done if i % 3 == tid]
+                assert seq == sorted(seq)   # per-tenant FIFO on the lane
+
+    def test_slow_lane_per_tenant_completion_order(self):
+        with mk_session() as s:
+            sched = s.serve_async()
+            done, lock = [], threading.Lock()
+
+            def mark(i):
+                def cb(_f):
+                    with lock:
+                        done.append(i)
+                return cb
+
+            futs = []
+            for i in range(12):             # alternate slow templates
+                t, p = (OLAP, {"t": 100 + i}) if i % 2 \
+                    else (HYBRID, {"d": 0.5 + i * 0.01, "t": 0.0})
+                f = sched.submit(t, p, tenant="olap")
+                f.add_done_callback(mark(i))
+                futs.append(f)
+            results_of(futs)
+            assert done == sorted(done)
+
+    def test_mixed_lanes_both_complete(self):
+        with mk_session() as s:
+            sched = s.serve_async()
+            futs = [sched.submit(POINT, {"x": i}) if i % 2
+                    else sched.submit(OLAP, {"t": 50 * i})
+                    for i in range(20)]
+            got = results_of(futs)
+            assert len(got) == 20
+            assert sched.outstanding == 0
+
+
+# --------------------------------------------------------------------------
+# fairness / no starvation
+# --------------------------------------------------------------------------
+class TestFairness:
+    def test_olap_flood_does_not_starve_point_lookups(self):
+        """Tenant A floods the slow lane with uncached pagerank fixpoints
+        over a bigger graph; tenant B's point lookups keep flowing through
+        the fast lane and all finish before A's flood does."""
+        cs = snb_store(n_persons=1000, n_items=200, n_posts=64, seed=3)
+        with FlexSession(GARTStore.from_csr(cs)) as s:
+            sched = s.serve_async()
+            t_done = {}
+            lock = threading.Lock()
+
+            def mark(name):
+                def cb(_f):
+                    with lock:
+                        t_done[name] = time.perf_counter()
+                return cb
+
+            slow_futs = []
+            for i in range(16):             # distinct damping: no memo hits
+                f = sched.submit(HYBRID, {"d": 0.50 + i * 0.01, "t": 0.0},
+                                 tenant="olap")
+                f.add_done_callback(mark(f"slow{i}"))
+                slow_futs.append(f)
+            fast_futs = []
+            for i in range(20):
+                f = sched.submit(POINT, {"x": i}, tenant="oltp")
+                f.add_done_callback(mark(f"fast{i}"))
+                fast_futs.append(f)
+            results_of(slow_futs + fast_futs)      # zero starved requests
+            last_fast = max(t_done[f"fast{i}"] for i in range(20))
+            last_slow = max(t_done[f"slow{i}"] for i in range(16))
+            assert last_fast < last_slow
+            by_tenant = sched.completed_by_tenant()
+            assert by_tenant == {"olap": 16, "oltp": 20}
+
+    def test_weighted_drr_pop_pattern(self):
+        """Deterministic policy check, no threads: with quantum=1 a
+        weight-4 tenant pops 4 items per round to a weight-1 tenant's 1."""
+        s = mk_session()
+        sched = FlexScheduler(s.interactive(), quantum=1)
+        sched.register_tenant("heavy", weight=4.0)
+        sched.register_tenant("light", weight=1.0)
+        key = plan_key(POINT, "cypher", True, True)
+        sched._lane_memo[key] = "fast"
+        for i in range(8):
+            sched.submit(POINT, {"x": i}, tenant="heavy")
+            sched.submit(POINT, {"x": i}, tenant="light")
+        with sched._cv:
+            round1 = [it.tenant for it in sched._select_locked()]
+            round2 = [it.tenant for it in sched._select_locked()]
+        assert round1 == ["heavy"] * 4 + ["light"]
+        assert round2 == ["heavy"] * 4 + ["light"]
+        sched.close(drain=False)
+
+    def test_full_lane_blocks_only_that_tenant(self):
+        """Head-of-line blocking is per tenant: a fast-lane head behind a
+        full fast lane must not stop another tenant's slow-lane work."""
+        s = mk_session()
+        sched = FlexScheduler(s.interactive())
+        kf = plan_key(POINT, "cypher", True, True)
+        ks = plan_key(OLAP, "cypher", True, True)
+        sched._lane_memo[kf] = "fast"
+        sched._lane_memo[ks] = "slow"
+        sched.submit(POINT, {"x": 0}, tenant="a")
+        sched.submit(OLAP, {"t": 1}, tenant="b")
+        with sched._cv:
+            sched._fast_pending = sched.fast_capacity   # fast lane full
+            popped = sched._select_locked()
+            sched._fast_pending = 0
+        assert [it.tenant for it in popped] == ["b"]
+        sched.close(drain=False)
+
+    def test_returning_tenant_carries_no_deficit(self):
+        s = mk_session()
+        sched = FlexScheduler(s.interactive(), quantum=2)
+        key = plan_key(POINT, "cypher", True, True)
+        sched._lane_memo[key] = "fast"
+        sched.submit(POINT, {"x": 0}, tenant="a")
+        with sched._cv:
+            sched._select_locked()          # queue empties
+        assert sched._deficit["a"] == 0.0   # no hoarded credit for bursts
+        sched.close(drain=False)
+
+
+# --------------------------------------------------------------------------
+# backpressure
+# --------------------------------------------------------------------------
+class TestBackpressure:
+    def test_full_queue_rejects_with_retry_after(self):
+        s = mk_session()
+        sched = FlexScheduler(s.interactive())       # not started: queues fill
+        sched.register_tenant("t", max_queue=3)
+        for i in range(3):
+            sched.submit(POINT, {"x": i}, tenant="t")
+        with pytest.raises(SchedulerBusy) as ei:
+            sched.submit(POINT, {"x": 9}, tenant="t")
+        assert ei.value.tenant == "t"
+        assert ei.value.queued == 3
+        assert ei.value.retry_after > 0.0
+        sched.close(drain=False)
+
+    def test_rejected_submit_creates_no_future(self):
+        s = mk_session()
+        sched = FlexScheduler(s.interactive())
+        sched.register_tenant("t", max_queue=2)
+        futs = [sched.submit(POINT, {"x": i}, tenant="t") for i in range(2)]
+        with pytest.raises(SchedulerBusy):
+            sched.submit(POINT, {"x": 5}, tenant="t")
+        assert sched.outstanding == 2       # the reject left no orphan
+        sched.close(drain=False)            # ... and every accepted future
+        for f in futs:                      # still resolves (SchedulerClosed)
+            with pytest.raises(SchedulerClosed):
+                f.result(timeout=WAIT)
+
+    def test_tenant_isolation_under_backpressure(self):
+        s = mk_session()
+        sched = FlexScheduler(s.interactive())
+        sched.register_tenant("small", max_queue=1)
+        sched.submit(POINT, {"x": 0}, tenant="small")
+        with pytest.raises(SchedulerBusy):
+            sched.submit(POINT, {"x": 1}, tenant="small")
+        f = sched.submit(POINT, {"x": 2}, tenant="other")   # unaffected
+        sched.start()
+        assert f.result(timeout=WAIT).result["c"].shape == (1,)
+        sched.close()
+
+    def test_recovers_after_drain(self):
+        s = mk_session()
+        sched = FlexScheduler(s.interactive())
+        sched.register_tenant("t", max_queue=2)
+        futs = [sched.submit(POINT, {"x": i}, tenant="t") for i in range(2)]
+        with pytest.raises(SchedulerBusy):
+            sched.submit(POINT, {"x": 9}, tenant="t")
+        sched.start()
+        results_of(futs)
+        f = sched.submit(POINT, {"x": 9}, tenant="t")   # capacity freed
+        assert f.result(timeout=WAIT).result["c"].shape == (1,)
+        sched.close()
+
+
+# --------------------------------------------------------------------------
+# drain / close
+# --------------------------------------------------------------------------
+class TestDrainClose:
+    def test_drain_idle_returns_true(self):
+        with mk_session() as s:
+            sched = s.serve_async()
+            assert sched.drain(timeout=5)
+
+    def test_drain_unstarted_with_work_times_out(self):
+        s = mk_session()
+        sched = FlexScheduler(s.interactive())
+        sched.submit(POINT, {"x": 0})
+        assert sched.drain(timeout=0.05) is False
+        sched.close(drain=False)
+
+    def test_close_without_drain_resolves_every_future(self):
+        s = mk_session()
+        sched = FlexScheduler(s.interactive()).start()
+        futs = [sched.submit(HYBRID, {"d": 0.5 + i * 0.003, "t": 0.0},
+                             tenant="olap") for i in range(40)]
+        sched.close(timeout=10, drain=False)
+        resolved = 0
+        for f in futs:
+            try:
+                f.result(timeout=WAIT)
+                resolved += 1
+            except SchedulerClosed:
+                resolved += 1
+        assert resolved == 40               # none dropped silently
+        assert sched.outstanding == 0
+
+    def test_close_is_idempotent(self):
+        s = mk_session()
+        sched = s.serve_async()
+        assert sched.close() is True
+        assert sched.close() is True
+        s.close()                           # session close after is a no-op
+
+    def test_concurrent_submit_and_close_no_deadlock(self):
+        with mk_session() as s:
+            sched = s.serve_async()
+            futs, flock = [], threading.Lock()
+            stop_stats = {"busy": 0, "closed": 0}
+
+            def producer(tid):
+                rng = random.Random(tid)
+                for i in range(80):
+                    try:
+                        f = sched.submit(POINT,
+                                         {"x": rng.randrange(N_PERSONS)},
+                                         tenant=f"t{tid}")
+                        with flock:
+                            futs.append(f)
+                    except SchedulerBusy:
+                        stop_stats["busy"] += 1
+                    except SchedulerClosed:
+                        stop_stats["closed"] += 1
+                        return
+
+            threads = [threading.Thread(target=producer, args=(t,))
+                       for t in range(4)]
+            for th in threads:
+                th.start()
+            time.sleep(0.05)
+            sched.close(timeout=WAIT)       # while submits are in flight
+            for th in threads:
+                th.join(timeout=WAIT)
+                assert not th.is_alive()
+            for f in futs:                  # accepted futures all resolve
+                try:
+                    f.result(timeout=WAIT)
+                except SchedulerClosed:
+                    pass
+            assert sched.outstanding == 0
+
+    def test_session_context_manager_and_sync_verbs_after_close(self):
+        s = mk_session()
+        with s:
+            resp = s.serve_async().submit(POINT, {"x": 3}).result(
+                timeout=WAIT)
+            assert resp.result["c"].shape == (1,)
+        # the async front door is gone; the synchronous verbs still work
+        out = s.execute(POINT, {"x": 3})
+        assert out["c"] == pytest.approx(resp.result["c"])
+
+    def test_serve_async_restarts_after_close(self):
+        s = mk_session()
+        first = s.serve_async()
+        s.close()
+        second = s.serve_async()
+        assert second is not first and second.is_running
+        assert second.submit(POINT, {"x": 1}).result(
+            timeout=WAIT).result["c"].shape == (1,)
+        s.close()
+
+
+# --------------------------------------------------------------------------
+# write/read interleaving on the PR 5 snapshot semantics
+# --------------------------------------------------------------------------
+class TestWriteReadInterleaving:
+    def test_write_commits_and_publishes_epoch(self):
+        with mk_session() as s:
+            v0, e0 = s.store.write_version, s.bus.epoch
+            sched = s.serve_async()
+            resp = sched.submit(CREATE, {"x": 0, "y": 1, "d": 77}).result(
+                timeout=WAIT)
+            assert resp.engine == "write"
+            assert int(resp.result["inserted"][0]) == 1
+            assert s.store.write_version == v0 + 1
+            assert s.bus.epoch == e0 + 1    # VersionBus published the swap
+
+    def test_read_your_write_after_commit(self):
+        with mk_session() as s:
+            base = int(oracle_results([(COUNT_K, {"x": 0})])[0]["k"][0])
+            sched = s.serve_async()
+            fw = sched.submit(CREATE, {"x": 0, "y": 9, "d": 1},
+                              tenant="w")
+            fw.result(timeout=WAIT)
+            # the write future resolves only AFTER the epoch swap, so a
+            # read submitted once the response is visible must observe
+            # the committed edge
+            fr = sched.submit(COUNT_K, {"x": 0}, tenant="w")
+            assert int(fr.result(timeout=WAIT).result["k"][0]) == base + 1
+
+    def test_no_lost_creates_across_tenants(self):
+        with mk_session() as s:
+            e0 = s.store.n_edges
+            sched = s.serve_async()
+            futs = [sched.submit(CREATE, {"x": i % N_PERSONS,
+                                          "y": (i * 7) % N_PERSONS, "d": i},
+                                 tenant=f"w{i % 2}") for i in range(20)]
+            results_of(futs)
+            assert s.store.n_edges == e0 + 20   # serialized, none lost
+
+    def test_concurrent_reads_see_valid_monotone_snapshots(self):
+        """Readers race a writer that keeps adding KNOWS edges to vertex
+        0. Every read sees SOME committed epoch (count in [base, base+n])
+        and — single lane FIFO + monotone binding swaps — the counts are
+        non-decreasing in completion order."""
+        with mk_session() as s:
+            base = int(oracle_results([(COUNT_K, {"x": 0})])[0]["k"][0])
+            sched = s.serve_async()
+            n_writes = 10
+            counts = []
+
+            def writer():
+                for i in range(n_writes):
+                    sched.submit(CREATE, {"x": 0, "y": 20 + i, "d": i},
+                                 tenant="w").result(timeout=WAIT)
+
+            wt = threading.Thread(target=writer)
+            wt.start()
+            read_futs = []
+            for _ in range(30):
+                read_futs.append(sched.submit(COUNT_K, {"x": 0},
+                                              tenant="r"))
+                time.sleep(0.001)
+            wt.join(timeout=WAIT)
+            assert not wt.is_alive()
+            counts = [int(f.result(timeout=WAIT).result["k"][0])
+                      for f in read_futs]
+            assert all(base <= c <= base + n_writes for c in counts)
+            assert counts == sorted(counts)
+
+    def test_set_batch_matches_flush_oracle(self):
+        """Co-batched SETs on one vertex follow the pinned-snapshot
+        last-writer-wins rule — exactly what one flush of the same
+        requests produces (the oracle equivalence, write edition)."""
+        reqs = [(SETQ, {"x": 5, "c": 10}), (SETQ, {"x": 5, "c": 3})]
+        o = mk_session()
+        osvc = o.interactive()
+        for t, p in reqs:
+            osvc.submit(t, p)
+        osvc.flush()                        # one flush = one pinned epoch
+        ref_store_result = o.execute(POINT, {"x": 5})
+        s = mk_session()
+        sched = FlexScheduler(s.interactive())
+        futs = [sched.submit(t, p, tenant="w") for t, p in reqs]
+        sched.start()                       # both SETs land in ONE unit
+        results_of(futs)
+        got = sched.submit(POINT, {"x": 5}).result(timeout=WAIT).result
+        assert_results_bag_equal(ref_store_result, got)
+        sched.close()
+
+    def test_staging_error_fails_only_that_write(self):
+        # inline-pred endpoints: an id that matches nothing is a staging
+        # ValueError ("matched no vertices"), not an empty commit
+        tmpl = "CREATE (x {id: $x})-[:KNOWS {date: $d}]->(y {id: $y})"
+        with mk_session() as s:
+            e0 = s.store.n_edges
+            sched = s.serve_async()
+            bad = sched.submit(tmpl, {"x": 10 ** 9, "y": 1, "d": 0},
+                               tenant="w")
+            good = sched.submit(tmpl, {"x": 1, "y": 2, "d": 0},
+                                tenant="w")
+            with pytest.raises(ValueError, match="matched no vertices"):
+                bad.result(timeout=WAIT)
+            assert int(good.result(timeout=WAIT).result["inserted"][0]) == 1
+            assert s.store.n_edges == e0 + 1
+
+    def test_read_only_session_rejects_writes(self):
+        cs = snb_store(n_persons=50, n_items=20, n_posts=8, seed=2)
+        s = FlexSession(cs)                 # immutable store: read-only
+        with s:
+            sched = s.serve_async()
+            f = sched.submit(CREATE, {"x": 0, "y": 1, "d": 0})
+            with pytest.raises(PermissionError):
+                f.result(timeout=WAIT)
+            ok = sched.submit(POINT, {"x": 0}).result(timeout=WAIT)
+            assert ok.result["c"].shape == (1,)
+
+    def test_pinned_session_unaffected_by_scheduled_writes(self):
+        with mk_session() as s:
+            s.execute(CREATE, {"x": 2, "y": 3, "d": 0})   # version 1
+            v1 = s.version
+            base = int(s.execute(COUNT_K, {"x": 2})["k"][0])
+            pinned = s.at(v1)
+            sched = s.serve_async()
+            futs = [sched.submit(CREATE, {"x": 2, "y": 30 + i, "d": i})
+                    for i in range(5)]
+            results_of(futs)
+            assert int(s.execute(COUNT_K, {"x": 2})["k"][0]) == base + 5
+            assert int(pinned.execute(COUNT_K, {"x": 2})["k"][0]) == base
+
+
+# --------------------------------------------------------------------------
+# thread-safety regressions: PlanCache + stats accumulation
+# --------------------------------------------------------------------------
+class TestThreadSafetyRegressions:
+    def test_plan_cache_concurrent_put_is_consistent(self):
+        """4 threads × 200 distinct-key puts through an 8-entry LRU:
+        without the cache lock this corrupts the OrderedDict mid-
+        ``move_to_end`` / drops eviction callbacks; with it the counters
+        balance exactly."""
+        cache = PlanCache(capacity=8)
+        barrier = threading.Barrier(4)
+
+        def hammer(tid):
+            barrier.wait()
+            for i in range(200):
+                cache.put(("k", tid, i), object())
+
+        threads = [threading.Thread(target=hammer, args=(t,))
+                   for t in range(4)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(timeout=WAIT)
+            assert not th.is_alive()
+        assert len(cache) == 8
+        assert cache.stats.evictions == 4 * 200 - 8
+
+    def test_plan_cache_concurrent_get_counts_every_lookup(self):
+        cache = PlanCache(capacity=64)
+        for i in range(32):
+            cache.put(i, i)
+        cache.stats.hits = cache.stats.misses = 0
+        barrier = threading.Barrier(8)
+
+        def reader(tid):
+            barrier.wait()
+            for i in range(250):
+                cache.get((tid * 250 + i) % 48)   # hits and misses
+
+        threads = [threading.Thread(target=reader, args=(t,))
+                   for t in range(8)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(timeout=WAIT)
+            assert not th.is_alive()
+        assert cache.stats.lookups == 8 * 250     # no dropped increments
+
+    def test_plan_cache_get_or_compile_single_entry(self):
+        cache = PlanCache(capacity=8)
+        barrier = threading.Barrier(8)
+        built = []
+        block = threading.Lock()
+
+        def compiler(tid):
+            barrier.wait()
+            plan, _cached = cache.get_or_compile(
+                "shared", lambda: object())
+            with block:
+                built.append(plan)
+
+        threads = [threading.Thread(target=compiler, args=(t,))
+                   for t in range(8)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(timeout=WAIT)
+            assert not th.is_alive()
+        assert len(cache) == 1
+        assert all(p is not None for p in built)
+
+    def test_stats_window_concurrent_record(self):
+        win = _StatsWindow()
+        barrier = threading.Barrier(6)
+        resp = Response({}, "hiactor", True, latency_us=2.0,
+                        queue_us=1.0, service_us=1.0)
+
+        def rec(tid):
+            barrier.wait()
+            for _ in range(500):
+                win.record(resp, f"t{tid}")
+
+        threads = [threading.Thread(target=rec, args=(t,))
+                   for t in range(6)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(timeout=WAIT)
+            assert not th.is_alive()
+        snap = win.snapshot({})
+        assert snap.n_queries == 6 * 500          # no lost appends
+        assert win.completed_by_tenant() == {f"t{t}": 500
+                                             for t in range(6)}
+
+    def test_scheduler_stats_empty_window(self):
+        with mk_session() as s:
+            sched = s.serve_async()
+            st_ = sched.stats()
+            assert st_.n_queries == 0
+            assert st_.mean_latency_us == 0.0     # the empty-window fix
+            assert st_.p95_latency_us == 0.0
+
+
+# --------------------------------------------------------------------------
+# property-based schedules (hypothesis; CI runs HYPOTHESIS_PROFILE=ci)
+# --------------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+    _req = st.tuples(st.integers(0, 2),            # tenant
+                     st.sampled_from(["point", "count", "olap"]),
+                     st.integers(0, N_PERSONS - 1))
+
+    @pytest.mark.slow
+    class TestSchedulerProperties:
+        @staticmethod
+        def _materialize(spec):
+            tenant, kind, x = spec
+            if kind == "point":
+                return f"t{tenant}", POINT, {"x": x}
+            if kind == "count":
+                return f"t{tenant}", COUNT_K, {"x": x}
+            return f"t{tenant}", OLAP, {"t": float(x)}
+
+        @settings(max_examples=15, deadline=None,
+                  suppress_health_check=list(HealthCheck))
+        @given(st.lists(_req, min_size=1, max_size=25))
+        def test_read_schedule_matches_oracle_and_order(self, specs):
+            """Any read schedule: every response equals the flush
+            oracle's, and per-tenant completion order within each lane
+            is submission order."""
+            reqs = [self._materialize(sp) for sp in specs]
+            ref = oracle_results([(t, p) for _ten, t, p in reqs])
+            with mk_session() as s:
+                sched = s.serve_async()
+                done, lock = [], threading.Lock()
+
+                def mark(i):
+                    def cb(_f):
+                        with lock:
+                            done.append(i)
+                    return cb
+
+                futs = []
+                for i, (tenant, t, p) in enumerate(reqs):
+                    f = sched.submit(t, p, tenant=tenant)
+                    f.add_done_callback(mark(i))
+                    futs.append(f)
+                got = results_of(futs)
+                memo = dict(sched._lane_memo)   # actual lane per template
+            for r, g in zip(ref, got):
+                assert_results_bag_equal(r, g)
+            lanes = {i: memo[plan_key(reqs[i][1], "cypher", True, True)]
+                     for i in range(len(reqs))}
+            for tenant in {t for t, _q, _p in reqs}:
+                for lane in ("fast", "slow"):
+                    seq = [i for i in done
+                           if reqs[i][0] == tenant and lanes[i] == lane]
+                    assert seq == sorted(seq)
+
+        @settings(max_examples=10, deadline=None,
+                  suppress_health_check=list(HealthCheck))
+        @given(st.lists(st.tuples(st.integers(0, N_PERSONS - 1),
+                                  st.integers(0, N_PERSONS - 1)),
+                        min_size=1, max_size=12))
+        def test_create_schedule_matches_oracle_final_state(self, pairs):
+            """CREATE-only schedules: the scheduler's final store state
+            (edge count, commit version, query results) equals the flush
+            oracle's for the same requests."""
+            reqs = [(CREATE, {"x": x, "y": y, "d": i})
+                    for i, (x, y) in enumerate(pairs)]
+            probe = (COUNT_K, {"x": pairs[0][0]})
+
+            o = mk_session()
+            svc = o.interactive()
+            for t, p in reqs:
+                svc.submit(t, p)
+            svc.flush()
+            ref_probe = o.execute(*probe)
+
+            with mk_session() as s:
+                sched = s.serve_async()
+                results_of([sched.submit(t, p, tenant="w")
+                            for t, p in reqs])
+                assert s.store.n_edges == o.store.n_edges
+                assert s.store.write_version == o.store.write_version
+                assert_results_bag_equal(ref_probe, s.execute(*probe))
+
+        @settings(max_examples=10, deadline=None,
+                  suppress_health_check=list(HealthCheck))
+        @given(st.integers(1, 4), st.integers(1, 30))
+        def test_backpressure_accounting_invariant(self, max_queue, n):
+            """Whatever gets accepted resolves; whatever gets rejected
+            raised SchedulerBusy and left no trace."""
+            s = mk_session()
+            sched = FlexScheduler(s.interactive())
+            sched.register_tenant("t", max_queue=max_queue)
+            accepted, rejected = [], 0
+            for i in range(n):
+                try:
+                    accepted.append(sched.submit(POINT, {"x": i},
+                                                 tenant="t"))
+                except SchedulerBusy:
+                    rejected += 1
+            assert len(accepted) + rejected == n
+            assert sched.outstanding == len(accepted)
+            sched.start()
+            got = results_of(accepted)
+            assert len(got) == len(accepted)
+            sched.close()
+            assert sched.outstanding == 0
+
+
+# --------------------------------------------------------------------------
+# soak: sustained mixed load (slow tier; CI runs it under -m slow)
+# --------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.timeout(300)
+def test_soak_sustained_mixed_load():
+    """~20s of open-loop mixed traffic (the exp6 shape: point lookups +
+    short traversals + CREATE/SET) from 3 producer threads. Exit
+    invariants: every accepted future resolved, rejects were SchedulerBusy
+    only, completion stats balance, edge count matches the CREATEs that
+    committed, drain+close leave nothing outstanding."""
+    duration = 20.0
+    with mk_session() as s:
+        e0 = s.store.n_edges
+        sched = s.serve_async(default_max_queue=512)
+        futs_lock = threading.Lock()
+        futs, busy = [], [0]
+        creates = [0]
+
+        def producer(tid):
+            rng = random.Random(100 + tid)
+            t_end = time.perf_counter() + duration
+            i = 0
+            while time.perf_counter() < t_end:
+                r = rng.random()
+                x = rng.randrange(N_PERSONS)
+                if r < 0.70:
+                    req = (POINT, {"x": x})
+                elif r < 0.90:
+                    req = (COUNT_K, {"x": x})
+                elif r < 0.95:
+                    req = (CREATE, {"x": x, "y": rng.randrange(N_PERSONS),
+                                    "d": tid * 10 ** 6 + i})
+                else:
+                    req = (SETQ, {"x": x, "c": 1})
+                try:
+                    f = sched.submit(req[0], req[1], tenant=f"t{tid}")
+                    with futs_lock:
+                        futs.append(f)
+                        if req[0] is CREATE:
+                            creates[0] += 1
+                except SchedulerBusy as e:
+                    with futs_lock:
+                        busy[0] += 1
+                    time.sleep(min(e.retry_after, 0.01))
+                i += 1
+                time.sleep(rng.expovariate(300.0))   # ~300 req/s offered
+
+        threads = [threading.Thread(target=producer, args=(t,))
+                   for t in range(3)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(timeout=duration + WAIT)
+            assert not th.is_alive()
+        assert sched.drain(timeout=60)
+        for f in futs:
+            f.result(timeout=WAIT)          # all accepted futures resolved
+        st_ = sched.stats()
+        assert st_.n_queries == len(futs)
+        assert s.store.n_edges == e0 + creates[0]
+        assert sched.outstanding == 0
+    assert len(futs) > 500                  # the load actually ran

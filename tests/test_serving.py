@@ -375,3 +375,42 @@ class TestLimitRegression:
             ref = svc.gaia.execute_plan(plan.bind(p))
             np.testing.assert_array_equal(np.sort(r.result["c"]),
                                           np.sort(ref["c"]))
+
+
+class TestServingStatsRegressions:
+    """The small-fix satellite: latency aggregates on an empty window
+    report 0.0 (they used to raise on the benchmark warmup edge), numpy
+    latency arrays never hit ndarray truthiness, and responses expose the
+    queue/service split."""
+
+    def _stats(self, latencies):
+        from repro.serving import ServingStats
+        return ServingStats(n_queries=len(latencies), wall_us=1.0, qps=0.0,
+                            latencies_us=latencies, route_counts={},
+                            cache={"hit_rate": 0.0})
+
+    def test_empty_window_reports_zero(self):
+        st = self._stats([])
+        assert st.mean_latency_us == 0.0
+        assert st.p95_latency_us == 0.0
+        assert "latency mean 0 us" in st.summary()
+
+    def test_empty_ndarray_window(self):
+        st = self._stats(np.array([]))
+        assert st.mean_latency_us == 0.0
+        assert st.p95_latency_us == 0.0
+
+    def test_ndarray_latencies_no_truthiness_error(self):
+        # a 2+-element ndarray raises on bool(); len() guards must not
+        st = self._stats(np.array([100.0, 300.0]))
+        assert st.mean_latency_us == pytest.approx(200.0)
+        assert st.p95_latency_us > 0.0
+
+    def test_flush_response_latency_split(self):
+        store = snb_store(n_persons=60, n_items=30, n_posts=8, seed=1)
+        svc = QueryService(store)
+        resps, _ = svc.serve([(POINT, {"c": 3})])
+        r = resps[0]
+        assert r.queue_us == 0.0          # sync path: no queueing
+        assert r.service_us > 0.0
+        assert r.latency_us >= r.service_us
