@@ -1,0 +1,284 @@
+"""Exp-8: LDBC-SNB-style macro regression suite (DESIGN.md §13).
+
+A dozen mixed queries — point lookups, var-length expansions,
+shortestPath, aggregates, CALL procedures, Gremlin repeat/times, and
+writes — run through one :class:`FlexSession` front door, each verified
+bag-equal against a fresh interpreter (:class:`GaiaEngine`) oracle over
+the same snapshot and asserted to take its expected route. This is the
+standing macro gate: any regression in parser, optimizer, lowering,
+routing, or the frontier executors shows up here as a bag mismatch, not
+as a latency blip.
+
+Three phases:
+
+- **A (always, = ``--smoke``)** — the equality gate above, with per-query
+  medians recorded as ``exp8_macro_<name>`` rows;
+- **B (full only)** — the acceptance bar: batch-64 ``*1..3`` expansion,
+  fragment route vs interpreter loop, interleaved medians, ≥5x;
+- **C (full only)** — the same read mix streamed through
+  ``serve_async()``/:class:`FlexScheduler`; every future must resolve to
+  the Phase-A oracle bag.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Tuple
+
+import numpy as np
+
+from benchmarks.common import interleaved_medians, record, timeit
+
+KNOWS_ACC = ("MATCH (a:Person {region: $r})-[:KNOWS*1..3]->(b:Person) "
+             "WHERE b.credits > 800 RETURN b AS b")
+
+# (name, language, template, params, expected route). Routes are the
+# deterministic resolve_route outcome for this store/catalog; a change
+# here means the router regressed (or the cost model moved — update the
+# table deliberately, not incidentally).
+MACRO_READS: List[Tuple[str, str, str, Dict[str, Any], str]] = [
+    ("is1_point", "cypher",
+     "MATCH (a:Person {id: $x}) RETURN a.credits AS c",
+     {"x": 7}, "hiactor"),
+    # indexed region anchor + small estimate: var-length through the OLTP
+    # batch — HiActor's seeded-table pass interprets ExpandVar per __qid__
+    ("ic1_var2", "cypher",
+     "MATCH (a:Person {region: $r})-[:KNOWS*1..2]->(b:Person) "
+     "WHERE b.credits > $t RETURN b AS b",
+     {"r": 2, "t": 400}, "hiactor"),
+    # range anchor (no == $param) keeps this off the point route at every
+    # store size — min-plus frontier stages
+    ("ic13_shortest", "cypher",
+     "MATCH p = shortestPath((a:Person)-[:KNOWS*1..4]->(b:Person)) "
+     "WHERE a.region < $r RETURN b AS b, dist AS d",
+     {"r": 3}, "fragment"),
+    ("acc_var3", "cypher", KNOWS_ACC, {"r": 0}, "fragment"),
+    ("ic2_orderby", "cypher",
+     "MATCH (a:Person)-[:KNOWS]->(b:Person)-[:BUY]->(c:Item) "
+     "WHERE c.price > $p RETURN c.price AS pr ORDER BY pr DESC LIMIT 10",
+     {"p": 400}, "fragment"),
+    ("bi_groupcount", "cypher",
+     "MATCH (a:Person)-[:BUY]->(c:Item) WITH c, COUNT(a) AS k "
+     "RETURN k AS k",
+     {}, "fragment"),
+    # cross-alias predicate cannot lower — the interpreter stays the
+    # route of last resort
+    ("bi_cross_filter", "cypher",
+     "MATCH (a:Person)-[:KNOWS]->(b:Person) WHERE a.credits > b.credits "
+     "RETURN b.credits AS c",
+     {}, "gaia"),
+    ("hybrid_pagerank", "cypher",
+     "CALL algo.pagerank(0.85) YIELD v, rank RETURN rank AS r",
+     {}, "grape"),
+    ("gnn_infer", "cypher",
+     "CALL gnn.infer('default') YIELD v, score RETURN score AS sc",
+     {}, "grape"),
+    ("gremlin_repeat", "gremlin",
+     "g.V().hasLabel('Person').repeat(out('KNOWS')).times(2).emit()"
+     ".values('credits')",
+     {}, "fragment"),
+    ("shortest_unreachable", "cypher",
+     "MATCH p = shortestPath((a:Person)-[:KNOWS*1..3]->(b:Person)) "
+     "WHERE a.region < $r AND b.credits > 2000 "
+     "RETURN b AS b, dist AS d",
+     {"r": 1}, "fragment"),
+]
+
+W_CREATE = ("MATCH (a:Person {id: $x}), (b:Person {id: $y}) "
+            "CREATE (a)-[:KNOWS]->(b)")
+W_SET = "MATCH (a:Person {id: $x}) SET a.credits = $c"
+
+
+def _session(n_persons: int, seed: int = 7):
+    from repro.serving.session import FlexSession
+    from repro.storage.gart import GARTStore
+    from repro.storage.generators import snb_store
+
+    cs = snb_store(n_persons=n_persons, n_items=n_persons // 2,
+                   n_posts=64, seed=seed)
+    store = GARTStore.from_csr(cs)
+    rng = np.random.default_rng(seed)
+    store._vprops["feat"] = rng.standard_normal(
+        (store.n_vertices, 16)).astype(np.float32)
+    store._vprops["label"] = rng.integers(
+        0, 3, store.n_vertices).astype(np.int32)
+    for name in ("feat", "label"):
+        store._vprop_hist[name] = [(0, store._vprops[name])]
+    s = FlexSession(store, n_frags=2, label_prop="label")
+    # plug a tiny trained model into the query surface so CALL gnn.infer
+    # exercises the learning verb end-to-end (weights don't need to be
+    # good — the gate is bag-equality with the oracle, not accuracy)
+    tr = s.learning().trainer(hidden=8, n_classes=3, fanouts=[3, 2],
+                              batch_size=32)
+    for step in range(2):
+        tr.train_on(tr.sample(step))
+    s.learning().register_inference(tr)
+    return s
+
+
+def _oracle(session):
+    """A fresh interpreter over the session's pinned snapshot, sharing its
+    procedure registry (so CALL memos agree by construction of the
+    version-keyed cache, while plan/route machinery is NOT shared)."""
+    from repro.engines.gaia import GaiaEngine
+
+    return GaiaEngine(session.snapshot_store,
+                      procedures=session.procedures)
+
+
+def _bag(result: Dict[str, np.ndarray]) -> Tuple:
+    cols = sorted(result)
+    rows = sorted(
+        tuple(round(float(result[c][i]), 6) for c in cols)
+        for i in range(len(result[cols[0]]) if cols else 0))
+    return (tuple(cols), tuple(rows))
+
+
+def _check(name: str, ref: Dict[str, np.ndarray],
+           got: Dict[str, np.ndarray]) -> int:
+    assert _bag(ref) == _bag(got), f"exp8 {name}: bag mismatch vs oracle"
+    cols = sorted(got)
+    return len(got[cols[0]]) if cols else 0
+
+
+def _phase_a(session) -> Dict[str, Dict[str, np.ndarray]]:
+    sv = session.interactive()
+    oracle = _oracle(session)
+    oracle_bags: Dict[str, Dict[str, np.ndarray]] = {}
+    for name, lang, tmpl, params, want_route in MACRO_READS:
+        sv.submit(tmpl, params, lang)
+        rs, _ = sv.flush()
+        assert rs[0].engine == want_route, (
+            f"exp8 {name}: routed to {rs[0].engine}, expected {want_route}")
+        ref = oracle.execute(tmpl, lang, params=params)
+        n = _check(name, ref, rs[0].result)
+        if name == "shortest_unreachable":
+            assert n == 0, f"exp8 {name}: expected 0 rows, got {n}"
+        oracle_bags[name] = ref
+        us = timeit(lambda t=tmpl, p=params, ln=lang:
+                    (sv.submit(t, p, ln), sv.flush()),
+                    repeat=3, warmup=0)
+        record(f"exp8_macro_{name}", us,
+               f"route={want_route};rows={n};oracle=bag_equal")
+    return oracle_bags
+
+
+def _phase_writes(session) -> None:
+    """Writes through the same front door, verified by reading back
+    through a FRESH oracle over the post-commit snapshot (the fragment
+    slab caches must have been invalidated by the version bus)."""
+    sv = session.interactive()
+    x, y = 11, 97
+    # unanchored (range pred keeps it off HiActor at any store size) and
+    # unfiltered on the endpoint, so the new KNOWS edge MUST change its bag
+    VAR2_ALL = ("MATCH (a:Person)-[:KNOWS*1..2]->(b:Person) "
+                "WHERE a.region < $r RETURN b AS b")
+    sv.submit(VAR2_ALL, {"r": 8})
+    pre_frag, _ = sv.flush()
+    assert pre_frag[0].engine == "fragment"
+    pre = _oracle(session).execute(
+        "MATCH (a:Person {id: $x})-[:KNOWS]->(b:Person) "
+        "RETURN b.id AS i", params={"x": x})
+    sv.submit(W_CREATE, {"x": x, "y": y})
+    sv.submit(W_SET, {"x": x, "c": 123})
+    rs, _ = sv.flush()
+    assert all(r.engine == "write" for r in rs)
+    post = _oracle(session).execute(
+        "MATCH (a:Person {id: $x})-[:KNOWS]->(b:Person) "
+        "RETURN b.id AS i", params={"x": x})
+    assert len(post["i"]) == len(pre["i"]) + 1
+    assert float(y) in post["i"].astype(np.float64)
+    creds = _oracle(session).execute(
+        "MATCH (a:Person {id: $x}) RETURN a.credits AS c", params={"x": x})
+    assert int(creds["c"][0]) == 123
+    # post-write read consistency on the fragment route: the version bus
+    # must have dropped the old slab caches, so the var-length expansion
+    # sees the new KNOWS edge — the bag must both match the fresh oracle
+    # AND differ from the pre-write bag
+    sv.submit(VAR2_ALL, {"r": 8})
+    rs, _ = sv.flush()
+    assert rs[0].engine == "fragment"
+    _check("var2_postwrite",
+           _oracle(session).execute(VAR2_ALL, params={"r": 8}),
+           rs[0].result)
+    assert _bag(rs[0].result) != _bag(pre_frag[0].result), (
+        "exp8 writes: fragment bag unchanged after CREATE — stale slabs?")
+    record("exp8_macro_writes", 0,
+           "create+set=committed;postwrite_var2=bag_equal_and_changed")
+
+
+def _phase_b(session) -> None:
+    """Acceptance: batch-64 *1..3, fragment vs interpreter loop,
+    interleaved medians (ISSUE 7 bar: >= 5x)."""
+    sv = session.interactive()
+    oracle = _oracle(session)
+    params = [{"r": b % 8} for b in range(64)]
+    plan = oracle.compile(KNOWS_ACC)
+
+    def frag():
+        for p in params:
+            sv.submit(KNOWS_ACC, p)
+        rs, _ = sv.flush()
+        assert all(r.engine == "fragment" for r in rs)
+        return rs
+
+    def interp():
+        return [oracle.execute_plan(plan, params=p) for p in params]
+
+    rs = frag()
+    refs = interp()
+    for i, (r, ref) in enumerate(zip(rs, refs)):
+        _check(f"acc_var3[{i}]", ref, r.result)
+    t_frag, t_interp = interleaved_medians([frag, interp], rounds=2)
+    speedup = t_interp / t_frag
+    record("exp8_macro_acceptance", t_frag * 1e6,
+           f"batch64_var3_speedup={speedup:.1f}x;bar=5x;"
+           f"pass={speedup >= 5.0}")
+    assert speedup >= 5.0, (
+        f"exp8 acceptance: batch-64 *1..3 fragment speedup "
+        f"{speedup:.1f}x < 5x")
+
+
+def _phase_c(session, oracle_bags) -> None:
+    """The read mix streamed through the async scheduler: every future
+    resolves, every response bag-equal to the Phase-A oracle."""
+    sched = session.serve_async()
+    futs = []
+    t0 = time.perf_counter()
+    for rep in range(4):
+        for name, lang, tmpl, params, _route in MACRO_READS:
+            futs.append((name, sched.submit(
+                tmpl, params, tenant=("gold" if rep % 2 else "bronze"),
+                language=lang)))
+    for name, f in futs:
+        resp = f.result(timeout=120.0)
+        _check(f"sched:{name}", oracle_bags[name], resp.result)
+    wall = time.perf_counter() - t0
+    sched.drain()
+    session.close()
+    record("exp8_macro_scheduler", wall / len(futs) * 1e6,
+           f"n={len(futs)};qps={len(futs) / wall:.1f};all=bag_equal")
+
+
+def run(smoke: bool = False) -> None:
+    n_persons = 120 if smoke else 300
+    session = _session(n_persons)
+    oracle_bags = _phase_a(session)
+    _phase_writes(session)
+    if smoke:
+        record("exp8_macro_mode", 0, "smoke=1;phases=A")
+        return
+    # writes advanced the snapshot; re-anchor the oracle bags for Phase C
+    oracle = _oracle(session)
+    oracle_bags = {name: oracle.execute(tmpl, lang, params=params)
+                   for name, lang, tmpl, params, _r in MACRO_READS}
+    _phase_b(session)
+    _phase_c(session, oracle_bags)
+    record("exp8_macro_mode", 0, "smoke=0;phases=A+B+C")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit_header
+
+    emit_header()
+    run(smoke="--smoke" in __import__("sys").argv)

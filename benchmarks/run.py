@@ -16,11 +16,14 @@ def main() -> None:
     ap.add_argument("--only", default="all",
                     help="comma list: storage,query,traversal,hybrid,"
                          "analytics,learning,exp5,exp6,readwrite,"
-                         "exp7,serving,kernels")
+                         "exp7,serving,exp8,macro,kernels")
+    ap.add_argument("--smoke", action="store_true",
+                    help="smoke mode for sections that support it "
+                         "(exp8: equality gate only, small store)")
     args = ap.parse_args()
     wanted = set(args.only.split(",")) if args.only != "all" else {
         "storage", "query", "hybrid", "analytics", "learning",
-        "readwrite", "serving", "kernels"}
+        "readwrite", "serving", "macro", "kernels"}
 
     from benchmarks.common import emit_header
     emit_header()
@@ -53,6 +56,10 @@ def main() -> None:
     if wanted & {"serving", "exp7"}:
         from benchmarks import serving_bench
         sections.append(("serving", serving_bench.run))
+    if wanted & {"macro", "exp8"}:
+        from benchmarks import macro_bench
+        sections.append(
+            ("macro", lambda: macro_bench.run(smoke=args.smoke)))
     if "kernels" in wanted:
         from benchmarks import kernel_bench
         sections.append(("kernels", kernel_bench.run))

@@ -40,7 +40,17 @@ def main():
         "ORDER BY buyers DESC LIMIT 5")
     print("top items:", result["item"], "buyer-counts:", result["buyers"])
 
-    # 3b. analytics at the pre-write version (memoized per snapshot)
+    # 3b. variable-length traversal (DESIGN.md §13): everyone within 3
+    #     KNOWS hops of a fraud seed, as ONE accumulated powered-frontier
+    #     device program — the heavy expansion routes to the fragment
+    #     substrate (path counts; parallel edges and revisits stack)
+    ring = session.execute(
+        "MATCH (a:Person {is_fraud_seed: 1})-[:KNOWS*1..3]->(b:Person) "
+        "WHERE b.credits > 900 RETURN b AS b")
+    print(f"*1..3 fraud-seed reach: {len(ring['b'])} path-endpoints, "
+          f"{len(np.unique(ring['b']))} distinct persons")
+
+    # 3c. analytics at the pre-write version (memoized per snapshot)
     pr0 = session.analytical().run("pagerank", damping=0.85)
     v0 = session.version
     print(f"pagerank@v{v0}: top vertex", int(pr0.argmax()),

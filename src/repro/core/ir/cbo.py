@@ -15,9 +15,9 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.ir.dag import (Const, BinExpr, Expand, GetVertex, Limit,
-                               LogicalPlan, Param, Pred, PropRef, Scan,
-                               Select, plan_is_write)
+from repro.core.ir.dag import (Const, BinExpr, Expand, ExpandVar, GetVertex,
+                               Limit, LogicalPlan, Param, Pred, PropRef,
+                               Scan, Select, ShortestPath, plan_is_write)
 
 
 @dataclasses.dataclass
@@ -169,7 +169,7 @@ def should_use_fragment_path(plan: LogicalPlan, catalog: Catalog,
     if is_point_lookup(plan, catalog, row_threshold):
         return False
     program = lower_to_frontier(plan)
-    if program is None or not program.hops:
+    if program is None or not (program.hops or program.shortest):
         return False
     return plan_cost(plan, catalog) >= min_cost
 
@@ -204,6 +204,43 @@ def plan_cost(plan: LogicalPlan, catalog: Catalog) -> float:
                 card *= 0.1
             if op.fused_vertex:
                 labels[op.fused_vertex] = op.vertex_label
+            cost += card
+        elif isinstance(op, ExpandVar):
+            # geometric walk-count sum over depths [min, max]: the first
+            # hop uses the mean-field fanout, deeper hops the size-biased
+            # one (an edge-reached frontier samples vertices ∝ degree)
+            src_label = labels.get(op.src)
+            f1 = catalog.expand_fanout(src_label, op.edge_label,
+                                       op.vertex_label, op.direction)
+            fsb = f1
+            if src_label is not None and op.edge_label is not None:
+                fsb = max(f1, catalog.size_biased.get(
+                    (src_label, op.edge_label, op.direction), f1))
+            tot = 1.0 if op.min_hops == 0 else 0.0
+            c = 1.0
+            for k in range(1, op.max_hops + 1):
+                c *= f1 if k == 1 else fsb
+                if k >= op.min_hops:
+                    tot += c
+            hops += 1
+            card *= max(tot, 1e-3)
+            if op.vertex_pred is not None:
+                card *= 0.1
+            labels[op.alias] = op.vertex_label
+            cost += card
+        elif isinstance(op, ShortestPath):
+            # one row per reachable (source, target) pair: reach saturates
+            # at the vertex count instead of compounding like walk counts
+            src_label = labels.get(op.src)
+            f1 = catalog.expand_fanout(src_label, op.edge_label,
+                                       op.vertex_label, op.direction)
+            reach = min(max(f1, 1.0) ** op.max_hops,
+                        float(catalog.n_vertices))
+            hops += 1
+            card *= max(reach, 1e-3)
+            if op.vertex_pred is not None:
+                card *= 0.1
+            labels[op.alias] = op.vertex_label
             cost += card
         elif isinstance(op, GetVertex):
             labels[op.alias] = op.label

@@ -23,10 +23,11 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.ir.dag import (Agg, BinExpr, Const, Expand, GetVertex,
-                               GroupCount, Limit, LogicalPlan, OrderBy,
-                               Param, Pred, ProcedureCall, Project, Scan,
-                               Select, With, bind_expr, eval_expr)
+from repro.core.ir.dag import (Agg, BinExpr, Const, Expand, ExpandVar,
+                               GetVertex, GroupCount, Limit, LogicalPlan,
+                               OrderBy, Param, Pred, ProcedureCall, Project,
+                               Scan, Select, ShortestPath, With, bind_expr,
+                               eval_expr)
 
 
 @dataclasses.dataclass
@@ -128,6 +129,10 @@ def execute_plan(plan: LogicalPlan, pg, *,
                 table.columns["__head__" + (op.edge or "")] = heads
             if op.pred is not None:
                 table = table.mask(_eval_pred(op.pred, table, pg))
+        elif isinstance(op, ExpandVar):
+            table = _expand_var(op, table, pg)
+        elif isinstance(op, ShortestPath):
+            table = _shortest_paths(op, table, pg)
         elif isinstance(op, GetVertex):
             heads = table.columns.pop("__head__" + op.edge)
             table.columns[op.alias] = heads
@@ -269,6 +274,96 @@ def _group(op: With, table: Table, pg) -> Table:
     return Table(new_cols, {})
 
 
+def _expand_var(op: ExpandVar, table: Table, pg) -> Table:
+    """Variable-length expansion, walk semantics: one output row per walk
+    of length k ∈ [min_hops, max_hops] from each source row (the oracle
+    for the powered frontier stages, DESIGN.md §13). ``min_hops == 0``
+    contributes the source row itself; intermediate vertices are
+    unconstrained; label/pred filter only the final endpoint."""
+    src_ids = np.asarray(table.columns[op.src], np.int64)
+    rows = np.arange(len(src_ids), dtype=np.int64)
+    heads = src_ids
+    out_rows: List[np.ndarray] = []
+    out_heads: List[np.ndarray] = []
+    if op.min_hops == 0:
+        out_rows.append(rows)
+        out_heads.append(heads)
+    for k in range(1, op.max_hops + 1):
+        if not len(heads):
+            break
+        tails, heads, _ = pg.expand(heads, op.edge_label, op.direction)
+        rows = rows[tails]
+        if k >= op.min_hops:
+            out_rows.append(rows)
+            out_heads.append(heads)
+    all_rows = (np.concatenate(out_rows).astype(np.int64)
+                if out_rows else np.zeros(0, np.int64))
+    all_heads = (np.concatenate(out_heads).astype(np.int64)
+                 if out_heads else np.zeros(0, np.int64))
+    new = table.gather(all_rows)
+    new.columns[op.alias] = all_heads
+    if op.vertex_label is not None:
+        new = new.mask(np.asarray(pg.vlabels)[
+            np.asarray(new.columns[op.alias], np.int64)] == op.vertex_label)
+    if op.vertex_pred is not None:
+        new = new.mask(_eval_pred(op.vertex_pred, new, pg))
+    return new
+
+
+def _shortest_paths(op: ShortestPath, table: Table, pg) -> Table:
+    """shortestPath() oracle: per source row, a numpy min-plus relaxation
+    ``d ← min(d, relax(d))`` over the sliced adjacency — one output row per
+    reachable target with the walk length in ``op.dist``. ``min_hops == 1``
+    seeds from the first relaxation, so src→src is answered only by an
+    actual cycle (DESIGN.md §13)."""
+    src_ids = np.asarray(table.columns[op.src], np.int64)
+    n = pg.n_vertices
+    uniq, inv = np.unique(src_ids, return_inverse=True)
+    indptr, indices = pg.sliced_csr(op.edge_label, op.direction)[:2]
+    e_src = np.repeat(np.arange(n, dtype=np.int64),
+                      np.diff(np.asarray(indptr)))
+    e_dst = np.asarray(indices, np.int64)
+
+    def relax(d):
+        out = np.full_like(d, np.inf)
+        if len(e_src):
+            for u in range(len(d)):
+                np.minimum.at(out[u], e_dst, d[u, e_src] + 1.0)
+        return out
+
+    seed = np.full((len(uniq), n), np.inf)
+    if len(uniq):
+        seed[np.arange(len(uniq)), uniq] = 0.0
+    if op.min_hops == 0:
+        d, iters = seed, op.max_hops
+    else:
+        d, iters = relax(seed), op.max_hops - 1
+    for _ in range(max(0, iters)):
+        d = np.minimum(d, relax(d))
+    vmask = np.ones(n, bool)
+    if op.vertex_label is not None:
+        vmask &= np.asarray(pg.vlabels) == op.vertex_label
+    reach = np.isfinite(d) & vmask[None, :]
+    tgt = [np.nonzero(reach[u])[0].astype(np.int64)
+           for u in range(len(uniq))]
+    dst = [d[u, reach[u]].astype(np.int64) for u in range(len(uniq))]
+    counts = np.array([len(t) for t in tgt], np.int64)
+    rep = np.repeat(np.arange(len(src_ids), dtype=np.int64),
+                    counts[inv] if len(src_ids) else 0)
+    new = table.gather(rep)
+    if len(src_ids):
+        new.columns[op.alias] = np.concatenate(
+            [tgt[u] for u in inv]) if len(inv) else np.zeros(0, np.int64)
+        new.columns[op.dist] = np.concatenate(
+            [dst[u] for u in inv]) if len(inv) else np.zeros(0, np.int64)
+    else:
+        new.columns[op.alias] = np.zeros(0, np.int64)
+        new.columns[op.dist] = np.zeros(0, np.int64)
+    if op.vertex_pred is not None:
+        new = new.mask(_eval_pred(op.vertex_pred, new, pg))
+    return new
+
+
 def _bind_params(op, params: Optional[Dict[str, Any]]):
     if not params:
         return op
@@ -293,12 +388,21 @@ class FrontierHop:
     vertex_alias: str
     vertex_label: Optional[int]
     vertex_pred: Optional[Pred]          # refs vertex_alias only ($params ok)
+    # var-length ranges (``*min..max``) run the same adjacency min..max
+    # times, accumulating ``Σ_{k} X·A^k`` before the head mask applies;
+    # a fixed hop is the 1..1 special case (DESIGN.md §13)
+    min_hops: int = 1
+    max_hops: int = 1
 
     @property
     def cache_key(self) -> Tuple:
         """Identity of the hop's adjacency arrays (edge preds are baked
         into the edge weights, so they are part of the key)."""
         return (self.edge_label, self.direction, repr(self.edge_pred))
+
+    @property
+    def is_var(self) -> bool:
+        return (self.min_hops, self.max_hops) != (1, 1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -319,6 +423,11 @@ class FrontierProgram:
     hops: Tuple[FrontierHop, ...]
     head: str                            # final vertex alias of the prefix
     tail: Tuple[Any, ...]                # ops for the interpreter
+    # a shortestPath() prefix instead of count hops: the executor runs a
+    # min-plus relaxation and ``finish_shortest`` materializes
+    # (source, head, dist) rows — so unlike the counting path the tail may
+    # also reference the source alias and the dist column
+    shortest: Optional[ShortestPath] = None
 
 
 def _expr_has_param(e) -> bool:
@@ -349,7 +458,7 @@ def _op_column_refs(op) -> set:
 
     from repro.core.ir.dag import InsertEdge, SetProp, map_op_exprs
     map_op_exprs(op, collect)
-    if isinstance(op, Expand):
+    if isinstance(op, (Expand, ExpandVar, ShortestPath)):
         refs.add(op.src)
     elif isinstance(op, GetVertex):
         refs.add(op.edge)
@@ -419,12 +528,42 @@ def _lower_chain(ops: List) -> Optional[FrontierProgram]:
         return None
     source_pred = scan.pred
     hops: List[FrontierHop] = []
+    shortest: Optional[ShortestPath] = None
     head = scan.alias
     i = 1
     while i < len(ops):
         op = ops[i]
-        if isinstance(op, Expand):
-            if (op.fused_vertex is None or op.src != head
+        if isinstance(op, ExpandVar):
+            if (shortest is not None or op.src != head
+                    or op.direction not in ("out", "in")):
+                break
+            if op.vertex_pred is not None and \
+                    not op.vertex_pred.refs() <= {op.alias}:
+                break
+            hops.append(FrontierHop(
+                edge_label=op.edge_label, direction=op.direction,
+                edge_pred=None, edge_alias=None, vertex_alias=op.alias,
+                vertex_label=op.vertex_label, vertex_pred=op.vertex_pred,
+                min_hops=op.min_hops, max_hops=op.max_hops))
+            head = op.alias
+            i += 1
+        elif isinstance(op, ShortestPath):
+            # only as the sole expansion: sources come straight from the
+            # anchor scan (a path-count frontier has no per-row identity to
+            # seed per-source distances from), and nothing expands past it
+            # (the dist column would not survive another dense hop)
+            if shortest is not None or hops or op.src != head \
+                    or op.direction not in ("out", "in"):
+                break
+            if op.vertex_pred is not None and \
+                    not op.vertex_pred.refs() <= {op.alias}:
+                break
+            shortest = op
+            head = op.alias
+            i += 1
+        elif isinstance(op, Expand):
+            if (shortest is not None or op.fused_vertex is None
+                    or op.src != head
                     or op.direction not in ("out", "in")):
                 break
             if op.pred is not None and (
@@ -442,7 +581,11 @@ def _lower_chain(ops: List) -> Optional[FrontierProgram]:
             head = op.fused_vertex
             i += 1
         elif isinstance(op, Select) and op.pred.refs() <= {head}:
-            if hops:
+            if shortest is not None:
+                shortest = dataclasses.replace(
+                    shortest,
+                    vertex_pred=_conjoin_preds(shortest.vertex_pred, op.pred))
+            elif hops:
                 h = hops[-1]
                 hops[-1] = dataclasses.replace(
                     h, vertex_pred=_conjoin_preds(h.vertex_pred, op.pred))
@@ -457,16 +600,25 @@ def _lower_chain(ops: List) -> Optional[FrontierProgram]:
         prefix_aliases.add(h.vertex_alias)
         if h.edge_alias is not None:
             prefix_aliases.add(h.edge_alias)
-    if not tail and len(prefix_aliases) > 1:
-        return None
+    if shortest is not None:
+        prefix_aliases.add(shortest.alias)
+        # finish_shortest materializes all three columns, so the tail (and
+        # the implicit all-columns result when there is no tail) may read
+        # any of them
+        allowed = {scan.alias, shortest.alias, shortest.dist}
+    else:
+        allowed = {head}
+        if not tail and len(prefix_aliases) > 1:
+            return None
     for op in tail:
         if isinstance(op, (Scan, ProcedureCall)):
             return None
-        if _op_column_refs(op) & (prefix_aliases - {head}):
+        if _op_column_refs(op) & (prefix_aliases - allowed):
             return None
     return FrontierProgram(
         source_alias=scan.alias, source_label=scan.label,
-        source_pred=source_pred, hops=tuple(hops), head=head, tail=tuple(tail))
+        source_pred=source_pred, hops=tuple(hops), head=head,
+        tail=tuple(tail), shortest=shortest)
 
 
 def frontier_vertex_mask(alias: str, label: Optional[int],
@@ -509,5 +661,25 @@ def finish_frontier(program: FrontierProgram, counts: np.ndarray, pg,
     mult = np.round(counts[nz]).astype(np.int64)
     ids = np.repeat(nz.astype(np.int64), mult)
     table = Table({program.head: ids}, {})
+    return execute_plan(LogicalPlan(list(program.tail)), pg, params=params,
+                        table=table, procedures=procedures)
+
+
+def finish_shortest(program: FrontierProgram, srcs: np.ndarray,
+                    dists: np.ndarray, pg,
+                    params: Optional[Dict[str, Any]] = None,
+                    procedures=None) -> Dict[str, np.ndarray]:
+    """One query's min-plus solution → result dict. ``srcs`` is the [S]
+    source vertex ids the query anchored on, ``dists`` the [S, N] distance
+    matrix (``inf`` = unreachable, head label/pred already masked to inf).
+    Materializes one (source, head, dist) row per finite entry and runs the
+    relational tail through the interpreter. Distances are ≤ MAX_VAR_HOPS,
+    so the float32 → int64 round is always exact."""
+    sp = program.shortest
+    dists = np.asarray(dists)
+    rr, vv = np.nonzero(np.isfinite(dists))
+    table = Table({program.source_alias: np.asarray(srcs, np.int64)[rr],
+                   sp.alias: vv.astype(np.int64),
+                   sp.dist: np.round(dists[rr, vv]).astype(np.int64)}, {})
     return execute_plan(LogicalPlan(list(program.tail)), pg, params=params,
                         table=table, procedures=procedures)

@@ -92,6 +92,53 @@ class Expand:
     vertex_pred: Optional[Pred] = None
 
 
+# Hard cap on var-length / shortestPath upper bounds: the fragment lowering
+# unrolls hops into the jitted program, so an unbounded (or huge) range would
+# compile without bound. Parsers and plan validation reject anything above it.
+MAX_VAR_HOPS = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpandVar:
+    """Variable-length expansion ``(src)-[:label*min..max]->(alias)`` —
+    *walk* semantics: edges (and vertices) may repeat, one output row per
+    distinct walk, so row multiplicity is the walk count. ``min_hops == 0``
+    contributes the source row itself (alias = src). Intermediate vertices
+    are unconstrained; ``vertex_label``/``vertex_pred`` filter only the
+    final endpoint. The upper bound is mandatory and capped at
+    ``MAX_VAR_HOPS`` (the lowering unrolls it)."""
+
+    src: str
+    alias: str
+    edge_label: Optional[int]
+    direction: str = "out"               # out|in
+    min_hops: int = 1
+    max_hops: int = 1
+    vertex_label: Optional[int] = None
+    vertex_pred: Optional[Pred] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ShortestPath:
+    """``shortestPath((src)-[:label*..max]->(alias))`` — per source row,
+    one output row for every reachable ``alias`` vertex, with the walk
+    length bound to column ``dist``. ``min_hops`` ∈ {0, 1}: 0 includes the
+    trivial zero-length path (alias = src, dist 0); 1 answers src→src only
+    via an actual cycle. Runs as a min-plus (tropical) relaxation of the
+    same frontier hop, so like ExpandVar the bound is mandatory and capped
+    at ``MAX_VAR_HOPS``."""
+
+    src: str
+    alias: str
+    edge_label: Optional[int]
+    direction: str = "out"               # out|in
+    min_hops: int = 1
+    max_hops: int = 1
+    dist: str = "dist"
+    vertex_label: Optional[int] = None
+    vertex_pred: Optional[Pred] = None
+
+
 @dataclasses.dataclass(frozen=True)
 class GetVertex:
     """Materialize the head vertex of the edge produced by prior Expand."""
@@ -213,8 +260,9 @@ class Limit:
     n: int
 
 
-Op = Union[Scan, Expand, GetVertex, Select, Project, With, GroupCount,
-           ProcedureCall, InsertEdge, SetProp, OrderBy, Limit]
+Op = Union[Scan, Expand, ExpandVar, ShortestPath, GetVertex, Select, Project,
+           With, GroupCount, ProcedureCall, InsertEdge, SetProp, OrderBy,
+           Limit]
 
 
 @dataclasses.dataclass

@@ -14,10 +14,11 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.ir.dag import (Agg, BinExpr, Const, Expand, GetVertex,
-                               InsertEdge, Limit, LogicalPlan, OrderBy,
-                               Param, Pred, ProcedureCall, Project, PropRef,
-                               Scan, Select, SetProp, With)
+from repro.core.ir.dag import (MAX_VAR_HOPS, Agg, BinExpr, Const, Expand,
+                               ExpandVar, GetVertex, InsertEdge, Limit,
+                               LogicalPlan, OrderBy, Param, Pred,
+                               ProcedureCall, Project, PropRef, Scan, Select,
+                               SetProp, ShortestPath, With)
 from repro.storage.generators import EDGE_NAMES, LABEL_NAMES
 
 
@@ -151,7 +152,65 @@ def parse_expr(s: str):
 _NODE = re.compile(r"\(\s*(?P<alias>\w+)?\s*(?::(?P<label>\w+))?"
                    r"\s*(?P<props>\{[^}]*\})?\s*\)")
 _EDGE = re.compile(r"(?P<l><)?-\s*(?:\[\s*(?P<alias>\w+)?\s*(?::(?P<label>\w+))?"
+                   r"\s*(?P<var>\*[^\]{]*)?"
                    r"\s*(?P<props>\{[^}]*\})?\s*\])?\s*-(?P<r>>)?")
+
+# ``*``, ``*k``, ``*a..b``, ``*..b`` — anything else is malformed
+_RANGE = re.compile(r"^(?P<lo>-?\d+)?(?P<dots>\.\.)?(?P<hi>-?\d+)?$")
+
+
+def _parse_range(var: str, where: str) -> Tuple[int, int]:
+    """Validate one ``*min..max`` var-length quantifier → (min, max).
+
+    Rejects — rather than silently mis-parsing — empty ranges (``*3..1``),
+    unbounded forms (``*``, ``*a..``, ``*..``: the fragment lowering
+    unrolls the range, so an explicit upper bound is mandatory), negative
+    bounds, non-numeric text, and bounds above ``MAX_VAR_HOPS``."""
+    body = var[1:].strip()
+    m = _RANGE.match(body)
+    if not m:
+        raise SyntaxError(f"malformed var-length range {var!r} in {where}")
+    lo_s, dots, hi_s = m.group("lo"), m.group("dots"), m.group("hi")
+    if not dots:
+        if lo_s is None:
+            raise SyntaxError(
+                f"unbounded var-length {var!r} in {where}: an explicit "
+                f"upper bound is required (e.g. *1..3, max {MAX_VAR_HOPS})")
+        lo = hi = int(lo_s)
+    else:
+        if hi_s is None:
+            raise SyntaxError(
+                f"unbounded var-length range {var!r} in {where}: an "
+                f"explicit upper bound is required (e.g. *1..3, "
+                f"max {MAX_VAR_HOPS})")
+        lo = int(lo_s) if lo_s is not None else 1
+        hi = int(hi_s)
+    if lo < 0 or hi < 0:
+        raise SyntaxError(f"negative var-length bounds {var!r} in {where}")
+    if lo > hi:
+        raise SyntaxError(f"empty var-length range {var!r} in {where}: "
+                          f"min {lo} > max {hi}")
+    if hi > MAX_VAR_HOPS:
+        raise SyntaxError(f"var-length upper bound {hi} exceeds the cap "
+                          f"{MAX_VAR_HOPS} in {where}")
+    return lo, hi
+
+
+def _check_var_edge(em, pattern: str) -> Tuple[int, int]:
+    """Shared validation for a var-length relationship match: no edge
+    alias (each walk traverses many edges — there is no single edge id to
+    bind), no inline edge property map (per-edge predicates over repeated
+    hops are unsupported)."""
+    if em.group("alias"):
+        raise SyntaxError(
+            f"var-length relationship cannot bind an edge alias "
+            f"{em.group('alias')!r} in {pattern!r} (a walk has no single "
+            f"edge id)")
+    if em.group("props"):
+        raise SyntaxError(
+            f"var-length relationship cannot carry an edge property map "
+            f"in {pattern!r}")
+    return _parse_range(em.group("var"), repr(pattern))
 
 
 def _props_to_pred(alias: str, props: Optional[str]):
@@ -203,8 +262,75 @@ def _node_info(m, anon_counter: List[int]):
     return alias, label, _props_to_pred(alias, m.group("props"))
 
 
+# optional path binding (``p = shortestPath(...)``) is accepted and
+# discarded: only the target alias and ``dist`` column are addressable
+_SHORTEST = re.compile(r"^(?:\w+\s*=\s*)?shortestPath\s*\(", re.I)
+
+
+def _parse_shortest(inner: str, seen: set, anon_counter: List[int]) -> List:
+    """``shortestPath((a)-[:KNOWS*..4]->(b))`` → Scan + ShortestPath. The
+    source may be already bound (its label/props become filters); the
+    target must be fresh and receives one row per reachable vertex with
+    the walk length in the ``dist`` column."""
+    ops: List = []
+    nm = _NODE.match(inner)
+    if not nm:
+        raise SyntaxError(
+            f"shortestPath pattern must start with a node: {inner!r}")
+    alias, label, pred = _node_info(nm, anon_counter)
+    if alias not in seen:
+        ops.append(Scan(alias, label, pred))
+        seen.add(alias)
+    else:
+        if label is not None:
+            ops.append(Select(Pred(BinExpr(
+                "==", PropRef(alias, "__label__"), Const(label)))))
+        if pred is not None:
+            ops.append(Select(pred))
+    em = _EDGE.match(inner, nm.end())
+    if not em:
+        raise SyntaxError(f"shortestPath needs a relationship: {inner!r}")
+    if em.group("var") is None:
+        raise SyntaxError(
+            f"shortestPath needs an explicit *..max bound in {inner!r} "
+            f"(e.g. [:KNOWS*..4])")
+    lo, hi = _check_var_edge(em, inner)
+    if lo > 1:
+        raise SyntaxError(
+            f"shortestPath min hops must be 0 or 1, got {lo} in {inner!r}")
+    direction = "in" if em.group("l") else "out"
+    e_label = (EDGE_NAMES.get(em.group("label"))
+               if em.group("label") else None)
+    nm2 = _NODE.match(inner, em.end())
+    if not nm2:
+        raise SyntaxError(
+            f"expected node after shortestPath edge at {inner[em.end():]!r}")
+    if nm2.end() != len(inner):
+        raise SyntaxError(
+            f"unparsed shortestPath segment {inner[nm2.end():]!r} "
+            f"(shortestPath covers a single var-length relationship)")
+    t_alias, t_label, t_pred = _node_info(nm2, anon_counter)
+    if t_alias in seen:
+        raise SyntaxError(
+            f"shortestPath target {t_alias!r} is already bound in "
+            f"{inner!r}; it must be a fresh alias")
+    ops.append(ShortestPath(src=alias, alias=t_alias, edge_label=e_label,
+                            direction=direction, min_hops=lo, max_hops=hi,
+                            dist="dist", vertex_label=t_label,
+                            vertex_pred=t_pred))
+    seen.add(t_alias)
+    seen.add("dist")
+    return ops
+
+
 def _parse_pattern(pattern: str, seen: set, anon_counter: List[int]) -> List:
     """One comma-separated MATCH pattern → list of Scan/Expand+GetVertex."""
+    sm = _SHORTEST.match(pattern)
+    if sm:
+        if not pattern.endswith(")"):
+            raise SyntaxError(f"unbalanced shortestPath(...): {pattern!r}")
+        return _parse_shortest(pattern[sm.end():-1].strip(), seen,
+                               anon_counter)
     ops: List = []
     pos = 0
     m = _NODE.match(pattern, pos)
@@ -245,6 +371,30 @@ def _parse_pattern(pattern: str, seen: set, anon_counter: List[int]) -> List:
             raise SyntaxError(f"expected node after edge at {pattern[pos:]!r}")
         n_alias, n_label, n_pred = node_info(nm)
         pos = nm.end()
+        if em.group("var") is not None:
+            lo, hi = _check_var_edge(em, pattern)
+            if n_alias in seen:
+                # cycle-close: land the walk on a fresh alias and join it
+                # back to the bound one
+                anon_counter[0] += 1
+                fresh = f"_j{anon_counter[0]}"
+                ops.append(ExpandVar(src=prev, alias=fresh,
+                                     edge_label=e_label, direction=direction,
+                                     min_hops=lo, max_hops=hi,
+                                     vertex_label=n_label, vertex_pred=None))
+                ops.append(Select(Pred(BinExpr(
+                    "==", PropRef(fresh, None), PropRef(n_alias, None)))))
+                if n_pred is not None:
+                    ops.append(Select(n_pred))
+            else:
+                ops.append(ExpandVar(src=prev, alias=n_alias,
+                                     edge_label=e_label, direction=direction,
+                                     min_hops=lo, max_hops=hi,
+                                     vertex_label=n_label,
+                                     vertex_pred=n_pred))
+                seen.add(n_alias)
+            prev = n_alias
+            continue
         ops.append(Expand(src=prev, edge_label=e_label, direction=direction,
                           edge=e_alias))
         if em.group("props"):
@@ -269,6 +419,11 @@ def _parse_pattern(pattern: str, seen: set, anon_counter: List[int]) -> List:
                                  pred=n_pred))
             seen.add(n_alias)
         prev = n_alias
+    if pos < len(pattern) and pattern[pos:].strip():
+        # silently dropping an unparseable suffix (e.g. a typo'd edge) is
+        # the classic mis-parse hazard — reject with the exact leftover
+        raise SyntaxError(f"unparsed pattern segment {pattern[pos:]!r} "
+                          f"in {pattern!r}")
     return ops
 
 
@@ -313,6 +468,9 @@ def _parse_create(pattern: str, seen: set, anon_counter: List[int]) -> List:
         em = _EDGE.match(pattern, pos)
         if not em:
             break
+        if em.group("var") is not None:
+            raise SyntaxError(
+                f"CREATE cannot use a var-length relationship: {pattern!r}")
         raw_label = em.group("label")
         if raw_label is None:
             raise SyntaxError(f"CREATE edge needs a label: {pattern!r}")
@@ -485,7 +643,10 @@ def _split_patterns(body: str) -> List[str]:
 
 
 # ----------------------------------------------------------------- Gremlin
-_GREMLIN_STEP = re.compile(r"\.(\w+)\(([^)]*)\)")
+# one nesting level in the args so ``repeat(out('KNOWS'))`` parses as a step
+_GREMLIN_STEP = re.compile(r"\.(\w+)\(((?:[^()]|\([^()]*\))*)\)")
+_REPEAT_BODY = re.compile(
+    r"^(out|in_|in|both)\(\s*(?:'([^']*)'|\"([^\"]*)\")?\s*\)$")
 
 
 def parse_gremlin(query: str) -> LogicalPlan:
@@ -533,6 +694,8 @@ def parse_gremlin(query: str) -> LogicalPlan:
         ops.append(ProcedureCall(proc=name, args=args,
                                  yields=(cur_alias, RESULT_NAMES[name])))
     n_v = 0
+    pending_repeat = None      # (direction, edge_label) awaiting .times(n)
+    emit_before = emit_after = False
     for m in steps[1:]:
         step, rawargs = m.group(1), m.group(2)
         args = [a.strip().strip("'\"") for a in rawargs.split(",")] \
@@ -564,6 +727,55 @@ def parse_gremlin(query: str) -> LogicalPlan:
                               direction=direction, edge=e_alias))
             ops.append(GetVertex(edge=e_alias, alias=new_alias))
             cur_alias = new_alias
+        elif step == "repeat":
+            # repeat(out('KNOWS')).times(3): var-length expansion — with
+            # .emit() the intermediate depths are kept too (walk semantics,
+            # DESIGN.md §13)
+            if pending_repeat is not None:
+                raise SyntaxError("repeat() without a closing times()")
+            im = _REPEAT_BODY.match(rawargs.strip())
+            if not im:
+                raise SyntaxError(
+                    f"repeat() supports a single out/in_/both traversal "
+                    f"step, got {rawargs!r}")
+            rlabel = im.group(2) or im.group(3)
+            pending_repeat = ("out" if im.group(1) == "out" else "in",
+                              EDGE_NAMES.get(rlabel) if rlabel else None)
+        elif step == "emit":
+            if rawargs.strip():
+                raise SyntaxError("emit() takes no arguments")
+            if pending_repeat is not None:
+                emit_after = True        # .repeat().emit(): depths 1..n
+            elif (ops and isinstance(ops[-1], ExpandVar)
+                    and ops[-1].alias == cur_alias):
+                # .repeat().times(n).emit(): also depths 1..n — rewrite the
+                # just-closed expansion (min() keeps an earlier depth-0 emit)
+                import dataclasses as _dc
+                ops[-1] = _dc.replace(ops[-1],
+                                      min_hops=min(ops[-1].min_hops, 1))
+            else:
+                emit_before = True       # .emit().repeat(): include depth 0
+        elif step == "times":
+            if pending_repeat is None:
+                raise SyntaxError("times() without a preceding repeat()")
+            try:
+                n = int(rawargs.strip())
+            except ValueError:
+                raise SyntaxError(f"times() needs an integer, got "
+                                  f"{rawargs!r}") from None
+            if not 1 <= n <= MAX_VAR_HOPS:
+                raise SyntaxError(f"times({n}) out of range [1, "
+                                  f"{MAX_VAR_HOPS}]")
+            lo = 0 if emit_before else (1 if emit_after else n)
+            n_v += 1
+            new_alias = f"v{n_v}"
+            ops.append(ExpandVar(src=cur_alias, alias=new_alias,
+                                 edge_label=pending_repeat[1],
+                                 direction=pending_repeat[0],
+                                 min_hops=lo, max_hops=n))
+            cur_alias = new_alias
+            pending_repeat = None
+            emit_before = emit_after = False
         elif step == "values":
             ops.append(Project(((PropRef(cur_alias, args[0]), args[0]),)))
         elif step == "count":
@@ -610,4 +822,8 @@ def parse_gremlin(query: str) -> LogicalPlan:
                                value=parse_expr(raw[1])))
         else:
             raise SyntaxError(f"unsupported gremlin step {step}")
+    if pending_repeat is not None:
+        raise SyntaxError("repeat() without a closing times()")
+    if emit_before:
+        raise SyntaxError("emit() without a repeat()/times() pair")
     return LogicalPlan(ops)

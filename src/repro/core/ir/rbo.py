@@ -17,9 +17,9 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Set, Tuple
 
-from repro.core.ir.dag import (BinExpr, Expand, GetVertex, InsertEdge,
-                               LogicalPlan, Op, Pred, PropRef, Scan, Select,
-                               SetProp)
+from repro.core.ir.dag import (BinExpr, Expand, ExpandVar, GetVertex,
+                               InsertEdge, LogicalPlan, Op, Pred, PropRef,
+                               Scan, Select, SetProp, ShortestPath)
 
 
 def _conjuncts(expr) -> List:
@@ -60,6 +60,8 @@ def _later_refs(ops: List[Op], start: int) -> Set[str]:
             refs |= {op.src, op.dst}
         elif isinstance(op, SetProp):
             refs.add(op.alias)
+        elif isinstance(op, (ExpandVar, ShortestPath)):
+            refs.add(op.src)
     return refs
 
 
@@ -119,6 +121,15 @@ def filter_push_into_match(plan: LogicalPlan) -> LogicalPlan:
                         pushed = True
                         break
                     if isinstance(tgt, Expand) and tgt.fused_vertex == alias:
+                        newp = (conj if tgt.vertex_pred is None
+                                else _conjoin([tgt.vertex_pred.expr, conj]))
+                        ops[j] = dataclasses.replace(tgt, vertex_pred=Pred(newp))
+                        pushed = True
+                        break
+                    # var-length/shortest endpoint predicates mask only the
+                    # final frontier — exactly a SELECT's semantics here
+                    if isinstance(tgt, (ExpandVar, ShortestPath)) \
+                            and tgt.alias == alias:
                         newp = (conj if tgt.vertex_pred is None
                                 else _conjoin([tgt.vertex_pred.expr, conj]))
                         ops[j] = dataclasses.replace(tgt, vertex_pred=Pred(newp))

@@ -37,8 +37,8 @@ import numpy as np
 
 from repro.core.ir.codegen import (FrontierHop, FrontierProgram,
                                    _LabelAwarePG, _expr_has_param,
-                                   finish_frontier, frontier_vertex_mask,
-                                   lower_to_frontier)
+                                   finish_frontier, finish_shortest,
+                                   frontier_vertex_mask, lower_to_frontier)
 from repro.core.ir.dag import LogicalPlan
 from repro.storage.lpg import PropertyGraph
 
@@ -195,19 +195,121 @@ class FragmentFrontierExecutor:
                  for f in range(self.n_frags)]
         return jnp.concatenate(owned, axis=1)[:, :n]
 
+    def _owned_edges_minplus(self, src, row, w, d):
+        """One fragment, edge-list form, tropical semiring: [B, N]
+        distances → owned [B, v_per] relaxations (scatter-min; padding
+        entries carry w == 0 and relax to +inf)."""
+        vals = jnp.where(w > 0, jnp.take(d, src, axis=1) + 1.0, jnp.inf)
+        return jnp.full((d.shape[0], self.v_per), jnp.inf,
+                        jnp.float32).at[:, row].min(vals)
+
+    def _owned_slab_minplus(self, slab, d):
+        """One fragment, min-plus pull-ELL Pallas kernel."""
+        from repro.kernels.ops import frontier_minplus_step
+        ell_idx, ell_w, row_map = slab
+        return frontier_minplus_step(ell_idx, ell_w, d, row_map, self.v_per,
+                                     interpret=self.interpret)
+
+    def _apply_hop_minplus(self, arrs: _HopArrays, d: jnp.ndarray
+                           ) -> jnp.ndarray:
+        """One shortest-path relaxation (before the ``min(d, ·)`` merge).
+        Same fragment structure as ``_apply_hop``, but owned slices start
+        at +inf and the cross-fragment exchange is ``pmin`` of the disjoint
+        owned ranges (DESIGN.md §13)."""
+        n = self.pg.n_vertices
+        if self.mesh is not None:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+
+            B = d.shape[0]
+            npad = self.n_frags * self.v_per
+            starts = jnp.arange(self.n_frags, dtype=jnp.int32) * self.v_per
+
+            def frag_fn(src, row, w, start, dr):
+                owned = self._owned_edges_minplus(src[0], row[0], w[0], dr)
+                buf = jax.lax.dynamic_update_slice(
+                    jnp.full((B, npad), jnp.inf, jnp.float32), owned,
+                    (0, start[0]))
+                # disjoint owned ranges filled with +inf: pmin exchanges
+                return jax.lax.pmin(buf, "data")[None]
+
+            fn = shard_map(frag_fn, mesh=self.mesh,
+                           in_specs=(P("data"), P("data"), P("data"),
+                                     P("data"), P()),
+                           out_specs=P("data"))
+            out = fn(arrs.src, arrs.row, arrs.w, starts, d)
+            return out[0][:, :n]
+
+        owned = [self._owned_slab_minplus(arrs.slabs[f], d)
+                 if self.use_kernels
+                 else self._owned_edges_minplus(arrs.src[f], arrs.row[f],
+                                                arrs.w[f], d)
+                 for f in range(self.n_frags)]
+        return jnp.concatenate(owned, axis=1)[:, :n]
+
     def _runner(self, program: FrontierProgram):
-        skey = tuple(h.cache_key for h in program.hops)
+        skey = tuple((h.cache_key, h.min_hops, h.max_hops)
+                     for h in program.hops)
         fn = self._runners.get(skey)
         if fn is not None:
             return fn
-        hop_arrs = [self._hop_arrays(h) for h in program.hops]
+        hop_specs = [(self._hop_arrays(h), h.min_hops, h.max_hops)
+                     for h in program.hops]
 
         def run(x, masks):
-            for arrs, m in zip(hop_arrs, masks):
-                x = self._apply_hop(arrs, x)
+            # peak accumulation value across var-length stages: float32
+            # path counts are exact only below 2^24, and powered stages
+            # reach it far sooner than fixed chains — the executor raises
+            # OverflowError when the peak crosses it (DESIGN.md §13)
+            peak = jnp.float32(0.0)
+            for (arrs, lo, hi), m in zip(hop_specs, masks):
+                if (lo, hi) == (1, 1):
+                    x = self._apply_hop(arrs, x)
+                else:
+                    # accumulated powered stages: acc = Σ_{k∈[lo,hi]} X·Aᵏ
+                    # (X itself when lo == 0); intermediate powers below
+                    # lo still feed later ones, so their peaks count too
+                    acc = x if lo == 0 else jnp.zeros_like(x)
+                    cur = x
+                    for k in range(1, hi + 1):
+                        cur = self._apply_hop(arrs, cur)
+                        peak = jnp.maximum(peak, jnp.max(cur))
+                        if k >= lo:
+                            acc = acc + cur
+                    peak = jnp.maximum(peak, jnp.max(acc))
+                    x = acc
                 if m is not None:       # [N] static or [B, N] per-query
                     x = x * m
-            return x
+            return x, peak
+
+        fn = jax.jit(run)
+        self._runners[skey] = fn
+        return fn
+
+    def _shortest_runner(self, sp):
+        skey = ("__shortest__", sp.edge_label, sp.direction,
+                sp.min_hops, sp.max_hops)
+        fn = self._runners.get(skey)
+        if fn is not None:
+            return fn
+        arrs = self._hop_arrays(FrontierHop(
+            edge_label=sp.edge_label, direction=sp.direction,
+            edge_pred=None, edge_alias=None, vertex_alias=sp.alias,
+            vertex_label=None, vertex_pred=None))
+
+        def run(d, mask):
+            # d ← min(d, relax(d)) unrolled; min_hops == 1 seeds from the
+            # first relaxation so dist 0 never enters (src→src must cycle)
+            if sp.min_hops >= 1:
+                d = self._apply_hop_minplus(arrs, d)
+                iters = sp.max_hops - 1
+            else:
+                iters = sp.max_hops
+            for _ in range(iters):
+                d = jnp.minimum(d, self._apply_hop_minplus(arrs, d))
+            if mask is not None:        # head label/pred: unreachable = inf
+                d = jnp.where(mask > 0, d, jnp.inf)
+            return d
 
         fn = jax.jit(run)
         self._runners[skey] = fn
@@ -226,6 +328,8 @@ class FragmentFrontierExecutor:
                              "route it to the interpreter instead "
                              "(cbo.should_use_fragment_path gates this)")
         params_list = [p or {} for p in params_list]
+        if program.shortest is not None:
+            return self._execute_shortest(program, params_list, procedures)
         B, n = len(params_list), self.pg.n_vertices
         src = self._stage_mask(program.source_alias, program.source_label,
                                program.source_pred, params_list)
@@ -237,9 +341,55 @@ class FragmentFrontierExecutor:
             self._stage_mask(h.vertex_alias, h.vertex_label, h.vertex_pred,
                              params_list)
             for h in program.hops)
-        counts = np.asarray(self._runner(program)(x0, masks))
+        counts, peak = self._runner(program)(x0, masks)
+        if float(peak) >= 2 ** 24:
+            # same contract as finish_frontier's final check, but covers
+            # intermediate powers of accumulated var-length stages whose
+            # inexact counts may not survive into the final frontier
+            raise OverflowError(
+                f"frontier path count {float(peak):.0f} exceeds float32 "
+                f"exact-integer range (2^24); rerun on the interpreter")
+        counts = np.asarray(counts)
         return [finish_frontier(program, counts[b], self.pg,
                                 params=params_list[b], procedures=procedures)
+                for b in range(B)]
+
+    def _execute_shortest(self, program: FrontierProgram, params_list,
+                          procedures=None) -> List[Dict[str, np.ndarray]]:
+        """shortestPath() batch: one [R, N] tropical distance matrix over
+        the R flattened (query, source) pairs, relaxed max_hops times."""
+        sp = program.shortest
+        B, n = len(params_list), self.pg.n_vertices
+        src = self._stage_mask(program.source_alias, program.source_label,
+                               program.source_pred, params_list)
+        if src is None:
+            m = np.ones((B, n), bool)
+        else:
+            ms = np.asarray(src) > 0
+            m = np.broadcast_to(ms, (B, n)) if ms.ndim == 1 else ms
+        qidx, srcs = np.nonzero(m)
+        R = len(srcs)
+        if R * n > (1 << 26):
+            raise OverflowError(
+                f"shortestPath frontier too large ({R} sources x "
+                f"{n} vertices); rerun on the interpreter")
+        head = self._stage_mask(sp.alias, sp.vertex_label, sp.vertex_pred,
+                                params_list)
+        hm_rows = None
+        if head is not None and R:
+            hm = np.asarray(head)
+            hm_rows = jnp.asarray(hm[qidx] if hm.ndim == 2
+                                  else np.broadcast_to(hm, (R, n)))
+        if R == 0:
+            dists = np.zeros((0, n), np.float32)
+        else:
+            d0 = np.full((R, n), np.inf, np.float32)
+            d0[np.arange(R), srcs] = 0.0
+            runner = self._shortest_runner(sp)
+            dists = np.asarray(runner(jnp.asarray(d0), hm_rows))
+        return [finish_shortest(program, srcs[qidx == b], dists[qidx == b],
+                                self.pg, params=params_list[b],
+                                procedures=procedures)
                 for b in range(B)]
 
     def _stage_mask(self, alias: str, label: Optional[int], pred,

@@ -60,3 +60,48 @@ def frontier_ell(indices: jnp.ndarray, weights: jnp.ndarray, x: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((B, R), jnp.float32),
         interpret=interpret,
     )(indices, weights, x.astype(jnp.float32))
+
+
+def _minplus_kernel(idx_ref, w_ref, x_ref, y_ref):
+    """Tropical (min-plus) variant of ``_frontier_kernel``: same slab
+    layout and gather, but the semiring swaps (+, ×) for (min, +) — one
+    shortest-path relaxation per call (DESIGN.md §13):
+
+        y[b, r] = min_w  x[b, indices[r, w]] + 1        (valid entries)
+
+    Every hop costs 1 regardless of multiplicity, so ``weights`` is only
+    the existence/mask channel: padding (idx < 0) and predicate-masked
+    edges (w == 0) relax to +inf and never win the min."""
+    idx = idx_ref[...]                          # [block_rows, W] int32
+    w = w_ref[...].astype(jnp.float32)          # [block_rows, W]
+    x = x_ref[...]                              # [B, N] fp32 distances
+    safe = jnp.maximum(idx, 0)
+    gathered = jnp.take(x, safe.reshape(-1), axis=1)
+    gathered = gathered.reshape(x.shape[0], *idx.shape)   # [B, br, W]
+    valid = ((idx >= 0) & (w > 0))[None, :, :]
+    vals = jnp.where(valid, gathered + 1.0, jnp.inf)
+    y_ref[...] = jnp.min(vals, axis=2)          # [B, block_rows]
+
+
+def frontier_ell_minplus(indices: jnp.ndarray, weights: jnp.ndarray,
+                         x: jnp.ndarray, *, block_rows: int = 256,
+                         interpret: bool = False) -> jnp.ndarray:
+    """indices/weights: [R, W] pull-ELL slab (pad ``PAD_SENTINEL``);
+    x: [B, N] fp32 distance matrix (+inf = unreached) → y [B, R] fp32
+    relaxed distances (one min-plus hop, before the ``min(x, y)`` merge)."""
+    R, W = indices.shape
+    B = x.shape[0]
+    assert R % block_rows == 0, (R, block_rows)
+    grid = (R // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_minplus_kernel),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, W), lambda r: (r, 0)),
+            pl.BlockSpec((block_rows, W), lambda r: (r, 0)),
+            pl.BlockSpec(x.shape, lambda r: (0, 0)),  # x fully VMEM-resident
+        ],
+        out_specs=pl.BlockSpec((B, block_rows), lambda r: (0, r)),
+        out_shape=jax.ShapeDtypeStruct((B, R), jnp.float32),
+        interpret=interpret,
+    )(indices, weights, x.astype(jnp.float32))

@@ -130,6 +130,21 @@ def frontier_step(ell_idx: jnp.ndarray, ell_w: jnp.ndarray, x: jnp.ndarray,
     return jnp.zeros((B, n_rows), jnp.float32).at[:, row_map].add(y_slab)
 
 
+def frontier_minplus_step(ell_idx: jnp.ndarray, ell_w: jnp.ndarray,
+                          x: jnp.ndarray, row_map: jnp.ndarray, n_rows: int,
+                          interpret: Optional[bool] = None) -> jnp.ndarray:
+    """One batched min-plus (shortest-path) relaxation: Y [B, n_rows] =
+    X [B, N] distances pulled through the ELL slab in the tropical
+    semiring; slab rows reduce back onto destination vertices with a
+    scatter-min (split heavy rows take the min of their parts)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    from repro.kernels import frontier as fr
+    y_slab = fr.frontier_ell_minplus(ell_idx, ell_w, x, interpret=interpret)
+    B = x.shape[0]
+    return jnp.full((B, n_rows), jnp.inf,
+                    jnp.float32).at[:, row_map].min(y_slab)
+
+
 # -------------------------------------------------------------- segment sum
 def segment_sum(vals: jnp.ndarray, segs: jnp.ndarray, n_out: int, *,
                 interpret: Optional[bool] = None,

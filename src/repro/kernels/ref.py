@@ -53,6 +53,19 @@ def frontier_ref(indices: jnp.ndarray, weights: jnp.ndarray,
     return jnp.sum(vals, axis=2)
 
 
+def frontier_minplus_ref(indices: jnp.ndarray, weights: jnp.ndarray,
+                         x: jnp.ndarray) -> jnp.ndarray:
+    """Tropical pull-ELL oracle. indices/weights [R,W] (pad < 0 or w == 0
+    → +inf); x [B,N] distances → y [B,R]:
+    y[b,r] = min_w x[b, indices[r,w]] + 1 over valid entries."""
+    safe = jnp.maximum(indices, 0)
+    g = jnp.take(x.astype(jnp.float32), safe.reshape(-1), axis=1)
+    g = g.reshape(x.shape[0], *indices.shape)
+    valid = ((indices >= 0) & (weights > 0))[None]
+    vals = jnp.where(valid, g + 1.0, jnp.inf)
+    return jnp.min(vals, axis=2)
+
+
 def sampler_ref(ell_idx: np.ndarray, deg: np.ndarray, rows: np.ndarray,
                 u: np.ndarray) -> np.ndarray:
     """NumPy fixed-fanout neighbor-sampling oracle (``kernels/sampler.py``).

@@ -226,6 +226,90 @@ class TestTraversalDifferential:
                 execute_plan(plan, pg, params=params), got)
 
 
+@pytest.mark.slow
+class TestVarlenProperties:
+    """Variable-length expansion + shortestPath (DESIGN.md §13) against
+    the interpreter oracle on random multigraphs × random bounds —
+    including min == 0 (identity term), min == max (single power), and
+    max beyond any small graph's diameter (saturated reachability).
+    Slow-marked (every (min, max) pair is a fresh unrolled jit); CI runs
+    it derandomized in the `-m slow` job."""
+
+    @staticmethod
+    def _assert_bag_equal(ref, got):
+        from conftest import assert_results_bag_equal
+        assert_results_bag_equal(ref, got)
+
+    @given(labeled_graphs(max_n=14, max_e=40),
+           st.integers(0, 3), st.integers(0, 14),
+           st.sampled_from([1, 2, 4]), st.sampled_from(["out", "in"]),
+           st.booleans())
+    @settings(max_examples=15, deadline=None,
+              suppress_health_check=[hypothesis.HealthCheck.too_slow])
+    def test_expand_var_equals_interpreter(self, store, lo, extra, n_frags,
+                                           direction, filtered):
+        """max = min + extra may exceed the diameter; walk counts on the
+        fragment route must still match the interpreter exactly."""
+        from repro.core.ir.codegen import execute_plan, lower_to_frontier
+        from repro.core.ir.dag import (BinExpr, Const, ExpandVar,
+                                       LogicalPlan, Pred, Project, PropRef,
+                                       Scan, Select)
+        from repro.engines.frontier import FragmentFrontierExecutor
+        from repro.storage.lpg import PropertyGraph
+
+        lo = max(lo, 0)
+        hi = max(lo, min(lo + extra, 14))
+        if hi == 0 and lo == 0:
+            hi = 1
+            lo = 0
+        pg = PropertyGraph(store)
+        ops = [Scan("a", None, None),
+               ExpandVar(src="a", alias="b", edge_label=0,
+                         direction=direction, min_hops=lo, max_hops=hi)]
+        if filtered:
+            ops.append(Select(Pred(BinExpr(
+                ">", PropRef("b", "credits"), Const(4)))))
+        ops.append(Project(((PropRef("b", None), "b"),)))
+        plan = LogicalPlan(ops)
+        assert lower_to_frontier(plan) is not None
+        got = FragmentFrontierExecutor(pg, n_frags=n_frags).execute(
+            plan, [None])[0]
+        self._assert_bag_equal(execute_plan(plan, pg), got)
+
+    @given(labeled_graphs(max_n=14, max_e=40),
+           st.integers(0, 1), st.integers(1, 10),
+           st.sampled_from([1, 2, 4]), st.booleans())
+    @settings(max_examples=15, deadline=None,
+              suppress_health_check=[hypothesis.HealthCheck.too_slow])
+    def test_shortest_equals_interpreter(self, store, lo, hi0, n_frags,
+                                         filtered):
+        """Bounded shortestPath distances (and which pairs appear at all)
+        match the interpreter, unreachable pairs stay absent."""
+        from repro.core.ir.codegen import execute_plan, lower_to_frontier
+        from repro.core.ir.dag import (BinExpr, Const, LogicalPlan, Pred,
+                                       Project, PropRef, Scan, Select,
+                                       ShortestPath)
+        from repro.engines.frontier import FragmentFrontierExecutor
+        from repro.storage.lpg import PropertyGraph
+
+        hi = max(hi0, lo, 1)
+        pg = PropertyGraph(store)
+        ops = [Scan("a", None, None),
+               ShortestPath(src="a", alias="b", edge_label=0,
+                            direction="out", min_hops=lo, max_hops=hi)]
+        if filtered:
+            ops.append(Select(Pred(BinExpr(
+                ">", PropRef("b", "credits"), Const(4)))))
+        ops.append(Project(((PropRef("a", None), "a"),
+                            (PropRef("b", None), "b"),
+                            (PropRef("dist", None), "d"))))
+        plan = LogicalPlan(ops)
+        assert lower_to_frontier(plan) is not None
+        got = FragmentFrontierExecutor(pg, n_frags=n_frags).execute(
+            plan, [None])[0]
+        self._assert_bag_equal(execute_plan(plan, pg), got)
+
+
 class TestRWKVProperties:
     @given(st.integers(1, 2), st.integers(1, 3), st.integers(8, 16))
     @settings(max_examples=10, deadline=None)

@@ -1,0 +1,332 @@
+"""Variable-length path expansion + shortestPath (DESIGN.md §13): the
+fragment frontier route against a dense numpy matrix-power / min-plus
+oracle and the interpreter, parser hardening for the ``*lo..hi`` grammar,
+and the float32 2^24 overflow guard over accumulated var-length stages."""
+
+import jax
+import numpy as np
+import pytest
+from conftest import assert_results_bag_equal
+
+from repro.core.ir.dag import MAX_VAR_HOPS, ExpandVar, ShortestPath
+from repro.core.ir.parser import parse_cypher, parse_gremlin
+from repro.engines.frontier import FragmentFrontierExecutor
+from repro.engines.gaia import GaiaEngine
+from repro.storage.csr import CSRStore
+from repro.storage.generators import snb_store
+from repro.storage.lpg import PropertyGraph
+
+
+@pytest.fixture(scope="module")
+def engine():
+    return GaiaEngine(snb_store(n_persons=300, n_items=150, n_posts=40,
+                                seed=3))
+
+
+# ------------------------------------------------------------ dense oracles
+def dense_adj(pg, edge_label, direction):
+    """[N, N] float64 multiplicity matrix of one (edge_label, direction)."""
+    n = pg.n_vertices
+    indptr, indices, _ = pg.sliced_csr(edge_label, direction)
+    src = np.repeat(np.arange(n), np.diff(indptr))
+    A = np.zeros((n, n), np.float64)
+    np.add.at(A, (src, indices), 1.0)
+    return A
+
+
+def varlen_counts(A, x0, lo, hi):
+    """Walk-count oracle: Σ_{k∈[lo,hi]} x0 · Aᵏ (x0 itself when lo == 0)."""
+    acc = x0.astype(np.float64).copy() if lo == 0 else np.zeros_like(
+        x0, np.float64)
+    cur = x0.astype(np.float64)
+    for k in range(1, hi + 1):
+        cur = cur @ A
+        if k >= lo:
+            acc = acc + cur
+    return acc
+
+
+def minplus_dists(A, seeds, lo, hi):
+    """Tropical oracle: [S, N] bounded-hop distances from each seed row.
+    lo == 1 seeds from the first relaxation (src→src only via a cycle)."""
+    step = np.where(A > 0, 1.0, np.inf)
+
+    def relax(d):
+        return (d[:, :, None] + step[None]).min(axis=1)
+
+    d = seeds
+    iters = hi
+    if lo >= 1:
+        d = relax(seeds)
+        iters = hi - 1
+    for _ in range(iters):
+        d = np.minimum(d, relax(d))
+    return d
+
+
+def multigraph_store():
+    """Parallel edges, self loops, an isolated vertex, edges into 0."""
+    src = np.array([1, 2, 2, 3, 0, 5, 5, 5, 4, 3, 3])
+    dst = np.array([0, 0, 0, 3, 1, 2, 2, 4, 0, 3, 1])
+    return CSRStore(7, src, dst,
+                    vertex_labels=np.zeros(7, np.int32),
+                    edge_labels=np.zeros(len(src), np.int32),
+                    vertex_props={"x": np.arange(7, dtype=np.int64)})
+
+
+# ----------------------------------------------------- numpy differential
+KNOWS = 0     # snb edge label ids (storage/generators.py)
+PERSON = 0
+
+
+class TestVarlenNumpyOracle:
+    @pytest.mark.parametrize("n_frags", [1, 2, 4])
+    @pytest.mark.parametrize("lo,hi", [(1, 2), (0, 2), (2, 3), (1, 3)])
+    def test_counts_match_matrix_power(self, engine, n_frags, lo, hi):
+        pg = engine.pg
+        q = (f"MATCH (a:Person {{region: 2}})-[:KNOWS*{lo}..{hi}]->"
+             f"(b:Person) RETURN b AS b")
+        plan = engine.compile(q)
+        got = FragmentFrontierExecutor(pg, n_frags=n_frags).execute(
+            plan, [None])[0]
+        A = dense_adj(pg, KNOWS, "out")
+        x0 = ((pg.vlabels == PERSON) &
+              (pg.vprop("region") == 2)).astype(np.float64)[None]
+        counts = varlen_counts(A, x0, lo, hi)[0]
+        counts *= (pg.vlabels == PERSON)       # endpoint label mask
+        expect = np.repeat(np.arange(pg.n_vertices),
+                           counts.astype(np.int64))
+        assert_results_bag_equal({"b": expect}, {"b": got["b"]})
+        # and the interpreter (the routing oracle) agrees
+        assert_results_bag_equal(engine.execute_plan(plan), got)
+
+    @pytest.mark.parametrize("n_frags", [1, 2, 4])
+    @pytest.mark.parametrize("batch", [1, 8, 64])
+    def test_batched_params(self, engine, n_frags, batch):
+        if n_frags != 2 and batch == 64:
+            pytest.skip("64-query batch exercised once (runtime)")
+        q = ("MATCH (a:Person {region: $r})-[:KNOWS*1..2]->(b:Person) "
+             "WHERE b.credits > $t RETURN b AS b")
+        plan = engine.compile(q)
+        params = [{"r": b % 8, "t": 100 + 10 * b} for b in range(batch)]
+        outs = FragmentFrontierExecutor(engine.pg, n_frags=n_frags).execute(
+            plan, params)
+        assert len(outs) == batch
+        for p, got in zip(params, outs):
+            assert_results_bag_equal(engine.execute_plan(plan, params=p),
+                                     got)
+
+    @pytest.mark.parametrize("n_frags", [1, 2, 4])
+    @pytest.mark.parametrize("lo,hi", [(0, 3), (1, 2), (2, 2), (3, 4)])
+    def test_multigraph_self_loops(self, n_frags, lo, hi):
+        """Parallel edges multiply walk counts; self loops revisit; the
+        isolated vertex 6 appears only via the lo == 0 identity term."""
+        pg = PropertyGraph(multigraph_store())
+        plan = parse_cypher(f"MATCH (a)-[*{lo}..{hi}]->(b) RETURN b AS b")
+        got = FragmentFrontierExecutor(pg, n_frags=n_frags).execute(
+            plan, [None])[0]
+        A = dense_adj(pg, None, "out")
+        counts = varlen_counts(A, np.ones((1, 7)), lo, hi)[0]
+        expect = np.repeat(np.arange(7), counts.astype(np.int64))
+        assert_results_bag_equal({"b": expect}, {"b": got["b"]})
+        eng = GaiaEngine(multigraph_store())
+        assert_results_bag_equal(eng.execute_plan(plan), got)
+
+    def test_unreachable_is_empty(self, engine):
+        """A predicate no vertex passes leaves every walk unmatched."""
+        q = ("MATCH (a:Person {region: 2})-[:KNOWS*1..3]->(b:Person) "
+             "WHERE b.credits > 1000000 RETURN b AS b")
+        plan = engine.compile(q)
+        got = FragmentFrontierExecutor(engine.pg, n_frags=2).execute(
+            plan, [None])[0]
+        assert got["b"].shape == (0,)
+
+    def test_kernel_and_mesh_paths(self, engine):
+        q = ("MATCH (a:Person {region: 3})-[:KNOWS*1..3]->(b:Person) "
+             "RETURN b AS b")
+        plan = engine.compile(q)
+        ref = engine.execute_plan(plan)
+        kr = FragmentFrontierExecutor(engine.pg, n_frags=2,
+                                      use_kernels=True,
+                                      interpret=True).execute(plan, [None])
+        assert_results_bag_equal(ref, kr[0])
+        from jax.sharding import Mesh
+        mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+        mr = FragmentFrontierExecutor(engine.pg, mesh=mesh).execute(
+            plan, [None])
+        assert_results_bag_equal(ref, mr[0])
+
+
+class TestShortestPathNumpyOracle:
+    @pytest.mark.parametrize("n_frags", [1, 2, 4])
+    @pytest.mark.parametrize("lo,hi", [(1, 4), (0, 3), (1, 2)])
+    def test_dists_match_minplus(self, engine, n_frags, lo, hi):
+        pg = engine.pg
+        q = (f"MATCH p = shortestPath((a:Person {{region: 2}})"
+             f"-[:KNOWS*{lo}..{hi}]->(b:Person)) "
+             f"RETURN b AS b, dist AS d")
+        plan = engine.compile(q)
+        got = FragmentFrontierExecutor(pg, n_frags=n_frags).execute(
+            plan, [None])[0]
+        A = dense_adj(pg, KNOWS, "out")
+        srcs = np.nonzero((pg.vlabels == PERSON) &
+                          (pg.vprop("region") == 2))[0]
+        seeds = np.full((len(srcs), pg.n_vertices), np.inf)
+        seeds[np.arange(len(srcs)), srcs] = 0.0
+        d = minplus_dists(A, seeds, lo, hi)
+        d[:, pg.vlabels != PERSON] = np.inf    # endpoint label mask
+        rr, vv = np.nonzero(np.isfinite(d))
+        assert_results_bag_equal(
+            {"b": vv, "d": d[rr, vv].astype(np.int64)},
+            {"b": got["b"], "d": got["d"]})
+        assert_results_bag_equal(engine.execute_plan(plan), got)
+
+    def test_unreachable_pairs_absent(self):
+        """Disconnected pairs produce no row at any bound; the self row
+        appears only at min 0 for a vertex with no cycle."""
+        src = np.array([0, 1])
+        dst = np.array([1, 2])
+        store = CSRStore(5, src, dst,
+                         vertex_labels=np.zeros(5, np.int32),
+                         edge_labels=np.zeros(2, np.int32),
+                         vertex_props={"x": np.arange(5, dtype=np.int64)})
+        pg = PropertyGraph(store)
+        p1 = parse_cypher("MATCH p = shortestPath((a)-[*1..4]->(b)) "
+                          "RETURN a AS a, b AS b, dist AS d")
+        got = FragmentFrontierExecutor(pg, n_frags=2).execute(p1, [None])[0]
+        pairs = set(zip(got["a"].tolist(), got["b"].tolist(),
+                        got["d"].tolist()))
+        # only the chain 0→1→2 is reachable; 3, 4 are isolated and no
+        # vertex reaches itself (no cycles)
+        assert pairs == {(0, 1, 1), (0, 2, 2), (1, 2, 1)}
+        p0 = parse_cypher("MATCH p = shortestPath((a)-[*0..4]->(b)) "
+                          "RETURN a AS a, b AS b, dist AS d")
+        got0 = FragmentFrontierExecutor(pg, n_frags=2).execute(
+            p0, [None])[0]
+        # min 0 adds exactly the dist-0 self rows, isolated vertices too
+        assert len(got0["a"]) == 3 + 5
+        eng = GaiaEngine(store)
+        assert_results_bag_equal(eng.execute_plan(p0), got0)
+
+
+# --------------------------------------------------------- parser hardening
+class TestVarlenParserHardening:
+    @pytest.mark.parametrize("frag,msg", [
+        ("*3..1", "min 3 > max 1"),
+        ("*..", "unbounded"),
+        ("*", "unbounded"),
+        ("*2..", "unbounded"),
+        ("*-1..2", "negative"),
+        ("*1..-2", "negative"),
+        ("*1..99", "exceeds"),
+        ("*x..2", "malformed"),
+    ])
+    def test_bad_ranges_rejected(self, frag, msg):
+        with pytest.raises(SyntaxError, match=msg):
+            parse_cypher(f"MATCH (a)-[{frag}]->(b) RETURN b AS b")
+
+    def test_alias_and_props_rejected_on_var_edges(self):
+        with pytest.raises(SyntaxError, match="alias"):
+            parse_cypher("MATCH (a)-[e:KNOWS*1..2]->(b) RETURN b AS b")
+        with pytest.raises(SyntaxError, match="propert"):
+            parse_cypher("MATCH (a)-[:BUY*1..2 {rating: 5}]->(b) "
+                         "RETURN b AS b")
+
+    def test_create_var_edge_rejected(self):
+        with pytest.raises(SyntaxError, match="CREATE"):
+            parse_cypher("MATCH (a:Person {id: $x}), (b:Person {id: $y}) "
+                         "CREATE (a)-[:KNOWS*1..2]->(b)")
+
+    def test_trailing_garbage_rejected(self):
+        with pytest.raises(SyntaxError, match="unparsed"):
+            parse_cypher("MATCH (a)-[*1..2]->(b) ??? RETURN b AS b")
+
+    def test_shortest_requires_var_and_small_min(self):
+        with pytest.raises(SyntaxError, match="bound"):
+            parse_cypher("MATCH p = shortestPath((a)-[:KNOWS]->(b)) "
+                         "RETURN b AS b")
+        with pytest.raises(SyntaxError, match="min hops"):
+            parse_cypher("MATCH p = shortestPath((a)-[:KNOWS*2..4]->(b)) "
+                         "RETURN b AS b")
+
+    def test_shortest_target_must_be_fresh(self):
+        with pytest.raises(SyntaxError, match="fresh"):
+            parse_cypher("MATCH (b:Person) "
+                         "MATCH p = shortestPath((a)-[*1..3]->(b)) "
+                         "RETURN b AS b")
+
+    def test_good_forms_parse(self):
+        p = parse_cypher("MATCH (a)-[:KNOWS*..3]->(b) RETURN b AS b")
+        ev = [op for op in p.ops if isinstance(op, ExpandVar)][0]
+        assert (ev.min_hops, ev.max_hops) == (1, 3)
+        p = parse_cypher("MATCH p = shortestPath((a)-[*0..4]->(b)) "
+                         "RETURN b AS b, dist AS d")
+        sp = [op for op in p.ops if isinstance(op, ShortestPath)][0]
+        assert (sp.min_hops, sp.max_hops) == (0, 4)
+        assert MAX_VAR_HOPS == 32
+
+    @pytest.mark.parametrize("g,msg", [
+        ("g.V().repeat(out('KNOWS')).values('x')", "times"),
+        ("g.V().times(2)", "repeat"),
+        ("g.V().emit().values('x')", "emit"),
+        ("g.V().repeat(out('KNOWS')).times(0)", "range"),
+        ("g.V().repeat(out('KNOWS')).times(99)", "range"),
+        ("g.V().repeat(out('KNOWS').out('BUY')).times(2)", "single"),
+    ])
+    def test_gremlin_repeat_hardening(self, g, msg):
+        with pytest.raises(SyntaxError, match=msg):
+            parse_gremlin(g)
+
+    def test_gremlin_repeat_forms(self):
+        for g, lo in [
+            ("g.V().repeat(out('KNOWS')).times(3).values('x')", 3),
+            ("g.V().emit().repeat(out('KNOWS')).times(3).values('x')", 0),
+            ("g.V().repeat(out('KNOWS')).emit().times(3).values('x')", 1),
+            ("g.V().repeat(out('KNOWS')).times(3).emit().values('x')", 1),
+        ]:
+            p = parse_gremlin(g)
+            ev = [op for op in p.ops if isinstance(op, ExpandVar)][0]
+            assert (ev.min_hops, ev.max_hops) == (lo, 3), g
+
+
+# ------------------------------------------------------- overflow regression
+def overflow_store():
+    """0 →(4096 parallel edges) 1 →(4097) 2: the *3..3 walk count peaks at
+    cur₂ = 4096·4097 ≥ 2^24 while the final frontier is EMPTY — only the
+    intermediate-peak guard inside the jitted runner can catch it
+    (finish_frontier checks the final counts, which are all zero here)."""
+    src = np.concatenate([np.zeros(4096, np.int64), np.ones(4097, np.int64)])
+    dst = np.concatenate([np.ones(4096, np.int64),
+                          np.full(4097, 2, np.int64)])
+    return CSRStore(3, src, dst, vertex_labels=np.zeros(3, np.int32),
+                    edge_labels=np.zeros(len(src), np.int32),
+                    vertex_props={"x": np.arange(3, dtype=np.int64)})
+
+
+class TestVarlenOverflowGuard:
+    Q = "MATCH (a)-[*3..3]->(b) RETURN b AS b"
+
+    def test_executor_raises_on_intermediate_peak(self):
+        pg = PropertyGraph(overflow_store())
+        plan = parse_cypher(self.Q)
+        ex = FragmentFrontierExecutor(pg, n_frags=1)
+        with pytest.raises(OverflowError, match="2\\^24"):
+            ex.execute(plan, [None])
+
+    def test_service_falls_back_to_interpreter(self):
+        """The serving layer's existing OverflowError catch must cover the
+        new guard: the request reruns on the interpreter (engine 'gaia')
+        and still answers correctly (here: zero rows)."""
+        from repro.serving.session import FlexSession
+        from repro.storage.gart import GARTStore
+
+        store = overflow_store()
+        s = FlexSession(GARTStore.from_csr(store), n_frags=1,
+                        fragment_min_cost=0.0)
+        sv = s.interactive()
+        sv.submit(self.Q)
+        rs, _ = sv.flush()
+        assert rs[0].engine == "gaia"          # fragment route fell back
+        eng = GaiaEngine(store)
+        assert_results_bag_equal(eng.execute_plan(eng.compile(self.Q)),
+                                 rs[0].result)
