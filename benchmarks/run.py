@@ -16,14 +16,14 @@ def main() -> None:
     ap.add_argument("--only", default="all",
                     help="comma list: storage,query,traversal,hybrid,"
                          "analytics,learning,exp5,exp6,readwrite,"
-                         "exp7,serving,exp8,macro,kernels")
+                         "exp7,serving,exp8,macro,exp9,tail,kernels")
     ap.add_argument("--smoke", action="store_true",
                     help="smoke mode for sections that support it "
-                         "(exp8: equality gate only, small store)")
+                         "(exp8/exp9: equality gate only, small store)")
     args = ap.parse_args()
     wanted = set(args.only.split(",")) if args.only != "all" else {
         "storage", "query", "hybrid", "analytics", "learning",
-        "readwrite", "serving", "macro", "kernels"}
+        "readwrite", "serving", "macro", "tail", "kernels"}
 
     from benchmarks.common import emit_header
     emit_header()
@@ -60,6 +60,10 @@ def main() -> None:
         from benchmarks import macro_bench
         sections.append(
             ("macro", lambda: macro_bench.run(smoke=args.smoke)))
+    if wanted & {"tail", "exp9"}:
+        from benchmarks import tail_bench
+        sections.append(
+            ("tail", lambda: tail_bench.run(smoke=args.smoke)))
     if "kernels" in wanted:
         from benchmarks import kernel_bench
         sections.append(("kernels", kernel_bench.run))

@@ -1,0 +1,141 @@
+"""Exp-9: the Python tail tax (DESIGN.md §14).
+
+Batch-64 of an exp4-style two-hop template with a full relational tail
+(per-head COUNT aggregate, ORDER BY ... DESC, LIMIT) through the serving
+front door — the tail now compiles into the same jitted device program
+as the match prefix, so the measurement is end-to-end: admission,
+frontier matmuls, device aggregation/top-k, host assembly.
+
+Three contenders, interleaved (same machine phases for all):
+
+- **device** — the fragment route with the lowered tail (the default);
+- **host_tail** — the fragment route with ``device_tail=False``: the
+  pre-PR behaviour (device prefix, ``np.repeat`` + interpreter tail),
+  isolating the tail tax itself;
+- **interp** — a fresh :class:`GaiaEngine` interpreter loop, the
+  acceptance baseline (bar: device >= 5x).
+
+Every device response is verified bag-equal against the fresh oracle
+before any timing, and the route is asserted (``fragment``) — a silent
+fallback to the interpreter would otherwise still "pass" the clock.
+
+``--smoke`` runs the equality gate only, on a small store.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+from benchmarks.common import interleaved_medians, record
+
+# exp4-style two-hop friend-of-friend with the full relational tail
+TAIL_Q = ("MATCH (a:Person {region: $r})-[:KNOWS]->(b:Person)"
+          "-[:KNOWS]->(c:Person) "
+          "WITH c, COUNT(*) AS k "
+          "RETURN c AS v, k AS k ORDER BY k DESC LIMIT 10")
+
+BATCH = 64
+
+
+def _session(n_persons: int, seed: int = 7):
+    from repro.serving.session import FlexSession
+    from repro.storage.gart import GARTStore
+    from repro.storage.generators import snb_store
+
+    cs = snb_store(n_persons=n_persons, n_items=n_persons // 2,
+                   n_posts=64, seed=seed)
+    return FlexSession(GARTStore.from_csr(cs), n_frags=2)
+
+
+def _oracle(session):
+    from repro.engines.gaia import GaiaEngine
+
+    return GaiaEngine(session.snapshot_store)
+
+
+def _bag(result: Dict[str, np.ndarray]) -> Tuple:
+    cols = sorted(result)
+    rows = sorted(
+        tuple(round(float(result[c][i]), 6) for c in cols)
+        for i in range(len(result[cols[0]]) if cols else 0))
+    return (tuple(cols), tuple(rows))
+
+
+def _equality_gate(session, params) -> None:
+    """Every batched device response bag-equal to a fresh interpreter
+    over the same snapshot, and the route must be the fragment path with
+    the tail actually lowered (no silent interpreter fallback)."""
+    from repro.core.ir.codegen import lower_tail, lower_to_frontier
+
+    sv = session.interactive()
+    oracle = _oracle(session)
+    plan = oracle.compile(TAIL_Q)
+    program = lower_to_frontier(plan)
+    assert program is not None, "exp9: prefix did not lower"
+    assert lower_tail(program) is not None, "exp9: tail did not lower"
+    for p in params:
+        sv.submit(TAIL_Q, p)
+    rs, _ = sv.flush()
+    assert all(r.engine == "fragment" for r in rs), (
+        f"exp9: routes {sorted({r.engine for r in rs})}, "
+        f"expected all fragment")
+    for i, (p, r) in enumerate(zip(params, rs)):
+        ref = oracle.execute_plan(plan, params=p)
+        assert _bag(ref) == _bag(r.result), (
+            f"exp9 [{i}] params={p}: bag mismatch vs oracle")
+    record("exp9_tail_equality", 0,
+           f"n={len(params)};route=fragment;oracle=bag_equal")
+
+
+def run(smoke: bool = False) -> None:
+    n_persons = 120 if smoke else 300
+    session = _session(n_persons)
+    params = [{"r": b % 8} for b in range(BATCH)]
+    _equality_gate(session, params[:8] if smoke else params)
+    if smoke:
+        record("exp9_tail_mode", 0, "smoke=1;gate_only=1")
+        session.close()
+        return
+
+    oracle = _oracle(session)
+    plan = oracle.compile(TAIL_Q)
+    sv = session.interactive()
+
+    def device():
+        for p in params:
+            sv.submit(TAIL_Q, p)
+        rs, _ = sv.flush()
+        assert all(r.engine == "fragment" for r in rs)
+        return rs
+
+    def host_tail():
+        # the pre-PR route: device prefix, interpreter tail per query
+        return oracle.execute_fragment(plan, params, n_frags=2,
+                                       device_tail=False)
+
+    def interp():
+        return [oracle.execute_plan(plan, params=p) for p in params]
+
+    t_dev, t_host, t_interp = interleaved_medians(
+        [device, host_tail, interp], rounds=3)
+    tax = t_host / t_dev
+    speedup = t_interp / t_dev
+    record("exp9_tail_tax", t_dev * 1e6,
+           f"batch{BATCH}_host_tail_over_device={tax:.1f}x")
+    record("exp9_tail_acceptance", t_dev * 1e6,
+           f"batch{BATCH}_speedup_vs_interp={speedup:.1f}x;bar=5x;"
+           f"pass={speedup >= 5.0}")
+    assert speedup >= 5.0, (
+        f"exp9 acceptance: batch-{BATCH} device-tail speedup "
+        f"{speedup:.1f}x < 5x vs interpreter")
+    session.close()
+    record("exp9_tail_mode", 0, "smoke=0;gate+acceptance")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit_header
+
+    emit_header()
+    run(smoke="--smoke" in __import__("sys").argv)

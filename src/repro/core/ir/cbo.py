@@ -19,6 +19,11 @@ from repro.core.ir.dag import (Const, BinExpr, Expand, ExpandVar, GetVertex,
                                Limit, LogicalPlan, Param, Pred, PropRef,
                                Scan, Select, ShortestPath, plan_is_write)
 
+# Admission-threshold discount for plans whose relational tail lowers to
+# the device (no Python re-materialization to amortize): the fragment
+# route pays off at ~4× smaller cost estimates (DESIGN.md §14).
+FRAGMENT_TAIL_DISCOUNT = 0.25
+
 
 @dataclasses.dataclass
 class Catalog:
@@ -161,8 +166,15 @@ def should_use_fragment_path(plan: LogicalPlan, catalog: Catalog,
     partition plans consistently. Anything that does not lower
     (cross-alias predicates, edge-alias reuse, ``$params`` in edge
     predicates, a non-Scan source…) falls back to the interpreter, which
-    stays the semantic oracle."""
-    from repro.core.ir.codegen import lower_to_frontier
+    stays the semantic oracle.
+
+    When the relational *tail* also lowers (``lower_tail``, DESIGN.md
+    §14), the fragment route skips ``finish_frontier``'s Python row
+    re-materialization entirely, so it pays off at smaller estimates: the
+    admission bar drops to ``min_cost × FRAGMENT_TAIL_DISCOUNT``. The
+    discount is monotone — every plan eligible at ``min_cost`` stays
+    eligible — so previously-routed plans keep routing identically."""
+    from repro.core.ir.codegen import lower_tail, lower_to_frontier
 
     if plan_is_write(plan):
         return False
@@ -171,7 +183,18 @@ def should_use_fragment_path(plan: LogicalPlan, catalog: Catalog,
     program = lower_to_frontier(plan)
     if program is None or not (program.hops or program.shortest):
         return False
-    return plan_cost(plan, catalog) >= min_cost
+    cost = plan_cost(plan, catalog)
+    if cost >= min_cost:
+        return True
+    # rows-kind tails earn no discount: their row order (and therefore a
+    # LIMIT-without-ORDER BY subset, or tie order within a sort key) is
+    # the frontier substrate's vertex-id order, not the interpreter's
+    # traversal order — pulling a previously-interpreted plan over would
+    # visibly change its answers. Group/scalar tails are deterministic
+    # and interpreter-exact, so only they lower the admission bar.
+    tail = lower_tail(program)
+    return (tail is not None and tail.kind != "rows"
+            and cost >= min_cost * FRAGMENT_TAIL_DISCOUNT)
 
 
 def plan_cost(plan: LogicalPlan, catalog: Catalog) -> float:

@@ -621,6 +621,307 @@ def _lower_chain(ops: List) -> Optional[FrontierProgram]:
         tail=tuple(tail), shortest=shortest)
 
 
+# --------------------------------------------------------------------- #
+# Device tail — lowering the relational tail into the same jitted        #
+# program as the match prefix (DESIGN.md §14)                            #
+# --------------------------------------------------------------------- #
+
+class TailDataFallback(Exception):
+    """The tail lowered structurally but the *data* cannot ride float32
+    exactly (property dtype/magnitude, a parameter value that is not
+    float32-representable, or a runtime arithmetic peak ≥ 2²⁴). The
+    executor catches this internally and finishes through the interpreter
+    tail — the prefix counts are still valid, so unlike OverflowError this
+    never escapes to the serving layer."""
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceTail:
+    """A relational tail compiled to dense ops over the [B, N] path-count
+    matrix. Three shapes:
+
+    - ``rows``: no With — the result is head rows (repeated by path count)
+      optionally filtered upstream, ordered, limited, and projected;
+    - ``group``: ``WITH head, agg… AS name`` — one row per distinct head
+      vertex, aggregates as [B, N] lane values (count = the path counts
+      themselves, sum = count·expr, min/max/avg = expr);
+    - ``scalar``: ``WITH agg… AS name`` (no keys) — one output row per
+      query, aggregates as per-row dense reductions.
+
+    ``having`` are Select exprs applied after the With (device-evaluated
+    for ``group``, host-evaluated on the ≤1-row table for ``scalar``);
+    ``order_key`` is the resolved ORDER BY expression (None = natural
+    order); ``project`` is the original RETURN items, evaluated on the
+    host over the assembled (already ordered/limited) rows. ``prop_refs``
+    and ``param_names`` are what the device program must prefetch."""
+
+    kind: str                                    # rows | group | scalar
+    aggs: Tuple[Agg, ...]
+    having: Tuple[Any, ...]
+    order_key: Optional[Any]
+    order_desc: bool
+    limit: Optional[int]
+    project: Optional[Tuple[Tuple[Any, str], ...]]
+    prop_refs: Tuple[str, ...]
+    param_names: Tuple[str, ...]
+
+
+_F32_INT_LIMIT = 2 ** 24
+
+
+def f32_exact_scalar(v) -> bool:
+    """True when ``v`` is a finite real that float32 represents exactly —
+    the admission bar for Const/Param values entering the device tail
+    (comparisons against an inexact constant could flip)."""
+    if isinstance(v, bool) or not isinstance(
+            v, (int, float, np.integer, np.floating)):
+        return False
+    f = float(v)
+    return np.isfinite(f) and float(np.float32(f)) == f
+
+
+def _device_expr_type(e, head: str, agg_names: frozenset,
+                      props: set, pars: set) -> Optional[str]:
+    """Type-check an expression for device evaluation: returns "num" /
+    "bool", or None when any node cannot lower exactly (division, bool
+    arithmetic, non-f32-exact constants, refs outside head ∪ agg names).
+    Collects the property and parameter names the device program needs."""
+    from repro.core.ir.dag import PropRef
+    if isinstance(e, PropRef):
+        if e.prop is not None:
+            if e.alias != head:
+                return None
+            props.add(e.prop)
+            return "num"
+        if e.alias == head or e.alias in agg_names:
+            return "num"
+        return None
+    if isinstance(e, Const):
+        return "num" if f32_exact_scalar(e.value) else None
+    if isinstance(e, Param):
+        pars.add(e.name)
+        return "num"
+    if isinstance(e, BinExpr):
+        lt = _device_expr_type(e.left, head, agg_names, props, pars)
+        if lt is None:
+            return None
+        if e.op == "in":
+            if lt != "num" or not isinstance(e.right, Const):
+                return None
+            vals = e.right.value
+            if not isinstance(vals, (list, tuple)):
+                return None
+            return "bool" if all(f32_exact_scalar(v) for v in vals) else None
+        rt = _device_expr_type(e.right, head, agg_names, props, pars)
+        if rt is None:
+            return None
+        if e.op in ("+", "-", "*"):
+            return "num" if (lt, rt) == ("num", "num") else None
+        if e.op in ("==", "!=", "<", "<=", ">", ">="):
+            return "bool" if (lt, rt) == ("num", "num") else None
+        if e.op in ("and", "or"):
+            return "bool" if (lt, rt) == ("bool", "bool") else None
+        return None                                  # "/" stays on the host
+    return None
+
+
+_TAIL_AGG_FNS = ("count", "sum", "min", "max", "avg")
+
+
+def lower_tail(program: FrontierProgram) -> Optional[DeviceTail]:
+    """Decide whether a FrontierProgram's interpreter tail lowers to the
+    device, and compile it to a :class:`DeviceTail` if so (None = keep
+    ``finish_frontier`` exactly as today).
+
+    Eligible shape: ``[With?] Select* [Project] [OrderBy] Limit*`` where
+    every expression references only the head alias (and, after a With,
+    the aggregate names), lowers under :func:`_device_expr_type`, and the
+    ordering is expressible as sort-then-cut (a Limit *before* an OrderBy
+    truncates in natural order first — that stays on the interpreter).
+    Exactness is data-dependent (float32 carries integers only below
+    2²⁴), so structural eligibility here is completed by runtime peak
+    tracking in the executor: any overflow raises
+    :class:`TailDataFallback` and the query finishes on the interpreter."""
+    if program.shortest is not None or not program.tail:
+        return None
+    head = program.head
+    ops = list(program.tail)
+    kind = "rows"
+    aggs: Tuple[Agg, ...] = ()
+    agg_names: frozenset = frozenset()
+    props: set = set()
+    pars: set = set()
+    i = 0
+    if isinstance(ops[0], With):
+        w = ops[0]
+        if any(k != head for k in w.keys) or len(w.keys) > 1:
+            return None
+        names = set()
+        for a in w.aggs:
+            if a.fn not in _TAIL_AGG_FNS or a.name == head or a.name in names:
+                return None
+            if a.fn == "count":
+                if a.expr is not None:       # _normalize_count_aggs ran
+                    return None
+            elif _device_expr_type(a.expr, head, frozenset(),
+                                   props, pars) != "num":
+                return None
+            names.add(a.name)
+        kind = "group" if w.keys else "scalar"
+        if kind == "scalar" and not w.aggs:
+            return None                      # 0/1 no-column rows: degenerate
+        aggs, agg_names = w.aggs, frozenset(names)
+        i = 1
+    cols = ({head} | agg_names) if kind == "group" else (
+        set(agg_names) if kind == "scalar" else {head})
+    having: List[Any] = []
+    order_key = None
+    order_desc = False
+    limit: Optional[int] = None
+    project: Optional[Tuple[Tuple[Any, str], ...]] = None
+    seen_order = False
+    for op in ops[i:]:
+        if isinstance(op, Select):
+            # interpreter Selects mask the table: after a Project the out
+            # dict is already built (mask is a no-op on it) and after an
+            # OrderBy the limit interplay shifts — both stay interpreted
+            if (kind == "rows" or project is not None or seen_order
+                    or limit is not None):
+                return None
+            if not op.pred.refs() <= cols:
+                return None
+            if kind == "group":
+                if _device_expr_type(op.pred.expr, head, agg_names,
+                                     props, pars) != "bool":
+                    return None
+            having.append(op.pred.expr)      # scalar: host-eval on ≤1 row
+        elif isinstance(op, Project):
+            if project is not None:          # accumulating Projects: host
+                return None
+            refs: set = set()
+            for expr, _name in op.items:
+                refs |= expr.refs()
+            if not refs <= cols:
+                return None
+            project = op.items
+        elif isinstance(op, OrderBy):
+            if seen_order or limit is not None:
+                return None                  # Limit-then-OrderBy: host
+            seen_order = True
+            order_desc = op.desc
+            key_expr = None
+            if project is not None:          # projected names shadow table
+                for pe, pname in reversed(project):
+                    if pname == op.key:      # dict semantics: last wins
+                        key_expr = pe
+                        break
+            if key_expr is None:
+                if op.key not in cols:
+                    return None              # interpreter raises KeyError
+                from repro.core.ir.dag import PropRef
+                key_expr = PropRef(op.key, None)
+            if kind == "scalar":
+                order_key = None             # ≤1 row: sort is the identity
+            else:
+                if _device_expr_type(key_expr, head, agg_names,
+                                     props, pars) != "num":
+                    return None
+                order_key = key_expr
+        elif isinstance(op, Limit):
+            limit = op.n if limit is None else min(limit, op.n)
+        else:
+            return None
+    return DeviceTail(
+        kind=kind, aggs=tuple(aggs), having=tuple(having),
+        order_key=order_key, order_desc=order_desc, limit=limit,
+        project=project, prop_refs=tuple(sorted(props)),
+        param_names=tuple(sorted(pars)))
+
+
+def finish_device_tail(program: FrontierProgram, tail: DeviceTail,
+                       view: Dict[str, Any], pg,
+                       params: Optional[Dict[str, Any]] = None
+                       ) -> Dict[str, np.ndarray]:
+    """One query's device-tail outputs → result dict, matching
+    ``finish_frontier`` + ``execute_plan`` bit-for-bit on eligible tails.
+
+    ``view`` is the per-query slice of the jitted program's outputs
+    (numpy, already off-device): ``counts`` [N]; for rows/group kinds
+    ``cand`` [N] bool (post-having candidacy) and, when ordering,
+    ``order`` [N] (stable ascending argsort of the masked key — masked
+    lanes sort last, so the first ``cand.sum()`` entries are the result
+    in ascending key order; DESC reverses them, reproducing the
+    interpreter's reversed-stable-sort tie order); for group/scalar
+    kinds ``aggs`` {name: [N] | scalar}. Only the final top-``limit``
+    row *assembly* happens here — selection, ordering, filtering and
+    reduction all happened on device."""
+    head = program.head
+    lpg = pg if isinstance(pg, _LabelAwarePG) else _LabelAwarePG(pg)
+    limit = tail.limit
+    agg_fn = {a.name: a.fn for a in tail.aggs}
+    if tail.kind == "scalar":
+        n_rows = 1 if bool(view["has_rows"]) else 0
+        cnt = int(round(float(view["cnt"]))) if n_rows else 0
+        cols: Dict[str, np.ndarray] = {}
+        for a in tail.aggs:
+            if a.fn == "count":
+                col = np.array([cnt], np.int64)
+            elif a.fn == "avg":
+                col = np.array([float(view["aggs"][a.name])
+                                / max(cnt, 1)], np.float64)
+            else:
+                col = np.array([float(view["aggs"][a.name])], np.float64)
+            cols[a.name] = col[:n_rows]
+        table = Table(cols, {})
+        for hx in tail.having:
+            e = bind_expr(hx, params) if params else hx
+            keep = np.asarray(eval_expr(e, table.columns, lpg, {}), bool)
+            table = table.mask(np.broadcast_to(keep, (table.n_rows,)))
+        if limit is not None:
+            table = Table({k: v[:max(limit, 0)]
+                           for k, v in table.columns.items()}, {})
+    else:
+        counts = np.asarray(view["counts"])
+        cand = np.asarray(view["cand"], bool)
+        if tail.order_key is not None:
+            n_cand = int(np.count_nonzero(cand))
+            sel = np.asarray(view["order"], np.int64)[:n_cand]
+            if tail.order_desc:
+                sel = sel[::-1]
+        else:
+            sel = np.nonzero(cand)[0].astype(np.int64)
+        if tail.kind == "group":
+            if limit is not None:
+                sel = sel[:max(limit, 0)]
+            cols = {head: sel}
+            for a in tail.aggs:
+                if a.fn == "count":
+                    cols[a.name] = np.round(counts[sel]).astype(np.int64)
+                else:
+                    cols[a.name] = np.asarray(
+                        view["aggs"][a.name], np.float64)[sel]
+            table = Table(cols, {})
+        else:
+            mult = np.round(counts[sel]).astype(np.int64)
+            if limit is not None:
+                if limit <= 0:
+                    sel, mult = sel[:0], mult[:0]
+                else:
+                    cum = np.cumsum(mult)
+                    k = int(np.searchsorted(cum, limit, side="left"))
+                    if k < len(cum):         # cut inside vertex k's rows
+                        sel, mult = sel[:k + 1], mult[:k + 1].copy()
+                        mult[-1] -= int(cum[k]) - limit
+            table = Table({head: np.repeat(sel, mult)}, {})
+    if tail.project is not None:
+        out: Dict[str, np.ndarray] = {}
+        for expr, name in tail.project:
+            e = bind_expr(expr, params) if params else expr
+            out[name] = np.asarray(eval_expr(e, table.columns, lpg, {}))
+        return out
+    return dict(table.columns)
+
+
 def frontier_vertex_mask(alias: str, label: Optional[int],
                          pred: Optional[Pred], pg,
                          params: Optional[Dict[str, Any]] = None
@@ -650,13 +951,28 @@ def finish_frontier(program: FrontierProgram, counts: np.ndarray, pg,
     Path counts ride float32 (the TPU-native dtype): integers are exact
     only below 2²⁴, so a hub vertex that accumulates more paths than that
     would silently round. Refuse loudly instead — the serving layer
-    catches OverflowError and re-runs the batch on the interpreter."""
+    catches OverflowError and re-runs the batch on the interpreter. The
+    guard is dtype-aware: any float width gets its own exact-integer
+    ceiling (2^(mantissa bits + 1)), integer/bool counts are exact by
+    construction, and anything else is a contract violation (TypeError) —
+    no fallback path can hand in a dtype that silently bypasses the
+    serving layer's interpreter-rerun contract."""
     counts = np.asarray(counts)
-    if counts.dtype == np.float32 and counts.max(initial=0.0) >= 2 ** 24:
-        raise OverflowError(
-            f"path counts exceed float32 integer range "
-            f"(max {counts.max():.3g} ≥ 2^24); fragment-path multiplicities "
-            f"would be inexact — fall back to the interpreter")
+    if np.issubdtype(counts.dtype, np.floating):
+        exact_limit = 2 ** (np.finfo(counts.dtype).nmant + 1)
+        if counts.max(initial=0.0) >= exact_limit:
+            raise OverflowError(
+                f"path counts exceed {counts.dtype} integer range "
+                f"(max {counts.max():.3g} ≥ 2^"
+                f"{np.finfo(counts.dtype).nmant + 1}); fragment-path "
+                f"multiplicities would be inexact — fall back to the "
+                f"interpreter")
+    elif not (np.issubdtype(counts.dtype, np.integer)
+              or counts.dtype == np.bool_):
+        raise TypeError(
+            f"path counts must be a real numeric array, got dtype "
+            f"{counts.dtype} — the frontier substrate produces "
+            f"float32/float64 or integer counts only")
     nz = np.nonzero(counts > 0.5)[0]
     mult = np.round(counts[nz]).astype(np.int64)
     ids = np.repeat(nz.astype(np.int64), mult)

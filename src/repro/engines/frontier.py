@@ -35,12 +35,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.ir.codegen import (FrontierHop, FrontierProgram,
-                                   _LabelAwarePG, _expr_has_param,
-                                   finish_frontier, finish_shortest,
-                                   frontier_vertex_mask, lower_to_frontier)
-from repro.core.ir.dag import LogicalPlan
+from repro.core.ir.codegen import (DeviceTail, FrontierHop, FrontierProgram,
+                                   TailDataFallback, _LabelAwarePG,
+                                   _expr_has_param, f32_exact_scalar,
+                                   finish_device_tail, finish_frontier,
+                                   finish_shortest, frontier_vertex_mask,
+                                   lower_tail, lower_to_frontier)
+from repro.core.ir.dag import BinExpr, Const, LogicalPlan, Param, PropRef
 from repro.storage.lpg import PropertyGraph
+
+_F32_INT_LIMIT = 2 ** 24
 
 
 @dataclasses.dataclass
@@ -63,7 +67,8 @@ class FragmentFrontierExecutor:
 
     def __init__(self, pg: PropertyGraph, n_frags: int = 1, mesh=None,
                  use_kernels: bool = False,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 device_tail: bool = True):
         self.pg = pg if isinstance(pg, PropertyGraph) else PropertyGraph(pg)
         self.mesh = mesh
         if mesh is not None:
@@ -81,8 +86,14 @@ class FragmentFrontierExecutor:
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
         self.interpret = interpret
+        self.device_tail = device_tail
         self._hops: Dict[Tuple, _HopArrays] = {}
         self._runners: Dict[Tuple, Any] = {}
+        # device-tail compilation memo: (head, repr(tail ops)) → DeviceTail
+        # or None; validated float32 vertex-property columns (None ⇒ the
+        # property cannot ride float32 exactly — data fallback)
+        self._tails: Dict[Tuple, Optional[DeviceTail]] = {}
+        self._prop_cols: Dict[str, Optional[jnp.ndarray]] = {}
         # static (param-free) [N] stage masks, keyed (label, pred repr) —
         # rebuilt per execute only when the predicate carries $params
         self._masks: Dict[Tuple, jnp.ndarray] = {}
@@ -247,12 +258,9 @@ class FragmentFrontierExecutor:
                  for f in range(self.n_frags)]
         return jnp.concatenate(owned, axis=1)[:, :n]
 
-    def _runner(self, program: FrontierProgram):
-        skey = tuple((h.cache_key, h.min_hops, h.max_hops)
-                     for h in program.hops)
-        fn = self._runners.get(skey)
-        if fn is not None:
-            return fn
+    def _prefix_fn(self, program: FrontierProgram):
+        """The traceable prefix body shared by the plain runner and the
+        fused prefix+tail runner."""
         hop_specs = [(self._hop_arrays(h), h.min_hops, h.max_hops)
                      for h in program.hops]
 
@@ -282,9 +290,255 @@ class FragmentFrontierExecutor:
                     x = x * m
             return x, peak
 
-        fn = jax.jit(run)
+        return run
+
+    def _runner(self, program: FrontierProgram):
+        skey = tuple((h.cache_key, h.min_hops, h.max_hops)
+                     for h in program.hops)
+        fn = self._runners.get(skey)
+        if fn is not None:
+            return fn
+        fn = jax.jit(self._prefix_fn(program))
         self._runners[skey] = fn
         return fn
+
+    # ---------------------------------------------------------- device tail
+    def _device_tail(self, program: FrontierProgram) -> Optional[DeviceTail]:
+        """Structural tail eligibility, memoized per (head, tail) shape."""
+        key = (program.head, repr(program.tail))
+        if key not in self._tails:
+            self._tails[key] = lower_tail(program)
+        return self._tails[key]
+
+    def _tail_prop(self, name: str) -> jnp.ndarray:
+        """A vertex-property column as a device float32 vector, or
+        :class:`TailDataFallback` when the data cannot ride float32
+        exactly (non-integer dtype or magnitudes at/above 2²⁴). The
+        verdict is cached — same policy as the static mask cache."""
+        if name not in self._prop_cols:
+            lpg = _LabelAwarePG(self.pg)
+            try:
+                raw = np.asarray(lpg.vprop(name))
+            except KeyError:
+                # unknown property: the interpreter tail raises the real
+                # KeyError — don't mask it behind a device artifact
+                self._prop_cols[name] = None
+            else:
+                col = None
+                if np.issubdtype(raw.dtype, np.integer) \
+                        or raw.dtype == np.bool_:
+                    if raw.size == 0 or \
+                            np.abs(raw).max() < _F32_INT_LIMIT:
+                        col = jnp.asarray(raw.astype(np.float32))
+                self._prop_cols[name] = col
+        col = self._prop_cols[name]
+        if col is None:
+            raise TailDataFallback(
+                f"vertex property {name!r} is not exactly float32-"
+                f"representable (need integer/bool dtype, |v| < 2^24)")
+        return col
+
+    def _tail_pvals(self, tail: DeviceTail, params_list
+                    ) -> Dict[str, jnp.ndarray]:
+        """Per-query [B, 1] float32 columns for the tail's $params; any
+        value float32 cannot carry exactly falls back (a comparison
+        against an inexact constant could flip)."""
+        pvals: Dict[str, jnp.ndarray] = {}
+        for name in tail.param_names:
+            col = np.empty((len(params_list), 1), np.float32)
+            for b, p in enumerate(params_list):
+                if name not in p or not f32_exact_scalar(p[name]):
+                    raise TailDataFallback(
+                        f"parameter ${name} missing or not exactly "
+                        f"float32-representable")
+                col[b, 0] = float(p[name])
+            pvals[name] = jnp.asarray(col)
+        return pvals
+
+    def _tail_runner(self, program: FrontierProgram, tail: DeviceTail):
+        """The fused prefix+tail jitted program (DESIGN.md §14): one trace
+        runs the match prefix AND the relational tail — WHERE as frontier
+        masks, aggregates as dense reductions over the [B, N] counts,
+        ORDER BY as a stable masked argsort — returning only the small
+        per-query views ``finish_device_tail`` assembles rows from.
+
+        Exactness is certified inside the trace: ``tail_peak`` tracks the
+        magnitude of every arithmetic intermediate (masked to candidate
+        lanes) plus the absolute-sum bound of each float32 accumulation;
+        the caller discards the device tail and finishes on the
+        interpreter when it reaches 2²⁴."""
+        skey = ("__tail__",
+                tuple((h.cache_key, h.min_hops, h.max_hops)
+                      for h in program.hops),
+                program.head, repr(tail))
+        fn = self._runners.get(skey)
+        if fn is not None:
+            return fn
+        if self.pg.n_vertices >= _F32_INT_LIMIT:
+            raise TailDataFallback(
+                "vertex ids exceed float32 exact-integer range")
+        props = {p: self._tail_prop(p) for p in tail.prop_refs}
+        prefix = self._prefix_fn(program)
+        head = program.head
+        iota = jnp.arange(self.pg.n_vertices, dtype=jnp.float32)
+        agg_fns = {a.name: a.fn for a in tail.aggs}
+
+        def dev(e, ctx, base):
+            """Device eval → (value, peak): value is [N] / [B, 1] / [B, N]
+            float32 (bool for predicates); peak bounds |v| of every
+            arithmetic node over base-candidate lanes."""
+            zero = jnp.float32(0.0)
+            if isinstance(e, PropRef):
+                if e.prop is not None:
+                    return props[e.prop], zero
+                if e.alias == head:
+                    return iota, zero
+                return ctx["aggs"][e.alias], zero
+            if isinstance(e, Const):
+                return jnp.float32(float(e.value)), zero
+            if isinstance(e, Param):
+                return ctx["pvals"][e.name], zero
+            lv, lp = dev(e.left, ctx, base)
+            if e.op == "in":
+                vals = np.asarray([float(v) for v in e.right.value],
+                                  np.float32)
+                if vals.size == 0:
+                    return jnp.zeros_like(lv, bool) & base, lp
+                hit = jnp.any(lv[..., None] == jnp.asarray(vals), axis=-1)
+                return hit, lp
+            rv, rp = dev(e.right, ctx, base)
+            peak = jnp.maximum(lp, rp)
+            if e.op in ("+", "-", "*"):
+                v = {"+": lv + rv, "-": lv - rv, "*": lv * rv}[e.op]
+                peak = jnp.maximum(peak, jnp.max(
+                    jnp.abs(jnp.where(base, v, 0.0)), initial=0.0))
+                return v, peak
+            if e.op == "and":
+                return jnp.logical_and(lv, rv), peak
+            if e.op == "or":
+                return jnp.logical_or(lv, rv), peak
+            cmp = {"==": lv == rv, "!=": lv != rv, "<": lv < rv,
+                   "<=": lv <= rv, ">": lv > rv, ">=": lv >= rv}[e.op]
+            return cmp, peak
+
+        def run_tail(x, masks, pvals):
+            counts, peak = prefix(x, masks)
+            cand0 = counts > 0.5
+            ctx: Dict[str, Any] = {"pvals": pvals, "aggs": {}}
+            tpeak = jnp.float32(0.0)
+            out: Dict[str, Any] = {"counts": counts, "peak": peak}
+            if tail.kind == "scalar":
+                xm = jnp.where(cand0, counts, 0.0)
+                evs = {}
+                for a in tail.aggs:
+                    if a.fn == "count":
+                        continue
+                    ev, p = dev(a.expr, ctx, cand0)
+                    tpeak = jnp.maximum(tpeak, p)
+                    evs[a.name] = ev
+                names = [a.name for a in tail.aggs if a.fn != "count"]
+                aggs_out: Dict[str, Any] = {}
+                if self.use_kernels and names and all(
+                        evs[nm].ndim == 1 for nm in names):
+                    from repro.kernels.ops import tail_reduce
+                    vals = jnp.stack([evs[nm] for nm in names])
+                    cnt, sums, sabs, mins, maxs = tail_reduce(
+                        xm, vals, interpret=self.interpret)
+                    for j, nm in enumerate(names):
+                        fn_ = agg_fns[nm]
+                        if fn_ in ("sum", "avg"):
+                            aggs_out[nm] = sums[:, j]
+                            tpeak = jnp.maximum(tpeak, jnp.max(
+                                sabs[:, j], initial=0.0))
+                        else:
+                            aggs_out[nm] = (mins if fn_ == "min"
+                                            else maxs)[:, j]
+                else:
+                    cnt = jnp.sum(xm, axis=1)
+                    for nm in names:
+                        fn_ = agg_fns[nm]
+                        if fn_ in ("sum", "avg"):
+                            term = jnp.where(cand0, counts * evs[nm], 0.0)
+                            aggs_out[nm] = jnp.sum(term, axis=1)
+                            # Σ m·|e| bounds every partial sum, so below
+                            # 2^24 the f32 accumulation is exact in any
+                            # association order
+                            tpeak = jnp.maximum(tpeak, jnp.max(
+                                jnp.sum(jnp.abs(term), axis=1),
+                                initial=0.0))
+                        elif fn_ == "min":
+                            aggs_out[nm] = jnp.min(
+                                jnp.where(cand0, evs[nm], jnp.inf), axis=1)
+                        else:
+                            aggs_out[nm] = jnp.max(
+                                jnp.where(cand0, evs[nm], -jnp.inf),
+                                axis=1)
+                tpeak = jnp.maximum(tpeak, jnp.max(cnt, initial=0.0))
+                out["cnt"], out["has_rows"] = cnt, cnt > 0.5
+                out["aggs"] = aggs_out
+                out["tail_peak"] = tpeak
+                return out
+            if tail.kind == "group":
+                aggs_out = {}
+                for a in tail.aggs:
+                    if a.fn == "count":
+                        ctx["aggs"][a.name] = counts
+                        continue
+                    ev, p = dev(a.expr, ctx, cand0)
+                    tpeak = jnp.maximum(tpeak, p)
+                    if a.fn == "sum":
+                        col = jnp.where(cand0, counts * ev, 0.0)
+                        tpeak = jnp.maximum(tpeak, jnp.max(
+                            jnp.abs(col), initial=0.0))
+                    else:
+                        # min/max/avg of a group whose rows all share the
+                        # head vertex: the expr's single distinct value
+                        col = jnp.where(cand0, ev, 0.0)
+                    ctx["aggs"][a.name] = col
+                    aggs_out[a.name] = col
+                out["aggs"] = aggs_out
+            cand = cand0
+            for hx in tail.having:
+                hv, hp = dev(hx, ctx, cand0)
+                tpeak = jnp.maximum(tpeak, hp)
+                cand = jnp.logical_and(cand, hv)
+            out["cand"] = cand
+            if tail.order_key is not None:
+                kv, kp = dev(tail.order_key, ctx, cand0)
+                tpeak = jnp.maximum(tpeak, kp)
+                from repro.kernels.ops import masked_order
+                out["order"] = masked_order(
+                    jnp.broadcast_to(kv, counts.shape), cand)
+            out["tail_peak"] = tpeak
+            return out
+
+        fn = jax.jit(run_tail)
+        self._runners[skey] = fn
+        return fn
+
+    def _finish_tail(self, program: FrontierProgram, tail: DeviceTail,
+                     outd: Dict[str, Any], counts: np.ndarray, params_list
+                     ) -> List[Dict[str, np.ndarray]]:
+        """Per-query host assembly of the device-tail outputs."""
+        aggs = {k: np.asarray(v) for k, v in outd.get("aggs", {}).items()}
+        cand = np.asarray(outd["cand"]) if "cand" in outd else None
+        order = np.asarray(outd["order"]) if "order" in outd else None
+        cnt = np.asarray(outd["cnt"]) if "cnt" in outd else None
+        has = np.asarray(outd["has_rows"]) if "has_rows" in outd else None
+        res = []
+        for b, params in enumerate(params_list):
+            view: Dict[str, Any] = {"counts": counts[b],
+                                    "aggs": {k: v[b] for k, v in
+                                             aggs.items()}}
+            if cand is not None:
+                view["cand"] = cand[b]
+            if order is not None:
+                view["order"] = order[b]
+            if cnt is not None:
+                view["cnt"], view["has_rows"] = cnt[b], has[b]
+            res.append(finish_device_tail(program, tail, view, self.pg,
+                                          params=params))
+        return res
 
     def _shortest_runner(self, sp):
         skey = ("__shortest__", sp.edge_label, sp.direction,
@@ -341,6 +595,33 @@ class FragmentFrontierExecutor:
             self._stage_mask(h.vertex_alias, h.vertex_label, h.vertex_pred,
                              params_list)
             for h in program.hops)
+        tail = self._device_tail(program) if self.device_tail \
+            and program.tail else None
+        if tail is not None:
+            try:
+                pvals = self._tail_pvals(tail, params_list)
+                outd = self._tail_runner(program, tail)(x0, masks, pvals)
+            except TailDataFallback:
+                outd = None            # data can't ride f32: interpreter tail
+            if outd is not None:
+                counts = np.asarray(outd["counts"])
+                if float(outd["peak"]) >= 2 ** 24 \
+                        or counts.max(initial=0.0) >= 2 ** 24:
+                    # prefix counts themselves are inexact — the same
+                    # contract finish_frontier enforces: the serving layer
+                    # catches OverflowError and reruns on the interpreter
+                    raise OverflowError(
+                        f"frontier path count exceeds float32 exact-integer "
+                        f"range (2^24); rerun on the interpreter")
+                if float(outd["tail_peak"]) < 2 ** 24:
+                    return self._finish_tail(program, tail, outd, counts,
+                                             params_list)
+                # tail arithmetic overflowed but the counts are exact:
+                # finish through the interpreter tail, no device re-run
+                return [finish_frontier(program, counts[b], self.pg,
+                                        params=params_list[b],
+                                        procedures=procedures)
+                        for b in range(B)]
         counts, peak = self._runner(program)(x0, masks)
         if float(peak) >= 2 ** 24:
             # same contract as finish_frontier's final check, but covers

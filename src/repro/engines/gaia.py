@@ -86,28 +86,32 @@ class GaiaEngine:
 
     # ------------------------------------------------- fragment frontier
     def fragment_executor(self, n_frags: int = 1, mesh=None,
-                          use_kernels: bool = False):
+                          use_kernels: bool = False,
+                          device_tail: bool = True):
         """Lazily-built executor for the dense fragment path (DESIGN.md
         §9); one per engine so hop adjacencies and jitted programs are
         shared across templates."""
-        key = (n_frags, id(mesh), use_kernels)
+        key = (n_frags, id(mesh), use_kernels, device_tail)
         cache = getattr(self, "_frontier_execs", None)
         if cache is None:
             cache = self._frontier_execs = {}
         if key not in cache:
             from repro.engines.frontier import FragmentFrontierExecutor
             cache[key] = FragmentFrontierExecutor(
-                self.pg, n_frags=n_frags, mesh=mesh, use_kernels=use_kernels)
+                self.pg, n_frags=n_frags, mesh=mesh, use_kernels=use_kernels,
+                device_tail=device_tail)
         return cache[key]
 
     def execute_fragment(self, plan: LogicalPlan,
                          params_list: List[Optional[Dict[str, Any]]],
                          n_frags: int = 1, mesh=None,
-                         use_kernels: bool = False
+                         use_kernels: bool = False,
+                         device_tail: bool = True
                          ) -> List[Dict[str, np.ndarray]]:
         """Execute one admission batch of a lowered OLAP template as ONE
-        jitted device program over the [B, N] frontier matrix."""
-        ex = self.fragment_executor(n_frags, mesh, use_kernels)
+        jitted device program over the [B, N] frontier matrix (eligible
+        relational tails included — DESIGN.md §14)."""
+        ex = self.fragment_executor(n_frags, mesh, use_kernels, device_tail)
         return ex.execute(plan, params_list, procedures=self._procedures)
 
     def run_partitioned(self, query: str, n_partitions: int = 4,

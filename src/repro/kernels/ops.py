@@ -166,6 +166,41 @@ def segment_sum(vals: jnp.ndarray, segs: jnp.ndarray, n_out: int, *,
     return out[:n_out]
 
 
+def tail_reduce(x: jnp.ndarray, vals: jnp.ndarray, *,
+                interpret: Optional[bool] = None,
+                block_n: int = 512):
+    """Masked per-row reductions for the device tail (DESIGN.md §14):
+    ``x`` [B, N] float32 path counts (0 ⇒ vertex absent from the row's
+    multiset), ``vals`` [C, N] float32 aggregate value vectors. Returns
+    ``(cnt [B], sums [B, C], sabs [B, C], mins [B, C], maxs [B, C])`` —
+    COUNT(*), weighted SUMs, their absolute-value twins (the float32
+    exactness certificate), and masked MIN/MAX (±inf on empty rows).
+    Zero-padded lanes are inert by construction."""
+    interpret = _default_interpret() if interpret is None else interpret
+    b, n = x.shape
+    c = vals.shape[0]
+    if c == 0 or b == 0:
+        return ref.tail_reduce_jnp(x, vals)
+    pad = (-n) % block_n
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((b, pad), x.dtype)], axis=1)
+        vals = jnp.concatenate(
+            [vals, jnp.zeros((c, pad), vals.dtype)], axis=1)
+    from repro.kernels import reduce as rd
+    cnt, sums, sabs, mins, maxs = rd.tail_reduce_grid(
+        x, vals, block_n=min(block_n, x.shape[1]), interpret=interpret)
+    return cnt[:, 0], sums, sabs, mins, maxs
+
+
+def masked_order(key: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Stable ascending argsort of ``key`` restricted to ``mask`` lanes:
+    masked-out entries take a +inf key and sort last, so the first
+    ``mask.sum()`` indices are the result in ascending key order (ties in
+    lane order — the interpreter's stable-sort tie order; the host
+    reverses that slice for DESC, matching its reversed stable sort)."""
+    return jnp.argsort(jnp.where(mask, key, jnp.inf), axis=-1, stable=True)
+
+
 def segment_sum_checked(vals: np.ndarray, segs: np.ndarray, n_out: int,
                         **kw) -> jnp.ndarray:
     """Host-checked version: verifies sortedness + span precondition and

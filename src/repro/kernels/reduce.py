@@ -1,0 +1,88 @@
+"""Pallas TPU masked row-reductions over the [B, N] path-count matrix.
+
+The device tail's scalar aggregates (DESIGN.md §14): for an admission
+batch of B queries whose matched multiset at the head is encoded by the
+count matrix ``x`` (``x[b, v]`` = paths of query b ending at v, 0 =
+absent), reduce each row against C aggregate value vectors ``vals[c, v]``
+in one pass:
+
+- ``cnt[b]   = Σ_v x[b, v]``                     (COUNT(*))
+- ``sums[b,c] = Σ_v x[b, v] · vals[c, v]``       (SUM / AVG numerator)
+- ``sabs[b,c] = Σ_v x[b, v] · |vals[c, v]|``     (exactness certificate:
+  it bounds every partial sum of ``sums``, so ``sabs < 2²⁴`` proves the
+  float32 accumulation is association-independent and exact)
+- ``mins/maxs[b,c]`` over lanes with ``x > 0``   (MIN / MAX)
+
+The weighted sums ride the MXU as one ``x @ valsᵀ`` dot per tile; min/max
+ride the VPU. Tiles accumulate across a sequential grid over N
+(``@pl.when(t == 0)`` init — the segment_sum idiom), with all outputs
+VMEM-resident. Lanes padded with ``x == 0`` are naturally inert.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tail_reduce_kernel(x_ref, v_ref, cnt_ref, sum_ref, abs_ref,
+                        min_ref, max_ref):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        abs_ref[...] = jnp.zeros_like(abs_ref)
+        min_ref[...] = jnp.full_like(min_ref, jnp.inf)
+        max_ref[...] = jnp.full_like(max_ref, -jnp.inf)
+
+    x = x_ref[...]                               # [B, block_n] counts
+    v = v_ref[...]                               # [C, block_n] agg values
+    cnt_ref[...] += jnp.sum(x, axis=1, keepdims=True)
+    dot = functools.partial(jax.lax.dot_general,
+                            dimension_numbers=(((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    sum_ref[...] += dot(x, v)                    # [B, C] on the MXU
+    abs_ref[...] += dot(x, jnp.abs(v))
+    present = (x > 0.0)[:, None, :]              # [B, 1, block_n]
+    vb = v[None, :, :]                           # [1, C, block_n]
+    min_ref[...] = jnp.minimum(
+        min_ref[...], jnp.min(jnp.where(present, vb, jnp.inf), axis=2))
+    max_ref[...] = jnp.maximum(
+        max_ref[...], jnp.max(jnp.where(present, vb, -jnp.inf), axis=2))
+
+
+def tail_reduce_grid(x: jnp.ndarray, vals: jnp.ndarray, *,
+                     block_n: int = 512, interpret: bool = False):
+    """x [B, N] float32 counts, vals [C, N] float32 (C ≥ 1), N a multiple
+    of ``block_n``; returns (cnt [B, 1], sums [B, C], sabs [B, C],
+    mins [B, C], maxs [B, C]), all float32."""
+    b, n = x.shape
+    c = vals.shape[0]
+    assert n % block_n == 0, (n, block_n)
+    assert vals.shape[1] == n, (vals.shape, n)
+    grid = (n // block_n,)
+    out_shape = (
+        jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        jax.ShapeDtypeStruct((b, c), jnp.float32),
+        jax.ShapeDtypeStruct((b, c), jnp.float32),
+        jax.ShapeDtypeStruct((b, c), jnp.float32),
+        jax.ShapeDtypeStruct((b, c), jnp.float32),
+    )
+    full = pl.BlockSpec((b, c), lambda t: (0, 0))
+    return pl.pallas_call(
+        _tail_reduce_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, block_n), lambda t: (0, t)),
+            pl.BlockSpec((c, block_n), lambda t: (0, t)),
+        ],
+        out_specs=(pl.BlockSpec((b, 1), lambda t: (0, 0)),
+                   full, full, full, full),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, vals)

@@ -97,6 +97,45 @@ def segment_sum_ref(vals: jnp.ndarray, segs: jnp.ndarray,
     ].add(jnp.where(keep, vals.astype(jnp.float32), 0.0))
 
 
+def tail_reduce_ref(x: np.ndarray, vals: np.ndarray):
+    """Numpy oracle for :func:`repro.kernels.ops.tail_reduce`: x [B, N]
+    float32 counts (0 ⇒ absent), vals [C, N] float32. Returns
+    (cnt [B], sums [B, C], sabs [B, C], mins [B, C], maxs [B, C]) with
+    the kernel's float32 arithmetic (sums via float32 dot)."""
+    x = np.asarray(x, np.float32)
+    vals = np.asarray(vals, np.float32)
+    cnt = x.sum(axis=1, dtype=np.float32)
+    sums = (x @ vals.T).astype(np.float32)
+    sabs = (x @ np.abs(vals).T).astype(np.float32)
+    present = x[:, None, :] > 0
+    vb = np.broadcast_to(vals[None], (x.shape[0],) + vals.shape)
+    mins = np.where(present, vb, np.inf).min(axis=2).astype(np.float32)
+    maxs = np.where(present, vb, -np.inf).max(axis=2).astype(np.float32)
+    return cnt, sums, sabs, mins, maxs
+
+
+def tail_reduce_jnp(x: jnp.ndarray, vals: jnp.ndarray):
+    """jnp form of :func:`tail_reduce_ref` — the ops-level fallback for
+    degenerate shapes (C == 0 or B == 0), traceable inside the tail jit."""
+    x = x.astype(jnp.float32)
+    vals = vals.astype(jnp.float32)
+    cnt = jnp.sum(x, axis=1)
+    sums = x @ vals.T
+    sabs = x @ jnp.abs(vals).T
+    present = (x > 0.0)[:, None, :]
+    vb = vals[None, :, :]
+    mins = jnp.min(jnp.where(present, vb, jnp.inf), axis=2)
+    maxs = jnp.max(jnp.where(present, vb, -jnp.inf), axis=2)
+    return cnt, sums, sabs, mins, maxs
+
+
+def masked_order_ref(key: np.ndarray, mask: np.ndarray) -> np.ndarray:
+    """Numpy oracle for :func:`repro.kernels.ops.masked_order`: stable
+    ascending argsort with masked-out lanes keyed +inf (sorted last)."""
+    return np.argsort(np.where(np.asarray(mask, bool), key, np.inf),
+                      axis=-1, kind="stable")
+
+
 def wkv_ref(r, k, v, lw, u, state0):
     """Sequential per-token RWKV6 WKV recurrence (oracle for the chunked
     form in repro.models.rwkv6). r,k,v,lw:[B,S,H,P]; u:[H,P]; state:[B,H,P,P]."""

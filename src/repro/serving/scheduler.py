@@ -54,7 +54,8 @@ from concurrent.futures import Future
 from typing import Any, Deque, Dict, List, Optional, Tuple
 
 from repro.serving.plan_cache import plan_key
-from repro.serving.service import QueryService, Response, ServingStats
+from repro.serving.service import (REQUEST_ERRORS, QueryService, Response,
+                                   ServingStats)
 from repro.serving.writes import split_write_plan, stage_writes
 
 
@@ -203,6 +204,7 @@ class FlexScheduler:
         self._units_dispatched = 0  # micro-batches formed (coalescing gauge)
         self._closed = False
         self._stopping = False
+        self._internal_error: Optional[BaseException] = None
         self._dispatcher_done = False
         self._started = False
         self._threads: List[threading.Thread] = []
@@ -265,6 +267,10 @@ class FlexScheduler:
         item = _Item(tenant, template, dict(params or {}), language, key)
         with self._cv:
             if self._closed:
+                if self._internal_error is not None:
+                    raise SchedulerClosed(
+                        "scheduler stopped by an internal error: "
+                        f"{self._internal_error!r}")
                 raise SchedulerClosed(
                     "scheduler is closed; no new work accepted")
             tc = self._tenants.get(tenant)
@@ -307,6 +313,26 @@ class FlexScheduler:
     def units_dispatched(self) -> int:
         with self._cv:
             return self._units_dispatched
+
+    @property
+    def internal_error(self) -> Optional[BaseException]:
+        """The scheduler-internal failure that latched it shut, if any.
+        Request-shaped errors (bad syntax, unbound params, permission)
+        resolve their own future and never latch; anything else — a bug
+        in the engine stack, a corrupted binding, KeyboardInterrupt —
+        closes the door instead of being swallowed per-request."""
+        with self._cv:
+            return self._internal_error
+
+    def _trip_internal(self, err: BaseException) -> None:
+        """Latch an internal error: record it, stop accepting work, fail
+        everything still queued or buffered. First trip wins."""
+        with self._cv:
+            if self._internal_error is None:
+                self._internal_error = err
+            self._closed = True
+            self._abort_locked()
+            self._cv.notify_all()
 
     # ---------------------------------------------------------- drain/close
     def drain(self, timeout: Optional[float] = None) -> bool:
@@ -463,7 +489,7 @@ class FlexScheduler:
         lanes. Invalid requests resolve their futures immediately."""
         svc = self.service
         annotated: List[Tuple[_Item, Any, bool, str]] = []
-        for item in popped:
+        for idx, item in enumerate(popped):
             try:
                 plan, cached = svc.compile(item.template, item.language)
                 binding = svc._binding
@@ -478,9 +504,16 @@ class FlexScheduler:
                 if missing:
                     raise KeyError(f"unbound parameters {sorted(missing)} "
                                    f"for template {item.template!r}")
-            except Exception as e:          # noqa: BLE001 — per-request fail
+            except REQUEST_ERRORS as e:      # bad request: fail its future
                 self._resolve_error(item, e)
                 continue
+            except BaseException as e:       # scheduler-internal: latch
+                for later in popped[idx:]:
+                    self._resolve_error(later, e)
+                self._trip_internal(e)
+                if not isinstance(e, Exception):
+                    raise                    # KeyboardInterrupt/SystemExit
+                return
             self._lane_memo[item.key] = \
                 "fast" if route == "hiactor" else "slow"
             annotated.append((item, plan, cached, route, binding))
@@ -582,9 +615,16 @@ class FlexScheduler:
             else:
                 outs, eng = svc.exec_fragment_batch(unit.binding, unit.plan,
                                                     params)
-        except Exception as e:                  # noqa: BLE001
+        except REQUEST_ERRORS as e:             # request-shaped: fail futures
             for it in unit.items:
                 self._resolve_error(it, e)
+            return
+        except BaseException as e:              # engine bug: latch the door
+            for it in unit.items:
+                self._resolve_error(it, e)
+            self._trip_internal(e)
+            if not isinstance(e, Exception):
+                raise
             return
         c_us = (time.perf_counter() - t0) * 1e6
         # batch wall time attributed to each rider — the flush convention
@@ -593,14 +633,21 @@ class FlexScheduler:
 
     def _run_interpreted_unit(self, unit: _Unit, t_exec: float) -> None:
         svc = self.service
-        for it in unit.items:
+        for idx, it in enumerate(unit.items):
             t0 = time.perf_counter()
             try:
                 out = svc.exec_interpreted(unit.binding, unit.plan,
                                            it.params)
-            except Exception as e:              # noqa: BLE001
+            except REQUEST_ERRORS as e:         # this request's own fault
                 self._resolve_error(it, e)
                 continue
+            except BaseException as e:          # engine bug: latch the door
+                for later in unit.items[idx:]:
+                    self._resolve_error(later, e)
+                self._trip_internal(e)
+                if not isinstance(e, Exception):
+                    raise
+                return
             c_us = (time.perf_counter() - t0) * 1e6
             self._resolve(it, out, unit.route, unit.cached, c_us, t_exec)
 
@@ -620,41 +667,65 @@ class FlexScheduler:
             if store.write_version != binding.version:
                 binding = svc.prepare_binding()
                 svc.install_binding(binding)
-        except Exception as e:                  # noqa: BLE001
+        except BaseException as e:              # epoch machinery is ours
             for it in unit.items:
                 self._resolve_error(it, e)
+            self._trip_internal(e)
+            if not isinstance(e, Exception):
+                raise
             return
         staged = []
-        for it in unit.items:
+        for idx, it in enumerate(unit.items):
             t0 = time.perf_counter()
             try:
                 ws = stage_writes(unit.plan, binding.gaia.pg, it.params,
                                   procedures=svc.procedures)
-            except Exception as e:              # noqa: BLE001
+            except REQUEST_ERRORS as e:         # bad write request
                 self._resolve_error(it, e)
                 continue
+            except BaseException as e:          # staging bug: latch
+                for st, _ws, _c in staged:
+                    self._resolve_error(st, e)
+                for later in unit.items[idx:]:
+                    self._resolve_error(later, e)
+                self._trip_internal(e)
+                if not isinstance(e, Exception):
+                    raise
+                return
             staged.append((it, ws, (time.perf_counter() - t0) * 1e6))
         results = []
         committed = False
-        for it, ws, c_us in staged:
+        for idx, (it, ws, c_us) in enumerate(staged):
             try:
                 if ws.n_edges or ws.n_set:
                     v = ws.apply(store)
                     committed = True
                 else:
                     v = store.write_version
-            except Exception as e:              # noqa: BLE001
+            except REQUEST_ERRORS as e:         # this write's own fault
                 self._resolve_error(it, e)
                 continue
+            except BaseException as e:          # half-applied epoch: latch
+                for rt, _res, _c in results:
+                    self._resolve_error(rt, e)
+                for later, _ws, _c in staged[idx:]:
+                    self._resolve_error(later, e)
+                self._trip_internal(e)
+                if not isinstance(e, Exception):
+                    raise
+                return
             results.append((it, ws.result(v), c_us))
         if committed:
             try:
                 svc.install_binding(svc.prepare_binding())
                 if svc.on_commit is not None:
                     svc.on_commit(svc._bound_version)
-            except Exception as e:              # noqa: BLE001
+            except BaseException as e:          # committed but unreadable
                 for it, _res, _c in results:
                     self._resolve_error(it, e)
+                self._trip_internal(e)
+                if not isinstance(e, Exception):
+                    raise
                 return
         # futures resolve after the swap: a tenant that sees its write's
         # response can immediately read-its-write through the new epoch

@@ -54,6 +54,21 @@ from repro.storage.grin import Traits
 from repro.storage.lpg import PropertyGraph
 
 
+# Errors a single request can legitimately produce: bad templates
+# (SyntaxError from the parsers), unbound/mistyped params and missing
+# columns (LookupError), type mismatches, data-dependent arithmetic
+# failures (ArithmeticError covers the float32-exactness OverflowError),
+# unsupported operator shapes, and write-permission rejections. Admission
+# and per-request execution catch exactly these and convert them to
+# per-request failures; anything else — KeyboardInterrupt/SystemExit,
+# assertion failures, a corrupted binding — is an internal fault that
+# must surface, not be swallowed into a request rejection (the
+# FlexScheduler additionally latches itself on those; DESIGN.md §14).
+REQUEST_ERRORS: Tuple[type, ...] = (
+    SyntaxError, ValueError, LookupError, TypeError, ArithmeticError,
+    NotImplementedError, PermissionError)
+
+
 @dataclasses.dataclass
 class Request:
     template: str
@@ -136,6 +151,7 @@ class QueryService:
                  procedures: Optional[ProcedureRegistry] = None,
                  fragment: bool = True, n_frags: int = 1,
                  fragment_min_cost: float = 256.0,
+                 device_tail: bool = True,
                  write_store=None, on_commit=None):
         self.cache = PlanCache(cache_capacity, on_evict=self._on_plan_evicted)
         self.batch_size = max(1, int(batch_size))
@@ -146,6 +162,9 @@ class QueryService:
         self.fragment = fragment
         self.n_frags = max(1, int(n_frags))
         self.fragment_min_cost = fragment_min_cost
+        # lower eligible relational tails into the fragment batch's jitted
+        # program (DESIGN.md §14); off = interpreter tail, as before
+        self.device_tail = device_tail
         # mutable substrate behind the write route (DESIGN.md §11): a
         # MUTABLE MVCC store given as `store` serves reads through a
         # pinned snapshot and writes through itself; `on_commit(version)`
@@ -325,8 +344,9 @@ class QueryService:
         path counts blow past float32 exactness (finish_frontier
         refuses)."""
         try:
-            outs = binding.gaia.execute_fragment(plan, list(params_list),
-                                                 n_frags=self.n_frags)
+            outs = binding.gaia.execute_fragment(
+                plan, list(params_list), n_frags=self.n_frags,
+                device_tail=self.device_tail)
             return outs, "fragment"
         except OverflowError:
             return [binding.gaia.execute_plan(plan.bind(p))
@@ -386,7 +406,9 @@ class QueryService:
             try:
                 plan, cached = b.gaia.compile_cached(first.template,
                                                      first.language)
-            except Exception as e:
+            except REQUEST_ERRORS as e:
+                # request-shaped failures only: KeyboardInterrupt /
+                # SystemExit / internal bugs propagate out of the flush
                 rejected.extend([e] * len(items))
                 continue
             is_write = plan_is_write(plan)
@@ -400,7 +422,7 @@ class QueryService:
                     continue
                 try:                       # shape check: mutations tail-only
                     split_write_plan(plan)
-                except Exception as e:
+                except REQUEST_ERRORS as e:
                     rejected.extend([e] * len(items))
                     continue
             needed = plan.param_names()
@@ -417,7 +439,7 @@ class QueryService:
                     try:
                         ws = stage_writes(plan, b.gaia.pg, req.params,
                                           procedures=self.procedures)
-                    except Exception as e:
+                    except REQUEST_ERRORS as e:
                         rejected.append(e)
                         continue
                     staged_ws[pos] = (ws,

@@ -1,0 +1,166 @@
+"""Error taxonomy at the serving front door (DESIGN.md §12/§14): request
+errors (bad syntax, unbound params, permissions) resolve only their own
+future and leave the door open; anything internal-shaped — an engine bug,
+a corrupted binding — must surface loudly: the scheduler latches shut on
+it instead of swallowing it per-request, and the synchronous flush
+propagates it instead of mis-filing it as a rejection."""
+
+import pytest
+
+from repro.serving import SchedulerClosed
+from repro.serving.service import REQUEST_ERRORS
+from repro.serving.session import FlexSession
+from repro.storage.gart import GARTStore
+from repro.storage.generators import snb_store
+
+pytestmark = pytest.mark.timeout(120)
+
+WAIT = 30
+POINT = "MATCH (a:Person {id: $x}) RETURN a.credits AS c"
+# CALL plans always execute per-request on the interpreter route
+HYBRID = ("CALL algo.pagerank($d) YIELD v, rank "
+          "MATCH (v:Person) WHERE rank > $t "
+          "RETURN v AS v, rank AS r ORDER BY r DESC LIMIT 10")
+
+
+def mk_session(**kw) -> FlexSession:
+    cs = snb_store(n_persons=60, n_items=30, n_posts=10, seed=11)
+    return FlexSession(GARTStore.from_csr(cs), **kw)
+
+
+class Boom(RuntimeError):
+    """Internal-shaped: RuntimeError is deliberately NOT request-shaped."""
+
+
+def test_boom_is_not_request_shaped():
+    assert not isinstance(Boom("x"), REQUEST_ERRORS)
+    # the taxonomy's contract: parser/validation errors ARE request-shaped
+    for e in (SyntaxError("q"), KeyError("p"), ValueError("v"),
+              OverflowError("o"), PermissionError("w")):
+        assert isinstance(e, REQUEST_ERRORS)
+
+
+class TestSchedulerRequestErrors:
+    def test_bad_template_fails_only_its_future(self):
+        with mk_session() as s:
+            sched = s.serve_async()
+            bad = sched.submit("MATCH THIS IS NOT CYPHER", {})
+            with pytest.raises(SyntaxError):
+                bad.result(timeout=WAIT)
+            assert sched.internal_error is None
+            ok = sched.submit(POINT, {"x": 3}).result(timeout=WAIT)
+            assert ok.result["c"].shape == (1,)
+
+    def test_unbound_param_fails_only_its_future(self):
+        with mk_session() as s:
+            sched = s.serve_async()
+            bad = sched.submit(POINT, {})
+            with pytest.raises(KeyError):
+                bad.result(timeout=WAIT)
+            assert sched.internal_error is None
+            assert sched.is_running
+
+
+class TestSchedulerInternalErrors:
+    def test_engine_bug_latches_the_scheduler(self):
+        """A RuntimeError out of batched execution is NOT swallowed into
+        the request's future alone: the scheduler records it, closes the
+        door, and names it on the next submit."""
+        with mk_session() as s:
+            sched = s.serve_async()
+            svc = sched.service
+            err = Boom("adjacency cache corrupted")
+
+            def broken(*a, **k):
+                raise err
+
+            svc.exec_point_batch = broken
+            fut = sched.submit(POINT, {"x": 1})
+            with pytest.raises(Boom):
+                fut.result(timeout=WAIT)
+            assert sched.internal_error is err
+            with pytest.raises(SchedulerClosed, match="internal error"):
+                sched.submit(POINT, {"x": 2})
+
+    def test_compile_stage_bug_latches(self):
+        with mk_session() as s:
+            sched = s.serve_async()
+            svc = sched.service
+
+            def broken(*a, **k):
+                raise Boom("plan cache invariant violated")
+
+            svc.compile = broken
+            fut = sched.submit(POINT, {"x": 1})
+            with pytest.raises(Boom):
+                fut.result(timeout=WAIT)
+            assert isinstance(sched.internal_error, Boom)
+
+    def test_interpreted_unit_bug_fails_whole_unit(self):
+        with mk_session() as s:
+            sched = s.serve_async()
+            svc = sched.service
+
+            def broken(*a, **k):
+                raise Boom("interpreter state corrupted")
+
+            svc.exec_interpreted = broken
+            futs = [sched.submit(HYBRID, {"d": 0.85, "t": float(i)})
+                    for i in range(3)]
+            seen = []
+            for f in futs:
+                try:
+                    f.result(timeout=WAIT)
+                except (Boom, SchedulerClosed) as e:
+                    seen.append(e)
+            # every accepted future resolved (none dropped); at least the
+            # triggering one carries the real error, and the door latched
+            assert len(seen) == 3
+            assert any(isinstance(e, Boom) for e in seen)
+            assert isinstance(sched.internal_error, Boom)
+
+    def test_request_error_from_engine_still_per_request(self):
+        """An OverflowError (request-shaped: the 2^24 fallback contract)
+        out of execution resolves its future and keeps the door open."""
+        with mk_session() as s:
+            sched = s.serve_async()
+            svc = sched.service
+
+            def overflowing(*a, **k):
+                raise OverflowError("counts exceed float32 range")
+
+            svc.exec_point_batch = overflowing
+            fut = sched.submit(POINT, {"x": 1})
+            with pytest.raises(OverflowError):
+                fut.result(timeout=WAIT)
+            assert sched.internal_error is None
+            assert sched.is_running
+
+
+class TestFlushInternalErrors:
+    def test_compile_bug_propagates_out_of_flush(self):
+        """Before the taxonomy split, ANY compile failure was treated as
+        a rejected request; an internal bug must escape the flush."""
+        s = mk_session()
+        svc = s.interactive()
+        svc.submit(POINT, {"x": 1})
+        svc.flush()                      # warm the binding
+        svc.submit(POINT, {"x": 2})
+
+        def broken(*a, **k):
+            raise Boom("plan cache invariant violated")
+
+        svc._binding.gaia.compile_cached = broken
+        with pytest.raises(Boom):
+            svc.flush()
+
+    def test_bad_syntax_is_still_a_rejection(self):
+        s = mk_session()
+        svc = s.interactive()
+        svc.submit("MATCH THIS IS NOT CYPHER", {})
+        with pytest.raises(SyntaxError):
+            svc.flush()
+        # the queue survives a rejection: a later valid flush works
+        svc.submit(POINT, {"x": 1})
+        resps, _ = svc.flush()
+        assert len(resps) == 1

@@ -1,0 +1,372 @@
+"""Device-resident relational tails (DESIGN.md §14): the lowered
+WHERE/aggregate/ORDER BY+LIMIT pipeline against the interpreter oracle —
+exact equality (values AND dtypes), tie-order, fallback taxonomy, the
+dtype-aware ``finish_frontier`` overflow guard, and the tail kernels
+against their numpy oracles."""
+
+import jax
+import numpy as np
+import pytest
+from conftest import assert_results_bag_equal
+
+from repro.core.ir.codegen import (DeviceTail, TailDataFallback,
+                                   finish_frontier, lower_tail,
+                                   lower_to_frontier)
+from repro.engines.frontier import FragmentFrontierExecutor
+from repro.engines.gaia import GaiaEngine
+from repro.kernels import ops, ref
+from repro.storage.csr import CSRStore
+from repro.storage.generators import snb_store
+
+
+@pytest.fixture(scope="module")
+def engine():
+    return GaiaEngine(snb_store(n_persons=300, n_items=150, n_posts=40,
+                                seed=3))
+
+
+def assert_results_exactly_equal(ref_out, got):
+    """Stricter than the bag check: same keys, same row order, same
+    values, same dtypes — the lowered tail reproduces the interpreter's
+    output byte-for-byte, including stable-sort tie order."""
+    assert set(ref_out) == set(got)
+    for k in ref_out:
+        a, b = np.asarray(ref_out[k]), np.asarray(got[k])
+        assert a.dtype == b.dtype, f"{k}: {a.dtype} != {b.dtype}"
+        assert a.shape == b.shape, f"{k}: {a.shape} != {b.shape}"
+        np.testing.assert_array_equal(a, b, err_msg=k)
+
+
+# query shapes covering every lowered tail kind (group/scalar/rows)
+ELIGIBLE_QUERIES = [
+    # group: per-head COUNT
+    ("MATCH (a:Person {region: 2})-[:KNOWS]->(b:Person) "
+     "WITH b, COUNT(*) AS k RETURN b AS v, k AS k", {}),
+    # group + HAVING + ORDER BY ... DESC LIMIT (tie-heavy key)
+    ("MATCH (a:Person {region: $r})-[:KNOWS]->(b:Person) "
+     "WITH b, COUNT(*) AS k WHERE k > 1 "
+     "RETURN b AS v, k AS k ORDER BY k DESC LIMIT 10", {"r": 2}),
+    # group with non-count aggregates over a head property
+    ("MATCH (a:Person {region: 1})-[:KNOWS]->(b:Person) "
+     "WITH b, SUM(b.credits) AS s, MIN(b.credits) AS lo, "
+     "MAX(b.credits) AS hi, AVG(b.credits) AS m "
+     "RETURN b AS v, s AS s, lo AS lo, hi AS hi, m AS m "
+     "ORDER BY s LIMIT 25", {}),
+    # scalar: dense per-query reductions, no keys
+    ("MATCH (a:Person {region: 3})-[:KNOWS]->(b:Person) "
+     "WITH COUNT(*) AS c, SUM(b.credits) AS s, MIN(b.credits) AS lo, "
+     "MAX(b.credits) AS hi, AVG(b.credits) AS m "
+     "RETURN c AS c, s AS s, lo AS lo, hi AS hi, m AS m", {}),
+    # rows: head rows repeated by multiplicity, ordered by a property
+    ("MATCH (a:Person {region: 2})-[:KNOWS]->(b:Person) "
+     "RETURN b AS v, b.credits AS c ORDER BY c LIMIT 20", {}),
+    ("MATCH (a:Person {region: 2})-[:KNOWS]->(b:Person) "
+     "WHERE b.credits > $t RETURN b AS v, b.credits AS c "
+     "ORDER BY c DESC LIMIT 15", {"t": 120}),
+    # var-length prefix feeding a lowered group tail
+    ("MATCH (a:Person {region: 4})-[:KNOWS*1..3]->(b:Person) "
+     "WITH b, COUNT(*) AS k RETURN b AS v, k AS k "
+     "ORDER BY k DESC LIMIT 12", {}),
+    # LIMIT larger than the result set
+    ("MATCH (a:Person {region: 5})-[:KNOWS]->(b:Person) "
+     "WITH b, COUNT(*) AS k RETURN b AS v, k AS k "
+     "ORDER BY k LIMIT 100000", {}),
+    # group LIMIT without ORDER BY: both sides emit ascending head ids,
+    # so even the unspecified-subset shape is interpreter-exact here
+    ("MATCH (a:Person {region: 2})-[:KNOWS]->(b:Person) "
+     "WITH b, COUNT(*) AS k RETURN b AS v, k AS k LIMIT 7", {}),
+]
+
+
+class TestDeviceTailExact:
+    @pytest.mark.parametrize("n_frags", [1, 2, 4])
+    @pytest.mark.parametrize("qi", range(len(ELIGIBLE_QUERIES)))
+    def test_exact_vs_interpreter(self, engine, n_frags, qi):
+        q, params = ELIGIBLE_QUERIES[qi]
+        plan = engine.compile(q)
+        program = lower_to_frontier(plan)
+        assert program is not None
+        assert lower_tail(program) is not None, "tail did not lower"
+        got = FragmentFrontierExecutor(engine.pg, n_frags=n_frags).execute(
+            plan, [params or None])[0]
+        want = engine.execute_plan(plan, params=params or None)
+        assert_results_exactly_equal(want, got)
+
+    def test_device_path_actually_taken(self, engine, monkeypatch):
+        """The lowered tail must not silently fall back to the Python
+        interpreter: poison ``finish_frontier`` and require the device
+        assembly path end-to-end."""
+        import repro.engines.frontier as frontier_mod
+
+        def boom(*a, **k):
+            raise AssertionError("interpreter tail ran on an eligible plan")
+
+        monkeypatch.setattr(frontier_mod, "finish_frontier", boom)
+        q, params = ELIGIBLE_QUERIES[1]
+        plan = engine.compile(q)
+        got = FragmentFrontierExecutor(engine.pg, n_frags=2).execute(
+            plan, [params])[0]
+        want = engine.execute_plan(plan, params=params)
+        assert_results_exactly_equal(want, got)
+
+    @pytest.mark.parametrize("batch", [1, 8, 64])
+    def test_batched_params_exact(self, engine, batch):
+        q = ("MATCH (a:Person {region: $r})-[:KNOWS]->(b:Person) "
+             "WHERE b.credits > $t WITH b, COUNT(*) AS k "
+             "RETURN b AS v, k AS k ORDER BY k DESC LIMIT 10")
+        plan = engine.compile(q)
+        assert lower_tail(lower_to_frontier(plan)) is not None
+        params = [{"r": b % 8, "t": 100 + 5 * b} for b in range(batch)]
+        outs = FragmentFrontierExecutor(engine.pg, n_frags=2).execute(
+            plan, params)
+        assert len(outs) == batch
+        for p, got in zip(params, outs):
+            assert_results_exactly_equal(
+                engine.execute_plan(plan, params=p), got)
+
+    def test_tie_order_matches_interpreter(self):
+        """Every vertex has the same count → the ORDER BY key is one big
+        tie; device ordering (stable argsort + host reverse) must hit the
+        interpreter's reversed-stable row order exactly."""
+        n = 40
+        src = np.repeat(np.arange(1, n), 1)
+        dst = np.zeros(n - 1, np.int64)
+        store = CSRStore(n, np.concatenate([src, src]),
+                         np.concatenate([dst, (dst + 1) % n]),
+                         vertex_labels=np.zeros(n, np.int32),
+                         edge_labels=np.zeros(2 * (n - 1), np.int32),
+                         vertex_props={"x": np.arange(n, dtype=np.int64)})
+        eng = GaiaEngine(store)
+        for desc in ("", " DESC"):
+            q = (f"MATCH (a)-[]->(b) WITH b, COUNT(*) AS k "
+                 f"RETURN b AS v, k AS k ORDER BY k{desc} LIMIT 1")
+            plan = eng.compile(q)
+            assert lower_tail(lower_to_frontier(plan)) is not None
+            got = FragmentFrontierExecutor(eng.pg).execute(plan, [None])[0]
+            assert_results_exactly_equal(eng.execute_plan(plan), got)
+
+
+class TestTailFallbacks:
+    def test_non_f32_exact_param_falls_back(self, engine):
+        """0.1 has no exact float32 image — the device tail must refuse
+        the binding (TailDataFallback) and the interpreter tail answers,
+        identically to the never-lowered path."""
+        q = ("MATCH (a:Person {region: 2})-[:KNOWS]->(b:Person) "
+             "WITH b, COUNT(*) AS k WHERE k > $t "
+             "RETURN b AS v, k AS k ORDER BY k DESC LIMIT 50")
+        plan = engine.compile(q)
+        ex = FragmentFrontierExecutor(engine.pg)
+        tail = ex._device_tail(lower_to_frontier(plan))
+        assert tail is not None and "t" in tail.param_names
+        with pytest.raises(TailDataFallback):
+            ex._tail_pvals(tail, [{"t": 0.1}])
+        got = ex.execute(plan, [{"t": 0.1}])[0]
+        assert_results_bag_equal(
+            engine.execute_plan(plan, params={"t": 0.1}), got)
+
+    def test_huge_property_falls_back(self):
+        """Property values at/above 2^24 cannot ride float32 lanes: the
+        prop column is rejected, the interpreter tail still answers."""
+        n = 8
+        src = np.array([0, 0, 1, 2, 3])
+        dst = np.array([1, 2, 3, 3, 4])
+        store = CSRStore(n, src, dst,
+                         vertex_labels=np.zeros(n, np.int32),
+                         edge_labels=np.zeros(len(src), np.int32),
+                         vertex_props={"big": (np.arange(n, dtype=np.int64)
+                                               + 2 ** 24)})
+        eng = GaiaEngine(store)
+        q = ("MATCH (a)-[]->(b) WITH b, SUM(b.big) AS s "
+             "RETURN b AS v, s AS s ORDER BY s LIMIT 5")
+        plan = eng.compile(q)
+        ex = FragmentFrontierExecutor(eng.pg)
+        with pytest.raises(TailDataFallback):
+            ex._tail_prop("big")
+        got = ex.execute(plan, [None])[0]
+        assert_results_bag_equal(eng.execute_plan(plan), got)
+
+    def test_device_tail_off_still_answers(self, engine):
+        q, params = ELIGIBLE_QUERIES[1]
+        plan = engine.compile(q)
+        got = FragmentFrontierExecutor(engine.pg, device_tail=False).execute(
+            plan, [params])[0]
+        assert_results_bag_equal(engine.execute_plan(plan, params=params),
+                                 got)
+
+    @pytest.mark.parametrize("q", [
+        # division in a device expression never lowers (f32 quotients
+        # are inexact); as a host-side projection it may still lower
+        "MATCH (a:Person)-[:KNOWS]->(b:Person) "
+        "RETURN b AS v, b.credits / 2 AS h LIMIT 5",
+        # non-f32-exact constant in a HAVING predicate
+        "MATCH (a:Person)-[:KNOWS]->(b:Person) "
+        "WITH b, SUM(b.credits) AS s WHERE s > 0.1 "
+        "RETURN b AS v, s AS s LIMIT 5",
+    ])
+    def test_awkward_shapes_keep_route_equivalence(self, engine, q):
+        """Shapes that stress the eligibility frontier must either not
+        lower at all or answer exactly as the pre-existing fragment
+        route (interpreter tail) did — LIMIT without ORDER BY picks an
+        unspecified subset, so the oracle is the route, not the
+        synchronous interpreter."""
+        plan = engine.compile(q)
+        program = lower_to_frontier(plan)
+        if program is None:
+            return                    # prefix itself ineligible: fine
+        got_on = FragmentFrontierExecutor(engine.pg).execute(
+            plan, [None])[0]
+        got_off = FragmentFrontierExecutor(
+            engine.pg, device_tail=False).execute(plan, [None])[0]
+        assert_results_exactly_equal(got_off, got_on)
+
+
+class TestFinishFrontierGuard:
+    """Regression for the dtype-blind 2^24 guard: every float width gets
+    its own exact-integer ceiling; integers never overflow-trip; junk
+    dtypes are a loud contract violation."""
+
+    @pytest.fixture(scope="class")
+    def program(self, request):
+        eng = GaiaEngine(snb_store(n_persons=50, n_items=30, n_posts=10,
+                                   seed=0))
+        plan = eng.compile("MATCH (a:Person)-[:KNOWS]->(b:Person) "
+                           "RETURN b AS v LIMIT 3")
+        prog = lower_to_frontier(plan)
+        assert prog is not None
+        return prog, eng.pg
+
+    @pytest.mark.parametrize("dtype,bad", [
+        (np.float16, 2.0 ** 11),      # nmant 10 → exact below 2^11
+        (np.float32, 2.0 ** 24),
+        (np.float64, 2.0 ** 53),
+    ])
+    def test_float_widths_have_own_ceiling(self, program, dtype, bad):
+        prog, pg = program
+        counts = np.zeros(pg.n_vertices, dtype)
+        counts[0] = bad
+        with pytest.raises(OverflowError):
+            finish_frontier(prog, counts, pg)
+        # strictly below the ceiling: fine (capped so the row
+        # re-materialization stays allocatable)
+        counts[0] = min(bad / 2, 2.0 ** 20)
+        out = finish_frontier(prog, counts, pg)
+        assert len(out["v"]) == 3
+
+    def test_float16_would_have_passed_old_guard(self, program):
+        """The bug this fixes: 4096 < 2^24 slipped past the old constant
+        while being far beyond float16's exact-integer range."""
+        prog, pg = program
+        counts = np.zeros(pg.n_vertices, np.float16)
+        counts[0] = 4096.0
+        with pytest.raises(OverflowError):
+            finish_frontier(prog, counts, pg)
+
+    def test_integer_and_bool_counts_never_trip(self, program):
+        prog, pg = program
+        for dtype in (np.int64, np.int32, np.bool_):
+            counts = np.zeros(pg.n_vertices, dtype)
+            counts[:4] = 1
+            out = finish_frontier(prog, counts, pg)
+            assert len(out["v"]) == 3
+
+    def test_non_numeric_counts_are_type_error(self, program):
+        prog, pg = program
+        counts = np.zeros(pg.n_vertices, np.complex128)
+        with pytest.raises(TypeError):
+            finish_frontier(prog, counts, pg)
+
+
+class TestTailKernels:
+    RNG = np.random.default_rng(7)
+
+    @pytest.mark.parametrize("B,C,N", [(1, 1, 64), (4, 3, 512),
+                                       (8, 5, 1000), (2, 0, 128)])
+    def test_tail_reduce_matches_ref(self, B, C, N):
+        x = np.where(self.RNG.random((B, N)) < 0.3,
+                     self.RNG.integers(1, 9, (B, N)), 0).astype(np.float32)
+        vals = self.RNG.integers(-50, 50, (C, N)).astype(np.float32)
+        cnt, sums, sabs, mins, maxs = (
+            np.asarray(a) for a in ops.tail_reduce(x, vals, interpret=True))
+        rcnt, rsums, rsabs, rmins, rmaxs = ref.tail_reduce_ref(x, vals)
+        np.testing.assert_array_equal(cnt, rcnt)
+        np.testing.assert_array_equal(sums, rsums)
+        np.testing.assert_array_equal(sabs, rsabs)
+        np.testing.assert_array_equal(mins, rmins)
+        np.testing.assert_array_equal(maxs, rmaxs)
+
+    @pytest.mark.parametrize("B,N", [(1, 16), (5, 257), (3, 1024)])
+    def test_masked_order_matches_ref(self, B, N):
+        key = self.RNG.integers(0, 7, (B, N)).astype(np.float32)  # ties
+        mask = self.RNG.random((B, N)) < 0.5
+        got = np.asarray(ops.masked_order(key, mask))
+        np.testing.assert_array_equal(got, ref.masked_order_ref(key, mask))
+
+
+# --------------------------------------------------------------- hypothesis
+# optional outside CI (mirrors conftest): the deterministic suites above
+# must run even where hypothesis isn't installed
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+if HAS_HYPOTHESIS:
+    SETTINGS = dict(max_examples=25, deadline=None,
+                    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+_HYP_ENGINE = []
+
+
+def _hyp_engine():
+    if not _HYP_ENGINE:
+        _HYP_ENGINE.append(GaiaEngine(snb_store(
+            n_persons=200, n_items=100, n_posts=30, seed=11)))
+    return _HYP_ENGINE[0]
+
+
+if HAS_HYPOTHESIS:
+    @st.composite
+    def tail_queries(draw):
+        """Random eligible-shaped tails: WHERE × agg × ORDER BY+LIMIT."""
+        kind = draw(st.sampled_from(["group", "scalar", "rows"]))
+        region = draw(st.integers(0, 7))
+        hops = draw(st.sampled_from(["-[:KNOWS]->", "-[:KNOWS*1..2]->"]))
+        prefix = f"MATCH (a:Person {{region: {region}}}){hops}(b:Person) "
+        where = draw(st.sampled_from(
+            ["", "WHERE b.credits > $t ", "WHERE b.credits > $t "
+             "AND b.is_fraud_seed = 0 "]))
+        agg = draw(st.sampled_from(["COUNT(*)", "SUM(b.credits)",
+                                    "MIN(b.credits)", "MAX(b.credits)",
+                                    "AVG(b.credits)"]))
+        limit = draw(st.sampled_from([1, 3, 10, 100000]))
+        desc = draw(st.sampled_from(["", " DESC"]))
+        if kind == "group":
+            q = (prefix + where + f"WITH b, {agg} AS k "
+                 f"RETURN b AS v, k AS k ORDER BY k{desc} LIMIT {limit}")
+        elif kind == "scalar":
+            q = (prefix + where + f"WITH {agg} AS k RETURN k AS k")
+        else:
+            q = (prefix + where + f"RETURN b AS v, b.credits AS c "
+                 f"ORDER BY c{desc} LIMIT {limit}")
+        t = draw(st.integers(0, 300))
+        batch = draw(st.sampled_from([1, 8, 64]))
+        n_frags = draw(st.sampled_from([1, 2, 4]))
+        return q, ("$t" in q), t, batch, n_frags
+
+    class TestDeviceTailHypothesis:
+        @given(tail_queries())
+        @settings(**SETTINGS)
+        def test_random_tails_match_interpreter(self, spec):
+            q, has_param, t, batch, n_frags = spec
+            eng = _hyp_engine()
+            plan = eng.compile(q)
+            params = [{"t": t + i} if has_param else None
+                      for i in range(batch)]
+            outs = FragmentFrontierExecutor(
+                eng.pg, n_frags=n_frags).execute(plan, params)
+            for p, got in zip(params, outs):
+                assert_results_bag_equal(eng.execute_plan(plan, params=p),
+                                         got)
