@@ -1,0 +1,200 @@
+"""Exp-10: delta-based incremental maintenance under sustained writes
+(DESIGN.md §15).
+
+Before PR 9 every commit rebound the world: new PropertyGraph facade,
+catalog rebuilt by full scans, engines reconstructed, stored procedures
+re-registered, frontier slabs re-staged. This section measures what the
+O(delta) advance buys, against a contender whose incremental path is
+disabled (``_advance_binding -> None``) so every commit takes the
+full-rebuild fallback — the same code path that remains the semantic
+oracle.
+
+Rows:
+
+- ``exp10_incr_commit_to_query`` vs ``exp10_rebuild_commit_to_query``:
+  latency from a committed write batch to the first answered read mix
+  (point lookup + 2-hop count + 3-hop fragment traversal) on the fresh
+  snapshot — prepare_binding + install + serve, one shot per commit
+  round (the advance is one-shot by nature: it consumes the commit's
+  staged delta), medians over alternating-order rounds. Acceptance bar
+  (full run): incremental ≥ 5× faster.
+- ``exp10_{incr,rebuild}_mixed{1,10,50}``: sustained LDBC-interactive
+  style streams (70/30 point lookups / 1-hop counts among reads) at
+  1% / 10% / 50% write rates, admitted in small chunks so commits keep
+  coming; wall-clock QPS for each contender over identical fresh
+  stores. Acceptance bar (full run): ≥ 5× at the 10% mix.
+
+Every measured query — both timing loops — is asserted bag-equal
+between the incremental and full-rebuild services; ``--smoke`` (tier-1
+CI) runs the equality gates on a small store and skips the bars.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import record
+from repro.serving import QueryService
+from repro.storage.gart import GARTStore
+from repro.storage.generators import E_KNOWS, snb_store
+
+POINT = "MATCH (a:Person {id: $x}) RETURN a.credits AS c"
+HOP = ("MATCH (a:Person {id: $x})-[:KNOWS]->(b:Person) "
+       "WITH a, COUNT(b) AS k RETURN k AS k")
+FRAG = ("MATCH (a:Person)-[:KNOWS]->(b:Person)-[:BUY]->(c:Item) "
+        "WHERE a.credits > $t AND c.price > $p RETURN c AS c")
+W_CREATE = ("MATCH (a:Person {id: $x}), (b:Person {id: $y}) "
+            "CREATE (a)-[:KNOWS {date: $d}]->(b)")
+W_SET = "MATCH (a:Person {id: $x}) SET a.credits = a.credits + $c"
+
+
+class _RebuildOnlyService(QueryService):
+    """The pre-PR-9 world: every prepare_binding is a full rebuild."""
+
+    def _advance_binding(self, store, base, delta):
+        return None
+
+
+def _fresh_store(n_persons: int) -> GARTStore:
+    cs = snb_store(n_persons=n_persons, n_items=n_persons // 2,
+                   n_posts=n_persons // 8, seed=11)
+    return GARTStore.from_csr(cs)
+
+
+def _bag(out):
+    cols = sorted(out)
+    rows = zip(*(np.asarray(out[c]).tolist() for c in cols))
+    return sorted(map(tuple, rows))
+
+
+def _read_mix():
+    return [(POINT, {"x": 5}), (HOP, {"x": 7}),
+            (FRAG, {"t": 100, "p": 50})]
+
+
+def _mixed_requests(n: int, write_rate: float, n_persons: int, seed: int):
+    """The LDBC-interactive shape (the exp6 convention): point lookups
+    and 1-hop counts laced with CREATE/SET at ``write_rate``."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        r = rng.random()
+        x = int(rng.integers(0, n_persons))
+        if r < write_rate / 2:
+            reqs.append((W_CREATE, {"x": x,
+                                    "y": int(rng.integers(0, n_persons)),
+                                    "d": i}))
+        elif r < write_rate:
+            reqs.append((W_SET, {"x": x, "c": int(rng.integers(1, 10))}))
+        elif r < write_rate + (1.0 - write_rate) * 0.7:
+            reqs.append((POINT, {"x": x}))
+        else:
+            reqs.append((HOP, {"x": x}))
+    return reqs
+
+
+def _commit_to_query(n_persons: int, smoke: bool):
+    """One commit round: writes land directly in the store (the service
+    still holds the pre-commit binding), then each contender builds the
+    next binding from that SAME base and serves the read mix. One timed
+    shot per round — the advance consumes the commit's staged delta, so
+    re-measuring it against a stale base would silently rebuild — with
+    the in-round order alternating so neither contender always runs on
+    a warm allocator."""
+    store = _fresh_store(n_persons)
+    svc = QueryService(store, batch_size=64, n_frags=2,
+                       fragment_min_cost=0.0)
+    reads = _read_mix()
+    svc.serve(reads)                 # warm plans, routes, slabs, procs
+    rng = np.random.default_rng(3)
+    rounds = 2 if smoke else 7
+    t_inc, t_reb = [], []
+
+    def _timed(build):
+        t0 = time.perf_counter()
+        svc.install_binding(build())
+        rs, _ = svc.serve(reads)
+        return time.perf_counter() - t0, [_bag(r.result) for r in rs]
+
+    for rnd in range(rounds + 1):    # round 0 is untimed warmup
+        base = svc._binding
+        src = rng.integers(0, n_persons, 8)
+        dst = rng.integers(0, n_persons, 8)
+        store.add_edges(src, dst, label=E_KNOWS,
+                        props={"date": np.full(8, rnd, np.int64)})
+        snap = store.snapshot()
+        inc = lambda: svc.prepare_binding(store=snap, base=base)  # noqa: E731
+        reb = lambda: svc._make_binding(snap, None)               # noqa: E731
+        if rnd % 2:
+            dt_r, out_r = _timed(reb)
+            dt_i, out_i = _timed(inc)
+        else:
+            dt_i, out_i = _timed(inc)
+            dt_r, out_r = _timed(reb)
+        assert out_i == out_r, \
+            f"round {rnd}: incremental advance diverges from full rebuild"
+        if rnd:
+            t_inc.append(dt_i)
+            t_reb.append(dt_r)
+    m_inc = float(np.median(t_inc))
+    m_reb = float(np.median(t_reb))
+    speedup = m_reb / m_inc
+    record("exp10_incr_commit_to_query", m_inc * 1e6, "oracle=equal")
+    record("exp10_rebuild_commit_to_query", m_reb * 1e6,
+           f"incr_speedup={speedup:.1f}x")
+    if not smoke:
+        assert speedup >= 5.0, \
+            f"commit-to-fresh-query speedup {speedup:.1f}x < 5x bar"
+
+
+def _sustained(write_rate: float, n_persons: int, n_reqs: int,
+               chunk: int, smoke: bool) -> float:
+    """Identical request streams over identical fresh stores, admitted in
+    small chunks so commits keep coming; returns the speedup."""
+    reqs = _mixed_requests(n_reqs, write_rate, n_persons,
+                           seed=int(write_rate * 100))
+    outs = {}
+    times = {}
+    for tag, cls in (("incr", QueryService),
+                     ("rebuild", _RebuildOnlyService)):
+        svc = cls(_fresh_store(n_persons), batch_size=64, n_frags=2)
+        svc.serve([(POINT, {"x": 5}), (HOP, {"x": 7})])  # warm off-clock
+        bags = []
+        t0 = time.perf_counter()
+        for i in range(0, len(reqs), chunk):
+            rs, _ = svc.serve(reqs[i:i + chunk])
+            bags.extend(_bag(r.result) for r in rs)
+        times[tag] = time.perf_counter() - t0
+        outs[tag] = bags
+    assert outs["incr"] == outs["rebuild"], \
+        f"{write_rate:.0%} mix: incremental stream diverges from rebuild"
+    pct = int(write_rate * 100)
+    speedup = times["rebuild"] / times["incr"]
+    record(f"exp10_incr_mixed{pct}", times["incr"] / n_reqs * 1e6,
+           f"qps={n_reqs / times['incr']:.0f};oracle=equal")
+    record(f"exp10_rebuild_mixed{pct}", times["rebuild"] / n_reqs * 1e6,
+           f"qps={n_reqs / times['rebuild']:.0f};"
+           f"incr_speedup={speedup:.1f}x")
+    return speedup
+
+
+def run(smoke: bool = False):
+    n_persons = 300 if smoke else 4000
+    _commit_to_query(n_persons, smoke)
+    rates = (0.10,) if smoke else (0.01, 0.10, 0.50)
+    n_reqs = 64 if smoke else 512
+    for rate in rates:
+        speedup = _sustained(rate, n_persons, n_reqs, chunk=16,
+                             smoke=smoke)
+        if not smoke and abs(rate - 0.10) < 1e-9:
+            assert speedup >= 5.0, \
+                f"10% mix sustained speedup {speedup:.1f}x < 5x bar"
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit_header
+
+    emit_header()
+    run()

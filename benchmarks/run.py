@@ -16,14 +16,16 @@ def main() -> None:
     ap.add_argument("--only", default="all",
                     help="comma list: storage,query,traversal,hybrid,"
                          "analytics,learning,exp5,exp6,readwrite,"
-                         "exp7,serving,exp8,macro,exp9,tail,kernels")
+                         "exp7,serving,exp8,macro,exp9,tail,exp10,incr,"
+                         "kernels")
     ap.add_argument("--smoke", action="store_true",
                     help="smoke mode for sections that support it "
-                         "(exp8/exp9: equality gate only, small store)")
+                         "(exp8/exp9/exp10: equality gate only, small "
+                         "store)")
     args = ap.parse_args()
     wanted = set(args.only.split(",")) if args.only != "all" else {
         "storage", "query", "hybrid", "analytics", "learning",
-        "readwrite", "serving", "macro", "tail", "kernels"}
+        "readwrite", "serving", "macro", "tail", "incr", "kernels"}
 
     from benchmarks.common import emit_header
     emit_header()
@@ -64,6 +66,10 @@ def main() -> None:
         from benchmarks import tail_bench
         sections.append(
             ("tail", lambda: tail_bench.run(smoke=args.smoke)))
+    if wanted & {"incr", "exp10"}:
+        from benchmarks import incr_bench
+        sections.append(
+            ("incr", lambda: incr_bench.run(smoke=args.smoke)))
     if "kernels" in wanted:
         from benchmarks import kernel_bench
         sections.append(("kernels", kernel_bench.run))

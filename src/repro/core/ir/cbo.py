@@ -41,6 +41,13 @@ class Catalog:
     # mean-field fanout wildly underestimates zipf joins)
     size_biased: Dict[Tuple[int, int, str], float] = dataclasses.field(
         default_factory=dict)
+    # sufficient statistics behind ``size_biased`` so :meth:`advance` can
+    # update it in O(delta): per (edge_label, direction) the typed degree
+    # vector, per (src_label, edge_label, direction) the exact integer
+    # (Σd, Σd²). ``None`` for hand-built catalogs — advance() then refuses
+    # and the caller falls back to a full build.
+    sb_state: Optional[Dict] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @staticmethod
     def build(pg) -> "Catalog":
@@ -60,18 +67,82 @@ class Catalog:
             path2[(int(dl), int(el), int(sl), "in")] = int(c)
 
         sb: Dict[Tuple[int, int, str], float] = {}
+        degs: Dict[Tuple[int, str], np.ndarray] = {}
+        sums: Dict[Tuple[int, int, str], Tuple[int, int]] = {}
         n = pg.n_vertices
         for el in ec:
             m = elab == el
             for direction, vcol in (("out", src[m]), ("in", indices[m])):
-                deg = np.bincount(vcol, minlength=n).astype(np.float64)
+                deg = np.bincount(vcol, minlength=n).astype(np.int64)
+                degs[(int(el), direction)] = deg
                 for sl in lc:
                     d = deg[vlab == sl]
-                    tot = d.sum()
+                    tot = int(d.sum())
                     if tot > 0:
-                        sb[(int(sl), int(el), direction)] = \
-                            float((d * d).sum() / tot)
-        return Catalog(pg.n_vertices, lc, ec, path2, {}, sb)
+                        s2 = int((d * d).sum())
+                        sums[(int(sl), int(el), direction)] = (tot, s2)
+                        sb[(int(sl), int(el), direction)] = float(s2 / tot)
+        return Catalog(pg.n_vertices, lc, ec, path2, {}, sb,
+                       sb_state={"deg": degs, "sums": sums})
+
+    def advance(self, pg, delta) -> Optional["Catalog"]:
+        """A new catalog over ``pg`` (the delta-extended graph), updated
+        from this one in O(delta) instead of a full O(E) rebuild
+        (DESIGN.md §15): edge/path2 counts bump by the delta's typed edge
+        counts; ``size_biased`` updates through its exact integer
+        sufficient statistics (a vertex going d → d+c adds 2dc + c² to
+        Σd² — bit-identical to a fresh build because the sums are integer
+        all the way); ``distinct`` entries whose property the window
+        touched are recomputed on the new columns, untouched ones carry.
+        Returns ``None`` when this catalog lacks the sufficient-statistics
+        state (hand-built) — the caller must fall back to
+        :meth:`build`."""
+        if self.sb_state is None:
+            return None
+        vlab = pg.vlabels
+        ec = dict(self.edge_label_counts)
+        path2 = dict(self.path2)
+        degs = dict(self.sb_state["deg"])
+        sums = dict(self.sb_state["sums"])
+        sb = dict(self.size_biased)
+        if delta.n_edges:
+            labs = delta.labels.astype(np.int64)
+            trip = np.stack([vlab[delta.src], labs, vlab[delta.dst]], axis=1)
+            uniq, counts = np.unique(trip, axis=0, return_counts=True)
+            for (sl, el, dl), c in zip(uniq, counts):
+                ec[int(el)] = ec.get(int(el), 0) + int(c)
+                k = (int(sl), int(el), int(dl), "out")
+                path2[k] = path2.get(k, 0) + int(c)
+                k = (int(dl), int(el), int(sl), "in")
+                path2[k] = path2.get(k, 0) + int(c)
+            for el in (int(e) for e in np.unique(labs)):
+                m = labs == el
+                for direction, vcol in (("out", delta.src[m]),
+                                        ("in", delta.dst[m])):
+                    dkey = (el, direction)
+                    deg = degs.get(dkey)
+                    deg = (np.zeros(self.n_vertices, np.int64)
+                           if deg is None else deg.copy())
+                    verts, cnts = np.unique(vcol, return_counts=True)
+                    d_old = deg[verts]
+                    dd2 = 2 * d_old * cnts + cnts * cnts
+                    for sl in (int(s) for s in np.unique(vlab[verts])):
+                        msl = vlab[verts] == sl
+                        skey = (sl, el, direction)
+                        tot, s2 = sums.get(skey, (0, 0))
+                        tot += int(cnts[msl].sum())
+                        s2 += int(dd2[msl].sum())
+                        sums[skey] = (tot, s2)
+                        sb[skey] = float(s2 / tot)
+                    deg[verts] = d_old + cnts
+                    degs[dkey] = deg
+        new = Catalog(self.n_vertices, dict(self.label_counts), ec, path2,
+                      dict(self.distinct), sb,
+                      sb_state={"deg": degs, "sums": sums})
+        for (label, prop) in list(new.distinct):
+            if prop in delta.vprop_names:
+                new.add_prop_stats(pg, label, prop)
+        return new
 
     def add_prop_stats(self, pg, label: int, prop: str):
         ids = pg.vertices(label)

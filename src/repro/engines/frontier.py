@@ -54,12 +54,65 @@ class _HopArrays:
     Edge-list form (all paths): ``src/row/w [F, Ep]`` — global frontier-side
     vertex, local owned destination row, weight (0 ⇒ padding).
     Slab form (kernel path): per-fragment pull-ELL slabs from
-    ``csr_to_ell`` with local ``row_map``."""
+    ``csr_to_ell`` with local ``row_map``.
+
+    ``hop`` (the lowering metadata), ``counts`` (host per-fragment used
+    entries) and ``slab_meta`` (host per-fragment slab occupancy) exist so
+    :meth:`FragmentFrontierExecutor.advance` can append a commit's delta
+    edges in place instead of rebuilding the arrays (DESIGN.md §15); the
+    jitted runners receive these arrays as *arguments*, so a patched hop
+    with unchanged shapes reuses the compiled program."""
 
     src: jnp.ndarray
     row: jnp.ndarray
     w: jnp.ndarray
     slabs: Optional[List[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]]]
+    hop: Optional[FrontierHop] = None
+    counts: Optional[np.ndarray] = None
+    # per fragment: (fill [Np] — entries used per slab row,
+    #               last_row [v_local] — slab row holding vertex tail
+    #               entries or -1, used — slab rows allocated)
+    slab_meta: Optional[List[Tuple[np.ndarray, np.ndarray, int]]] = None
+
+    def args(self, use_kernels: bool):
+        """The pytree the jitted runners consume: arrays only, no
+        metadata — jit retraces on shape changes, never on patches."""
+        if use_kernels:
+            return tuple(self.slabs)
+        return (self.src, self.row, self.w)
+
+
+def _expr_prop_names(expr) -> frozenset:
+    """Property names a predicate expression reads — what decides whether
+    a cached static mask / device prop column survives a commit whose
+    delta touched some vertex-property columns."""
+    if isinstance(expr, PropRef):
+        return frozenset() if expr.prop is None else frozenset([expr.prop])
+    if isinstance(expr, BinExpr):
+        return _expr_prop_names(expr.left) | _expr_prop_names(expr.right)
+    return frozenset()
+
+
+def _slab_occupancy(local_ptr: np.ndarray, n_slab_rows: int,
+                    row_split: int = 1024):
+    """Host occupancy of a ``csr_to_ell`` slab: per-slab-row entry counts,
+    each local vertex's tail slab row (-1 when degree 0), and the number
+    of slab rows in use — what incremental appends consult to place new
+    entries into the padding (``csr_to_ell`` rounds slab rows up to a
+    block multiple, so spare rows exist below the array bound)."""
+    deg = np.diff(local_ptr)
+    fill = np.zeros(n_slab_rows, np.int64)
+    last_row = np.full(len(deg), -1, np.int64)
+    i = 0
+    for r, d in enumerate(deg):
+        left = int(d)
+        while left > 0:
+            take = min(left, row_split)
+            fill[i] = take
+            last_row[r] = i
+            left -= take
+            i += 1
+    return fill, last_row, max(i, 1)    # empty slabs still hold one row
 
 
 class FragmentFrontierExecutor:
@@ -94,9 +147,11 @@ class FragmentFrontierExecutor:
         # property cannot ride float32 exactly — data fallback)
         self._tails: Dict[Tuple, Optional[DeviceTail]] = {}
         self._prop_cols: Dict[str, Optional[jnp.ndarray]] = {}
-        # static (param-free) [N] stage masks, keyed (label, pred repr) —
-        # rebuilt per execute only when the predicate carries $params
-        self._masks: Dict[Tuple, jnp.ndarray] = {}
+        # static (param-free) [N] stage masks, keyed (label, pred repr),
+        # stored with the vprop names they read so advance() knows which
+        # survive a commit; rebuilt per execute only when the predicate
+        # carries $params
+        self._masks: Dict[Tuple, Tuple[jnp.ndarray, frozenset]] = {}
         self._programs: "weakref.WeakKeyDictionary[LogicalPlan, Any]" = \
             weakref.WeakKeyDictionary()
 
@@ -137,14 +192,24 @@ class FragmentFrontierExecutor:
         # tiny graphs can leave trailing fragments with no owned rows
         bounds = [(min(f * vp, n), min((f + 1) * vp, n)) for f in range(F)]
         ep = max(1, max(int(indptr[hi] - indptr[lo]) for lo, hi in bounds))
+        # capacity slack, rounded to a lane multiple: small commit deltas
+        # append into the padding without changing array shapes, so the
+        # jitted runners (which take these arrays as arguments) keep their
+        # compiled programs across rebinds (DESIGN.md §15). The extra 25%
+        # matches the regrow policy — a tight initial fit would force a
+        # regrow (and a retrace per batch shape) on the first commit
+        ep = -(-max(ep + ep // 4, ep + 128) // 128) * 128
         f_src = np.zeros((F, ep), np.int32)
         f_row = np.zeros((F, ep), np.int32)
         f_w = np.zeros((F, ep), np.float32)      # 0-weight ⇒ padding
+        counts = np.zeros(F, np.int64)
         slabs = [] if self.use_kernels else None
+        slab_meta = [] if self.use_kernels else None
         for f in range(F):
             lo, hi = bounds[f]
             e_lo, e_hi = int(indptr[lo]), int(indptr[hi])
             ne = e_hi - e_lo
+            counts[f] = ne
             f_src[f, :ne] = indices[e_lo:e_hi]
             f_row[f, :ne] = np.repeat(np.arange(hi - lo),
                                       deg[lo:hi]).astype(np.int32)
@@ -157,10 +222,217 @@ class FragmentFrontierExecutor:
                     w[e_lo:e_hi])
                 slabs.append((jnp.asarray(ell_idx), jnp.asarray(ell_w),
                               jnp.asarray(row_map)))
+                slab_meta.append(_slab_occupancy(local_ptr, len(row_map)))
         arrs = _HopArrays(src=jnp.asarray(f_src), row=jnp.asarray(f_row),
-                          w=jnp.asarray(f_w), slabs=slabs)
+                          w=jnp.asarray(f_w), slabs=slabs, hop=hop,
+                          counts=counts, slab_meta=slab_meta)
         self._hops[key] = arrs
         return arrs
+
+    # ------------------------------------------------------- incremental
+    def advance(self, new_pg, delta
+                ) -> Optional["FragmentFrontierExecutor"]:
+        """A new executor over ``new_pg`` carrying this one's device state
+        and compiled programs across ONE commit (DESIGN.md §15).
+
+        Hop adjacency is patched copy-on-write — delta edges append into
+        the capacity slack of fresh arrays, the old executor's arrays are
+        never mutated (in-flight fast-lane batches and pinned readers keep
+        their epoch). Because every jitted runner takes the hop arrays as
+        call arguments, the shared ``_runners`` cache keeps its compiled
+        programs whenever shapes hold (the dominant rebind cost). Static
+        masks and device prop columns survive unless the delta touched a
+        vertex-property they read. Returns ``None`` when the lineage check
+        fails (``new_pg``'s merged CSR was not extended from this
+        executor's graph) — callers build a fresh executor instead.
+
+        Memory note: runner closures retain the executor generation that
+        first traced them; retention is bounded by distinct program
+        shapes, not by commit count."""
+        new_pg = new_pg if isinstance(new_pg, PropertyGraph) \
+            else PropertyGraph(new_pg)
+        from repro.storage.csr import topo_base
+        info = getattr(new_pg.grin.store, "_inc_info", None)
+        old_store = self.pg.grin.store
+        old_merged = getattr(old_store, "_merged", old_store)
+        if info is None or topo_base(info[0]) is not topo_base(old_merged):
+            return None
+        _, old_pos, new_pos = info
+        if old_pos is not None and (delta is None
+                                    or len(delta.src) != len(new_pos)):
+            return None
+        new = FragmentFrontierExecutor.__new__(FragmentFrontierExecutor)
+        new.pg = new_pg
+        new.mesh = self.mesh
+        new.n_frags = self.n_frags
+        new.v_per = self.v_per          # vertex count never changes
+        new.use_kernels = self.use_kernels
+        new.interpret = self.interpret
+        new.device_tail = self.device_tail
+        new._runners = self._runners    # arrays are args: programs carry
+        new._tails = self._tails        # structural, data-independent
+        new._programs = self._programs  # plan → lowering, data-independent
+        touched = (frozenset(delta.vprop_names) if delta is not None
+                   else frozenset())
+        new._masks = {k: v for k, v in self._masks.items()
+                      if not (v[1] & touched)}
+        new._prop_cols = {k: v for k, v in self._prop_cols.items()
+                          if k not in touched}
+        if old_pos is None or len(new_pos) == 0:
+            # vprops-only commit: identical topology, share every hop
+            new._hops = dict(self._hops)
+            return new
+        new._hops = {}
+        for key, arrs in self._hops.items():
+            patched = new._patch_hop(arrs, delta, new_pos)
+            if patched is not None:
+                new._hops[key] = patched
+        return new
+
+    def _patch_hop(self, arrs: _HopArrays, delta,
+                   new_pos: np.ndarray) -> Optional[_HopArrays]:
+        """Append one delta's same-label edges to a hop's device arrays.
+        Scatter-add/scatter-min hops are order-insensitive within a
+        fragment, so new entries simply land at the used-entry tail; the
+        arrays only regrow (one retrace) when the slack runs out."""
+        hop = arrs.hop
+        if hop is None:
+            return None
+        keep = (np.ones(len(delta.src), bool) if hop.edge_label is None
+                else delta.labels == hop.edge_label)
+        if not keep.any():
+            return arrs                 # untouched: share (never mutated)
+        d_src = delta.src[keep]
+        d_dst = delta.dst[keep]
+        if hop.edge_pred is not None:
+            from repro.core.ir.dag import eval_expr
+            ok = eval_expr(hop.edge_pred.expr, {}, _LabelAwarePG(self.pg),
+                           {hop.edge_alias: new_pos[keep]})
+            w_new = np.asarray(ok, np.float32)
+        else:
+            w_new = np.ones(len(d_src), np.float32)
+        opp = "in" if hop.direction == "out" else "out"
+        rows = (d_dst if opp == "in" else d_src).astype(np.int64)
+        ents = (d_src if opp == "in" else d_dst).astype(np.int64)
+        F, vp = self.n_frags, self.v_per
+        k = len(rows)
+        fo = rows // vp
+        order = np.argsort(fo, kind="stable")
+        fo_s, rows_s = fo[order], rows[order]
+        ents_s, w_s = ents[order], w_new[order]
+        per_f = np.bincount(fo_s, minlength=F)
+        starts = np.cumsum(per_f) - per_f
+        within = np.arange(k) - starts[fo_s]
+        counts1 = arrs.counts + per_f
+        ep = int(arrs.src.shape[1])
+        # keep one spare slot in fragment 0: bucket-padded scatter
+        # entries (below) park there as w=0 no-ops
+        need = int(max(counts1.max(), counts1[0] + 1))
+        if need > ep:                   # regrow with slack (one retrace)
+            ep1 = -(-max(need, ep + ep // 4) // 128) * 128
+        else:
+            ep1 = ep
+        src1, row1, w1 = arrs.src, arrs.row, arrs.w
+        if ep1 != ep:
+            pad = ((0, 0), (0, ep1 - ep))
+            src1 = jnp.pad(src1, pad)
+            row1 = jnp.pad(row1, pad)
+            w1 = jnp.pad(w1, pad)
+        cols = arrs.counts[fo_s] + within
+        # bucket-pad the scatter operands to a power-of-two length: the
+        # device scatter is compiled per operand shape, and delta sizes
+        # vary every commit — without the buckets each commit pays a
+        # fresh XLA compile. Padded entries write (0, 0, w=0) — the
+        # padding contract — into fragment 0's first unused slot.
+        rowv = (rows_s - fo_s * vp).astype(np.int32)
+        bucket = 1 << max(7, int(k - 1).bit_length())
+        if bucket > k:
+            pn = bucket - k
+            fo_p = np.concatenate([fo_s, np.zeros(pn, fo_s.dtype)])
+            cols_p = np.concatenate([cols,
+                                     np.full(pn, int(counts1[0]),
+                                             cols.dtype)])
+            ents_p = np.concatenate([ents_s.astype(np.int32),
+                                     np.zeros(pn, np.int32)])
+            rowv_p = np.concatenate([rowv, np.zeros(pn, np.int32)])
+            w_p = np.concatenate([w_s, np.zeros(pn, np.float32)])
+        else:
+            fo_p, cols_p, w_p = fo_s, cols, w_s
+            ents_p, rowv_p = ents_s.astype(np.int32), rowv
+        src1 = src1.at[fo_p, cols_p].set(jnp.asarray(ents_p))
+        row1 = row1.at[fo_p, cols_p].set(jnp.asarray(rowv_p))
+        w1 = w1.at[fo_p, cols_p].set(jnp.asarray(w_p))
+        slabs1 = meta1 = None
+        if self.use_kernels:
+            slabs1, meta1 = list(arrs.slabs), list(arrs.slab_meta)
+            for f in np.unique(fo_s):
+                sel = fo_s == f
+                if not self._patch_slab(slabs1, meta1, int(f),
+                                        rows_s[sel] - int(f) * vp,
+                                        ents_s[sel], w_s[sel]):
+                    self._rebuild_slab(slabs1, meta1, int(f), hop, opp)
+        return _HopArrays(src=src1, row=row1, w=w1, slabs=slabs1, hop=hop,
+                          counts=counts1, slab_meta=meta1)
+
+    def _patch_slab(self, slabs, meta, f: int, l_rows, ents, w_new) -> bool:
+        """Grow one fragment's pull-ELL slab in place: entries append into
+        the tail slab row of their vertex; rows that run out of width get
+        a fresh slab row from the block-alignment spare region (the
+        scatter-add reduction over ``row_map`` is grouping-insensitive).
+        Returns False when the spare rows are exhausted — caller rebuilds
+        the fragment's slab."""
+        ell_idx, ell_w, row_map = slabs[f]
+        fill, last_row, used = meta[f]
+        n_slab, W = ell_idx.shape
+        fill, last_row = fill.copy(), last_row.copy()
+        pos_r = np.empty(len(ents), np.int64)
+        pos_c = np.empty(len(ents), np.int64)
+        fresh_rows: Dict[int, int] = {}
+        for i, r in enumerate(np.asarray(l_rows, np.int64)):
+            lr = int(last_row[r])
+            if lr < 0 or fill[lr] >= W:
+                if used >= n_slab:
+                    return False
+                lr = used
+                used += 1
+                fresh_rows[lr] = int(r)
+                last_row[r] = lr
+            pos_r[i], pos_c[i] = lr, fill[lr]
+            fill[lr] += 1
+        idx1 = ell_idx.at[pos_r, pos_c].set(
+            jnp.asarray(ents.astype(np.int32)))
+        w1 = ell_w.at[pos_r, pos_c].set(jnp.asarray(w_new))
+        rm = row_map
+        if fresh_rows:
+            rm = row_map.at[np.fromiter(fresh_rows, np.int64)].set(
+                jnp.asarray(np.fromiter(fresh_rows.values(), np.int64)))
+        slabs[f] = (idx1, w1, rm)
+        meta[f] = (fill, last_row, used)
+        return True
+
+    def _rebuild_slab(self, slabs, meta, f: int, hop, opp: str) -> None:
+        """Spare slab rows ran out: rebuild ONE fragment's slab from the
+        (already incrementally-patched) label slice."""
+        from repro.kernels.ops import csr_to_ell
+        indptr, indices, emap = self.pg.sliced_csr(hop.edge_label, opp)
+        n, vp = self.pg.n_vertices, self.v_per
+        lo, hi = min(f * vp, n), min((f + 1) * vp, n)
+        e_lo, e_hi = int(indptr[lo]), int(indptr[hi])
+        if hop.edge_pred is not None:
+            from repro.core.ir.dag import eval_expr
+            eids = (emap if emap is not None
+                    else np.arange(len(indices), dtype=np.int64))
+            ok = eval_expr(hop.edge_pred.expr, {}, _LabelAwarePG(self.pg),
+                           {hop.edge_alias: eids[e_lo:e_hi]})
+            wseg = np.asarray(ok, np.float32)
+        else:
+            wseg = np.ones(e_hi - e_lo, np.float32)
+        local_ptr = (indptr[lo:hi + 1] - e_lo).astype(np.int64)
+        ell_idx, ell_w, row_map = csr_to_ell(
+            local_ptr, indices[e_lo:e_hi].astype(np.int32), wseg)
+        slabs[f] = (jnp.asarray(ell_idx), jnp.asarray(ell_w),
+                    jnp.asarray(row_map))
+        meta[f] = _slab_occupancy(local_ptr, len(row_map))
 
     # ---------------------------------------------------------- device hop
     def _owned_edges(self, src, row, w, x):
@@ -176,12 +448,17 @@ class FragmentFrontierExecutor:
         return frontier_step(ell_idx, ell_w, x, row_map, self.v_per,
                              interpret=self.interpret)
 
-    def _apply_hop(self, arrs: _HopArrays, x: jnp.ndarray) -> jnp.ndarray:
+    def _apply_hop(self, hop_args, x: jnp.ndarray) -> jnp.ndarray:
+        """One hop over the fragment set. ``hop_args`` is the array pytree
+        from :meth:`_HopArrays.args` — passed INTO the jitted runners as an
+        argument (never closed over), so a rebind that patched the arrays
+        in place hits the same compiled program (DESIGN.md §15)."""
         n = self.pg.n_vertices
         if self.mesh is not None:
             from jax.experimental.shard_map import shard_map
             from jax.sharding import PartitionSpec as P
 
+            a_src, a_row, a_w = hop_args
             B = x.shape[0]
             npad = self.n_frags * self.v_per
             starts = jnp.arange(self.n_frags, dtype=jnp.int32) * self.v_per
@@ -197,13 +474,16 @@ class FragmentFrontierExecutor:
                            in_specs=(P("data"), P("data"), P("data"),
                                      P("data"), P()),
                            out_specs=P("data"))
-            out = fn(arrs.src, arrs.row, arrs.w, starts, x)
+            out = fn(a_src, a_row, a_w, starts, x)
             return out[0][:, :n]
 
-        owned = [self._owned_slab(arrs.slabs[f], x) if self.use_kernels
-                 else self._owned_edges(arrs.src[f], arrs.row[f],
-                                        arrs.w[f], x)
-                 for f in range(self.n_frags)]
+        if self.use_kernels:
+            owned = [self._owned_slab(hop_args[f], x)
+                     for f in range(self.n_frags)]
+        else:
+            a_src, a_row, a_w = hop_args
+            owned = [self._owned_edges(a_src[f], a_row[f], a_w[f], x)
+                     for f in range(self.n_frags)]
         return jnp.concatenate(owned, axis=1)[:, :n]
 
     def _owned_edges_minplus(self, src, row, w, d):
@@ -221,8 +501,7 @@ class FragmentFrontierExecutor:
         return frontier_minplus_step(ell_idx, ell_w, d, row_map, self.v_per,
                                      interpret=self.interpret)
 
-    def _apply_hop_minplus(self, arrs: _HopArrays, d: jnp.ndarray
-                           ) -> jnp.ndarray:
+    def _apply_hop_minplus(self, hop_args, d: jnp.ndarray) -> jnp.ndarray:
         """One shortest-path relaxation (before the ``min(d, ·)`` merge).
         Same fragment structure as ``_apply_hop``, but owned slices start
         at +inf and the cross-fragment exchange is ``pmin`` of the disjoint
@@ -232,6 +511,7 @@ class FragmentFrontierExecutor:
             from jax.experimental.shard_map import shard_map
             from jax.sharding import PartitionSpec as P
 
+            a_src, a_row, a_w = hop_args
             B = d.shape[0]
             npad = self.n_frags * self.v_per
             starts = jnp.arange(self.n_frags, dtype=jnp.int32) * self.v_per
@@ -248,31 +528,41 @@ class FragmentFrontierExecutor:
                            in_specs=(P("data"), P("data"), P("data"),
                                      P("data"), P()),
                            out_specs=P("data"))
-            out = fn(arrs.src, arrs.row, arrs.w, starts, d)
+            out = fn(a_src, a_row, a_w, starts, d)
             return out[0][:, :n]
 
-        owned = [self._owned_slab_minplus(arrs.slabs[f], d)
-                 if self.use_kernels
-                 else self._owned_edges_minplus(arrs.src[f], arrs.row[f],
-                                                arrs.w[f], d)
-                 for f in range(self.n_frags)]
+        if self.use_kernels:
+            owned = [self._owned_slab_minplus(hop_args[f], d)
+                     for f in range(self.n_frags)]
+        else:
+            a_src, a_row, a_w = hop_args
+            owned = [self._owned_edges_minplus(a_src[f], a_row[f],
+                                               a_w[f], d)
+                     for f in range(self.n_frags)]
         return jnp.concatenate(owned, axis=1)[:, :n]
+
+    def _hop_args_for(self, program: FrontierProgram):
+        """The per-hop array pytrees one execution passes to its runner."""
+        return tuple(self._hop_arrays(h).args(self.use_kernels)
+                     for h in program.hops)
 
     def _prefix_fn(self, program: FrontierProgram):
         """The traceable prefix body shared by the plain runner and the
-        fused prefix+tail runner."""
-        hop_specs = [(self._hop_arrays(h), h.min_hops, h.max_hops)
-                     for h in program.hops]
+        fused prefix+tail runner. Hop ARRAYS arrive as the ``hops``
+        argument — only the static per-hop structure (min/max repeats,
+        which is part of every runner cache key) is closed over, so the
+        compiled program survives rebinds that patch the adjacency."""
+        hop_ranges = [(h.min_hops, h.max_hops) for h in program.hops]
 
-        def run(x, masks):
+        def run(x, masks, hops):
             # peak accumulation value across var-length stages: float32
             # path counts are exact only below 2^24, and powered stages
             # reach it far sooner than fixed chains — the executor raises
             # OverflowError when the peak crosses it (DESIGN.md §13)
             peak = jnp.float32(0.0)
-            for (arrs, lo, hi), m in zip(hop_specs, masks):
+            for (lo, hi), m, ha in zip(hop_ranges, masks, hops):
                 if (lo, hi) == (1, 1):
-                    x = self._apply_hop(arrs, x)
+                    x = self._apply_hop(ha, x)
                 else:
                     # accumulated powered stages: acc = Σ_{k∈[lo,hi]} X·Aᵏ
                     # (X itself when lo == 0); intermediate powers below
@@ -280,7 +570,7 @@ class FragmentFrontierExecutor:
                     acc = x if lo == 0 else jnp.zeros_like(x)
                     cur = x
                     for k in range(1, hi + 1):
-                        cur = self._apply_hop(arrs, cur)
+                        cur = self._apply_hop(ha, cur)
                         peak = jnp.maximum(peak, jnp.max(cur))
                         if k >= lo:
                             acc = acc + cur
@@ -377,7 +667,6 @@ class FragmentFrontierExecutor:
         if self.pg.n_vertices >= _F32_INT_LIMIT:
             raise TailDataFallback(
                 "vertex ids exceed float32 exact-integer range")
-        props = {p: self._tail_prop(p) for p in tail.prop_refs}
         prefix = self._prefix_fn(program)
         head = program.head
         iota = jnp.arange(self.pg.n_vertices, dtype=jnp.float32)
@@ -390,7 +679,7 @@ class FragmentFrontierExecutor:
             zero = jnp.float32(0.0)
             if isinstance(e, PropRef):
                 if e.prop is not None:
-                    return props[e.prop], zero
+                    return ctx["props"][e.prop], zero
                 if e.alias == head:
                     return iota, zero
                 return ctx["aggs"][e.alias], zero
@@ -421,10 +710,11 @@ class FragmentFrontierExecutor:
                    "<=": lv <= rv, ">": lv > rv, ">=": lv >= rv}[e.op]
             return cmp, peak
 
-        def run_tail(x, masks, pvals):
-            counts, peak = prefix(x, masks)
+        def run_tail(x, masks, pvals, hops, props):
+            counts, peak = prefix(x, masks, hops)
             cand0 = counts > 0.5
-            ctx: Dict[str, Any] = {"pvals": pvals, "aggs": {}}
+            ctx: Dict[str, Any] = {"pvals": pvals, "aggs": {},
+                                   "props": props}
             tpeak = jnp.float32(0.0)
             out: Dict[str, Any] = {"counts": counts, "peak": peak}
             if tail.kind == "scalar":
@@ -540,27 +830,29 @@ class FragmentFrontierExecutor:
                                           params=params))
         return res
 
+    def _shortest_hop(self, sp) -> FrontierHop:
+        return FrontierHop(
+            edge_label=sp.edge_label, direction=sp.direction,
+            edge_pred=None, edge_alias=None, vertex_alias=sp.alias,
+            vertex_label=None, vertex_pred=None)
+
     def _shortest_runner(self, sp):
         skey = ("__shortest__", sp.edge_label, sp.direction,
                 sp.min_hops, sp.max_hops)
         fn = self._runners.get(skey)
         if fn is not None:
             return fn
-        arrs = self._hop_arrays(FrontierHop(
-            edge_label=sp.edge_label, direction=sp.direction,
-            edge_pred=None, edge_alias=None, vertex_alias=sp.alias,
-            vertex_label=None, vertex_pred=None))
 
-        def run(d, mask):
+        def run(d, mask, ha):
             # d ← min(d, relax(d)) unrolled; min_hops == 1 seeds from the
             # first relaxation so dist 0 never enters (src→src must cycle)
             if sp.min_hops >= 1:
-                d = self._apply_hop_minplus(arrs, d)
+                d = self._apply_hop_minplus(ha, d)
                 iters = sp.max_hops - 1
             else:
                 iters = sp.max_hops
             for _ in range(iters):
-                d = jnp.minimum(d, self._apply_hop_minplus(arrs, d))
+                d = jnp.minimum(d, self._apply_hop_minplus(ha, d))
             if mask is not None:        # head label/pred: unreachable = inf
                 d = jnp.where(mask > 0, d, jnp.inf)
             return d
@@ -574,7 +866,26 @@ class FragmentFrontierExecutor:
                 params_list: Sequence[Optional[Dict[str, Any]]],
                 procedures=None) -> List[Dict[str, np.ndarray]]:
         """Run one admission batch (same template, per-query params) as one
-        device program; raises ValueError when the plan does not lower."""
+        device program; raises ValueError when the plan does not lower.
+
+        The batch is padded to a power-of-two width (repeating the last
+        query; its rows are sliced off the result) so the [B, N] program
+        shapes repeat across admission chunks — under a sustained mixed
+        stream every chunk carries a different handful of same-template
+        queries, and without the buckets each distinct B pays its own
+        XLA compile."""
+        if not params_list:
+            return []
+        B0 = len(params_list)
+        bucket = 1 << max(0, int(B0 - 1).bit_length())
+        if bucket > B0:
+            params_list = list(params_list) \
+                + [params_list[-1]] * (bucket - B0)
+        return self._execute_batch(plan, params_list, procedures)[:B0]
+
+    def _execute_batch(self, plan: LogicalPlan,
+                       params_list: Sequence[Optional[Dict[str, Any]]],
+                       procedures=None) -> List[Dict[str, np.ndarray]]:
         program = plan if isinstance(plan, FrontierProgram) \
             else self.program_for(plan)
         if program is None:
@@ -595,12 +906,15 @@ class FragmentFrontierExecutor:
             self._stage_mask(h.vertex_alias, h.vertex_label, h.vertex_pred,
                              params_list)
             for h in program.hops)
+        hops = self._hop_args_for(program)
         tail = self._device_tail(program) if self.device_tail \
             and program.tail else None
         if tail is not None:
             try:
                 pvals = self._tail_pvals(tail, params_list)
-                outd = self._tail_runner(program, tail)(x0, masks, pvals)
+                props = {p: self._tail_prop(p) for p in tail.prop_refs}
+                outd = self._tail_runner(program, tail)(
+                    x0, masks, pvals, hops, props)
             except TailDataFallback:
                 outd = None            # data can't ride f32: interpreter tail
             if outd is not None:
@@ -622,7 +936,7 @@ class FragmentFrontierExecutor:
                                         params=params_list[b],
                                         procedures=procedures)
                         for b in range(B)]
-        counts, peak = self._runner(program)(x0, masks)
+        counts, peak = self._runner(program)(x0, masks, hops)
         if float(peak) >= 2 ** 24:
             # same contract as finish_frontier's final check, but covers
             # intermediate powers of accumulated var-length stages whose
@@ -667,7 +981,9 @@ class FragmentFrontierExecutor:
             d0 = np.full((R, n), np.inf, np.float32)
             d0[np.arange(R), srcs] = 0.0
             runner = self._shortest_runner(sp)
-            dists = np.asarray(runner(jnp.asarray(d0), hm_rows))
+            ha = self._hop_arrays(self._shortest_hop(sp)) \
+                .args(self.use_kernels)
+            dists = np.asarray(runner(jnp.asarray(d0), hm_rows, ha))
         return [finish_shortest(program, srcs[qidx == b], dists[qidx == b],
                                 self.pg, params=params_list[b],
                                 procedures=procedures)
@@ -684,12 +1000,19 @@ class FragmentFrontierExecutor:
             key = (label, repr(pred))
             cached = self._masks.get(key)
             if cached is None:
-                cached = jnp.asarray(frontier_vertex_mask(
+                mask = jnp.asarray(frontier_vertex_mask(
                     alias, label, pred, self.pg,
                     params_list[0] if params_list else {}
                 ).astype(np.float32))
+                # the prop names alongside the mask decide survival under
+                # incremental rebind: vertex labels never change, so a
+                # mask is stale only when its predicate reads a vprop
+                # column the commit delta touched
+                names = (_expr_prop_names(pred.expr) if pred is not None
+                         else frozenset())
+                cached = (mask, names)
                 self._masks[key] = cached
-            return cached
+            return cached[0]
         B, n = len(params_list), self.pg.n_vertices
         out = np.empty((B, n), np.float32)
         for b, params in enumerate(params_list):

@@ -47,6 +47,31 @@ class GaiaEngine:
             self._procedures = ProcedureRegistry()
         return self._procedures
 
+    def advance(self, pg: PropertyGraph, catalog: Catalog,
+                delta) -> "GaiaEngine":
+        """A new engine over the delta-extended ``pg`` that carries this
+        one's device state forward (DESIGN.md §15): every cached fragment
+        frontier executor is :meth:`~repro.engines.frontier.
+        FragmentFrontierExecutor.advance`\\ d — hop slabs grow in place and
+        the jitted runners (and their compile caches) are shared — so the
+        first fragment query after a commit pays O(delta), not a full
+        rebuild + retrace. An executor that cannot advance (lineage break,
+        slab overflow) is simply dropped and rebuilt lazily on next use;
+        the old engine keeps serving its pinned binding unchanged."""
+        new = GaiaEngine(pg, catalog=catalog, rbo=self.rbo, cbo=self.cbo,
+                         plan_cache=self.plan_cache,
+                         procedures=self._procedures)
+        execs = getattr(self, "_frontier_execs", None)
+        if execs:
+            carried = {}
+            for key, ex in execs.items():
+                adv = ex.advance(pg, delta)
+                if adv is not None:
+                    carried[key] = adv
+            if carried:
+                new._frontier_execs = carried
+        return new
+
     # ------------------------------------------------------------- compile
     def compile(self, query: str, language: str = "cypher") -> LogicalPlan:
         return self.compile_cached(query, language)[0]

@@ -16,9 +16,30 @@ from repro.engines.grape.pie import PIEProgram, run_pie
 from repro.engines.grape.pregel import VertexProgram, run_pregel
 
 
+def _pad_state(arr, n: int, fill) -> jnp.ndarray:
+    """A warm-start vector comes trimmed to the store's vertex range; pad
+    it back out to the engine's fragment width (``fill``: scalar, or
+    ``"iota"`` for identity labels) so padding rows start from the same
+    values a cold init would give them."""
+    arr = jnp.asarray(arr, jnp.float32)
+    if arr.shape[0] >= n:
+        return arr[:n]
+    if fill == "iota":
+        tail = jnp.arange(arr.shape[0], n, dtype=jnp.float32)
+    else:
+        tail = jnp.full((n - arr.shape[0],), fill, jnp.float32)
+    return jnp.concatenate([arr, tail])
+
+
 # ----------------------------------------------------------------- PageRank
 def pagerank(engine: GrapeEngine, damping: float = 0.85,
-             max_steps: int = 50, tol: float = 1e-6) -> jnp.ndarray:
+             max_steps: int = 50, tol: float = 1e-6,
+             warm_start=None) -> jnp.ndarray:
+    """``warm_start`` (a previous snapshot's rank vector) restarts the
+    contraction from that solution instead of uniform: it converges to the
+    same fixpoint TOLERANCE as a cold start — results agree with cold
+    start to within ``tol/(1-damping)`` in L1, not bit-exactly (the
+    documented incremental contract, DESIGN.md §15)."""
     n = engine.frags.n_vertices
 
     prog = VertexProgram(
@@ -30,12 +51,21 @@ def pagerank(engine: GrapeEngine, damping: float = 0.85,
         residual_key="rank",
         tol=tol,
     )
+    init_state = None
+    if warm_start is not None:
+        init_state = {"rank": _pad_state(warm_start, n, 0.0)}
     return run_pregel(engine, prog, max_steps,
-                      cache_key=("pagerank", damping))["rank"]
+                      cache_key=("pagerank", damping),
+                      init_state=init_state)["rank"]
 
 
 # ---------------------------------------------------------------------- BFS
-def bfs(engine: GrapeEngine, source: int, max_steps: int = 64) -> jnp.ndarray:
+def bfs(engine: GrapeEngine, source: int, max_steps: int = 64,
+        warm_start=None) -> jnp.ndarray:
+    """``warm_start`` (a previous snapshot's depth vector for the SAME
+    source) is a valid upper bound on an append-only graph, so monotone
+    min-propagation from it reaches the unique fixpoint BIT-EXACTLY
+    (DESIGN.md §15)."""
     n = engine.frags.n_vertices
     inf = jnp.float32(jnp.inf)
 
@@ -52,12 +82,23 @@ def bfs(engine: GrapeEngine, source: int, max_steps: int = 64) -> jnp.ndarray:
         residual_key="depth",
         tol=0.0,
     )
+    init_state = None
+    if warm_start is not None:
+        d = _pad_state(warm_start, n, jnp.inf).at[source].set(0.0)
+        init_state = {"depth": d}
     return run_pregel(engine, prog, max_steps,
-                      cache_key=("bfs", source))["depth"]
+                      cache_key=("bfs", source),
+                      init_state=init_state)["depth"]
 
 
 # --------------------------------------------------------------------- SSSP
-def sssp(engine: GrapeEngine, source: int, max_steps: int = 128) -> jnp.ndarray:
+def sssp(engine: GrapeEngine, source: int, max_steps: int = 128,
+         warm_start=None) -> jnp.ndarray:
+    """``warm_start`` (a previous snapshot's distance vector for the SAME
+    source): on an append-only graph (edges added, existing weights
+    immutable) old distances upper-bound new ones and every relaxation
+    candidate is the same left-associated path sum, so the min-plus
+    fixpoint is reached bit-exactly (DESIGN.md §15)."""
     inf = jnp.float32(jnp.inf)
 
     def init(n_):
@@ -74,14 +115,24 @@ def sssp(engine: GrapeEngine, source: int, max_steps: int = 128) -> jnp.ndarray:
         residual_key="dist",
         tol=0.0,
     )
+    init_state = None
+    if warm_start is not None:
+        n = engine.frags.n_vertices
+        d = _pad_state(warm_start, n, jnp.inf).at[source].set(0.0)
+        init_state = {"dist": d}
     return run_pregel(engine, prog, max_steps,
-                      cache_key=("sssp", source))["dist"]
+                      cache_key=("sssp", source),
+                      init_state=init_state)["dist"]
 
 
 # ---------------------------------------------------------------------- WCC
-def wcc(engine: GrapeEngine, max_steps: int = 64) -> jnp.ndarray:
+def wcc(engine: GrapeEngine, max_steps: int = 64,
+        warm_start=None) -> jnp.ndarray:
     """Weakly-connected components by min-label propagation (assumes the
-    graph was symmetrized by the caller for true WCC)."""
+    graph was symmetrized by the caller for true WCC). ``warm_start`` (a
+    previous snapshot's labels) upper-bounds the new labels on an
+    append-only graph — components only merge — so the min-label fixpoint
+    is reached bit-exactly (DESIGN.md §15)."""
     prog = VertexProgram(
         init=lambda n_: {"lab": jnp.arange(n_, dtype=jnp.float32)},
         send=lambda st, deg: st["lab"],
@@ -90,8 +141,12 @@ def wcc(engine: GrapeEngine, max_steps: int = 64) -> jnp.ndarray:
         residual_key="lab",
         tol=0.0,
     )
-    return run_pregel(engine, prog, max_steps,
-                      cache_key=("wcc",))["lab"].astype(jnp.int32)
+    init_state = None
+    if warm_start is not None:
+        init_state = {"lab": _pad_state(warm_start,
+                                        engine.frags.n_vertices, "iota")}
+    return run_pregel(engine, prog, max_steps, cache_key=("wcc",),
+                      init_state=init_state)["lab"].astype(jnp.int32)
 
 
 # ----------------------------------------------------- equity shares (§8)

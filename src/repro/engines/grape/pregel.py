@@ -34,9 +34,19 @@ class VertexProgram:
 
 
 def run_pregel(engine: GrapeEngine, prog: VertexProgram, max_steps: int,
-               jit: bool = True, cache_key=None) -> Dict[str, jnp.ndarray]:
+               jit: bool = True, cache_key=None,
+               init_state: Optional[Dict[str, jnp.ndarray]] = None
+               ) -> Dict[str, jnp.ndarray]:
+    """``init_state`` warm-starts the fixpoint from a previous solution
+    instead of ``prog.init`` (DESIGN.md §15): sound when every state key's
+    update is a contraction (pagerank — converges to the same fixpoint
+    tolerance) or monotone min-propagation started from a valid upper
+    bound (bfs/sssp/wcc on an append-only graph — the fixpoint is unique
+    and reached bit-exactly). The caller owns that contract; the jitted
+    fixpoint itself is identical either way."""
     n = engine.frags.n_vertices
-    state = prog.init(n)
+    state = prog.init(n) if init_state is None else \
+        {k: jnp.asarray(v) for k, v in init_state.items()}
     deg = engine.out_degree.astype(jnp.float32)
 
     def one_step(state, step):

@@ -95,6 +95,32 @@ class HiActorEngine:
         self._procs[name] = proc
         return proc
 
+    def advance(self, pg: PropertyGraph, catalog: Catalog,
+                delta) -> "HiActorEngine":
+        """A new engine over the delta-extended ``pg`` that CARRIES this
+        one's registered stored procedures and property indexes instead
+        of re-registering from scratch (DESIGN.md §15). Plans are
+        data-independent, so every Procedure record moves wholesale; an
+        index ``(label, prop)`` is a sort over vertex ids + property
+        values, and GART appends never add vertices — so an index whose
+        property the commit window did NOT touch is carried as-is, and a
+        touched one is rebuilt over the new column (the delta names the
+        column but not the written rows, so a row-level patch has nothing
+        to key on). The old engine keeps serving its pinned binding
+        unchanged."""
+        new = HiActorEngine.__new__(HiActorEngine)
+        new.pg = pg
+        new.catalog = catalog
+        new._procs = dict(self._procs)
+        new.procedures = self.procedures
+        touched = frozenset(delta.vprop_names)
+        new._indexes = {key: idx for key, idx in self._indexes.items()
+                        if key[1] not in touched}
+        for proc in new._procs.values():
+            if proc.index_prop is not None:
+                new._build_index(proc.scan_label, proc.index_prop)
+        return new
+
     def has_procedure(self, name: str) -> bool:
         return name in self._procs
 

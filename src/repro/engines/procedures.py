@@ -43,6 +43,9 @@ class ProcedureSpec:
     params: Tuple[Tuple[str, Any], ...]   # ((arg name, default), ...)
     result: str                           # default score column name
     runner: Callable                      # (engine, *args) -> array[N]
+    # fixpoint accepts warm_start= (a previous snapshot's solution); the
+    # incremental contract per algorithm is documented in DESIGN.md §15
+    warmable: bool = False
 
     def canonical_args(self, args: Sequence[Any],
                        kwargs: Optional[Dict[str, Any]] = None) -> Tuple:
@@ -73,24 +76,24 @@ class ProcedureSpec:
         return tuple(out)
 
 
-def _run_pagerank(engine, damping):
+def _run_pagerank(engine, damping, warm_start=None):
     from repro.engines.grape.algorithms import pagerank
-    return pagerank(engine, damping=damping)
+    return pagerank(engine, damping=damping, warm_start=warm_start)
 
 
-def _run_sssp(engine, source):
+def _run_sssp(engine, source, warm_start=None):
     from repro.engines.grape.algorithms import sssp
-    return sssp(engine, source=source)
+    return sssp(engine, source=source, warm_start=warm_start)
 
 
-def _run_bfs(engine, source):
+def _run_bfs(engine, source, warm_start=None):
     from repro.engines.grape.algorithms import bfs
-    return bfs(engine, source=source)
+    return bfs(engine, source=source, warm_start=warm_start)
 
 
-def _run_wcc(engine):
+def _run_wcc(engine, warm_start=None):
     from repro.engines.grape.algorithms import wcc
-    return wcc(engine)
+    return wcc(engine, warm_start=warm_start)
 
 
 def _run_degree_centrality(engine):
@@ -116,10 +119,12 @@ class _StorePin:
 
 SPECS: Dict[str, ProcedureSpec] = {
     "pagerank": ProcedureSpec("pagerank", (("damping", 0.85),), "rank",
-                              _run_pagerank),
-    "sssp": ProcedureSpec("sssp", (("source", 0),), "dist", _run_sssp),
-    "bfs": ProcedureSpec("bfs", (("source", 0),), "depth", _run_bfs),
-    "wcc": ProcedureSpec("wcc", (), "comp", _run_wcc),
+                              _run_pagerank, warmable=True),
+    "sssp": ProcedureSpec("sssp", (("source", 0),), "dist", _run_sssp,
+                          warmable=True),
+    "bfs": ProcedureSpec("bfs", (("source", 0),), "depth", _run_bfs,
+                         warmable=True),
+    "wcc": ProcedureSpec("wcc", (), "comp", _run_wcc, warmable=True),
     "degree_centrality": ProcedureSpec("degree_centrality", (), "centrality",
                                        _run_degree_centrality),
     GNN_INFER: ProcedureSpec(GNN_INFER, (("model", "default"),), "score",
@@ -155,6 +160,7 @@ def snapshot_token(store) -> Tuple:
 class RegistryStats:
     hits: int = 0
     misses: int = 0
+    warm_starts: int = 0       # misses served by warm-started fixpoints
 
     @property
     def hit_rate(self) -> float:
@@ -189,6 +195,12 @@ class ProcedureRegistry:
         # accounting and keeps the store alive for its memo entries)
         self._engines: "OrderedDict[Tuple, Any]" = OrderedDict()
         self._results: Dict[Tuple, np.ndarray] = {}
+        # warm-start lineage: (store uid, name, canon) → (version, result)
+        # of the NEWEST converged fixpoint per store — a later version of
+        # the same MVCC store warm-starts from it (append-only contract,
+        # DESIGN.md §15). Bounded: one entry per (store, algo, args), and
+        # evicting a token drops its store's entries.
+        self._latest: Dict[Tuple, Tuple[int, np.ndarray]] = {}
         # name → (serving fn, registration version); versions are monotonic
         # so a re-registered model never hits the old version's memo entries
         self._models: Dict[str, Tuple[Callable, int]] = {}
@@ -231,6 +243,8 @@ class ProcedureRegistry:
             evicted, _ = self._engines.popitem(last=False)
             self._results = {k: v for k, v in self._results.items()
                              if k[0] != evicted}
+            self._latest = {k: v for k, v in self._latest.items()
+                            if k[0] != evicted[:-1]}
 
     def _touch_token(self, token: Tuple, store=None,
                      create: bool = True) -> None:
@@ -284,9 +298,31 @@ class ProcedureRegistry:
             result = np.asarray(infer_fn(store))
         else:
             engine = self._engine(store, token)
-            result = np.asarray(spec.runner(engine, *canon))
+            # warm-start from the newest earlier fixpoint of the SAME MVCC
+            # store (versioned tokens only: ('gart', uid, version)); the
+            # append-only contract makes this sound — bit-exact for the
+            # min-propagation algorithms, same tolerance for pagerank
+            # (DESIGN.md §15)
+            warm = None
+            lineage = None
+            if spec.warmable and len(token) == 3 \
+                    and isinstance(token[-1], int):
+                lineage = (token[:-1], spec.name, canon)
+                prev = self._latest.get(lineage)
+                if prev is not None and prev[0] < token[-1]:
+                    warm = prev[1]
+            if warm is not None:
+                result = np.asarray(spec.runner(engine, *canon,
+                                                warm_start=warm))
+                self.stats.warm_starts += 1
+            else:
+                result = np.asarray(spec.runner(engine, *canon))
         result = result[:store.n_vertices]        # drop fragment padding
         self._results[key] = result
+        if infer_fn is None and spec.warmable and lineage is not None:
+            prev = self._latest.get(lineage)
+            if prev is None or prev[0] <= token[-1]:
+                self._latest[lineage] = (token[-1], result)
         return result
 
     def clear(self, results_only: bool = True) -> None:
@@ -295,6 +331,7 @@ class ProcedureRegistry:
         Registered models survive — they are registrations, not caches
         (``unregister_model`` removes one)."""
         self._results.clear()
+        self._latest.clear()
         if not results_only:
             self._engines.clear()
         self.stats = RegistryStats()

@@ -36,7 +36,7 @@ differential suite pins against the numpy ``sampler_ref`` oracle.
 
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -75,6 +75,8 @@ class FragmentSampleExecutor:
             indptr, indices = store.adjacency()
         grin = GRINAdapter(store, LEARNING_REQUIRED)
         self.store = store
+        self.feature_prop = feature_prop
+        self.label_prop = label_prop
         n = grin.n_vertices
         self.n_vertices = n
         self.mesh = mesh
@@ -173,8 +175,110 @@ class FragmentSampleExecutor:
                 lab_pad = np.zeros(n + 1, np.int32)
                 lab_pad[:n] = lab
                 self.labels = jnp.asarray(lab_pad)
+        self._tables = self._make_tables()
         self._jit_sample = jax.jit(self._sample_impl,
                                    static_argnames=("fanouts",))
+
+    def _make_tables(self) -> Dict[str, Optional[jnp.ndarray]]:
+        """Device tables as ONE pytree. The jitted batch takes this as an
+        argument (never as closure constants), so an ``advance()``d
+        executor with patched same-shape tables reuses the compiled
+        program — the sampling analogue of the frontier executor's
+        arrays-as-args rule (DESIGN.md §15)."""
+        return {"ell": self.ell, "deg": self.deg, "feats": self.feats,
+                "labels": self.labels,
+                "starts": getattr(self, "starts", None),
+                "csr_starts": getattr(self, "csr_starts", None),
+                "csr_indices": getattr(self, "csr_indices", None)}
+
+    # ------------------------------------------------------- incremental
+    def advance(self, store, delta, pg=None
+                ) -> Optional["FragmentSampleExecutor"]:
+        """A new executor over ``store`` (the next snapshot) reusing this
+        one's device tables and compiled batch program (DESIGN.md §15).
+
+        Sampling slabs must keep rows in NEW-CSR segment order (the draw
+        ``floor(u·deg)`` indexes the row), so instead of tail-appending,
+        every touched row is rewritten from the already-incrementally-
+        merged CSR — O(touched·W) — and the slab widens (one retrace) only
+        when a touched vertex's degree outgrows the current lane-aligned
+        width; the result is bit-identical to a fresh build. Feature and
+        label tables carry over untouched. Returns ``None`` (callers full-
+        rebuild) when the lineage check fails, when the delta touched the
+        feature/label property, or when the patched slab would cross a
+        kernel/psum size gate."""
+        from repro.storage.csr import topo_base
+        if pg is not None:
+            store = pg.grin.store
+        indptr1, indices1 = (pg.sliced_csr(None, "out")[:2] if pg is not None
+                             else store.adjacency())  # triggers the merge
+        info = getattr(store, "_inc_info", None)
+        old_merged = getattr(self.store, "_merged", self.store)
+        if info is None or topo_base(info[0]) is not topo_base(old_merged):
+            return None
+        _, old_pos, new_pos = info
+        touched = (frozenset(delta.vprop_names) if delta is not None
+                   else frozenset())
+        if self.feature_prop in touched or (
+                self.label_prop is not None and self.label_prop in touched):
+            return None
+        new = FragmentSampleExecutor.__new__(FragmentSampleExecutor)
+        for f in ("mesh", "exchange", "n_frags", "v_per", "n_vertices",
+                  "use_kernels", "interpret", "feature_dim", "feature_prop",
+                  "label_prop", "feats", "labels", "_jit_sample"):
+            setattr(new, f, getattr(self, f))
+        new.store = store
+        if old_pos is None or len(new_pos) == 0:
+            # vprops-only commit: identical topology, share every table
+            for f in ("ell", "deg", "starts", "csr_starts", "csr_indices",
+                      "_W"):
+                if hasattr(self, f):
+                    setattr(new, f, getattr(self, f))
+            new._tables = self._tables
+            return new
+        if delta is None or len(delta.src) != len(new_pos):
+            return None
+        deg1 = np.diff(indptr1).astype(np.int32)
+        rows_t = np.unique(np.asarray(delta.src, np.int64))
+        if self.exchange == "psum" or self.use_kernels:
+            W = int(self.ell.shape[-1])
+            Wn = max(W, sample_ell_width(deg1))
+            if self.use_kernels and self.n_vertices * Wn * 4 > SLAB_VMEM_BYTES:
+                return None             # kernel path no longer fits VMEM
+            if (self.exchange == "psum" and self.n_frags * self.v_per * Wn
+                    * 4 > PSUM_SLAB_LIMIT_BYTES):
+                return None
+            patch = np.full((len(rows_t), Wn), PAD_SENTINEL, np.int32)
+            for i, r in enumerate(rows_t):
+                seg = indices1[indptr1[r]:indptr1[r + 1]]
+                patch[i, :len(seg)] = seg
+            ell = self.ell
+            if Wn > W:                  # widen (one retrace), PAD-filled
+                pad = [(0, 0)] * (ell.ndim - 1) + [(0, Wn - W)]
+                ell = jnp.pad(ell, pad, constant_values=PAD_SENTINEL)
+        if self.exchange == "psum":
+            fi = rows_t // self.v_per
+            li = rows_t - fi * self.v_per
+            new.ell = ell.at[fi, li].set(jnp.asarray(patch))
+            new.deg = self.deg.at[fi, li].set(jnp.asarray(deg1[rows_t]))
+            new.starts = self.starts
+            new._W = Wn
+        elif self.use_kernels:
+            new.ell = ell.at[jnp.asarray(rows_t)].set(jnp.asarray(patch))
+            new.deg = self.deg.at[jnp.asarray(rows_t)].set(
+                jnp.asarray(deg1[rows_t]))
+            new.csr_starts = new.csr_indices = None
+        else:
+            # CSR-draw path: indptr shifts globally on insert, so this is
+            # an O(E) array re-upload — no sort/merge compute, the CSR was
+            # already extended incrementally at the storage layer
+            new.ell = None
+            new.deg = jnp.asarray(deg1)
+            new.csr_starts = jnp.asarray(indptr1[:-1].astype(np.int32))
+            new.csr_indices = jnp.asarray(np.concatenate(
+                [indices1, [PAD_SENTINEL]]).astype(np.int32))
+        new._tables = new._make_tables()
+        return new
 
     # ------------------------------------------------------------ one hop
     def _frag_draws(self, ell, deg, start, ids, u):
@@ -189,7 +293,8 @@ class FragmentSampleExecutor:
             nbr = sample_ell_jnp(ell, deg, rows, u)
         return jnp.where(nbr >= 0, nbr + 1, 0)
 
-    def _layer(self, ids: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    def _layer(self, t: Dict[str, jnp.ndarray], ids: jnp.ndarray,
+               u: jnp.ndarray) -> jnp.ndarray:
         """ids [M] global (< 0 ⇒ PAD), u [M, K] → sampled neighbors [M, K]."""
         if self.mesh is not None:
             from jax.experimental.shard_map import shard_map
@@ -206,12 +311,12 @@ class FragmentSampleExecutor:
                            in_specs=(P("data"), P("data"), P("data"),
                                      P(), P()),
                            out_specs=P("data"))
-            return fn(self.ell, self.deg, self.starts, ids, u)[0] - 1
+            return fn(t["ell"], t["deg"], t["starts"], ids, u)[0] - 1
 
         if self.exchange == "psum":
-            acc = self._frag_draws(self.ell[0], self.deg[0], 0, ids, u)
+            acc = self._frag_draws(t["ell"][0], t["deg"][0], 0, ids, u)
             for f in range(1, self.n_frags):
-                acc = acc + self._frag_draws(self.ell[f], self.deg[f],
+                acc = acc + self._frag_draws(t["ell"][f], t["deg"][f],
                                              f * self.v_per, ids, u)
             return acc - 1
 
@@ -220,9 +325,9 @@ class FragmentSampleExecutor:
         rows = jnp.where((ids >= 0) & (ids < self.n_vertices), ids,
                          -1).astype(jnp.int32)
         if self.use_kernels:
-            return sample_ell(self.ell, self.deg, rows, u,
+            return sample_ell(t["ell"], t["deg"], rows, u,
                               interpret=self.interpret)
-        return sample_csr_jnp(self.csr_starts, self.deg, self.csr_indices,
+        return sample_csr_jnp(t["csr_starts"], t["deg"], t["csr_indices"],
                               rows, u)
 
     # ------------------------------------------------------ feature gather
@@ -250,6 +355,8 @@ class FragmentSampleExecutor:
             fn = shard_map(frag_fn, mesh=self.mesh,
                            in_specs=(P("data"), P("data"), P()),
                            out_specs=P("data"))
+            # starts is pure fragment-offset config (arange(F)·v_per) —
+            # identical for every advance() generation, safe as a constant
             return fn(table_stacked, self.starts, ids)[0]
 
         if self.exchange == "psum":
@@ -266,20 +373,21 @@ class FragmentSampleExecutor:
 
     def gather_features(self, ids) -> jnp.ndarray:
         """[M] global vertex ids → [M, D] features (0-rows for PAD ids)."""
-        return self._gather(self.feats, jnp.asarray(ids, jnp.int32))
+        return self._gather(self._tables["feats"],
+                            jnp.asarray(ids, jnp.int32))
 
     # ------------------------------------------------------------- batch
-    def _sample_impl(self, seeds, key, fanouts: Tuple[int, ...]):
+    def _sample_impl(self, tables, seeds, key, fanouts: Tuple[int, ...]):
         frontiers = [seeds.astype(jnp.int32)]
         layers = []
         for l, k in enumerate(fanouts):
             u = layer_uniforms(key, l, frontiers[-1].shape[0], k)
-            nbrs = self._layer(frontiers[-1], u)
+            nbrs = self._layer(tables, frontiers[-1], u)
             layers.append(nbrs)
             frontiers.append(nbrs.reshape(-1))
-        feats = [self._gather(self.feats, fr) for fr in frontiers]
-        labels = (self._gather(self.labels, frontiers[0])
-                  if self.labels is not None else None)
+        feats = [self._gather(tables["feats"], fr) for fr in frontiers]
+        labels = (self._gather(tables["labels"], frontiers[0])
+                  if tables["labels"] is not None else None)
         return layers, feats, labels
 
     def sample(self, seeds, key, fanouts: Sequence[int]):
@@ -289,4 +397,5 @@ class FragmentSampleExecutor:
         feats[l]: frontier-l features [B·∏f[:l], D]; labels [B] int32 (None
         without a label property). All device-resident jnp arrays."""
         seeds = jnp.asarray(np.asarray(seeds, np.int32))
-        return self._jit_sample(seeds, key, tuple(int(f) for f in fanouts))
+        return self._jit_sample(self._tables, seeds, key,
+                                tuple(int(f) for f in fanouts))

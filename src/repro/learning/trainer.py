@@ -94,7 +94,7 @@ class SageTrainer:
         than the whole sampled batch on CPU."""
         key = jax.random.fold_in(self._base_key, step)
         layers, feats, labels = self._executor._sample_impl(
-            seeds, key, self.fanouts)
+            self._executor._tables, seeds, key, self.fanouts)
 
         def loss(p):
             return self.model.loss(p, feats, layers, labels)
@@ -164,7 +164,8 @@ class SageTrainer:
 
         def score(params, base_key, i, seeds):
             key = jax.random.fold_in(base_key, i)
-            layers, feats, _ = ex._sample_impl(seeds, key, self.fanouts)
+            layers, feats, _ = ex._sample_impl(ex._tables, seeds, key,
+                                               self.fanouts)
             lg = self.model.logits(params, feats, layers)
             return jnp.max(lg, axis=-1)          # max-logit confidence
 

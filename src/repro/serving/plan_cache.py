@@ -124,6 +124,15 @@ class PlanCache:
             self.stats.misses += 1
             return None
 
+    def peek(self, key: Hashable):
+        """The cached plan (or ``None``) WITHOUT touching LRU order or the
+        hit/miss counters — the incremental rebind re-resolves carried
+        routes against the new catalog, and that bookkeeping sweep must
+        not distort cache stats or keep cold templates artificially
+        warm."""
+        with self._lock:
+            return self._entries.get(key)
+
     def put(self, key: Hashable, plan: Any) -> None:
         with self._lock:
             if key in self._entries:

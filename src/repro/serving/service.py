@@ -207,17 +207,81 @@ class QueryService:
                              getattr(pg.grin.store, "version", None))
 
     def prepare_binding(self, store=None,
-                        catalog: Optional[Catalog] = None) -> EngineBinding:
-        """Build a fresh binding over a new snapshot WITHOUT installing
-        it. The expensive part of a rebind (facade + catalog + engine
-        construction) runs here, off the readers' critical path; the
-        epoch swap itself is :meth:`install_binding`'s single store."""
+                        catalog: Optional[Catalog] = None,
+                        base: Optional[EngineBinding] = None,
+                        delta=None) -> EngineBinding:
+        """Build the next epoch's binding WITHOUT installing it. The
+        expensive part of a rebind runs here, off the readers' critical
+        path; the epoch swap itself is :meth:`install_binding`'s single
+        store.
+
+        Incremental path (DESIGN.md §15): when the new snapshot descends
+        from ``base``'s by pure appends (``base`` defaults to the current
+        binding; ``delta`` defaults to the write store's
+        ``commit_delta`` over the version window), the binding is
+        *advanced* — the PropertyGraph facade patches the old one's label
+        slices, the catalog updates from its sufficient statistics, both
+        engines carry their device state / stored procedures / indexes,
+        and memoized routes are re-resolved against the new stats (a
+        route survives exactly when no admission threshold was crossed).
+        Everything about that path is O(delta). Any ineligibility —
+        foreign store, compaction in the window, hand-built catalog —
+        falls back to the full ``_make_binding`` rebuild, which stays the
+        semantic oracle."""
         if store is None:
             if self.write_store is None:
                 raise ValueError("rebind() needs a store when the service "
                                  "has no mutable write_store")
             store = self.write_store.snapshot()
+        if catalog is None:
+            binding = self._advance_binding(
+                store, self._binding if base is None else base, delta)
+            if binding is not None:
+                return binding
         return self._make_binding(store, catalog)
+
+    def _advance_binding(self, store, base: Optional[EngineBinding],
+                         delta) -> Optional[EngineBinding]:
+        """The incremental half of :meth:`prepare_binding`; ``None`` means
+        "not expressible as an advance — do the full rebuild"."""
+        if base is None:
+            return None
+        tok_new = getattr(store, "snapshot_token", None)
+        old_pg = base.gaia.pg
+        tok_old = getattr(old_pg.grin.store, "snapshot_token", None)
+        if (tok_new is None or tok_old is None or len(tok_new) != 3
+                or len(tok_old) != 3 or tok_new[:-1] != tok_old[:-1]
+                or tok_new[-1] < tok_old[-1]):
+            return None                   # foreign store, or time travel
+        if delta is None:
+            if self.write_store is None:
+                return None
+            delta = self.write_store.commit_delta(tok_old[-1],
+                                                  upto=tok_new[-1])
+        if delta is None or delta.since != tok_old[-1] \
+                or delta.version != tok_new[-1]:
+            return None                   # compacted window / stale delta
+        pg = PropertyGraph(store, base=old_pg, delta=delta)
+        catalog = base.gaia.catalog.advance(pg, delta)
+        if catalog is None:
+            return None
+        binding = EngineBinding(base.gaia.advance(pg, catalog, delta),
+                                base.hiactor.advance(pg, catalog, delta),
+                                getattr(store, "version", None))
+        for key, route in base.routes.items():
+            if route in ("write", "grape"):
+                binding.routes[key] = route   # pure plan-shape routes
+                continue
+            plan = self.cache.peek(key)
+            if plan is None:
+                continue                  # evicted: re-resolve lazily
+            # the carried route survives exactly when the updated stats
+            # did not push the plan across a dispatch threshold
+            binding.routes[key] = self.route_for_plan(plan, catalog)
+        for key, pname in base.proc_names.items():
+            if binding.hiactor.has_procedure(pname):
+                binding.proc_names[key] = pname
+        return binding
 
     def install_binding(self, binding: EngineBinding) -> None:
         """Atomically swap the current epoch's binding. Old engines (and
@@ -263,12 +327,14 @@ class QueryService:
         """Re-pin the read side on a fresh snapshot (DESIGN.md §11).
 
         Called after every writing flush (and lazily when an external
-        writer advanced the store between flushes): rebuilds the
-        PropertyGraph facade, catalog and engines over the new version, and
-        drops the derived state that was computed against the old one —
-        memoized routes and HiActor's registered stored procedures (their
-        indexes bake in old property values). The compiled-plan cache
-        survives: plans are data-independent."""
+        writer advanced the store between flushes). When the new version
+        descends from the bound one by pure appends this is the O(delta)
+        incremental advance of :meth:`prepare_binding` — facade, catalog,
+        engines, routes and stored procedures all carry forward patched;
+        otherwise it rebuilds everything over the new version and derived
+        state computed against the old one is dropped (stale routes,
+        indexes baking in old property values). The compiled-plan cache
+        survives either way: plans are data-independent."""
         self.install_binding(self.prepare_binding(store, catalog))
 
     # ------------------------------------------------------------- compile
@@ -281,30 +347,33 @@ class QueryService:
     # FlexScheduler, so both paths execute a request identically and
     # differ only in admission policy.
 
+    def route_for_plan(self, plan, catalog: Catalog) -> str:
+        """One template's route: a pure function of the plan + service
+        config + catalog stats (shared by per-binding memoization and the
+        incremental rebind's route-survival check)."""
+        if plan_is_write(plan):
+            return "write"
+        if any(isinstance(op, ProcedureCall) for op in plan.ops):
+            # hybrid analytics-in-the-loop plan: GRAPE computes (or
+            # reuses) the fixpoint, Gaia's dataflow runs the rest
+            return "grape"
+        if is_point_lookup(plan, catalog, self.row_threshold):
+            return "hiactor"
+        if self.fragment and should_use_fragment_path(
+                plan, catalog, self.fragment_min_cost,
+                self.row_threshold):
+            # heavy traversal template: the whole admission batch
+            # becomes ONE jitted device program over the fragment
+            # substrate's [B, N] frontier matrices (DESIGN.md §9)
+            return "fragment"
+        return "gaia"
+
     def resolve_route(self, binding: EngineBinding, key: Tuple,
                       plan) -> str:
-        """The route of one compiled template, memoized per binding: a
-        pure function of the plan + service config + catalog stats."""
+        """The route of one compiled template, memoized per binding."""
         route = binding.routes.get(key)
         if route is None:
-            if plan_is_write(plan):
-                route = "write"
-            elif any(isinstance(op, ProcedureCall) for op in plan.ops):
-                # hybrid analytics-in-the-loop plan: GRAPE computes (or
-                # reuses) the fixpoint, Gaia's dataflow runs the rest
-                route = "grape"
-            elif is_point_lookup(plan, binding.gaia.catalog,
-                                 self.row_threshold):
-                route = "hiactor"
-            elif self.fragment and should_use_fragment_path(
-                    plan, binding.gaia.catalog, self.fragment_min_cost,
-                    self.row_threshold):
-                # heavy traversal template: the whole admission batch
-                # becomes ONE jitted device program over the fragment
-                # substrate's [B, N] frontier matrices (DESIGN.md §9)
-                route = "fragment"
-            else:
-                route = "gaia"
+            route = self.route_for_plan(plan, binding.gaia.catalog)
             binding.routes[key] = route
         return route
 

@@ -16,14 +16,43 @@ baseline used by Exp-1c (edge-scan throughput: CSR ≥ GART ≫ linked list).
 
 from __future__ import annotations
 
+import dataclasses
 import itertools
 import threading
-from typing import Dict, Optional, Tuple
+import weakref
+from typing import Dict, FrozenSet, Optional, Tuple
 
 import numpy as np
 
-from repro.storage.csr import CSRStore
+from repro.storage.csr import CSRStore, extend_csr, missing_fill
 from repro.storage.grin import Traits
+
+
+@dataclasses.dataclass(frozen=True)
+class CommitDelta:
+    """What changed between two versions of one GARTStore — the structured
+    delta every derived-state owner patches from (DESIGN.md §15): new
+    edges as columnar arrays (delta-buffer order), their edge-prop rows,
+    and the names of vertex-property columns any commit in the window
+    touched. ``None`` from :meth:`GARTStore.commit_delta` means the window
+    is not expressible as pure appends (a compact() landed) — callers must
+    rebuild from scratch."""
+
+    since: int                      # exclusive
+    version: int                    # inclusive
+    src: np.ndarray
+    dst: np.ndarray
+    labels: np.ndarray
+    eprops: Dict[str, np.ndarray]   # rows aligned with src/dst
+    vprop_names: FrozenSet[str]     # vprop columns written in the window
+
+    @property
+    def n_edges(self) -> int:
+        return len(self.src)
+
+    @property
+    def empty(self) -> bool:
+        return len(self.src) == 0 and not self.vprop_names
 
 
 class GARTSnapshot:
@@ -32,7 +61,9 @@ class GARTSnapshot:
     def __init__(self, base: CSRStore, d_src, d_dst, d_labels,
                  d_props: Dict[str, np.ndarray], version: int,
                  vertex_props, vertex_labels, n_vertices: int,
-                 store_uid: Optional[int] = None):
+                 store_uid: Optional[int] = None,
+                 merge_hint: Optional[Tuple[CSRStore, int]] = None,
+                 store: Optional["GARTStore"] = None):
         self._base = base
         self.version = version
         self._store_uid = store_uid
@@ -43,6 +74,21 @@ class GARTSnapshot:
         self._vprops = vertex_props
         self._vlabels = vertex_labels
         self._merged: Optional[CSRStore] = None
+        # _merge() is reached concurrently by both scheduler lanes sharing
+        # one snapshot: double-checked locking so exactly one materializes
+        # the merged CSR (a torn publish would hand out half-built stores)
+        self._merge_lock = threading.Lock()
+        # (prev merged CSRStore, delta rows it covers) captured under the
+        # store lock at snapshot time — the delta-prefix property makes
+        # rows[:covered] of THIS snapshot identical to the covered rows,
+        # so _merge() extends instead of re-sorting the world
+        self._merge_hint = merge_hint
+        self._store_ref = weakref.ref(store) if store is not None else None
+        # set when _merge() extended incrementally: (base merged CSRStore,
+        # old→new position map or None for identical topology, new-edge
+        # positions) — what lpg/engine patching validates against
+        self._inc_info: Optional[Tuple[CSRStore, Optional[np.ndarray],
+                                       np.ndarray]] = None
 
     def traits(self) -> Traits:
         return (Traits.TOPOLOGY_ARRAY | Traits.TOPOLOGY_CSC | Traits.DEGREE |
@@ -73,28 +119,79 @@ class GARTSnapshot:
     # merged view is materialized lazily and cached (the paper's snapshots
     # are similarly materialized CSR-ish structures)
     def _merge(self) -> CSRStore:
-        if self._merged is None:
-            b = self._base
-            src_base = np.repeat(np.arange(b.n_vertices, dtype=np.int64),
-                                 np.diff(b.indptr))
-            src = np.concatenate([src_base, self._d_src])
-            dst = np.concatenate([b.indices, self._d_dst])
-            elab = np.concatenate([b.edge_labels(), self._d_labels])
-            eprops = {}
-            n_delta = len(self._d_src)
-            for k in set(self._d_props) | set(b._eprops):
-                base_col = (b.edge_prop(k) if k in b._eprops
-                            else np.zeros(b.n_edges,
-                                          self._d_props[k].dtype))
-                delta_col = (self._d_props[k] if k in self._d_props
-                             else np.zeros(n_delta, base_col.dtype))
-                eprops[k] = np.concatenate([base_col, delta_col])
-            self._merged = CSRStore(self._n, src, dst,
-                                    vertex_props=self._vprops,
-                                    edge_props=eprops,
-                                    vertex_labels=self._vlabels,
-                                    edge_labels=elab)
+        if self._merged is not None:
+            return self._merged
+        with self._merge_lock:
+            if self._merged is not None:
+                return self._merged
+            merged = self._merge_incremental()
+            if merged is None:
+                merged = self._merge_full()
+            store = self._store_ref() if self._store_ref else None
+            if store is not None:
+                store._publish_merged(self._base, len(self._d_src), merged)
+            self._merged = merged
         return self._merged
+
+    def _merge_incremental(self) -> Optional[CSRStore]:
+        """Extend the previous snapshot's merged CSR with this snapshot's
+        uncovered delta suffix — O(delta·log) instead of O(E·log E)."""
+        if self._merge_hint is None:
+            return None
+        prev, covered = self._merge_hint
+        nd = len(self._d_src)
+        if covered > nd:
+            return None
+        if covered == nd:
+            # same edges, possibly different vprop columns: share every
+            # topology/eprop array in a fresh shell carrying OUR vprops.
+            # _topo_base marks the shell as topology-identical to prev so
+            # downstream lineage checks (lpg/engine advance) canonicalize
+            # shells back to the CSR they alias.
+            self._inc_info = (prev, None, np.empty(0, np.int64))
+            shell = CSRStore.from_parts(
+                self._n, prev.indptr, prev.indices,
+                vertex_props=self._vprops, edge_props=prev._eprops,
+                vertex_labels=self._vlabels,
+                edge_labels=prev.edge_labels(), csc=prev._csc)
+            shell._topo_base = getattr(prev, "_topo_base", prev)
+            return shell
+        try:
+            merged, old_pos, new_pos = extend_csr(
+                prev, self._d_src[covered:], self._d_dst[covered:],
+                new_elabels=self._d_labels[covered:],
+                new_eprops={k: col[covered:]
+                            for k, col in self._d_props.items()},
+                vertex_props=self._vprops, vertex_labels=self._vlabels)
+        except OverflowError:           # composite-key range exhausted
+            return None
+        self._inc_info = (prev, old_pos, new_pos)
+        return merged
+
+    def _merge_full(self) -> CSRStore:
+        b = self._base
+        src_base = np.repeat(np.arange(b.n_vertices, dtype=np.int64),
+                             np.diff(b.indptr))
+        src = np.concatenate([src_base, self._d_src])
+        dst = np.concatenate([b.indices, self._d_dst])
+        elab = np.concatenate([b.edge_labels(), self._d_labels])
+        eprops = {}
+        n_delta = len(self._d_src)
+        for k in set(self._d_props) | set(b._eprops):
+            have_b, have_d = k in b._eprops, k in self._d_props
+            dt = np.promote_types(
+                b.edge_prop(k).dtype if have_b else self._d_props[k].dtype,
+                self._d_props[k].dtype if have_d else b.edge_prop(k).dtype)
+            base_col = (b.edge_prop(k).astype(dt, copy=False) if have_b
+                        else np.full(b.n_edges, missing_fill(dt), dt))
+            delta_col = (self._d_props[k].astype(dt, copy=False) if have_d
+                         else np.full(n_delta, missing_fill(dt), dt))
+            eprops[k] = np.concatenate([base_col, delta_col])
+        return CSRStore(self._n, src, dst,
+                        vertex_props=self._vprops,
+                        edge_props=eprops,
+                        vertex_labels=self._vlabels,
+                        edge_labels=elab)
 
     def adjacency(self):
         return self._merge().adjacency()
@@ -164,6 +261,11 @@ class GARTStore:
         self.write_version = 0
         self._lock = threading.Lock()
         self._store_uid = next(GARTStore._uids)
+        # best-covering merged CSR published back by snapshot merges:
+        # (base identity, delta rows covered, merged CSRStore). Snapshots
+        # capture it as their merge hint so successive merges extend the
+        # previous one instead of re-sorting all edges (DESIGN.md §15).
+        self._merge_cache: Optional[Tuple[CSRStore, int, CSRStore]] = None
 
     @classmethod
     def from_csr(cls, csr: CSRStore) -> "GARTStore":
@@ -208,19 +310,39 @@ class GARTStore:
             new[:self._d_len] = arr[:self._d_len]
             setattr(self, name, new)
         for k, arr in self._d_props.items():
-            new = np.zeros(new_cap, arr.dtype)
+            # prop growth regions are *missing* until a commit writes
+            # them: NaN for floats, 0 for ints (one fill convention)
+            new = np.full(new_cap, missing_fill(arr.dtype), arr.dtype)
             new[:self._d_len] = arr[:self._d_len]
             self._d_props[k] = new
+
+    def _check_ids(self, what: str, ids: np.ndarray):
+        bad = ids[(ids < 0) | (ids >= self._n)]
+        if bad.size:
+            shown = ", ".join(str(int(b)) for b in bad[:8])
+            more = "" if bad.size <= 8 else f" (+{bad.size - 8} more)"
+            raise ValueError(
+                f"{what} out of range [0, {self._n}): {shown}{more}")
 
     def add_edges(self, src, dst, label: int = 0,
                   props: Optional[Dict[str, np.ndarray]] = None) -> int:
         """Append edges; returns the new write_version (commit id).
-        Appending nothing commits nothing (no version bump)."""
+        Appending nothing commits nothing (no version bump). Endpoints
+        are validated under the lock — an out-of-range id would corrupt
+        every later ``_merge()`` bincount. A prop column whose dtype
+        disagrees with earlier commits upcasts the stored column
+        (``np.promote_types``); values that cannot ride a numeric
+        promotion raise instead of truncating."""
         src = np.atleast_1d(np.asarray(src, np.int64))
         dst = np.atleast_1d(np.asarray(dst, np.int64))
+        if len(src) != len(dst):
+            raise ValueError(f"src/dst length mismatch: "
+                             f"{len(src)} vs {len(dst)}")
         with self._lock:
             if len(src) == 0:
                 return self.write_version
+            self._check_ids("edge src ids", src)
+            self._check_ids("edge dst ids", dst)
             self.write_version += 1
             v = self.write_version
             k = len(src)
@@ -231,11 +353,26 @@ class GARTStore:
             self._d_ver[s:s + k] = v
             self._d_lab[s:s + k] = label
             for name, col in (props or {}).items():
+                col = np.asarray(col)
                 if name not in self._d_props:
-                    self._d_props[name] = np.zeros(len(self._d_src),
-                                                   np.asarray(col).dtype)
-                    # backfill existing rows with zeros
+                    dt = col.dtype if col.dtype != object else np.float64
+                    # rows committed before this prop existed are missing:
+                    # NaN-for-float / 0-for-int, same convention as
+                    # set_vertex_prop (DESIGN.md §15)
+                    self._d_props[name] = np.full(
+                        len(self._d_src), missing_fill(dt), dt)
+                cur = self._d_props[name]
+                if col.dtype != cur.dtype:
+                    dt = np.promote_types(cur.dtype, col.dtype)
+                    if dt == object:
+                        raise TypeError(
+                            f"edge prop {name!r}: dtype {col.dtype} is not "
+                            f"promotable with stored {cur.dtype}")
+                    if dt != cur.dtype:     # upcast, never truncate
+                        self._d_props[name] = cur = cur.astype(dt)
                 self._d_props[name][s:s + k] = col
+            # props absent from THIS commit stay missing for its rows
+            # (np.full in _grow/creation already wrote the fill value)
             self._d_len += k
             return v
 
@@ -246,8 +383,10 @@ class GARTStore:
         mutable stores can grow their schema at runtime."""
         with self._lock:
             vals = np.asarray(values)
-            if np.size(np.asarray(ids)) == 0:
+            ids_arr = np.atleast_1d(np.asarray(ids, np.int64))
+            if ids_arr.size == 0:
                 return self.write_version     # no rows: no commit
+            self._check_ids("vertex ids", ids_arr)
             if name not in self._vprops:
                 dtype = vals.dtype if vals.dtype != object else np.float64
                 fill = np.nan if np.issubdtype(dtype, np.floating) else 0
@@ -272,11 +411,50 @@ class GARTStore:
         return out
 
     # ------------------------------------------------------------- snapshots
+    def commit_delta(self, since: int,
+                     upto: Optional[int] = None) -> Optional[CommitDelta]:
+        """The structured delta between version ``since`` (exclusive) and
+        ``upto`` (inclusive, default: current write_version), or ``None``
+        when the window cannot be expressed as pure appends — ``since``
+        predates the last ``compact()`` (the base CSR changed) or lies in
+        the future. ``_d_ver`` is nondecreasing, so the window is one
+        contiguous slice of the delta buffers."""
+        with self._lock:
+            v = self.write_version if upto is None else int(upto)
+            if since > v or since < self._hist_floor:
+                return None
+            dv = self._d_ver[:self._d_len]
+            lo = int(np.searchsorted(dv, since, side="right"))
+            hi = int(np.searchsorted(dv, v, side="right"))
+            vnames = frozenset(
+                name for name, hist in self._vprop_hist.items()
+                if any(since < ver <= v for ver, _ in hist))
+            return CommitDelta(
+                since=since, version=v,
+                src=self._d_src[lo:hi].copy(),
+                dst=self._d_dst[lo:hi].copy(),
+                labels=self._d_lab[lo:hi].copy(),
+                eprops={k: col[lo:hi].copy()
+                        for k, col in self._d_props.items()},
+                vprop_names=vnames)
+
+    def _publish_merged(self, base: CSRStore, covered: int,
+                        merged: CSRStore):
+        """A snapshot finished merging: keep the best-covering merged CSR
+        as the extension base for future snapshots (monotone — only a
+        strictly-wider merge replaces the cache)."""
+        with self._lock:
+            if base is not self._base:
+                return                  # compact() landed meanwhile
+            if self._merge_cache is None or self._merge_cache[1] < covered:
+                self._merge_cache = (base, covered, merged)
+
     def snapshot(self, version: Optional[int] = None) -> GARTSnapshot:
         with self._lock:
             return self._snapshot_locked(version)
 
-    def _snapshot_locked(self, version: Optional[int]) -> GARTSnapshot:
+    def _snapshot_locked(self, version: Optional[int],
+                         with_store: bool = True) -> GARTSnapshot:
         """Body of :meth:`snapshot`; caller holds ``self._lock`` (the lock
         is non-reentrant, and ``compact`` must snapshot + install under
         ONE critical section or a concurrent commit between the two would
@@ -302,13 +480,23 @@ class GARTStore:
         # (copy-on-write history; current columns are the fast path)
         vprops = (dict(self._vprops) if v >= self.write_version
                   else self._vprops_at(v))
+        # merge hint: the cached merged CSR extends to this snapshot iff
+        # it was built over the same base and covers a prefix of this
+        # snapshot's delta rows (versions are nondecreasing in the buffer,
+        # so "covers ≤ rows" IS "covers a prefix")
+        hint = None
+        if self._merge_cache is not None:
+            c_base, c_rows, c_merged = self._merge_cache
+            if c_base is self._base and c_rows <= int(mask.sum()):
+                hint = (c_merged, c_rows)
         return GARTSnapshot(
             self._base,
             self._d_src[:self._d_len][mask].copy(),
             self._d_dst[:self._d_len][mask].copy(),
             self._d_lab[:self._d_len][mask].copy(),
             props, v, vprops, self._vlabels, self._n,
-            store_uid=self._store_uid)
+            store_uid=self._store_uid, merge_hint=hint,
+            store=self if with_store else None)
 
     def compact(self):
         """Fold the delta into a new base CSR (background compaction).
@@ -324,13 +512,19 @@ class GARTStore:
             # snapshot + merge + install under ONE critical section: a
             # commit landing between them would otherwise be erased by
             # the _d_len reset below
-            snap = self._snapshot_locked(None)
+            # with_store=False: _merge()'s publish-back would re-enter the
+            # non-reentrant store lock we are holding; the cache is seeded
+            # explicitly below instead
+            snap = self._snapshot_locked(None, with_store=False)
             self._base = snap._merge()
             self._d_len = 0
             self._hist_floor = self.write_version
             self._vprop_hist = {
                 name: [(self._hist_floor, col)]
                 for name, col in self._vprops.items()}
+            # the new base IS the zero-delta merged view: seed the merge
+            # cache so post-compaction snapshots extend from it directly
+            self._merge_cache = (self._base, 0, self._base)
         return self
 
 

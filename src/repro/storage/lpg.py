@@ -16,7 +16,8 @@ from repro.storage.grin import GRINAdapter, QUERY_REQUIRED, Traits
 
 
 class PropertyGraph:
-    def __init__(self, store):
+    def __init__(self, store, base: Optional["PropertyGraph"] = None,
+                 delta=None):
         self.grin = GRINAdapter(store, QUERY_REQUIRED)
         self.indptr, self.indices = self.grin.adjacency()
         self.vlabels = self.grin.vertex_labels()
@@ -30,6 +31,67 @@ class PropertyGraph:
         # analytics results materialized by CALL algo.* (DESIGN.md §7);
         # overlay the store's own columns, last-writer-wins per name
         self._temp_vprops: Dict[str, np.ndarray] = {}
+        if base is not None:
+            self._adopt_from(base, delta)
+
+    # --------------------------------------------------- incremental adopt
+    def _adopt_from(self, base: "PropertyGraph", delta) -> None:
+        """Carry ``base``'s label-sliced CSR caches forward when this
+        graph's merged CSR was *extended* from base's (DESIGN.md §15):
+        each cached slice is patched by inserting the delta's same-label
+        edges at their CSR positions instead of re-slicing all E edges.
+        Silently does nothing when the lineage check fails (a compact()
+        or an unrelated merge landed in between) — slices then rebuild
+        lazily, which is always correct."""
+        info = getattr(self.grin.store, "_inc_info", None)
+        if info is None:
+            return
+        from repro.storage.csr import topo_base
+        prev_merged, old_pos, new_pos = info
+        base_store = base.grin.store
+        base_merged = getattr(base_store, "_merged", base_store)
+        if topo_base(prev_merged) is not topo_base(base_merged):
+            return                      # different extension lineage
+        if old_pos is None:             # identical topology (vprops-only
+            self._rev = base._rev       # commit): share every cache
+            self._label_csr.update(base._label_csr)
+            return
+        if delta is None or len(delta.src) != len(new_pos):
+            return
+        from repro.storage.csr import _insert_rows_sorted
+        E1 = len(self.indices)
+        for (lab, direction), (sl_ptr, sl_idx, sl_eids) \
+                in base._label_csr.items():
+            keep = delta.labels == lab
+            d_src, d_dst = delta.src[keep], delta.dst[keep]
+            d_eid = new_pos[keep]
+            # remap the old slice's CSR edge ids into the merged layout
+            # (old_pos is strictly monotone, so within-row order holds)
+            eids_re = old_pos[sl_eids]
+            try:
+                if direction == "out":
+                    # rows = src; within-row order is CSR position = eid
+                    ptr1, od, nd = _insert_rows_sorted(
+                        sl_ptr, eids_re, d_src, d_eid, self.n_vertices)
+                    new_heads = d_dst
+                else:
+                    # rows = dst; within-row order is (src, CSR position)
+                    # — the reverse-CSC tie order. Positions are unique,
+                    # so the composite key reproduces it exactly.
+                    ptr1, od, nd = _insert_rows_sorted(
+                        sl_ptr, sl_idx.astype(np.int64) * E1 + eids_re,
+                        d_dst, d_src * E1 + d_eid, self.n_vertices)
+                    new_heads = d_src
+            except OverflowError:
+                continue                # composite too wide: lazy rebuild
+            k = len(sl_eids) + len(d_eid)
+            idx1 = np.empty(k, sl_idx.dtype)
+            idx1[od] = sl_idx
+            idx1[nd] = new_heads.astype(sl_idx.dtype)
+            eids1 = np.empty(k, np.int64)
+            eids1[od] = eids_re
+            eids1[nd] = d_eid
+            self._label_csr[(lab, direction)] = (ptr1, idx1, eids1)
 
     # --------------------------------------------------------------- lookups
     @property

@@ -1,0 +1,652 @@
+"""Delta-based incremental maintenance (DESIGN.md §15): commit-to-fresh-query
+O(delta) end to end, with the from-scratch rebuild as the oracle at every
+layer — CSR extension, snapshot merge, label slices, device slabs,
+warm-started fixpoints, and the serving binding advance."""
+
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+from repro.core.ir.cbo import Catalog
+from repro.storage.csr import (CSRStore, extend_csr, missing_fill,
+                               topo_base)
+from repro.storage.gart import GARTStore
+from repro.storage.lpg import PropertyGraph
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                       # container ships without it
+    HAVE_HYPOTHESIS = False
+
+
+def random_csr(rng, n=60, e=300, with_labels=True):
+    return CSRStore(
+        n, rng.integers(0, n, e), rng.integers(0, n, e),
+        vertex_props={"age": rng.integers(18, 80, n).astype(np.int64)},
+        edge_props={"w": rng.random(e)},
+        vertex_labels=rng.integers(0, 2, n).astype(np.int32)
+        if with_labels else None,
+        edge_labels=rng.integers(0, 3, e).astype(np.int32)
+        if with_labels else None)
+
+
+def assert_same_store(a: CSRStore, b: CSRStore):
+    np.testing.assert_array_equal(a.indptr, b.indptr)
+    np.testing.assert_array_equal(a.indices, b.indices)
+    np.testing.assert_array_equal(a.edge_labels(), b.edge_labels())
+    assert set(a._eprops) == set(b._eprops)
+    for k in a._eprops:
+        np.testing.assert_array_equal(a.edge_prop(k), b.edge_prop(k))
+    ai, asrc = a.csc()
+    bi, bsrc = b.csc()
+    np.testing.assert_array_equal(ai, bi)
+    np.testing.assert_array_equal(asrc, bsrc)
+    np.testing.assert_array_equal(a.csc_edge_map(), b.csc_edge_map())
+
+
+class TestExtendCSR:
+    """extend_csr must be bit-identical to rebuilding from the
+    concatenated edge list — it IS the incremental merge's substrate."""
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_matches_full_rebuild(self, seed):
+        rng = np.random.default_rng(seed)
+        n, e0, k = 50, 240, 37
+        base = random_csr(rng, n, e0)
+        ns, nd = rng.integers(0, n, k), rng.integers(0, n, k)
+        nl = rng.integers(0, 3, k).astype(np.int32)
+        nw = rng.random(k)
+        ext, old_pos, new_pos = extend_csr(
+            base, ns, nd, new_elabels=nl, new_eprops={"w": nw})
+        src0 = np.repeat(np.arange(n), np.diff(base.indptr))
+        oracle = CSRStore(
+            n, np.concatenate([src0, ns]),
+            np.concatenate([base.indices.astype(np.int64), nd]),
+            edge_props={"w": np.concatenate([base.edge_prop("w"), nw])},
+            vertex_labels=base.vertex_labels(),
+            edge_labels=np.concatenate([base.edge_labels(), nl]))
+        assert_same_store(ext, oracle)
+        # position maps partition the new edge array
+        both = np.sort(np.concatenate([old_pos, new_pos]))
+        np.testing.assert_array_equal(both, np.arange(e0 + k))
+
+    def test_new_eprop_column_backfills_missing(self):
+        rng = np.random.default_rng(3)
+        base = random_csr(rng, 20, 60)
+        ext, _, new_pos = extend_csr(
+            base, [1, 2], [3, 4],
+            new_eprops={"score": np.array([0.5, 0.25]),
+                        "hits": np.array([7, 9], np.int64)})
+        # old rows of the float column are NaN, of the int column 0
+        score, hits = ext.edge_prop("score"), ext.edge_prop("hits")
+        old = np.setdiff1d(np.arange(62), new_pos)
+        assert np.isnan(score[old]).all() and not np.isnan(score[new_pos]).any()
+        assert (hits[old] == 0).all() and set(hits[new_pos]) == {7, 9}
+
+    def test_missing_fill_convention(self):
+        assert np.isnan(missing_fill(np.float32))
+        assert np.isnan(missing_fill(np.float64))
+        assert missing_fill(np.int32) == 0
+        assert missing_fill(np.bool_) == 0
+
+    def test_composite_overflow_guard(self):
+        from repro.storage.csr import _insert_rows_sorted
+        # hi_key > 2**61 over 4 rows: the composite row*hi_key + key would
+        # wrap int64, so the merge must refuse rather than corrupt
+        with pytest.raises(OverflowError):
+            _insert_rows_sorted(np.zeros(5, np.int64),
+                                np.array([], np.int64),
+                                np.array([0]), np.array([2 ** 61]), 4)
+
+
+class TestGARTValidation:
+    """Satellites 1–3: id validation, schema backfill, dtype promotion."""
+
+    def _store(self):
+        return GARTStore.from_csr(CSRStore(
+            5, np.array([0, 1]), np.array([1, 2]),
+            edge_props={"w": np.array([1.0, 2.0], np.float32)}))
+
+    def test_add_edges_rejects_out_of_range(self):
+        g = self._store()
+        v = g.write_version
+        with pytest.raises(ValueError, match="out of range"):
+            g.add_edges([0, 5], [1, 1])
+        with pytest.raises(ValueError, match="out of range"):
+            g.add_edges([0], [-1])
+        assert g.write_version == v        # rejected commit bumps nothing
+
+    def test_set_vertex_prop_rejects_out_of_range(self):
+        g = self._store()
+        with pytest.raises(ValueError, match="out of range"):
+            g.set_vertex_prop("x", [7], [1.0])
+
+    def test_new_vprop_backfills_by_dtype(self):
+        g = self._store()
+        g.set_vertex_prop("score", [1], [0.5])
+        g.set_vertex_prop("count", [2], np.array([4], np.int64))
+        s = g.snapshot()
+        score = s.vertex_prop("score")
+        count = s.vertex_prop("count")
+        assert score[1] == 0.5 and np.isnan(score[[0, 2, 3, 4]]).all()
+        assert count[2] == 4 and (count[[0, 1, 3, 4]] == 0).all()
+
+    def test_missing_eprop_column_backfills(self):
+        g = self._store()
+        g.add_edges([2], [3])              # no props: w backfills NaN
+        g.add_edges([3], [4], props={"tag": np.array([5], np.int32)})
+        s = g.snapshot()
+        indptr, indices = s.adjacency()
+        w, tag = s.edge_prop("w"), s.edge_prop("tag")
+        e23 = indptr[2] + indices[indptr[2]:indptr[3]].tolist().index(3)
+        e34 = indptr[3] + indices[indptr[3]:indptr[4]].tolist().index(4)
+        assert np.isnan(w[e23]) and np.isnan(w[e34])
+        assert tag[e34] == 5 and tag[e23] == 0    # int column: 0 fill
+
+    def test_eprop_dtype_upcasts(self):
+        g = self._store()
+        g.add_edges([2], [3], props={"w": np.array([7], np.int64)})
+        s = g.snapshot()
+        w = s.edge_prop("w")
+        assert w.dtype == np.promote_types(np.float32, np.int64)
+        assert 7.0 in w
+
+    def test_eprop_dtype_unpromotable_raises(self):
+        g = self._store()
+        with pytest.raises((TypeError, ValueError)):
+            g.add_edges([2], [3], props={"w": np.array(["x"], object)})
+
+
+class TestCommitDelta:
+    def test_window_semantics(self):
+        g = GARTStore.from_csr(CSRStore(4, np.array([0]), np.array([1])))
+        v0 = g.write_version
+        g.add_edges([1, 2], [2, 3], label=1)
+        g.set_vertex_prop("hot", [0], [1.0])
+        v1 = g.write_version
+        g.add_edges([3], [0])
+        d = g.commit_delta(v0, upto=v1)
+        assert d.since == v0 and d.version == v1 and d.n_edges == 2
+        assert d.vprop_names == frozenset({"hot"})
+        assert d.labels.tolist() == [1, 1]
+        full = g.commit_delta(v0)
+        assert full.n_edges == 3 and not full.empty
+        assert g.commit_delta(g.write_version).empty
+
+    def test_future_and_compacted_windows_are_none(self):
+        g = GARTStore.from_csr(CSRStore(4, np.array([0]), np.array([1])))
+        assert g.commit_delta(99) is None
+        g.add_edges([1], [2])
+        g.compact()
+        assert g.commit_delta(0) is None   # base CSR changed under the window
+
+
+class TestIncrementalMerge:
+    """Snapshot merges extend the previous merged CSR; oracle = full sort."""
+
+    @pytest.mark.parametrize("seed", [0, 4])
+    def test_chained_commits_match_fresh_build(self, seed):
+        rng = np.random.default_rng(seed)
+        n = 40
+        g = GARTStore.from_csr(random_csr(rng, n, 150))
+        for _ in range(4):
+            k = int(rng.integers(5, 25))
+            g.add_edges(rng.integers(0, n, k), rng.integers(0, n, k),
+                        label=int(rng.integers(0, 3)),
+                        props={"w": rng.random(k)})
+            if rng.random() < 0.5:
+                g.set_vertex_prop("age", rng.integers(0, n, 3),
+                                  rng.integers(0, 99, 3))
+            merged = g.snapshot()._merge()
+            assert_same_store(merged, GARTSnapshotOracle(g).store())
+
+    def test_vprops_only_commit_shares_topology(self):
+        rng = np.random.default_rng(1)
+        g = GARTStore.from_csr(random_csr(rng, 30, 100))
+        m0 = g.snapshot()._merge()
+        g.set_vertex_prop("age", [0, 1], [5, 6])
+        m1 = g.snapshot()._merge()
+        assert m1 is not m0                 # fresh shell, new vprops
+        assert m1.indices is m0.indices     # but topology arrays alias
+        assert topo_base(m1) is topo_base(m0)
+        g.set_vertex_prop("age", [2], [7])
+        m2 = g.snapshot()._merge()
+        assert topo_base(m2) is topo_base(m0)   # chains collapse
+
+    def test_concurrent_merge_single_result(self):
+        """Satellite 4: racing readers triggering the same lazy merge get
+        one consistent result (double-checked lock in _merge)."""
+        rng = np.random.default_rng(2)
+        n = 50
+        g = GARTStore.from_csr(random_csr(rng, n, 200))
+        g.add_edges(rng.integers(0, n, 30), rng.integers(0, n, 30))
+        snap = g.snapshot()
+        barrier = threading.Barrier(8)
+
+        def reader():
+            barrier.wait()
+            return snap._merge()
+
+        with ThreadPoolExecutor(8) as pool:
+            merged = [f.result() for f in
+                      [pool.submit(reader) for _ in range(8)]]
+        assert all(m is merged[0] for m in merged)
+        assert_same_store(merged[0], GARTSnapshotOracle(g).store())
+
+
+class GARTSnapshotOracle:
+    """Fresh-build oracle: the store's full edge list re-sorted cold."""
+
+    def __init__(self, g: GARTStore, version=None):
+        self.snap = g.snapshot(version)
+
+    def store(self) -> CSRStore:
+        s = self.snap
+        base, n = s._base, s._base.n_vertices
+        src0 = np.repeat(np.arange(n), np.diff(base.indptr))
+        eprops = {}
+        for k in set(base._eprops) | set(s._d_props):
+            b = base._eprops.get(k)
+            d = s._d_props.get(k)
+            dt = np.promote_types(b.dtype if b is not None else d.dtype,
+                                  d.dtype if d is not None else b.dtype)
+            bcol = (b if b is not None
+                    else np.full(base.n_edges, missing_fill(dt), dt))
+            dcol = (d if d is not None
+                    else np.full(len(s._d_src), missing_fill(dt), dt))
+            eprops[k] = np.concatenate([bcol.astype(dt), dcol.astype(dt)])
+        return CSRStore(
+            n, np.concatenate([src0, s._d_src]),
+            np.concatenate([base.indices.astype(np.int64), s._d_dst]),
+            edge_props=eprops, vertex_labels=base.vertex_labels(),
+            edge_labels=np.concatenate([base.edge_labels(), s._d_labels]))
+
+
+class TestLabelSlicePatching:
+    def test_sliced_csr_matches_fresh_facade(self):
+        rng = np.random.default_rng(5)
+        n = 40
+        g = GARTStore.from_csr(random_csr(rng, n, 160))
+        pg = PropertyGraph(g.snapshot())
+        for el in (0, 1, 2):
+            pg.sliced_csr(el, "out")        # warm both orientations
+            pg.sliced_csr(el, "in")
+        for step in range(3):
+            v0 = g.write_version
+            k = 20
+            g.add_edges(rng.integers(0, n, k), rng.integers(0, n, k),
+                        label=int(rng.integers(0, 3)))
+            delta = g.commit_delta(v0)
+            pg = PropertyGraph(g.snapshot(), base=pg, delta=delta)
+            fresh = PropertyGraph(g.snapshot())
+            for el in (0, 1, 2):
+                for d in ("out", "in"):
+                    a = pg.sliced_csr(el, d)
+                    b = fresh.sliced_csr(el, d)
+                    for x, y in zip(a, b):
+                        np.testing.assert_array_equal(
+                            np.asarray(x), np.asarray(y),
+                            err_msg=f"step {step} label {el} dir {d}")
+
+
+class TestCatalogAdvance:
+    def test_advance_matches_fresh_build(self):
+        rng = np.random.default_rng(6)
+        n = 50
+        g = GARTStore.from_csr(random_csr(rng, n, 200))
+        pg0 = PropertyGraph(g.snapshot())
+        cat = Catalog.build(pg0)
+        cat.add_prop_stats(pg0, 0, "age")
+        for _ in range(3):
+            v0 = g.write_version
+            k = 15
+            g.add_edges(rng.integers(0, n, k), rng.integers(0, n, k),
+                        label=int(rng.integers(0, 4)))   # label 3 is new
+            g.set_vertex_prop("age", rng.integers(0, n, 2),
+                              rng.integers(0, 99, 2))
+            delta = g.commit_delta(v0)
+            pg1 = PropertyGraph(g.snapshot())
+            cat = cat.advance(pg1, delta)
+            fresh = Catalog.build(pg1)
+            assert cat.edge_label_counts == fresh.edge_label_counts
+            assert cat.path2 == fresh.path2
+            assert cat.label_counts == fresh.label_counts
+            assert cat.size_biased == fresh.size_biased   # exact int sums
+            fresh.add_prop_stats(pg1, 0, "age")
+            assert cat.distinct == fresh.distinct
+            pg0 = pg1
+
+    def test_handbuilt_catalog_refuses(self):
+        cat = Catalog(4, {0: 4}, {0: 2}, {}, {})
+        assert cat.sb_state is None
+        assert cat.advance(None, None) is None
+
+
+def _randomized_merge_oracle(edges, seed):
+    """Property body shared by the hypothesis-driven and seeded fallback
+    randomized tests: ANY append sequence, chunked into commits and merged
+    incrementally through chained facades, must reproduce the cold
+    rebuild bit-for-bit."""
+    rng = np.random.default_rng(seed)
+    g = GARTStore.from_csr(random_csr(rng, 30, 80))
+    pg = PropertyGraph(g.snapshot())
+    for i in range(0, len(edges), 7):
+        chunk = edges[i:i + 7]
+        v0 = g.write_version
+        g.add_edges([s for s, _, _ in chunk], [d for _, d, _ in chunk],
+                    label=np.array([l for _, _, l in chunk], np.int32))
+        delta = g.commit_delta(v0)
+        pg = PropertyGraph(g.snapshot(), base=pg, delta=delta)
+    assert_same_store(pg.grin.store._merge(),
+                      GARTSnapshotOracle(g).store())
+
+
+if HAVE_HYPOTHESIS:
+    class TestRandomizedMergeOracle:
+        @settings(max_examples=20, deadline=None)
+        @given(st.lists(st.tuples(st.integers(0, 29), st.integers(0, 29),
+                                  st.integers(0, 2)),
+                        min_size=1, max_size=40),
+               st.integers(0, 2 ** 31 - 1))
+        def test_any_write_sequence_matches_rebuild(self, edges, seed):
+            _randomized_merge_oracle(edges, seed)
+else:
+    class TestRandomizedMergeOracle:
+        """Seeded fallback when hypothesis is absent from the container:
+        the same property over a handful of fixed random sequences."""
+
+        @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+        def test_any_write_sequence_matches_rebuild(self, seed):
+            rng = np.random.default_rng(seed + 100)
+            m = int(rng.integers(1, 40))
+            edges = list(zip(rng.integers(0, 30, m).tolist(),
+                             rng.integers(0, 30, m).tolist(),
+                             rng.integers(0, 3, m).tolist()))
+            _randomized_merge_oracle(edges, seed)
+
+
+class TestFrontierAdvance:
+    """Device-slab growth (DESIGN.md §15): an advanced executor shares the
+    old one's jitted runners (zero retrace) and answers bit-identically to
+    a fresh build; the superseded executor keeps serving its snapshot."""
+
+    def _graph(self, rng, n=200, e=1200):
+        return GARTStore.from_csr(CSRStore(
+            n, rng.integers(0, n, e), rng.integers(0, n, e),
+            vertex_props={"age": rng.integers(18, 80, n).astype(np.int64)},
+            edge_props={"w": rng.random(e)},
+            edge_labels=rng.integers(0, 2, e).astype(np.int32)))
+
+    def _plan(self):
+        from repro.core.ir.dag import (BinExpr, Const, Expand, GroupCount,
+                                       LogicalPlan, Pred, PropRef, Scan)
+        return LogicalPlan([
+            Scan("a", None, Pred(BinExpr(">", PropRef("a", "age"),
+                                         Const(40)))),
+            Expand("a", 1, "out", edge="_e1", fused_vertex="b"),
+            Expand("b", 0, "in", edge="_e2", fused_vertex="c"),
+            GroupCount(PropRef("c", None), "cnt"),
+        ])
+
+    @staticmethod
+    def _run(ex, plan):
+        out = ex.execute(plan, [None])[0]
+        return sorted(map(tuple, np.asarray(out).tolist()))
+
+    @pytest.mark.parametrize("use_kernels", [False, True])
+    def test_advance_matches_fresh(self, use_kernels):
+        from repro.engines.frontier import FragmentFrontierExecutor
+        rng = np.random.default_rng(7)
+        n = 200
+        g = self._graph(rng, n)
+        plan = self._plan()
+        pg0 = PropertyGraph(g.snapshot())
+        ex0 = FragmentFrontierExecutor(pg0, n_frags=2,
+                                       use_kernels=use_kernels)
+        assert ex0.program_for(plan) is not None
+        r0 = self._run(ex0, plan)
+        v0 = g.write_version
+        k = 30
+        g.add_edges(rng.integers(0, n, k), rng.integers(0, n, k),
+                    label=rng.integers(0, 2, k).astype(np.int32),
+                    props={"w": rng.random(k)})
+        g.set_vertex_prop("age", np.array([3, 9]), np.array([99, 12]))
+        delta = g.commit_delta(v0)
+        pg1 = PropertyGraph(g.snapshot(), base=pg0, delta=delta)
+        ex1 = ex0.advance(pg1, delta)
+        assert ex1 is not None
+        assert ex1._runners is ex0._runners
+        n_runners = len(ex0._runners)
+        fresh = FragmentFrontierExecutor(PropertyGraph(g.snapshot()),
+                                         n_frags=2, use_kernels=use_kernels)
+        assert self._run(ex1, plan) == self._run(fresh, plan)
+        assert len(ex1._runners) == n_runners   # zero retrace
+        assert self._run(ex0, plan) == r0       # pinned reader stable
+
+    def test_chained_advances(self):
+        from repro.engines.frontier import FragmentFrontierExecutor
+        rng = np.random.default_rng(8)
+        n = 200
+        g = self._graph(rng, n)
+        plan = self._plan()
+        pg = PropertyGraph(g.snapshot())
+        ex = FragmentFrontierExecutor(pg, n_frags=2)
+        self._run(ex, plan)
+        for step in range(3):
+            v0 = g.write_version
+            k = 20
+            g.add_edges(rng.integers(0, n, k), rng.integers(0, n, k),
+                        label=rng.integers(0, 2, k).astype(np.int32),
+                        props={"w": rng.random(k)})
+            delta = g.commit_delta(v0)
+            pg = PropertyGraph(g.snapshot(), base=pg, delta=delta)
+            ex = ex.advance(pg, delta)
+            assert ex is not None, f"chain step {step}"
+            fresh = FragmentFrontierExecutor(PropertyGraph(g.snapshot()),
+                                             n_frags=2)
+            assert self._run(ex, plan) == self._run(fresh, plan)
+
+
+class TestSampleAdvance:
+    def _store(self, rng, n=150, e=700):
+        return GARTStore.from_csr(CSRStore(
+            n, rng.integers(0, n, e), rng.integers(0, n, e),
+            vertex_props={"feat": rng.random((n, 8)).astype(np.float32),
+                          "y": rng.integers(0, 4, n)}))
+
+    @staticmethod
+    def _out(ex, seeds, key):
+        layers, feats, labels = ex.sample(seeds, key, (4, 3))
+        return ([np.asarray(l) for l in layers],
+                [np.asarray(f) for f in feats], np.asarray(labels))
+
+    @staticmethod
+    def _same(a, b):
+        return (all(np.array_equal(x, y) for x, y in zip(a[0], b[0]))
+                and all(np.array_equal(x, y) for x, y in zip(a[1], b[1]))
+                and np.array_equal(a[2], b[2]))
+
+    @pytest.mark.parametrize("exchange", ["stacked", "psum"])
+    def test_advance_bit_exact(self, exchange):
+        import jax
+        from repro.engines.sample import FragmentSampleExecutor
+        rng = np.random.default_rng(11)
+        n = 150
+        g = self._store(rng, n)
+        key = jax.random.PRNGKey(0)
+        seeds = rng.integers(0, n, 16)
+        snap0 = g.snapshot()
+        ex0 = FragmentSampleExecutor(snap0, n_frags=2, label_prop="y",
+                                     exchange=exchange)
+        r0 = self._out(ex0, seeds, key)
+        v0 = g.write_version
+        g.add_edges(rng.integers(0, n, 25), rng.integers(0, n, 25))
+        delta = g.commit_delta(v0)
+        snap1 = g.snapshot()
+        ex1 = ex0.advance(snap1, delta)
+        assert ex1 is not None
+        assert ex1._jit_sample is ex0._jit_sample
+        fresh = FragmentSampleExecutor(snap1, n_frags=2, label_prop="y",
+                                       exchange=exchange)
+        assert self._same(self._out(ex1, seeds, key),
+                          self._out(fresh, seeds, key))
+        assert self._same(self._out(ex0, seeds, key), r0)
+
+    def test_slab_width_growth(self):
+        import jax
+        from repro.engines.sample import FragmentSampleExecutor
+        rng = np.random.default_rng(12)
+        n = 150
+        g = self._store(rng, n)
+        key = jax.random.PRNGKey(0)
+        seeds = np.concatenate([[7], rng.integers(0, n, 15)]).astype(np.int64)
+        ex = FragmentSampleExecutor(g.snapshot(), n_frags=2, label_prop="y",
+                                    use_kernels=True)
+        W0 = int(ex.ell.shape[-1])
+        v0 = g.write_version
+        g.add_edges(np.full(W0 + 5, 7), rng.integers(0, n, W0 + 5))
+        delta = g.commit_delta(v0)
+        snap1 = g.snapshot()
+        ex1 = ex.advance(snap1, delta)
+        assert ex1 is not None and int(ex1.ell.shape[-1]) > W0
+        fresh = FragmentSampleExecutor(snap1, n_frags=2, label_prop="y",
+                                       use_kernels=True)
+        assert int(ex1.ell.shape[-1]) == int(fresh.ell.shape[-1])
+        assert self._same(self._out(ex1, seeds, key),
+                          self._out(fresh, seeds, key))
+
+
+class TestWarmStartProcedures:
+    def test_warm_vs_cold_differential(self):
+        from repro.engines.procedures import ProcedureRegistry
+        rng = np.random.default_rng(3)
+        n, e = 250, 1200
+        src, dst = rng.integers(0, n, e), rng.integers(0, n, e)
+        cs = CSRStore(n, np.concatenate([src, dst]),
+                      np.concatenate([dst, src]),
+                      edge_props={"weight": np.tile(
+                          rng.random(e).astype(np.float32), 2)})
+        g = GARTStore.from_csr(cs)
+        reg = ProcedureRegistry(n_frags=2)
+        snap0 = g.snapshot()
+        for name, args in (("pagerank", (0.85,)), ("sssp", (0,)),
+                           ("bfs", (0,)), ("wcc", ())):
+            reg.run(snap0, name, args)
+        assert reg.stats.warm_starts == 0
+
+        k = 40
+        s2, d2 = rng.integers(0, n, k), rng.integers(0, n, k)
+        w2 = rng.random(k).astype(np.float32)
+        g.add_edges(np.concatenate([s2, d2]), np.concatenate([d2, s2]),
+                    props={"weight": np.tile(w2, 2)})
+        snap1 = g.snapshot()
+        cold = ProcedureRegistry(n_frags=2)   # no lineage: cold oracle
+        for name, args, exact in (("sssp", (0,), True), ("bfs", (0,), True),
+                                  ("wcc", (), True),
+                                  ("pagerank", (0.85,), False)):
+            w = reg.run(snap1, name, args)
+            c = cold.run(snap1, name, args)
+            if exact:        # monotone min-propagation: unique fixpoint
+                assert np.array_equal(w, c, equal_nan=True), name
+            else:            # contraction: documented tol/(1-damping) bound
+                assert float(np.abs(w - c).sum()) <= 1e-6 / (1 - 0.85)
+        assert reg.stats.warm_starts == 4
+        # same-version memo still hits (warm-start is miss-path only)
+        before = reg.stats.hits
+        reg.run(snap1, "wcc", ())
+        assert reg.stats.hits == before + 1
+
+
+class TestBindingAdvance:
+    """Serving epoch advance: carried procedures/routes/executors answer
+    exactly like a cold service rebuilt over the same store."""
+
+    POINT = ("MATCH (v:Person {credits: $c})-[:BUY]->(i:Item) "
+             "WITH v, COUNT(i) AS cnt RETURN cnt AS cnt")
+    FRAG = ("MATCH (a:Person)-[:KNOWS]->(b:Person)-[:BUY]->(c:Item) "
+            "WHERE a.credits > $t AND c.price > $p RETURN c AS c")
+    W_CREATE = ("MATCH (a:Person {id: $x}), (b:Person {id: $y}) "
+                "CREATE (a)-[:KNOWS]->(b)")
+    W_SET = "MATCH (a:Person {id: $x}) SET a.credits = $c"
+
+    @staticmethod
+    def _bag(out):
+        cols = sorted(out)
+        return sorted(zip(*(np.asarray(out[c]).tolist() for c in cols)))
+
+    def _read_mix(self, svc):
+        svc.submit(self.POINT, {"c": 13})
+        svc.submit(self.FRAG, {"t": 100, "p": 50})
+        rs, _ = svc.flush()
+        return [(r.engine, self._bag(r.result)) for r in rs]
+
+    def test_advance_vs_cold_rebuild(self):
+        from repro.serving import QueryService
+        from repro.storage.generators import snb_store
+        g = GARTStore.from_csr(snb_store(n_persons=200, n_items=100,
+                                         n_posts=30, seed=7))
+        svc = QueryService(g, batch_size=8, n_frags=2)
+        self._read_mix(svc)
+        b0 = svc._binding
+        pnames0 = dict(b0.proc_names)
+        seq0 = svc._proc_seq
+        fex0 = b0.gaia._frontier_execs
+        assert pnames0 and fex0
+        rng = np.random.default_rng(0)
+        for _ in range(2):
+            for _ in range(4):
+                x, y = rng.integers(0, 200, 2)
+                svc.submit(self.W_CREATE, {"x": int(x), "y": int(y)})
+            svc.submit(self.W_SET, {"x": int(rng.integers(0, 200)),
+                                    "c": int(rng.integers(0, 500))})
+            svc.flush()
+            b1 = svc._binding
+            assert b1.version == g.write_version
+            # stored procedures carried — never re-registered
+            assert dict(b1.proc_names) == pnames0
+            assert svc._proc_seq == seq0
+            # routes survived (no threshold crossing at this write rate)
+            for k, r in b0.routes.items():
+                assert b1.routes.get(k) == r
+            # frontier executors advanced with shared jitted runners
+            fex1 = b1.gaia._frontier_execs
+            assert set(fex1) == set(fex0)
+            for k in fex0:
+                assert fex1[k]._runners is fex0[k]._runners
+            # catalog advance is exact vs a cold build
+            fresh_cat = Catalog.build(b1.gaia.pg)
+            assert b1.gaia.catalog.path2 == fresh_cat.path2
+            assert b1.gaia.catalog.size_biased == fresh_cat.size_biased
+            # and the whole service answers like a cold one
+            oracle = QueryService(g, batch_size=8, n_frags=2)
+            assert self._read_mix(svc) == self._read_mix(oracle)
+            b0, fex0 = b1, fex1
+
+    def test_compaction_falls_back_to_full_rebuild(self):
+        from repro.serving import QueryService
+        from repro.storage.generators import snb_store
+        g = GARTStore.from_csr(snb_store(n_persons=120, n_items=60,
+                                         n_posts=20, seed=9))
+        svc = QueryService(g, batch_size=8, n_frags=2)
+        self._read_mix(svc)
+        g.compact()
+        svc.submit(self.W_CREATE, {"x": 1, "y": 2})
+        svc.flush()      # lineage broken: full rebuild, still correct
+        oracle = QueryService(g, batch_size=8, n_frags=2)
+        assert self._read_mix(svc) == self._read_mix(oracle)
+
+    def test_foreign_store_is_not_advanced(self):
+        from repro.serving import QueryService
+        from repro.storage.generators import snb_store
+        g = GARTStore.from_csr(snb_store(n_persons=120, n_items=60,
+                                         n_posts=20, seed=3))
+        svc = QueryService(g, batch_size=8)
+        other = GARTStore.from_csr(snb_store(n_persons=120, n_items=60,
+                                             n_posts=20, seed=4))
+        b = svc.prepare_binding(other.snapshot())
+        assert b.version == other.write_version
+        assert not b.proc_names and not b.routes

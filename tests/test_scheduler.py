@@ -681,6 +681,47 @@ class TestWriteReadInterleaving:
 
 
 # --------------------------------------------------------------------------
+# incremental binding advance on the always-on path (DESIGN.md §15)
+# --------------------------------------------------------------------------
+class TestIncrementalBindingAdvance:
+    def test_writes_advance_binding_incrementally(self):
+        """Scheduler-driven commits rebind via the O(delta) advance:
+        stored procedures are carried (never re-registered — ``_proc_seq``
+        frozen), cached routes survive, and every post-commit read is
+        bag-equal to a cold full-rebuild session over the SAME store."""
+        with mk_session() as s:
+            svc = s.interactive()
+            sched = s.serve_async()
+            # warm the binding: a point lookup registers a HiActor proc
+            sched.submit(POINT, {"x": 3}).result(timeout=WAIT)
+            b0 = svc._binding
+            seq0 = svc._proc_seq
+            pnames0 = dict(b0.proc_names)
+            assert pnames0, "expected a registered stored procedure"
+            futs = [sched.submit(CREATE,
+                                 {"x": i, "y": (i * 3 + 1) % N_PERSONS,
+                                  "d": i}, tenant="w") for i in range(8)]
+            futs.append(sched.submit(SETQ, {"x": 4, "c": 9}, tenant="w"))
+            results_of(futs)
+            b1 = svc._binding
+            assert b1 is not b0
+            assert b1.version == s.store.write_version
+            assert svc._proc_seq == seq0    # carried, not re-registered
+            assert dict(b1.proc_names) == pnames0
+            for key, route in b0.routes.items():
+                assert b1.routes.get(key) == route
+            # differential oracle: cold rebuild over the same store
+            cold = FlexSession(s.store).interactive()
+            for x in (0, 3, 4):
+                for tmpl in (COUNT_K, POINT):
+                    got = sched.submit(tmpl, {"x": x}).result(
+                        timeout=WAIT).result
+                    cold.submit(tmpl, {"x": x})
+                    want, _ = cold.flush()
+                    assert_results_bag_equal(want[0].result, got)
+
+
+# --------------------------------------------------------------------------
 # thread-safety regressions: PlanCache + stats accumulation
 # --------------------------------------------------------------------------
 class TestThreadSafetyRegressions:
