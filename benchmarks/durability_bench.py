@@ -1,0 +1,210 @@
+"""Exp-11: durability tier — checkpoint/restore cost, WAL replay
+throughput, and crash-recovery cold start (DESIGN.md §16).
+
+Rows:
+
+- ``exp11_checkpoint_p{N}`` / ``exp11_restore_p{N}``: wall time to
+  persist a GART store (base CSR as a GraphAr archive + delta buffers +
+  vprop history) and to load it back to a query-ready merged view, vs
+  graph size (SNB-flavoured stores at N persons).
+- ``exp11_wal_replay``: WAL tail replay throughput — recovery time with
+  a C-commit tail minus recovery time after those commits are folded
+  into a checkpoint; derived commits/s.
+- ``exp11_recover_incremental`` vs ``exp11_recover_rebuild``: the
+  delta-dominated cold start. Both contenders start from bytes and end
+  at an answered merged view of the SAME store state. Incremental:
+  newest checkpoint + WAL tail replayed through ``apply_commit``, first
+  merge extending the archived base by O(delta). Rebuild-only (the
+  no-durability world): re-ingest the full raw edge list (O(E·log E)
+  sort), re-apply the tail, full merge. Bit-equality gate on the merged
+  CSRs; acceptance bar (full run): incremental ≥ 5× faster.
+- ``exp11_cold_start_session``: one-shot ``flexbuild(path=...)`` to a
+  first answered Cypher row — the user-facing recovery path (recorded,
+  no bar: it includes engine/catalog build common to both worlds).
+
+``--smoke`` (tier-1 CI) runs every gate on a small store, skips bars.
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import interleaved_medians, record, timeit
+from repro.storage.durability import (list_checkpoints, load_checkpoint,
+                                      open_durability, recover_store,
+                                      write_checkpoint)
+from repro.storage.gart import GARTStore
+from repro.storage.generators import E_KNOWS, snb_store
+
+
+def _fresh_store(n_persons: int) -> GARTStore:
+    cs = snb_store(n_persons=n_persons, n_items=n_persons // 2,
+                   n_posts=n_persons // 8, seed=11)
+    return GARTStore.from_csr(cs)
+
+
+def _stir(store: GARTStore, rounds: int, seed: int = 7):
+    """Committed deltas + vprop history so checkpoints carry the full
+    MVCC state, not just a base archive."""
+    rng = np.random.default_rng(seed)
+    n = store.n_vertices
+    for r in range(rounds):
+        k = 4
+        store.add_edges(rng.integers(0, n, k), rng.integers(0, n, k),
+                        label=E_KNOWS,
+                        props={"date": np.full(k, r, np.int64)})
+        if r % 3 == 0:
+            ids = rng.integers(0, n, 2)
+            store.set_vertex_prop("credits", ids, rng.random(2) * 100)
+
+
+def _assert_merged_bitequal(ma, mb, what: str):
+    assert np.array_equal(ma.indptr, mb.indptr) \
+        and np.array_equal(ma.indices, mb.indices) \
+        and np.array_equal(ma.edge_labels(), mb.edge_labels()), \
+        f"{what}: merged topology diverges"
+    assert set(ma._eprops) == set(mb._eprops), f"{what}: eprop keys differ"
+    for k in ma._eprops:
+        np.testing.assert_array_equal(ma.edge_prop(k), mb.edge_prop(k),
+                                      err_msg=f"{what}: eprop {k}")
+
+
+def _checkpoint_restore(n_persons: int, smoke: bool):
+    store = _fresh_store(n_persons)
+    _stir(store, rounds=6)
+    E = store.snapshot()._merge().n_edges
+    d = tempfile.mkdtemp(prefix="exp11_ckpt_")
+    try:
+        rep = 2 if smoke else 5
+        t_w = timeit(lambda: write_checkpoint(d, store, keep=2),
+                     repeat=rep, warmup=1)
+        record(f"exp11_checkpoint_p{n_persons}", t_w, f"edges={E}")
+        ckpt = list_checkpoints(d)[-1][1]
+
+        def load():
+            load_checkpoint(ckpt).snapshot()._merge()
+
+        t_r = timeit(load, repeat=rep, warmup=1)
+        record(f"exp11_restore_p{n_persons}", t_r, f"edges={E}")
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def _wal_replay(n_persons: int, n_commits: int, smoke: bool):
+    d = tempfile.mkdtemp(prefix="exp11_wal_")
+    try:
+        ds = open_durability(d, _fresh_store(n_persons))
+        _stir(ds, rounds=n_commits)
+        rep = 2 if smoke else 5
+        t_tail = timeit(lambda: recover_store(d), repeat=rep, warmup=1)
+        n_replayed = ds.write_version   # every commit is in the tail
+        ds.durability.checkpoint(ds)    # fold the tail, gc the segments
+        t_clean = timeit(lambda: recover_store(d), repeat=rep, warmup=1)
+        replay_us = max(t_tail - t_clean, 0.0)
+        per_s = n_replayed / (replay_us / 1e6) if replay_us else float("inf")
+        record("exp11_wal_replay", replay_us,
+               f"commits={n_replayed};commits_per_s={per_s:.0f}")
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def _cold_start(n_persons: int, n_tail: int, smoke: bool):
+    """Delta-dominated case: big checkpointed base, short WAL tail."""
+    base = snb_store(n_persons=n_persons, n_items=n_persons // 2,
+                     n_posts=n_persons // 8, seed=11)
+    n = base.n_vertices
+    # the raw ingest feed the rebuild-only world starts from — written
+    # off-clock so both contenders begin at bytes on local disk and end
+    # at the same answered merged view
+    raw = {"src": np.repeat(np.arange(n, dtype=np.int64),
+                            np.diff(base.indptr)),
+           "dst": base.indices.astype(np.int64),
+           "elab": base.edge_labels(),
+           "vlab": base.vertex_labels()}
+    eprop_keys = sorted(base._eprops)
+    vprop_keys = sorted(base._vprops)
+    for k in eprop_keys:
+        raw[f"ep_{k}"] = base.edge_prop(k)
+    for k in vprop_keys:
+        raw[f"vp_{k}"] = base.vertex_prop(k)
+
+    rng = np.random.default_rng(13)
+    tail = []
+    for r in range(n_tail):
+        k = 4
+        tail.append(("edges", rng.integers(0, n, k),
+                     rng.integers(0, n, k),
+                     np.full(k, r, np.int64)))
+        if r % 4 == 0:
+            tail.append(("vprop", rng.integers(0, n, 2),
+                         rng.random(2) * 100))
+
+    def _apply_tail(st):
+        for op in tail:
+            if op[0] == "edges":
+                st.add_edges(op[1], op[2], label=E_KNOWS,
+                             props={"date": op[3]})
+            else:
+                st.set_vertex_prop("credits", op[1], op[2])
+
+    d = tempfile.mkdtemp(prefix="exp11_cold_")
+    try:
+        np.savez(f"{d}/raw_ingest.npz", **raw)
+        ds = open_durability(f"{d}/dur", GARTStore.from_csr(base))
+        _apply_tail(ds)             # the WAL tail past the checkpoint
+
+        def recover_cold():
+            return recover_store(f"{d}/dur").snapshot()._merge()
+
+        def rebuild_cold():
+            with np.load(f"{d}/raw_ingest.npz", allow_pickle=True) as z:
+                st = GARTStore(
+                    n, src=z["src"], dst=z["dst"],
+                    vertex_props={k: z[f"vp_{k}"] for k in vprop_keys},
+                    vertex_labels=z["vlab"], edge_labels=z["elab"],
+                    edge_props={k: z[f"ep_{k}"] for k in eprop_keys})
+            _apply_tail(st)
+            return st.snapshot()._merge()
+
+        _assert_merged_bitequal(recover_cold(), rebuild_cold(),
+                                "cold start")
+        m_inc, m_reb = interleaved_medians(
+            [recover_cold, rebuild_cold], rounds=2 if smoke else 5)
+        speedup = m_reb / m_inc
+        record("exp11_recover_incremental", m_inc * 1e6, "oracle=equal")
+        record("exp11_recover_rebuild", m_reb * 1e6,
+               f"recover_speedup={speedup:.1f}x")
+        if not smoke:
+            assert speedup >= 5.0, \
+                f"delta-dominated cold start {speedup:.1f}x < 5x bar"
+
+        # the user-facing path, one shot: recovered session to first row
+        from repro.core.flexbuild import flexbuild
+        t0 = time.perf_counter()
+        s = flexbuild(path=f"{d}/dur", serve=True)
+        out = s.execute("MATCH (a:Person {id: $x}) RETURN a.credits AS c",
+                        {"x": 5})
+        dt = time.perf_counter() - t0
+        assert len(out["c"]) == 1
+        record("exp11_cold_start_session", dt * 1e6, "rows=1")
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def run(smoke: bool = False):
+    sizes = (300,) if smoke else (1000, 4000)
+    for n in sizes:
+        _checkpoint_restore(n, smoke)
+    _wal_replay(300 if smoke else 1000, 30 if smoke else 200, smoke)
+    _cold_start(300 if smoke else 8000, 10 if smoke else 50, smoke)
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit_header
+
+    emit_header()
+    run()

@@ -17,7 +17,7 @@ def main() -> None:
                     help="comma list: storage,query,traversal,hybrid,"
                          "analytics,learning,exp5,exp6,readwrite,"
                          "exp7,serving,exp8,macro,exp9,tail,exp10,incr,"
-                         "kernels")
+                         "exp11,durability,kernels")
     ap.add_argument("--smoke", action="store_true",
                     help="smoke mode for sections that support it "
                          "(exp8/exp9/exp10: equality gate only, small "
@@ -25,7 +25,8 @@ def main() -> None:
     args = ap.parse_args()
     wanted = set(args.only.split(",")) if args.only != "all" else {
         "storage", "query", "hybrid", "analytics", "learning",
-        "readwrite", "serving", "macro", "tail", "incr", "kernels"}
+        "readwrite", "serving", "macro", "tail", "incr", "durability",
+        "kernels"}
 
     from benchmarks.common import emit_header
     emit_header()
@@ -70,6 +71,10 @@ def main() -> None:
         from benchmarks import incr_bench
         sections.append(
             ("incr", lambda: incr_bench.run(smoke=args.smoke)))
+    if wanted & {"durability", "exp11"}:
+        from benchmarks import durability_bench
+        sections.append(
+            ("durability", lambda: durability_bench.run(smoke=args.smoke)))
     if "kernels" in wanted:
         from benchmarks import kernel_bench
         sections.append(("kernels", kernel_bench.run))

@@ -16,7 +16,41 @@ three composition rules: DESIGN.md §3):
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Any, Dict, List, Optional, Sequence
+
+# the default brick selection for durability cold starts: both query
+# interfaces plus the analytics engine. graphlearn is opt-in — its
+# sampler binds a feature column eagerly, which a recovered store need
+# not carry
+DEFAULT_COMPONENTS = ("cypher", "gremlin", "grape")
+
+
+def _open_durable(store, path: str, checkpoint_every: Optional[int],
+                  checkpoint_keep: int):
+    """Wrap/recover ``store`` through the durability tier at ``path``
+    (DESIGN.md §16). An existing complete checkpoint wins: the store is
+    recovered from disk (a passed ``store`` is only the bootstrap seed
+    for an empty directory). A store already durable on this path is
+    reused as-is."""
+    from repro.storage.durability import open_durability
+    from repro.storage.gart import GARTStore
+
+    dur = getattr(store, "durability", None)
+    if dur is not None:
+        if os.path.abspath(dur.path) == os.path.abspath(path):
+            return store
+        raise ValueError(
+            f"store is already durable on {dur.path!r}; refusing to "
+            f"rebind it to {path!r}")
+    if store is not None and not isinstance(store, GARTStore):
+        raise TypeError(
+            f"durability (path=...) needs a mutable GART store, got "
+            f"{type(store).__name__}")
+    kwargs = {"keep": checkpoint_keep}
+    if checkpoint_every is not None:
+        kwargs["checkpoint_every"] = checkpoint_every
+    return open_durability(path, store, **kwargs)
 
 from repro.storage.grin import (ANALYTICS_REQUIRED, GRINAdapter,
                                 LEARNING_REQUIRED, QUERY_REQUIRED, Traits)
@@ -58,14 +92,27 @@ class Deployment:
     def engine(self, name: str):
         return self.engines[name]
 
-    def session(self, **kwargs):
+    def session(self, *, path: Optional[str] = None,
+                checkpoint_every: Optional[int] = None,
+                checkpoint_keep: int = 3, **kwargs):
         """The user-facing surface over this deployment: one
         :class:`~repro.serving.session.FlexSession` driving queries,
         writes, analytics and learning over the deployment's store
         (DESIGN.md §11). Keyword arguments override the session knobs
-        (``n_frags``, ``feature_prop``, …) inherited from the build."""
+        (``n_frags``, ``feature_prop``, …) inherited from the build.
+
+        ``path`` routes the store through the durability tier
+        (DESIGN.md §16): an existing checkpoint under ``path`` recovers
+        the pre-crash store (checkpoint + WAL-tail replay) and the
+        deployment's in-memory store is ignored; an empty directory
+        bootstraps it with an initial checkpoint. Every later commit is
+        WAL-logged, auto-checkpointed every ``checkpoint_every`` commits
+        and on ``session.close()``."""
         from repro.serving.session import FlexSession
 
+        if path is not None:
+            self.store = _open_durable(self.store, path,
+                                       checkpoint_every, checkpoint_keep)
         kwargs.setdefault("n_frags", self.n_frags)
         if self.feature_prop is not None:
             kwargs.setdefault("feature_prop", self.feature_prop)
@@ -81,7 +128,10 @@ class Deployment:
         return "\n".join(lines)
 
 
-def flexbuild(store, components: Sequence[str], *,
+def flexbuild(store=None, components: Optional[Sequence[str]] = None, *,
+              path: Optional[str] = None,
+              checkpoint_every: Optional[int] = None,
+              checkpoint_keep: int = 3,
               mesh=None, n_frags: int = 1,
               feature_prop: Optional[str] = None,
               label_prop: Optional[str] = None,
@@ -92,8 +142,29 @@ def flexbuild(store, components: Sequence[str], *,
     :class:`~repro.serving.session.FlexSession` (the recommended surface:
     one façade over queries, writes, analytics and learning —
     DESIGN.md §11) instead of the loose-engine :class:`Deployment`;
-    extra keyword arguments pass through to the session."""
+    extra keyword arguments pass through to the session.
+
+    ``path`` is the durability tier's front door (DESIGN.md §16):
+    ``flexbuild(path=...)`` alone cold-starts from the newest complete
+    checkpoint under it (WAL tail replayed — the crash-recovery path;
+    ``components`` defaults to the full brick set), while
+    ``flexbuild(store, comps, path=...)`` bootstraps a fresh durability
+    directory around ``store``. Commits are WAL-logged write-ahead and
+    auto-checkpointed every ``checkpoint_every`` commits, keeping the
+    newest ``checkpoint_keep`` checkpoints."""
+    if components is None:
+        components = DEFAULT_COMPONENTS
     comps = list(components)
+    if path is not None:
+        store = _open_durable(store, path, checkpoint_every,
+                              checkpoint_keep)
+    elif checkpoint_every is not None:
+        raise TypeError("checkpoint_every needs path= (a durability "
+                        "directory to checkpoint into)")
+    if store is None:
+        raise TypeError("flexbuild needs a store, or path= pointing at "
+                        "an existing durability directory to recover "
+                        "from")
     unknown = [c for c in comps
                if c not in STORAGE_COMPONENTS | ENGINE_COMPONENTS
                | INTERFACE_COMPONENTS]

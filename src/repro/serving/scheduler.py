@@ -290,6 +290,30 @@ class FlexScheduler:
             self._cv.notify_all()
         return item.future
 
+    def submit_task(self, fn, *, name: str = "task") -> Future:
+        """Enqueue a maintenance callable on the **slow lane**; returns a
+        Future resolving to its return value. This is how background
+        store upkeep — durability checkpoints, compaction — rides the
+        same worker as write epochs: it serializes with them (never
+        observes a half-applied epoch) while the fast lane keeps
+        answering point lookups. A failing task fails only its own
+        future — maintenance trouble (a full disk during a checkpoint)
+        must not latch the serving door shut."""
+        if not callable(fn):
+            raise TypeError(f"submit_task needs a callable, got {fn!r}")
+        item = _Item(f"__{name}__", None, {}, "task", None)
+        unit = _Unit("task", None, fn, False, [item], None)
+        with self._cv:
+            if self._closed:
+                raise SchedulerClosed(
+                    "scheduler is closed; no new work accepted")
+            self._slow_buf.append(unit)
+            self._slow_pending += 1
+            self._outstanding += 1
+            self._units_dispatched += 1
+            self._cv.notify_all()
+        return item.future
+
     def _retry_after(self, queued: int) -> float:
         return min(5.0, max(1e-3, queued * self._stats.ewma_us / 1e6))
 
@@ -598,10 +622,33 @@ class FlexScheduler:
         t_exec = time.perf_counter()
         if unit.route == "write":
             self._run_write_unit(unit, t_exec)
+        elif unit.route == "task":
+            self._run_task_unit(unit)
         elif unit.route in ("hiactor", "fragment"):
             self._run_batched_unit(unit, t_exec)
         else:                                   # gaia | grape: per request
             self._run_interpreted_unit(unit, t_exec)
+
+    def _run_task_unit(self, unit: _Unit) -> None:
+        """Run one maintenance callable on the slow-lane worker. Its
+        exception resolves its own future only; a BaseException
+        (KeyboardInterrupt/SystemExit) still latches the door — that is
+        process shutdown, not maintenance trouble."""
+        item = unit.items[0]
+        try:
+            result = unit.plan()
+        except Exception as e:                  # noqa: BLE001
+            self._resolve_error(item, e)
+            return
+        except BaseException as e:
+            self._resolve_error(item, e)
+            self._trip_internal(e)
+            raise
+        if item.future.set_running_or_notify_cancel():
+            item.future.set_result(result)
+        with self._cv:
+            self._outstanding -= 1
+            self._cv.notify_all()
 
     def _run_batched_unit(self, unit: _Unit, t_exec: float) -> None:
         svc = self.service

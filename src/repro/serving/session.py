@@ -178,6 +178,11 @@ class FlexSession:
         self._analytical: Optional[AnalyticalContext] = None
         self._scheduler = None            # lazy FlexScheduler (serve_async)
         self.last_publish_error: Optional[Exception] = None
+        # durability tier (DESIGN.md §16): a store opened through
+        # open_durability carries its manager; the session drives the
+        # auto-checkpoint policy and checkpoint-on-close through it
+        self.last_checkpoint_error: Optional[Exception] = None
+        self.last_checkpoint_path: Optional[str] = None
 
     # ------------------------------------------------------------ the verbs
     def interactive(self) -> QueryService:
@@ -252,12 +257,91 @@ class FlexSession:
             self._scheduler.start()
         return self._scheduler
 
+    # ------------------------------------------------------------ durability
+    @property
+    def durability(self):
+        """The store's :class:`~repro.storage.durability.Durability`
+        manager, or None for a non-durable store."""
+        return getattr(self.store, "durability", None)
+
+    def checkpoint(self, path: Optional[str] = None,
+                   keep: Optional[int] = None) -> str:
+        """Persist the store at its current version (DESIGN.md §16).
+
+        On a durable store (``flexbuild(path=...)`` /
+        ``open_durability``) this writes the next checkpoint into its
+        durability directory and garbage-collects covered WAL segments;
+        ``path`` overrides the target for a one-off export. A plain
+        mutable GART store can also be checkpointed by passing ``path``
+        explicitly (export only — no WAL attaches to it). Returns the
+        checkpoint directory."""
+        from repro.storage.durability import write_checkpoint
+
+        dur = self.durability
+        if dur is not None and path is None:
+            p = dur.checkpoint(self.store, keep=keep)
+        elif path is not None:
+            p = write_checkpoint(path, self.store,
+                                 keep=keep if keep is not None else 3)
+        else:
+            raise TypeError(
+                "checkpoint() needs a durable store (flexbuild(path=...)) "
+                "or an explicit path= target")
+        self.last_checkpoint_path = p
+        return p
+
+    def _maybe_auto_checkpoint(self) -> None:
+        """Every-N-commits policy: when due, the checkpoint rides the
+        scheduler's slow lane (serialized with write epochs, fast lane
+        unaffected) or runs inline on the synchronous flush path. A
+        failing auto-checkpoint is recorded and warned, never raised —
+        the commit that triggered it is already durable in the WAL."""
+        import warnings
+
+        dur = self.durability
+        if dur is None or not dur.auto_due():
+            return
+        store = self.store
+
+        def _record(err: Optional[Exception], p: Optional[str]) -> None:
+            if err is not None:
+                self.last_checkpoint_error = err
+                warnings.warn(f"auto-checkpoint failed: {err!r}",
+                              RuntimeWarning, stacklevel=3)
+            else:
+                self.last_checkpoint_path = p
+
+        if self._scheduler is not None and self._scheduler.is_running:
+            fut = self._scheduler.submit_task(
+                lambda: dur.run_auto(store), name="checkpoint")
+            fut.add_done_callback(
+                lambda f: _record(f.exception(),
+                                  None if f.exception() else f.result()))
+        else:
+            try:
+                _record(None, dur.run_auto(store))
+            except Exception as e:                # noqa: BLE001
+                _record(e, None)
+
     def close(self, timeout: Optional[float] = 30.0) -> None:
         """Drain and stop the async front door (no-op when none is
-        running). The synchronous verbs stay usable after close."""
+        running), then — for durable stores — take the close() checkpoint
+        if commits landed since the last one. The synchronous verbs stay
+        usable after close."""
+        import warnings
+
         if self._scheduler is not None:
             self._scheduler.close(timeout=timeout)
             self._scheduler = None
+        dur = self.durability
+        if dur is not None and dur.checkpoint_on_close \
+                and dur.commits_since_checkpoint > 0:
+            try:
+                self.last_checkpoint_path = dur.checkpoint(self.store)
+            except Exception as e:                # noqa: BLE001
+                self.last_checkpoint_error = e
+                warnings.warn(f"checkpoint-on-close failed: {e!r}",
+                              RuntimeWarning, stacklevel=2)
 
     def __enter__(self) -> "FlexSession":
         return self
@@ -310,6 +394,7 @@ class FlexSession:
             warnings.warn(f"VersionBus subscriber raised after a "
                           f"committed flush: {e!r}", RuntimeWarning,
                           stacklevel=2)
+        self._maybe_auto_checkpoint()
 
     def describe(self) -> str:
         mode = "read-write" if self.mutable else "read-only"

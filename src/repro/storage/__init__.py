@@ -1,5 +1,9 @@
 from repro.storage.grin import Traits, GRINAdapter  # noqa: F401
 from repro.storage.csr import CSRStore  # noqa: F401
-from repro.storage.gart import GARTStore, LinkedListStore  # noqa: F401
+from repro.storage.gart import CommitDelta, GARTStore, LinkedListStore  # noqa: F401
 from repro.storage.graphar import GraphArStore  # noqa: F401
 from repro.storage.lpg import PropertyGraph  # noqa: F401
+from repro.storage.durability import (  # noqa: F401
+    DeltaLog, DeltaLogCorrupt, Durability, DurableGARTStore,
+    list_checkpoints, load_checkpoint, open_durability, recover_store,
+    write_checkpoint)

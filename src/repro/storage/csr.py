@@ -25,6 +25,37 @@ def edges_to_csr(n: int, src: np.ndarray, dst: np.ndarray,
     return indptr, dst_s.astype(np.int32), order
 
 
+def validate_csr_parts(n: int, indptr: np.ndarray, indices: np.ndarray,
+                       edge_labels: Optional[np.ndarray] = None,
+                       edge_props: Optional[Dict[str, np.ndarray]] = None,
+                       what: str = "CSR parts") -> None:
+    """Structural sanity of already-sorted CSR arrays before
+    :meth:`CSRStore.from_parts` adopts them. The in-process extension
+    paths construct parts by arithmetic and skip this; loaders pulling
+    arrays off disk (GraphAr archives, durability checkpoints) call it so
+    a corrupt file surfaces as a clear error instead of a downstream
+    bincount explosion."""
+    indptr = np.asarray(indptr)
+    if len(indptr) != n + 1 or (n >= 0 and (indptr[0] != 0)):
+        raise ValueError(f"{what}: indptr has {len(indptr)} entries for "
+                         f"{n} vertices (or does not start at 0)")
+    if len(indptr) > 1 and np.any(np.diff(indptr) < 0):
+        raise ValueError(f"{what}: indptr is not nondecreasing")
+    E = int(indptr[-1]) if len(indptr) else 0
+    if len(indices) != E:
+        raise ValueError(f"{what}: {len(indices)} indices for "
+                         f"indptr[-1]={E}")
+    if len(indices) and (indices.min() < 0 or indices.max() >= n):
+        raise ValueError(f"{what}: edge targets out of range [0, {n})")
+    if edge_labels is not None and len(edge_labels) != E:
+        raise ValueError(f"{what}: {len(edge_labels)} edge labels for "
+                         f"{E} edges")
+    for k, col in (edge_props or {}).items():
+        if len(col) != E:
+            raise ValueError(f"{what}: edge prop {k!r} has {len(col)} "
+                             f"rows for {E} edges")
+
+
 def topo_base(store):
     """Canonical topology identity of a (possibly shell-shared) CSR: a
     vprops-only snapshot merge wraps the previous merged CSR's arrays in a

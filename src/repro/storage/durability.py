@@ -1,0 +1,745 @@
+"""Durability tier — GraphAr checkpoints, write-ahead delta log, and
+crash-recovering cold start (DESIGN.md §16).
+
+Everything above this module is in-memory and dies with the process; this
+is the layer that makes the stack restart-survivable. Three pieces:
+
+- **Checkpoints** (:func:`write_checkpoint` / :func:`load_checkpoint`):
+  the full :class:`~repro.storage.gart.GARTStore` state at a pinned
+  version — base CSR as a GraphAr-style chunked archive, the delta
+  buffers with their per-row commit versions, the copy-on-write
+  vertex-property history window and the compaction floor — written
+  temp-dir-then-atomic-rename with a manifest, so a crash mid-save is
+  invisible (the ``train/checkpoint.py`` pattern). A restored store is
+  state-identical to the live store at the checkpointed version,
+  including time travel down to the floor.
+- **Write-ahead delta log** (:class:`DeltaLog`): every commit appends one
+  serialized :class:`~repro.storage.gart.CommitDelta` record
+  (length-prefixed + CRC32, fsync'd before the commit is acknowledged,
+  segment rotation). ``compact()`` logs a control record so the recovered
+  time-travel floor matches the live one exactly. Segments wholly covered
+  by a checkpoint are garbage-collected.
+- **Recovery** (:func:`recover_store` / :func:`open_durability`): load the
+  newest *complete* checkpoint, replay the WAL tail through
+  :meth:`GARTStore.apply_commit` — the same structured-delta path the
+  incremental machinery consumes (DESIGN.md §15), which is what makes the
+  MVCC snapshot oracle apply to recovery — and hand back a store
+  bit-identical to the pre-crash store at the recovery point. A torn tail
+  record (the crash interrupted an append) is truncated; a corrupt
+  mid-log record raises :class:`DeltaLogCorrupt`.
+
+Serialization is deterministic (sorted keys, canonical JSON header, raw
+``.npy`` framing), so ``encode → decode → encode`` is byte-identity — the
+property the codec tests pin.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import io
+import json
+import os
+import re
+import shutil
+import struct
+import tempfile
+import threading
+import zlib
+from typing import Dict, Iterator, List, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+from repro.storage.csr import CSRStore, missing_fill
+from repro.storage.gart import CommitDelta, GARTStore
+from repro.storage.graphar import GraphArStore
+
+# ---------------------------------------------------------------- constants
+
+CKPT_PREFIX = "ckpt_"
+WAL_DIR = "wal"
+SEG_MAGIC = b"FLXD"                  # segment header: magic + u32 format
+SEG_FORMAT = 1
+_SEG_HDR = struct.Struct("<4sI")
+_REC_HDR = struct.Struct("<II")      # payload length, crc32(payload)
+
+
+class DeltaLogCorrupt(RuntimeError):
+    """A mid-log record failed its CRC / framing check. Unlike a torn
+    *tail* (which recovery silently truncates — by definition the crash
+    interrupted an unacknowledged append), corruption in the middle of
+    the log means acknowledged commits are unrecoverable, which must
+    surface, never be skipped."""
+
+
+# ------------------------------------------------------- array/record codec
+
+def _pack_arrays(arrays: Dict[str, np.ndarray]) -> bytes:
+    """Deterministic framing of named arrays: sorted keys, each as
+    ``[u16 klen][key][u8 mode]`` + payload. Mode 0 (1-D plain dtypes,
+    the overwhelmingly common case) frames the raw buffer with its dtype
+    string — decoding is a ``frombuffer`` copy, no npy header parse per
+    array (WAL replay decodes thousands of tiny arrays; the npy header's
+    ``literal_eval`` alone dominates). Mode 1 falls back to npy bytes for
+    object/multi-dim columns (pickle path: our own files, local trust)."""
+    out = io.BytesIO()
+    for key in sorted(arrays):
+        kb = key.encode("utf-8")
+        a = np.ascontiguousarray(arrays[key])
+        out.write(struct.pack("<H", len(kb)))
+        out.write(kb)
+        if a.ndim == 1 and not a.dtype.hasobject:
+            db = a.dtype.str.encode("ascii")
+            out.write(struct.pack("<BH", 0, len(db)))
+            out.write(db)
+            out.write(struct.pack("<Q", a.nbytes))
+            out.write(a.tobytes())
+        else:
+            bio = io.BytesIO()
+            np.lib.format.write_array(bio, a, allow_pickle=True)
+            ab = bio.getvalue()
+            out.write(struct.pack("<BQ", 1, len(ab)))
+            out.write(ab)
+    return out.getvalue()
+
+
+def _unpack_arrays(buf: bytes) -> Dict[str, np.ndarray]:
+    arrays: Dict[str, np.ndarray] = {}
+    off = 0
+    while off < len(buf):
+        (klen,) = struct.unpack_from("<H", buf, off)
+        off += 2
+        key = buf[off:off + klen].decode("utf-8")
+        off += klen
+        (mode,) = struct.unpack_from("<B", buf, off)
+        off += 1
+        if mode == 0:
+            (dlen,) = struct.unpack_from("<H", buf, off)
+            off += 2
+            dt = np.dtype(buf[off:off + dlen].decode("ascii"))
+            off += dlen
+            (nbytes,) = struct.unpack_from("<Q", buf, off)
+            off += 8
+            arrays[key] = np.frombuffer(
+                buf[off:off + nbytes], dtype=dt).copy()
+            off += nbytes
+        elif mode == 1:
+            (alen,) = struct.unpack_from("<Q", buf, off)
+            off += 8
+            arrays[key] = np.lib.format.read_array(
+                io.BytesIO(buf[off:off + alen]), allow_pickle=True)
+            off += alen
+        else:
+            raise DeltaLogCorrupt(f"unknown array frame mode {mode}")
+    return arrays
+
+
+class WalRecord(NamedTuple):
+    kind: str                       # "commit" | "compact"
+    version: int
+    delta: Optional[CommitDelta]
+    # set_vertex_prop payloads: name -> (ids, values) exactly as committed
+    vprops: Optional[Dict[str, Tuple[np.ndarray, np.ndarray]]]
+
+
+def encode_commit_record(delta: CommitDelta,
+                         vprops: Optional[Dict[str, Tuple]] = None) -> bytes:
+    """One commit as deterministic bytes: canonical JSON header line +
+    framed arrays. ``encode(decode(b)) == b`` for any ``b`` this produced
+    (sorted keys everywhere, no timestamps)."""
+    vprops = vprops or {}
+    header = {
+        "type": "commit",
+        "since": int(delta.since),
+        "version": int(delta.version),
+        "vprop_names": sorted(delta.vprop_names),
+        "vprop_data": sorted(vprops),
+        "eprops": sorted(delta.eprops),
+    }
+    arrays: Dict[str, np.ndarray] = {
+        "src": np.asarray(delta.src, np.int64),
+        "dst": np.asarray(delta.dst, np.int64),
+        "labels": np.asarray(delta.labels, np.int32),
+    }
+    for name, col in delta.eprops.items():
+        arrays[f"ep::{name}"] = np.asarray(col)
+    for name, (ids, vals) in vprops.items():
+        arrays[f"vp::ids::{name}"] = np.asarray(ids, np.int64)
+        arrays[f"vp::vals::{name}"] = np.asarray(vals)
+    head = json.dumps(header, sort_keys=True,
+                      separators=(",", ":")).encode("utf-8")
+    return head + b"\n" + _pack_arrays(arrays)
+
+
+def encode_compact_record(version: int) -> bytes:
+    header = {"type": "compact", "version": int(version)}
+    return json.dumps(header, sort_keys=True,
+                      separators=(",", ":")).encode("utf-8") + b"\n"
+
+
+def decode_record(payload: bytes) -> WalRecord:
+    """Inverse of the encoders; raises :class:`DeltaLogCorrupt` on any
+    framing/shape problem (the CRC already passed, so a decode failure is
+    real corruption or a format bug, not a torn write)."""
+    try:
+        nl = payload.index(b"\n")
+        header = json.loads(payload[:nl].decode("utf-8"))
+        kind = header["type"]
+        if kind == "compact":
+            return WalRecord("compact", int(header["version"]), None, None)
+        if kind != "commit":
+            raise ValueError(f"unknown record type {kind!r}")
+        arrays = _unpack_arrays(payload[nl + 1:])
+        eprops = {name: arrays[f"ep::{name}"]
+                  for name in header["eprops"]}
+        vprops = {name: (arrays[f"vp::ids::{name}"],
+                         arrays[f"vp::vals::{name}"])
+                  for name in header["vprop_data"]}
+        delta = CommitDelta(
+            since=int(header["since"]), version=int(header["version"]),
+            src=arrays["src"], dst=arrays["dst"], labels=arrays["labels"],
+            eprops=eprops, vprop_names=frozenset(header["vprop_names"]))
+        return WalRecord("commit", delta.version, delta, vprops)
+    except DeltaLogCorrupt:
+        raise
+    except Exception as e:                           # noqa: BLE001
+        raise DeltaLogCorrupt(f"undecodable WAL record: {e!r}") from e
+
+
+# --------------------------------------------------------------- delta log
+
+class DeltaLog:
+    """Append-only segmented write-ahead log of commit records.
+
+    Segments are named ``seg_<first-version>.wal``; a new one starts when
+    the active segment passes ``segment_bytes``. Each record is
+    ``[u32 len][u32 crc32][payload]``; ``fsync=True`` (the default) syncs
+    before :meth:`append_record` returns, so an acknowledged commit is on
+    disk. :meth:`batch` defers the sync to one call per write epoch
+    (group commit). Thread safety: appends serialize on an internal lock;
+    replay/gc are recovery/maintenance-time operations.
+    """
+
+    def __init__(self, path: str, *, segment_bytes: int = 4 << 20,
+                 fsync: bool = True):
+        self.path = path
+        self.segment_bytes = int(segment_bytes)
+        self.fsync = bool(fsync)
+        os.makedirs(path, exist_ok=True)
+        self._lock = threading.Lock()
+        self._fh = None                  # lazily-opened active segment
+        self._active_size = 0
+        self._batch_depth = 0
+        self._batch_dirty = False
+
+    # ----------------------------------------------------------- segments
+    def _segments(self) -> List[Tuple[int, str]]:
+        out = []
+        for name in os.listdir(self.path):
+            m = re.fullmatch(r"seg_(\d+)\.wal", name)
+            if m:
+                out.append((int(m.group(1)), os.path.join(self.path, name)))
+        return sorted(out)
+
+    def _open_segment(self, first_version: int) -> None:
+        if self._fh is not None:
+            self._fh.close()
+        fname = os.path.join(self.path, f"seg_{first_version:012d}.wal")
+        self._fh = open(fname, "ab")
+        if self._fh.tell() == 0:
+            self._fh.write(_SEG_HDR.pack(SEG_MAGIC, SEG_FORMAT))
+        self._active_size = self._fh.tell()
+
+    # ------------------------------------------------------------- append
+    def append_record(self, payload: bytes, version: int) -> None:
+        with self._lock:
+            if self._fh is None:
+                segs = self._segments()
+                if segs:
+                    self._open_segment(segs[-1][0])
+                else:
+                    self._open_segment(version)
+            if self._active_size >= self.segment_bytes:
+                self._open_segment(version)
+            crc = zlib.crc32(payload) & 0xFFFFFFFF
+            self._fh.write(_REC_HDR.pack(len(payload), crc))
+            self._fh.write(payload)
+            self._fh.flush()
+            self._active_size = self._fh.tell()
+            if self.fsync:
+                if self._batch_depth:
+                    self._batch_dirty = True
+                else:
+                    os.fsync(self._fh.fileno())
+
+    @contextlib.contextmanager
+    def batch(self):
+        """Group commit: records inside the block are written and flushed
+        eagerly but fsync'd once on exit — one disk sync per write epoch
+        instead of one per commit."""
+        with self._lock:
+            self._batch_depth += 1
+        try:
+            yield self
+        finally:
+            with self._lock:
+                self._batch_depth -= 1
+                if not self._batch_depth and self._batch_dirty:
+                    self._batch_dirty = False
+                    if self._fh is not None:
+                        os.fsync(self._fh.fileno())
+
+    # ------------------------------------------------------------- replay
+    def replay(self, since: int) -> Iterator[WalRecord]:
+        """Decode every record after ``since`` in log order: commit
+        records with ``version > since``, compact records with
+        ``version >= since`` (compaction does not bump the version and is
+        idempotent, so replaying one that predates the checkpoint is a
+        no-op — while skipping one that postdates it would leave the
+        recovered time-travel floor lower than the live store's).
+
+        A torn tail — the final record of the final segment short of its
+        declared length, or failing its CRC with nothing after it — is
+        physically truncated and replay ends there. Anything malformed
+        earlier raises :class:`DeltaLogCorrupt`."""
+        assert self._fh is None, "replay before the log is opened for append"
+        segs = self._segments()
+        for si, (first, fname) in enumerate(segs):
+            final_seg = si == len(segs) - 1
+            with open(fname, "rb") as f:
+                buf = f.read()
+            if len(buf) < _SEG_HDR.size or \
+                    buf[:4] != SEG_MAGIC:
+                raise DeltaLogCorrupt(f"{fname}: bad segment header")
+            off = _SEG_HDR.size
+            size = len(buf)
+            while off < size:
+                torn = None
+                if size - off < _REC_HDR.size:
+                    torn = "truncated record header"
+                else:
+                    length, crc = _REC_HDR.unpack_from(buf, off)
+                    end = off + _REC_HDR.size + length
+                    if end > size:
+                        torn = "truncated record payload"
+                    else:
+                        payload = buf[off + _REC_HDR.size:end]
+                        if (zlib.crc32(payload) & 0xFFFFFFFF) != crc:
+                            if final_seg and end == size:
+                                # full-length tail record with a bad CRC
+                                # and nothing after it: a torn write that
+                                # reached the length but not the bytes
+                                torn = "tail record failed CRC"
+                            else:
+                                raise DeltaLogCorrupt(
+                                    f"{fname}: CRC mismatch at offset "
+                                    f"{off} (mid-log corruption)")
+                if torn is not None:
+                    if not final_seg:
+                        raise DeltaLogCorrupt(
+                            f"{fname}: {torn} in a non-final segment")
+                    with open(fname, "r+b") as f:
+                        f.truncate(off)
+                    return
+                rec = decode_record(payload)
+                off = end
+                if rec.kind == "compact":
+                    if rec.version >= since:
+                        yield rec
+                elif rec.version > since:
+                    yield rec
+
+    # ----------------------------------------------------------------- gc
+    def gc(self, upto: int) -> int:
+        """Delete segments wholly covered by a checkpoint at ``upto``: a
+        non-final segment whose successor starts at a version ≤ ``upto``
+        contains only records the checkpoint already captured. Returns
+        the number of segments removed."""
+        with self._lock:
+            segs = self._segments()
+            removed = 0
+            for (first, fname), (nxt, _) in zip(segs, segs[1:]):
+                if nxt <= upto:
+                    os.remove(fname)
+                    removed += 1
+            return removed
+
+    def close(self) -> None:
+        with self._lock:
+            if self._fh is not None:
+                self._fh.flush()
+                if self.fsync:
+                    os.fsync(self._fh.fileno())
+                self._fh.close()
+                self._fh = None
+
+
+# -------------------------------------------------------------- checkpoints
+
+def _capture_state(store: GARTStore) -> Dict:
+    """Consistent copy of everything a checkpoint persists, taken under
+    the store lock (cheap: delta-slice copies plus refs to immutable
+    base/history arrays — the expensive file IO runs outside the lock,
+    so readers and writers never wait on a checkpoint)."""
+    with store._lock:
+        d = store._d_len
+        return {
+            "base": store._base,
+            "version": store.write_version,
+            "floor": store._hist_floor,
+            "n": store._n,
+            "vlabels": store._vlabels,
+            "d_len": d,
+            "d_src": store._d_src[:d].copy(),
+            "d_dst": store._d_dst[:d].copy(),
+            "d_ver": store._d_ver[:d].copy(),
+            "d_lab": store._d_lab[:d].copy(),
+            "d_props": {k: col[:d].copy()
+                        for k, col in store._d_props.items()},
+            # history entries are copy-on-write (never mutated once
+            # appended): refs are safe to serialize outside the lock
+            "hist": {name: list(entries)
+                     for name, entries in store._vprop_hist.items()},
+        }
+
+
+def write_checkpoint(path: str, store: GARTStore, *, keep: int = 3,
+                     chunk_size: int = 1 << 16) -> str:
+    """Persist ``store`` at its current version under
+    ``path/ckpt_<version>``: GraphAr-chunked base CSR, delta buffers,
+    vertex-property history window and compaction floor. Written into a
+    temp dir and atomically renamed with the manifest last, so a crash
+    mid-save leaves no visible (and no half-readable) checkpoint.
+    Retention keeps the newest ``keep`` complete checkpoints."""
+    state = _capture_state(store)
+    os.makedirs(path, exist_ok=True)
+    final = os.path.join(path, f"{CKPT_PREFIX}{state['version']:012d}")
+    tmp = tempfile.mkdtemp(dir=path, prefix=".tmp_ckpt_")
+    try:
+        GraphArStore.write(os.path.join(tmp, "base"), state["base"],
+                           chunk_size=chunk_size)
+        delta_arrays = {
+            "d_src": state["d_src"], "d_dst": state["d_dst"],
+            "d_ver": state["d_ver"], "d_lab": state["d_lab"],
+        }
+        for k, col in state["d_props"].items():
+            delta_arrays[f"ep::{k}"] = col
+        with open(os.path.join(tmp, "delta.bin"), "wb") as f:
+            f.write(_pack_arrays(delta_arrays))
+        hist_arrays = {}
+        hist_meta: Dict[str, List[int]] = {}
+        for name, entries in state["hist"].items():
+            hist_meta[name] = [int(v) for v, _ in entries]
+            for i, (_, col) in enumerate(entries):
+                hist_arrays[f"h::{i}::{name}"] = col
+        with open(os.path.join(tmp, "history.bin"), "wb") as f:
+            f.write(_pack_arrays(hist_arrays))
+        manifest = {
+            "format": 1, "kind": "gart-checkpoint",
+            "version": int(state["version"]),
+            "hist_floor": int(state["floor"]),
+            "n_vertices": int(state["n"]),
+            "d_len": int(state["d_len"]),
+            "eprops": sorted(state["d_props"]),
+            "vprops": hist_meta,
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _retain(path, keep)
+    return final
+
+
+def _retain(path: str, keep: int) -> None:
+    cks = list_checkpoints(path)
+    for _, d in cks[:-max(1, int(keep))]:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def list_checkpoints(path: str) -> List[Tuple[int, str]]:
+    """Complete checkpoints (manifest present) under ``path``, oldest
+    first. Half-written temp dirs and manifest-less directories — the
+    crash-mid-save leftovers — are invisible."""
+    if not os.path.isdir(path):
+        return []
+    out = []
+    for name in os.listdir(path):
+        m = re.fullmatch(re.escape(CKPT_PREFIX) + r"(\d+)", name)
+        d = os.path.join(path, name)
+        if m and os.path.isfile(os.path.join(d, "manifest.json")):
+            out.append((int(m.group(1)), d))
+    return sorted(out)
+
+
+def load_checkpoint(ckpt_dir: str) -> GARTStore:
+    """Reconstruct a :class:`GARTStore` state-identical to the one
+    checkpointed: same base arrays (adopted straight from the chunked
+    archive — no re-sort), same delta buffers and per-row versions, same
+    vertex-property history and floor. The merge cache is seeded with the
+    base so the first snapshot merge after recovery is O(delta)."""
+    with open(os.path.join(ckpt_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    if manifest.get("kind") != "gart-checkpoint":
+        raise ValueError(f"{ckpt_dir!r}: not a GART checkpoint manifest")
+    # mmap: the archived base pages in lazily (and stays valid even if
+    # retention later unlinks the checkpoint — the mapping pins the
+    # inode), so cold start pays O(delta) work, not O(E) copies
+    base = GraphArStore(os.path.join(ckpt_dir, "base"), mmap=True).to_csr()
+    with open(os.path.join(ckpt_dir, "delta.bin"), "rb") as f:
+        delta_arrays = _unpack_arrays(f.read())
+    with open(os.path.join(ckpt_dir, "history.bin"), "rb") as f:
+        hist_arrays = _unpack_arrays(f.read())
+    d_len = int(manifest["d_len"])
+    n = int(manifest["n_vertices"])
+
+    st = GARTStore.__new__(GARTStore)
+    st._n = n
+    st._base = base
+    st._vlabels = base.vertex_labels()
+    st._hist_floor = int(manifest["hist_floor"])
+    st.write_version = int(manifest["version"])
+    st._vprop_hist = {}
+    for name, versions in manifest["vprops"].items():
+        st._vprop_hist[name] = [
+            (int(v), hist_arrays[f"h::{i}::{name}"])
+            for i, v in enumerate(versions)]
+    st._vprops = {name: hist[-1][1]
+                  for name, hist in st._vprop_hist.items()}
+    cap = max(1024, d_len)
+    for arr_name, attr in (("d_src", "_d_src"), ("d_dst", "_d_dst"),
+                           ("d_ver", "_d_ver"), ("d_lab", "_d_lab")):
+        saved = delta_arrays[arr_name]
+        buf = np.zeros(cap, saved.dtype)
+        buf[:d_len] = saved
+        setattr(st, attr, buf)
+    st._d_props = {}
+    for name in manifest["eprops"]:
+        saved = delta_arrays[f"ep::{name}"]
+        buf = np.full(cap, missing_fill(saved.dtype), saved.dtype)
+        buf[:d_len] = saved
+        st._d_props[name] = buf
+    st._d_len = d_len
+    st._lock = threading.Lock()
+    st._store_uid = next(GARTStore._uids)
+    # the archived base IS the zero-delta merged view: first merge after
+    # recovery extends it with the (replayed) delta instead of re-sorting
+    # the world — the O(delta) cold-start path (DESIGN.md §16)
+    st._merge_cache = (st._base, 0, st._base)
+    return st
+
+
+# ------------------------------------------------------- durability manager
+
+class Durability:
+    """Owns one durability directory (checkpoints + ``wal/``) and the
+    auto-checkpoint policy. Attached to a :class:`DurableGARTStore`;
+    the session layer drives :meth:`checkpoint` explicitly, on
+    ``close()``, and every ``checkpoint_every`` commits (riding the
+    scheduler's slow lane when the async front door is up)."""
+
+    def __init__(self, path: str, *, checkpoint_every: Optional[int] = None,
+                 keep: int = 3, fsync: bool = True,
+                 checkpoint_on_close: bool = True,
+                 segment_bytes: int = 4 << 20):
+        self.path = path
+        os.makedirs(path, exist_ok=True)
+        self.wal = DeltaLog(os.path.join(path, WAL_DIR),
+                            segment_bytes=segment_bytes, fsync=fsync)
+        self.checkpoint_every = (None if checkpoint_every is None
+                                 else max(1, int(checkpoint_every)))
+        self.keep = max(1, int(keep))
+        self.checkpoint_on_close = bool(checkpoint_on_close)
+        self.replaying = False
+        self.commits_since_checkpoint = 0
+        self.last_checkpoint_version: Optional[int] = None
+        self._lock = threading.Lock()
+        self._auto_pending = False
+
+    # ------------------------------------------------------------ logging
+    def log_commit(self, delta: CommitDelta,
+                   vprops: Optional[Dict[str, Tuple]] = None) -> None:
+        self.wal.append_record(encode_commit_record(delta, vprops),
+                               delta.version)
+        with self._lock:
+            self.commits_since_checkpoint += 1
+
+    def log_compact(self, version: int) -> None:
+        self.wal.append_record(encode_compact_record(version), version)
+
+    # --------------------------------------------------------- checkpoint
+    def checkpoint(self, store: GARTStore, keep: Optional[int] = None,
+                   chunk_size: int = 1 << 16) -> str:
+        p = write_checkpoint(self.path, store,
+                             keep=keep if keep is not None else self.keep,
+                             chunk_size=chunk_size)
+        version = int(os.path.basename(p)[len(CKPT_PREFIX):])
+        self.wal.gc(version)
+        with self._lock:
+            self.last_checkpoint_version = version
+            self.commits_since_checkpoint = 0
+        return p
+
+    def auto_due(self) -> bool:
+        """Every-N-commits test-and-set: True at most once per due
+        window, so concurrent commits schedule a single checkpoint."""
+        if self.checkpoint_every is None:
+            return False
+        with self._lock:
+            if self._auto_pending or \
+                    self.commits_since_checkpoint < self.checkpoint_every:
+                return False
+            self._auto_pending = True
+            return True
+
+    def run_auto(self, store: GARTStore) -> str:
+        try:
+            return self.checkpoint(store)
+        finally:
+            with self._lock:
+                self._auto_pending = False
+
+    def close(self) -> None:
+        self.wal.close()
+
+
+# ---------------------------------------------------------- durable store
+
+class DurableGARTStore(GARTStore):
+    """A :class:`GARTStore` whose every commit is logged write-ahead
+    before it is acknowledged. Mutations serialize on an outer lock so
+    the WAL's record order always matches the store's version order.
+    :meth:`apply_commit` stays silent while ``durability.replaying`` —
+    recovery must not re-log the records it is consuming."""
+
+    def __init__(self, *args, durability: Optional[Durability] = None,
+                 **kwargs):
+        super().__init__(*args, **kwargs)
+        self.durability = durability
+        self._wal_lock = threading.RLock()
+
+    @classmethod
+    def _adopt(cls, store: GARTStore,
+               durability: Durability) -> "DurableGARTStore":
+        """Rebind a plain store's state into a durable one (bootstrap
+        path). The original object must not be used afterwards — the
+        durable twin owns the buffers."""
+        if isinstance(store, DurableGARTStore):
+            raise TypeError("store is already durable")
+        self = cls.__new__(cls)
+        self.__dict__.update(store.__dict__)
+        self.durability = durability
+        self._wal_lock = threading.RLock()
+        return self
+
+    # every mutation: commit under the outer lock, then append + fsync the
+    # record before returning the version (the ack)
+    def add_edges(self, src, dst, label: int = 0, props=None) -> int:
+        with self._wal_lock:
+            v0 = self.write_version
+            v = super().add_edges(src, dst, label=label, props=props)
+            if v != v0 and self.durability is not None \
+                    and not self.durability.replaying:
+                self.durability.log_commit(self.commit_delta(v0, upto=v))
+            return v
+
+    def set_vertex_prop(self, name: str, ids, values) -> int:
+        with self._wal_lock:
+            v0 = self.write_version
+            v = super().set_vertex_prop(name, ids, values)
+            if v != v0 and self.durability is not None \
+                    and not self.durability.replaying:
+                ids_arr = np.atleast_1d(np.asarray(ids, np.int64))
+                self.durability.log_commit(
+                    self.commit_delta(v0, upto=v),
+                    vprops={name: (ids_arr, np.asarray(values))})
+            return v
+
+    def apply_commit(self, delta: CommitDelta, vprops=None) -> int:
+        with self._wal_lock:
+            v = super().apply_commit(delta, vprops)
+            if self.durability is not None \
+                    and not self.durability.replaying:
+                self.durability.log_commit(delta, vprops)
+            return v
+
+    def compact(self):
+        with self._wal_lock:
+            super().compact()
+            if self.durability is not None \
+                    and not self.durability.replaying:
+                self.durability.log_compact(self.write_version)
+            return self
+
+    def wal_batch(self):
+        """Group-commit context: one fsync for every commit inside (the
+        write route wraps each WriteSet's sub-commits in this)."""
+        if self.durability is None:
+            return contextlib.nullcontext()
+        return self.durability.wal.batch()
+
+
+# ----------------------------------------------------------------- recovery
+
+def recover_store(path: str, **policy) -> DurableGARTStore:
+    """Cold start from ``path``: newest complete checkpoint + WAL tail
+    replay through :meth:`GARTStore.apply_commit`. The result is
+    bit-identical (per the MVCC snapshot oracle) to the pre-crash store
+    at the recovery point — every version in [floor, k] answers exactly
+    as the uninterrupted store would, and versions below the floor raise
+    exactly like the live session."""
+    cks = list_checkpoints(path)
+    if not cks:
+        raise FileNotFoundError(
+            f"no complete checkpoint under {path!r} — nothing to recover "
+            f"(bootstrap with open_durability(path, store=...))")
+    version, ckpt_dir = cks[-1]
+    plain = load_checkpoint(ckpt_dir)
+    if plain.write_version != version:
+        raise DeltaLogCorrupt(
+            f"checkpoint {ckpt_dir!r} manifest version "
+            f"{plain.write_version} disagrees with its directory name")
+    dur = Durability(path, **policy)
+    dur.last_checkpoint_version = version
+    store = DurableGARTStore._adopt(plain, dur)
+    dur.replaying = True
+    try:
+        for rec in dur.wal.replay(version):
+            if rec.kind == "compact":
+                if rec.version != store.write_version:
+                    raise DeltaLogCorrupt(
+                        f"compact record at version {rec.version} does "
+                        f"not match replayed version "
+                        f"{store.write_version}")
+                store.compact()
+            else:
+                store.apply_commit(rec.delta, rec.vprops)
+                dur.commits_since_checkpoint += 1
+    finally:
+        dur.replaying = False
+    return store
+
+
+def open_durability(path: str, store: Optional[GARTStore] = None,
+                    **policy) -> DurableGARTStore:
+    """The one front door: recover when ``path`` holds a checkpoint
+    (crash-recovering cold start — a ``store`` argument is then the
+    bootstrap seed only and is ignored), otherwise bootstrap — write the
+    initial checkpoint of ``store`` and start the WAL. A single process
+    must own a durability directory at a time (two live WALs interleave
+    record order undefined)."""
+    if list_checkpoints(path):
+        return recover_store(path, **policy)
+    if store is None:
+        raise FileNotFoundError(
+            f"no complete checkpoint under {path!r} and no store to "
+            f"bootstrap from")
+    dur = Durability(path, **policy)
+    durable = DurableGARTStore._adopt(store, dur)
+    # the initial checkpoint is the recovery base: without it a crash
+    # before the first auto-checkpoint would have a WAL with no floor
+    dur.checkpoint(durable)
+    return durable

@@ -149,9 +149,19 @@ class GARTSnapshot:
             # downstream lineage checks (lpg/engine advance) canonicalize
             # shells back to the CSR they alias.
             self._inc_info = (prev, None, np.empty(0, np.int64))
+            # union eprop keys exactly like the full/extend paths do: a
+            # key seen only in (sliced-empty) delta props still surfaces
+            # as a missing-filled column, so the merged view is
+            # path-independent (and a recovered store whose seeded hint
+            # is the checkpoint base answers like the live one)
+            eprops = dict(prev._eprops)
+            for k, col in self._d_props.items():
+                if k not in eprops:
+                    dt = col.dtype
+                    eprops[k] = np.full(prev.n_edges, missing_fill(dt), dt)
             shell = CSRStore.from_parts(
                 self._n, prev.indptr, prev.indices,
-                vertex_props=self._vprops, edge_props=prev._eprops,
+                vertex_props=self._vprops, edge_props=eprops,
                 vertex_labels=self._vlabels,
                 edge_labels=prev.edge_labels(), csc=prev._csc)
             shell._topo_base = getattr(prev, "_topo_base", prev)
@@ -397,6 +407,97 @@ class GARTStore:
             self.write_version += 1
             self._vprop_hist.setdefault(name, []).append(
                 (self.write_version, self._vprops[name]))
+            return self.write_version
+
+    def apply_commit(self, delta: CommitDelta,
+                     vprops: Optional[Dict[str, Tuple[np.ndarray,
+                                                      np.ndarray]]] = None
+                     ) -> int:
+        """Replay one logged commit onto this store — the WAL recovery
+        path (DESIGN.md §16). The record must continue exactly where the
+        store stands (``delta.since == write_version``) and span a single
+        commit. Edges land with their logged labels and edge-prop rows at
+        the commit's version (same dtype-promotion rules as
+        :meth:`add_edges`, so the column's dtype evolution replays
+        identically); ``vprops`` carries the ``set_vertex_prop`` payloads
+        (``name -> (ids, values)``) and re-runs the copy-on-write update,
+        so the history window matches the live store's bit for bit.
+        Returns the new write_version."""
+        vprops = vprops or {}
+        with self._lock:
+            if delta.since != self.write_version:
+                raise ValueError(
+                    f"commit record since={delta.since} does not continue "
+                    f"write_version={self.write_version}")
+            if delta.version != delta.since + 1:
+                raise ValueError(
+                    f"commit record spans versions {delta.since + 1}.."
+                    f"{delta.version}: replay applies one commit at a "
+                    f"time")
+            missing_payload = delta.vprop_names - set(vprops)
+            if missing_payload:
+                raise ValueError(
+                    f"commit record touches vprops "
+                    f"{sorted(missing_payload)} but carries no payload "
+                    f"for them (not replayable)")
+            src = np.asarray(delta.src, np.int64)
+            dst = np.asarray(delta.dst, np.int64)
+            k = len(src)
+            if len(dst) != k or len(delta.labels) != k:
+                raise ValueError(
+                    f"commit record arrays disagree: {k} src, "
+                    f"{len(dst)} dst, {len(delta.labels)} labels")
+            if k:
+                self._check_ids("edge src ids", src)
+                self._check_ids("edge dst ids", dst)
+                self._grow(k)
+                s = self._d_len
+                self._d_src[s:s + k] = src
+                self._d_dst[s:s + k] = dst
+                self._d_ver[s:s + k] = delta.version
+                self._d_lab[s:s + k] = np.asarray(delta.labels, np.int32)
+                for name, col in delta.eprops.items():
+                    col = np.asarray(col)
+                    if len(col) != k:
+                        raise ValueError(
+                            f"edge prop {name!r}: {len(col)} rows for "
+                            f"{k} edges")
+                    if name not in self._d_props:
+                        dt = (col.dtype if col.dtype != object
+                              else np.float64)
+                        self._d_props[name] = np.full(
+                            len(self._d_src), missing_fill(dt), dt)
+                    cur = self._d_props[name]
+                    if col.dtype != cur.dtype:
+                        dt = np.promote_types(cur.dtype, col.dtype)
+                        if dt == object:
+                            raise TypeError(
+                                f"edge prop {name!r}: dtype {col.dtype} "
+                                f"is not promotable with stored "
+                                f"{cur.dtype}")
+                        if dt != cur.dtype:
+                            self._d_props[name] = cur = cur.astype(dt)
+                    self._d_props[name][s:s + k] = col
+                self._d_len += k
+            for name in sorted(vprops):
+                ids, vals = vprops[name]
+                ids_arr = np.atleast_1d(np.asarray(ids, np.int64))
+                vals = np.asarray(vals)
+                if ids_arr.size == 0:
+                    continue
+                self._check_ids("vertex ids", ids_arr)
+                if name not in self._vprops:
+                    dtype = vals.dtype if vals.dtype != object \
+                        else np.float64
+                    fill = (np.nan if np.issubdtype(dtype, np.floating)
+                            else 0)
+                    self._vprops[name] = np.full(self._n, fill, dtype)
+                else:
+                    self._vprops[name] = self._vprops[name].copy()
+                self._vprops[name][ids_arr] = vals
+                self._vprop_hist.setdefault(name, []).append(
+                    (delta.version, self._vprops[name]))
+            self.write_version = delta.version
             return self.write_version
 
     def _vprops_at(self, version: int) -> Dict[str, np.ndarray]:

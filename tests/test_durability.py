@@ -1,0 +1,726 @@
+"""Durability tier (DESIGN.md §16): WAL codec roundtrips, segment
+rotation / torn-tail / corruption semantics, checkpoint atomicity and
+retention, and recovery-point correctness against the MVCC oracle — a
+recovered store must answer every surviving version exactly like the
+uninterrupted twin, including ``compact()`` floors."""
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.flexbuild import flexbuild
+from repro.storage import GARTStore
+from repro.storage.durability import (DeltaLog, DeltaLogCorrupt,
+                                      decode_record, encode_commit_record,
+                                      encode_compact_record,
+                                      list_checkpoints, load_checkpoint,
+                                      open_durability, recover_store,
+                                      write_checkpoint)
+from repro.storage.gart import CommitDelta
+
+
+# --------------------------------------------------------------- helpers
+
+def _delta(since=0, version=1, src=(1, 2), dst=(3, 4), labels=(0, 1),
+           eprops=None, vprop_names=()):
+    src = np.asarray(src, np.int64)
+    return CommitDelta(
+        since=since, version=version, src=src,
+        dst=np.asarray(dst, np.int64),
+        labels=np.asarray(labels, np.int32),
+        eprops={k: np.asarray(v) for k, v in (eprops or {}).items()},
+        vprop_names=frozenset(vprop_names))
+
+
+def _assert_merged_equal(ma, mb):
+    np.testing.assert_array_equal(ma.indptr, mb.indptr)
+    np.testing.assert_array_equal(ma.indices, mb.indices)
+    np.testing.assert_array_equal(ma.edge_labels(), mb.edge_labels())
+    np.testing.assert_array_equal(ma.vertex_labels(), mb.vertex_labels())
+    assert set(ma._eprops) == set(mb._eprops)
+    for k in ma._eprops:
+        np.testing.assert_array_equal(ma.edge_prop(k), mb.edge_prop(k))
+
+
+def _assert_stores_equal(a, b, versions):
+    """Snapshots of two stores at every version in ``versions`` are
+    bag-equal on topology/labels/eprops (via the merged CSR, which is
+    bit-equal by the PR-9 determinism guarantees) and bit-equal on
+    vertex-property columns."""
+    assert a.write_version == b.write_version
+    assert a._hist_floor == b._hist_floor
+    for v in versions:
+        sa, sb = a.snapshot(version=v), b.snapshot(version=v)
+        _assert_merged_equal(sa._merge(), sb._merge())
+        assert set(sa._vprops) == set(sb._vprops)
+        for k in sa._vprops:
+            np.testing.assert_array_equal(sa.vertex_prop(k),
+                                          sb.vertex_prop(k))
+
+
+def _seed_store(n=60):
+    return GARTStore(n, vertex_props={"id": np.arange(n, dtype=np.int64)},
+                     src=np.array([0, 1], np.int64),
+                     dst=np.array([2, 3], np.int64))
+
+
+# ----------------------------------------------------------------- codec
+
+class TestCodec:
+    def test_commit_roundtrip_fields(self):
+        d = _delta(since=4, version=5,
+                   eprops={"w": np.array([1.5, np.nan]),
+                           "c": np.array([7, 8], np.int64)},
+                   vprop_names={"credits"})
+        vp = {"credits": (np.array([3], np.int64), np.array([2.5]))}
+        rec = decode_record(encode_commit_record(d, vp))
+        assert rec.kind == "commit" and rec.version == 5
+        assert rec.delta.since == 4
+        np.testing.assert_array_equal(rec.delta.src, d.src)
+        np.testing.assert_array_equal(rec.delta.dst, d.dst)
+        np.testing.assert_array_equal(rec.delta.labels, d.labels)
+        assert rec.delta.vprop_names == frozenset({"credits"})
+        for k in d.eprops:
+            np.testing.assert_array_equal(rec.delta.eprops[k], d.eprops[k])
+            assert rec.delta.eprops[k].dtype == d.eprops[k].dtype
+        np.testing.assert_array_equal(rec.vprops["credits"][0],
+                                      vp["credits"][0])
+        np.testing.assert_array_equal(rec.vprops["credits"][1],
+                                      vp["credits"][1])
+
+    @pytest.mark.parametrize("eprops", [
+        {},                                          # no props
+        {"w": np.array([0.5, 2.25])},                # float
+        {"c": np.array([1, 2], np.int64)},           # int64
+        {"s": np.array(["ab", "cd"], object)},       # object dtype
+        {"w": np.array([np.nan, 1.0]),
+         "c": np.array([0, 9], np.int32)},           # mixed + NaN fill
+    ])
+    def test_bytes_delta_bytes_identity(self, eprops):
+        d = _delta(eprops=eprops)
+        b = encode_commit_record(d)
+        rec = decode_record(b)
+        assert encode_commit_record(rec.delta, rec.vprops) == b
+
+    def test_identity_with_vprops_and_late_names(self):
+        # vprops-only commit: a column name the store never saw before
+        d = _delta(src=(), dst=(), labels=(),
+                   vprop_names={"brand_new_col"})
+        vp = {"brand_new_col": (np.array([1, 2], np.int64),
+                                np.array([0.5, 0.25]))}
+        b = encode_commit_record(d, vp)
+        rec = decode_record(b)
+        assert encode_commit_record(rec.delta, rec.vprops) == b
+        assert rec.delta.empty is False and rec.delta.n_edges == 0
+
+    def test_empty_delta_identity(self):
+        d = _delta(src=(), dst=(), labels=())
+        b = encode_commit_record(d)
+        rec = decode_record(b)
+        assert rec.delta.empty
+        assert encode_commit_record(rec.delta, rec.vprops) == b
+
+    def test_compact_roundtrip(self):
+        b = encode_compact_record(17)
+        rec = decode_record(b)
+        assert rec.kind == "compact" and rec.version == 17
+        assert rec.delta is None and rec.vprops is None
+        assert encode_compact_record(rec.version) == b
+
+    def test_undecodable_payload_raises(self):
+        with pytest.raises(DeltaLogCorrupt):
+            decode_record(b"not json\n")
+        with pytest.raises(DeltaLogCorrupt):
+            decode_record(b'{"type":"mystery"}\n')
+
+
+# ------------------------------------------------------------- delta log
+
+class TestDeltaLog:
+    def _fill(self, path, n=6, **kw):
+        log = DeltaLog(str(path), **kw)
+        for v in range(1, n + 1):
+            d = _delta(since=v - 1, version=v, src=(v,), dst=(v + 1,),
+                       labels=(0,))
+            log.append_record(encode_commit_record(d), v)
+        log.close()
+        return log
+
+    def test_append_replay_since_filter(self, tmp_path):
+        self._fill(tmp_path / "wal", n=6)
+        log = DeltaLog(str(tmp_path / "wal"))
+        got = [r.version for r in log.replay(2)]
+        assert got == [3, 4, 5, 6]
+
+    def test_segment_rotation_and_gc(self, tmp_path):
+        self._fill(tmp_path / "wal", n=12, segment_bytes=400)
+        log = DeltaLog(str(tmp_path / "wal"))
+        segs = log._segments()
+        assert len(segs) > 2
+        removed = log.gc(upto=segs[-1][0] - 1)
+        # conservative: the segment whose SUCCESSOR starts past upto is
+        # kept even if its own records are all covered
+        assert removed == len(segs) - 2
+        # the surviving tail still replays the uncovered records
+        assert [r.version for r in log.replay(segs[-1][0] - 1)] == \
+            list(range(segs[-1][0], 13))
+
+    def test_gc_never_removes_needed_segment(self, tmp_path):
+        self._fill(tmp_path / "wal", n=12, segment_bytes=400)
+        log = DeltaLog(str(tmp_path / "wal"))
+        segs = log._segments()
+        # checkpoint BELOW the second segment's start: nothing coverable
+        log.gc(upto=segs[1][0] - 1)
+        assert [r.version for r in log.replay(0)] == list(range(1, 13))
+
+    def test_torn_tail_truncated_and_appendable(self, tmp_path):
+        self._fill(tmp_path / "wal", n=4)
+        log = DeltaLog(str(tmp_path / "wal"))
+        fname = log._segments()[-1][1]
+        size = os.path.getsize(fname)
+        with open(fname, "r+b") as f:
+            f.truncate(size - 3)               # tear the last record
+        got = [r.version for r in log.replay(0)]
+        assert got == [1, 2, 3]                # torn record dropped
+        assert os.path.getsize(fname) < size - 3   # physically truncated
+        # the log keeps working: append after the truncation point
+        d = _delta(since=3, version=4, src=(9,), dst=(9,), labels=(0,))
+        log.append_record(encode_commit_record(d), 4)
+        log.close()
+        log2 = DeltaLog(str(tmp_path / "wal"))
+        assert [r.version for r in log2.replay(0)] == [1, 2, 3, 4]
+
+    def test_torn_header_truncated(self, tmp_path):
+        self._fill(tmp_path / "wal", n=3)
+        log = DeltaLog(str(tmp_path / "wal"))
+        fname = log._segments()[-1][1]
+        with open(fname, "ab") as f:
+            f.write(b"\x07\x00")               # half a record header
+        assert [r.version for r in log.replay(0)] == [1, 2, 3]
+
+    def test_corrupt_tail_crc_with_full_length_is_torn(self, tmp_path):
+        self._fill(tmp_path / "wal", n=3)
+        log = DeltaLog(str(tmp_path / "wal"))
+        fname = log._segments()[-1][1]
+        with open(fname, "r+b") as f:
+            f.seek(-1, os.SEEK_END)
+            last = f.read(1)
+            f.seek(-1, os.SEEK_END)
+            f.write(bytes([last[0] ^ 0xFF]))
+        assert [r.version for r in log.replay(0)] == [1, 2]
+
+    def test_corrupt_mid_log_raises(self, tmp_path):
+        self._fill(tmp_path / "wal", n=4)
+        log = DeltaLog(str(tmp_path / "wal"))
+        fname = log._segments()[0][1]
+        with open(fname, "r+b") as f:
+            f.seek(20)                         # inside the first record
+            b = f.read(1)
+            f.seek(20)
+            f.write(bytes([b[0] ^ 0xFF]))
+        with pytest.raises(DeltaLogCorrupt, match="CRC"):
+            list(log.replay(0))
+
+    def test_torn_nonfinal_segment_raises(self, tmp_path):
+        self._fill(tmp_path / "wal", n=12, segment_bytes=400)
+        log = DeltaLog(str(tmp_path / "wal"))
+        first = log._segments()[0][1]
+        with open(first, "r+b") as f:
+            f.truncate(os.path.getsize(first) - 2)
+        with pytest.raises(DeltaLogCorrupt, match="non-final"):
+            list(log.replay(0))
+
+    def test_bad_segment_header_raises(self, tmp_path):
+        wal = tmp_path / "wal"
+        wal.mkdir()
+        (wal / "seg_000000000001.wal").write_bytes(b"XXXX\x01\x00\x00\x00")
+        with pytest.raises(DeltaLogCorrupt, match="header"):
+            list(DeltaLog(str(wal)).replay(0))
+
+
+# ------------------------------------------------------------ checkpoints
+
+class TestCheckpoint:
+    def _busy_store(self):
+        st = _seed_store()
+        st.add_edges([5, 6], [7, 8], label=1,
+                     props={"w": np.array([1.5, 2.5])})
+        st.set_vertex_prop("credits", [1, 2], [10.0, 20.0])
+        st.add_edges([9], [10], label=2, props={"c": np.array([7])})
+        st.set_vertex_prop("credits", [1], [11.0])
+        return st
+
+    def test_save_load_state_identical(self, tmp_path):
+        st = self._busy_store()
+        write_checkpoint(str(tmp_path), st)
+        (v, d), = list_checkpoints(str(tmp_path))
+        assert v == st.write_version
+        rec = load_checkpoint(d)
+        _assert_stores_equal(st, rec,
+                             range(st._hist_floor, st.write_version + 1))
+        # history window restored entry-for-entry (time travel intact)
+        assert {k: [x[0] for x in h] for k, h in rec._vprop_hist.items()} \
+            == {k: [x[0] for x in h] for k, h in st._vprop_hist.items()}
+
+    def test_checkpoint_preserves_floor_and_raises_below(self, tmp_path):
+        st = self._busy_store()
+        st.compact()
+        st.add_edges([3], [4])
+        write_checkpoint(str(tmp_path), st)
+        rec = load_checkpoint(list_checkpoints(str(tmp_path))[-1][1])
+        assert rec._hist_floor == st._hist_floor > 0
+        with pytest.raises(ValueError, match="compact"):
+            rec.snapshot(version=rec._hist_floor - 1)
+
+    def test_retention(self, tmp_path):
+        st = self._busy_store()
+        for _ in range(4):
+            st.add_edges([1], [2])
+            write_checkpoint(str(tmp_path), st, keep=2)
+        vs = [v for v, _ in list_checkpoints(str(tmp_path))]
+        assert len(vs) == 2 and vs[-1] == st.write_version
+
+    def test_incomplete_checkpoint_invisible(self, tmp_path):
+        st = self._busy_store()
+        write_checkpoint(str(tmp_path), st)
+        garbage = tmp_path / "ckpt_000000009999"
+        garbage.mkdir()                         # no manifest: not complete
+        (tmp_path / ".tmp_ckpt_dead").mkdir()   # interrupted temp dir
+        cks = list_checkpoints(str(tmp_path))
+        assert [v for v, _ in cks] == [st.write_version]
+
+    def test_crash_mid_save_leaves_nothing(self, tmp_path, monkeypatch):
+        st = self._busy_store()
+
+        def boom(*a, **k):
+            raise OSError("disk gone")
+
+        from repro.storage.graphar import GraphArStore
+        monkeypatch.setattr(GraphArStore, "write", staticmethod(boom))
+        with pytest.raises(OSError):
+            write_checkpoint(str(tmp_path), st)
+        monkeypatch.undo()
+        assert list_checkpoints(str(tmp_path)) == []
+        assert [x for x in os.listdir(tmp_path)
+                if x.startswith(".tmp_ckpt_")] == []
+
+    def test_load_rejects_foreign_manifest(self, tmp_path):
+        d = tmp_path / "ckpt_000000000001"
+        d.mkdir()
+        (d / "manifest.json").write_text(json.dumps({"kind": "other"}))
+        with pytest.raises(ValueError, match="not a GART checkpoint"):
+            load_checkpoint(str(d))
+
+    def test_restored_merge_is_incremental(self, tmp_path):
+        """The restored store seeds its merge cache with the archived
+        base, so the first snapshot merge extends by O(delta) instead of
+        re-sorting (the cold-start fast path the benchmark measures)."""
+        st = self._busy_store()
+        write_checkpoint(str(tmp_path), st)
+        rec = load_checkpoint(list_checkpoints(str(tmp_path))[-1][1])
+        assert rec._merge_cache is not None
+        snap = rec.snapshot()
+        snap._merge()
+        assert snap._inc_info is not None       # extended, not rebuilt
+
+
+# ----------------------------------------------------------- apply_commit
+
+class TestApplyCommit:
+    def test_replays_what_commit_delta_reports(self):
+        a, b = _seed_store(), _seed_store()
+        v0 = a.write_version
+        a.add_edges([1, 2], [3, 4], label=2,
+                    props={"w": np.array([0.5, 1.5])})
+        d = a.commit_delta(v0)
+        b.apply_commit(d)
+        _assert_stores_equal(a, b, [a.write_version])
+
+    def test_wrong_since_raises(self):
+        st = _seed_store()
+        with pytest.raises(ValueError, match="does not continue"):
+            st.apply_commit(_delta(since=5, version=6))
+
+    def test_multi_commit_span_raises(self):
+        st = _seed_store()
+        with pytest.raises(ValueError, match="one commit"):
+            st.apply_commit(_delta(since=0, version=2))
+
+    def test_missing_vprop_payload_raises(self):
+        st = _seed_store()
+        d = _delta(src=(), dst=(), labels=(), vprop_names={"credits"})
+        with pytest.raises(ValueError, match="no payload"):
+            st.apply_commit(d)
+
+    def test_dtype_promotion_matches_live(self):
+        a, b = _seed_store(), _seed_store()
+        for props in ({"w": np.array([1, 2], np.int32)},
+                      {"w": np.array([0.5])}):         # int → float upcast
+            v0 = a.write_version
+            src = [1] * len(props["w"])
+            a.add_edges(src, src, props=props)
+            b.apply_commit(a.commit_delta(v0))
+        assert b._d_props["w"].dtype == a._d_props["w"].dtype
+        _assert_stores_equal(a, b, [a.write_version])
+
+
+# ---------------------------------------------------------- durable store
+
+class TestDurableStore:
+    def test_every_commit_logged_and_recoverable(self, tmp_path):
+        ds = open_durability(str(tmp_path), _seed_store())
+        ds.add_edges([1], [2], label=1)
+        ds.set_vertex_prop("score", [4, 5], [1.0, 2.0])
+        rec = recover_store(str(tmp_path))
+        _assert_stores_equal(ds, rec, range(rec._hist_floor,
+                                            rec.write_version + 1))
+
+    def test_apply_commit_on_live_durable_store_logs(self, tmp_path):
+        src = _seed_store()
+        ds = open_durability(str(tmp_path), _seed_store())
+        v0 = src.write_version
+        src.add_edges([7], [8], label=3)
+        ds.apply_commit(src.commit_delta(v0))
+        rec = recover_store(str(tmp_path))
+        assert rec.write_version == ds.write_version
+
+    def test_compact_logged_floor_recovered(self, tmp_path):
+        ds = open_durability(str(tmp_path), _seed_store())
+        ds.add_edges([1], [2])
+        ds.set_vertex_prop("score", [3], [9.0])
+        ds.compact()
+        ds.add_edges([5], [6])
+        rec = recover_store(str(tmp_path))
+        assert rec._hist_floor == ds._hist_floor > 0
+        _assert_stores_equal(ds, rec, range(rec._hist_floor,
+                                            rec.write_version + 1))
+        for s in (ds, rec):
+            with pytest.raises(ValueError, match="compact"):
+                s.snapshot(version=s._hist_floor - 1)
+
+    def test_wal_batch_single_fsync(self, tmp_path, monkeypatch):
+        ds = open_durability(str(tmp_path), _seed_store())
+        calls = []
+        real = os.fsync
+        monkeypatch.setattr(os, "fsync", lambda fd: (calls.append(fd),
+                                                     real(fd)))
+        with ds.wal_batch():
+            ds.add_edges([1], [2])
+            ds.add_edges([3], [4])
+            ds.add_edges([5], [6])
+        assert len(calls) == 1                  # group commit
+        monkeypatch.undo()
+        rec = recover_store(str(tmp_path))
+        assert rec.write_version == ds.write_version
+
+    def test_checkpoint_gcs_covered_segments(self, tmp_path):
+        ds = open_durability(str(tmp_path), _seed_store(),
+                             segment_bytes=400)
+        for i in range(12):
+            ds.add_edges([i % 10], [(i + 1) % 10])
+        wal = ds.durability.wal
+        assert len(wal._segments()) > 2
+        ds.durability.checkpoint(ds)
+        assert len(wal._segments()) == 1        # only the active tail left
+        ds.add_edges([1], [1])
+        rec = recover_store(str(tmp_path))
+        _assert_stores_equal(ds, rec, [rec.write_version])
+
+    def test_bootstrap_requires_store(self, tmp_path):
+        with pytest.raises(FileNotFoundError, match="no complete"):
+            open_durability(str(tmp_path / "empty"))
+
+    def test_recovery_ignores_passed_store(self, tmp_path):
+        ds = open_durability(str(tmp_path), _seed_store())
+        ds.add_edges([1], [2])
+        other = GARTStore(5)
+        rec = open_durability(str(tmp_path), other)
+        assert rec.n_vertices == ds.n_vertices and rec.n_vertices != 5
+
+
+# ------------------------------------------------- randomized MVCC oracle
+
+def _random_op(rng, n):
+    r = rng.random()
+    if r < 0.6:
+        k = int(rng.integers(1, 4))
+        props = {}
+        if rng.random() < 0.5:
+            props["w"] = rng.random(k)
+        if rng.random() < 0.3:
+            props["c"] = rng.integers(0, 100, k)
+        return ("edges", rng.integers(0, n, k), rng.integers(0, n, k),
+                int(rng.integers(0, 3)), props or None)
+    name = "credits" if rng.random() < 0.7 \
+        else f"late_{int(rng.integers(0, 3))}"
+    k = int(rng.integers(1, 4))
+    return ("vprop", name, rng.integers(0, n, k), rng.random(k))
+
+
+def _apply_op(store, op):
+    if op[0] == "edges":
+        store.add_edges(op[1], op[2], label=op[3], props=op[4])
+    else:
+        store.set_vertex_prop(op[1], op[2], op[3])
+
+
+class TestRecoveryOracle:
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_randomized_stream_checkpoint_kill_recover(self, tmp_path,
+                                                       seed):
+        """The acceptance oracle: a randomized write stream checkpointed
+        at c and killed at k — recovered snapshots at EVERY version in
+        [floor, k] equal the uninterrupted twin's."""
+        rng = np.random.default_rng(seed)
+        n = 40
+        live = _seed_store(n)
+        ds = open_durability(str(tmp_path), _seed_store(n), keep=8)
+        n_ops = 30
+        ckpt_at = sorted(rng.choice(np.arange(5, n_ops), 2, replace=False))
+        compact_at = int(rng.integers(8, n_ops - 5))
+        for i in range(n_ops):
+            op = _random_op(rng, n)
+            _apply_op(live, op)
+            _apply_op(ds, op)
+            if i == compact_at:
+                live.compact()
+                ds.compact()
+            if i in ckpt_at:
+                ds.durability.checkpoint(ds)
+        # "kill": drop the durable store, recover from disk only
+        rec = recover_store(str(tmp_path))
+        _assert_stores_equal(live, rec,
+                             range(live._hist_floor,
+                                   live.write_version + 1))
+
+    def test_compact_after_checkpoint_same_version(self, tmp_path):
+        """compact() does not bump the version: a compact landing right
+        after a checkpoint at the same version must still be replayed
+        (the recovered floor matches the live one exactly)."""
+        live = _seed_store()
+        ds = open_durability(str(tmp_path), _seed_store())
+        for st in (live, ds):
+            st.add_edges([1, 2], [3, 4])
+        ds.durability.checkpoint(ds)
+        live.compact()
+        ds.compact()
+        rec = recover_store(str(tmp_path))
+        assert rec._hist_floor == live._hist_floor
+        _assert_stores_equal(live, rec, [live.write_version])
+
+    def test_checkpoint_after_compact_replay_noop(self, tmp_path):
+        live = _seed_store()
+        ds = open_durability(str(tmp_path), _seed_store())
+        for st in (live, ds):
+            st.add_edges([1, 2], [3, 4])
+            st.compact()
+        ds.durability.checkpoint(ds)
+        for st in (live, ds):
+            st.add_edges([5], [6])
+        rec = recover_store(str(tmp_path))
+        _assert_stores_equal(live, rec,
+                             range(live._hist_floor,
+                                   live.write_version + 1))
+
+
+# -------------------------------------------------------- session surface
+
+W_CREATE = "MATCH (a {id: $x}), (b {id: $y}) CREATE (a)-[:KNOWS]->(b)"
+W_SET = "MATCH (a {id: $x}) SET a.credits = $v"
+R_EDGES = "MATCH (a)-->(b) RETURN a, b"
+
+
+def _rows(out):
+    return sorted(zip(out["a"].tolist(), out["b"].tolist()))
+
+
+class TestSessionLifecycle:
+    def test_flexbuild_cold_start_query_equality(self, tmp_path):
+        d = str(tmp_path / "dur")
+        s = flexbuild(_seed_store(), ["cypher", "grape"], path=d,
+                      serve=True)
+        for i in range(4):
+            s.execute(W_CREATE, {"x": i, "y": i + 10})
+        s.execute(W_SET, {"x": 3, "v": 42.0})
+        live_rows = _rows(s.execute(R_EDGES, {}))
+        live_v = s.version
+        s.close()
+        s2 = flexbuild(path=d, serve=True)
+        assert s2.version == live_v
+        assert _rows(s2.execute(R_EDGES, {})) == live_rows
+        np.testing.assert_array_equal(
+            s2.store.snapshot().vertex_prop("credits"),
+            s.store.snapshot().vertex_prop("credits"))
+        s2.close()
+
+    def test_restored_at_below_floor_raises_like_live(self, tmp_path):
+        d = str(tmp_path / "dur")
+        s = flexbuild(_seed_store(), ["cypher"], path=d, serve=True)
+        s.execute(W_CREATE, {"x": 1, "y": 2})
+        s.execute(W_SET, {"x": 1, "v": 5.0})
+        s.store.compact()
+        s.execute(W_CREATE, {"x": 3, "y": 4})
+        floor = s.store._hist_floor
+        s.close()
+        s2 = flexbuild(path=d, serve=True)
+        assert s2.store._hist_floor == floor
+        for sess in (s, s2):
+            with pytest.raises(ValueError, match="compact"):
+                sess.at(floor - 1)
+        # at(floor) works on both and answers identically
+        np.testing.assert_array_equal(
+            s.at(floor).execute(R_EDGES, {})["a"],
+            s2.at(floor).execute(R_EDGES, {})["a"])
+        s2.close()
+
+    def test_auto_checkpoint_inline(self, tmp_path):
+        d = str(tmp_path / "dur")
+        s = flexbuild(_seed_store(), ["cypher"], path=d,
+                      checkpoint_every=2, serve=True)
+        assert s.durability.last_checkpoint_version == 0
+        for i in range(5):
+            s.execute(W_CREATE, {"x": i, "y": i + 5})
+        assert s.durability.last_checkpoint_version >= 4
+        assert s.last_checkpoint_error is None
+
+    def test_auto_checkpoint_rides_slow_lane(self, tmp_path):
+        d = str(tmp_path / "dur")
+        s = flexbuild(_seed_store(), ["cypher"], path=d,
+                      checkpoint_every=2, serve=True)
+        sched = s.serve_async()
+        futs = [sched.submit(W_CREATE, {"x": i, "y": i + 5})
+                for i in range(6)]
+        for f in futs:
+            f.result(timeout=30)
+        assert sched.drain(timeout=30)
+        assert s.durability.last_checkpoint_version >= 4
+        assert s.last_checkpoint_error is None
+        s.close()
+        s2 = flexbuild(path=d)
+        assert len(_rows(s2.session().execute(R_EDGES, {}))) >= 6
+
+    def test_close_checkpoints_pending_commits(self, tmp_path):
+        d = str(tmp_path / "dur")
+        s = flexbuild(_seed_store(), ["cypher"], path=d, serve=True)
+        s.execute(W_CREATE, {"x": 1, "y": 2})
+        assert s.durability.commits_since_checkpoint > 0
+        s.close()
+        assert s.durability.commits_since_checkpoint == 0
+        assert s.last_checkpoint_path is not None
+
+    def test_explicit_checkpoint_export_for_plain_store(self, tmp_path):
+        st = _seed_store()
+        st.add_edges([1], [2])
+        s = flexbuild(st, ["cypher"], serve=True)
+        p = s.checkpoint(path=str(tmp_path / "export"))
+        rec = load_checkpoint(p)
+        _assert_stores_equal(st, rec, [st.write_version])
+        with pytest.raises(TypeError, match="durable store"):
+            flexbuild(_seed_store(), ["cypher"], serve=True).checkpoint()
+
+    def test_rebind_durable_store_elsewhere_refused(self, tmp_path):
+        s = flexbuild(_seed_store(), ["cypher"], path=str(tmp_path / "a"),
+                      serve=True)
+        with pytest.raises(ValueError, match="already durable"):
+            flexbuild(s.store, ["cypher"], path=str(tmp_path / "b"))
+
+    def test_checkpoint_every_without_path_rejected(self):
+        with pytest.raises(TypeError, match="path"):
+            flexbuild(_seed_store(), ["cypher"], checkpoint_every=4)
+
+
+# ------------------------------------------------------ kill/recover soak
+
+_CHILD = textwrap.dedent("""
+    import sys
+    import numpy as np
+    from repro.storage import GARTStore, open_durability
+    sys.path.insert(0, {testdir!r})
+    from soak_ops import build_store, op_stream
+    ds = open_durability(sys.argv[1], build_store(), keep=4)
+    print("READY", flush=True)
+    for i, (op, compact, ckpt) in enumerate(op_stream(100000), start=1):
+        op(ds)
+        if compact:
+            ds.compact()
+        if ckpt:
+            ds.durability.checkpoint(ds)
+""")
+
+_SOAK_OPS = textwrap.dedent("""
+    import numpy as np
+    from repro.storage import GARTStore
+
+    N = 40
+
+    def build_store():
+        return GARTStore(N, vertex_props={
+            "id": np.arange(N, dtype=np.int64)})
+
+    def op_stream(n_ops):
+        # fully closed-form: both the child and the recovering parent
+        # derive the identical stream from the index alone
+        for i in range(1, n_ops + 1):
+            if i % 3:
+                def op(st, i=i):
+                    st.add_edges([i % N, (2 * i) % N],
+                                 [(3 * i + 1) % N, (5 * i + 2) % N],
+                                 label=i % 3,
+                                 props={"w": np.array([i * 0.5, i * 0.25])})
+            else:
+                def op(st, i=i):
+                    st.set_vertex_prop(f"p{{i % 4}}", [i % N], [i * 1.5])
+            yield op, (i % 13 == 0), (i % 10 == 0)
+""")
+
+
+@pytest.mark.slow
+class TestKillRecoverSoak:
+    @pytest.mark.parametrize("delay", [0.05, 0.15, 0.3, 0.6])
+    def test_sigkill_then_recover_oracle(self, tmp_path, delay):
+        """Random kill points in a sustained write stream: SIGKILL the
+        writer for real, recover, and check the recovered store equals a
+        clean twin replaying the same deterministic op prefix."""
+        testdir = str(tmp_path / "mod")
+        os.makedirs(testdir)
+        with open(os.path.join(testdir, "soak_ops.py"), "w") as f:
+            f.write(_SOAK_OPS)
+        child_py = os.path.join(testdir, "child.py")
+        with open(child_py, "w") as f:
+            f.write(_CHILD.format(testdir=testdir))
+        dur = str(tmp_path / "dur")
+        env = dict(os.environ)
+        src_dir = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "src")
+        env["PYTHONPATH"] = src_dir + os.pathsep + env.get("PYTHONPATH", "")
+        proc = subprocess.Popen([sys.executable, child_py, dur],
+                                stdout=subprocess.PIPE, env=env)
+        assert proc.stdout.readline().strip() == b"READY"
+        time.sleep(delay)
+        proc.send_signal(signal.SIGKILL)
+        proc.wait()
+
+        rec = recover_store(dur)
+        v = rec.write_version
+        assert v >= 0
+        sys.path.insert(0, testdir)
+        try:
+            import soak_ops
+            twin = soak_ops.build_store()
+            for i, (op, compact, _ckpt) in zip(
+                    range(1, v + 1), soak_ops.op_stream(v)):
+                op(twin)
+                if compact and i <= rec._hist_floor:
+                    twin.compact()
+        finally:
+            sys.path.remove(testdir)
+            sys.modules.pop("soak_ops", None)
+        _assert_stores_equal(twin, rec,
+                             range(rec._hist_floor, v + 1))

@@ -269,6 +269,80 @@ class TestGraphAr:
         ga = GraphArStore(path, chunks=[])
         assert sorted(ga.neighbors_of(2).tolist()) == [0, 3]
 
+    def test_crash_mid_write_leaves_no_visible_archive(self, tmp_path,
+                                                       monkeypatch):
+        """A write interrupted before the manifest lands must be
+        invisible: the target path never appears half-written (it would
+        previously load silently with missing chunks)."""
+        s = snb_store(n_persons=300, n_items=150, n_posts=64)
+        path = str(tmp_path / "ga")
+        real = np.save
+        calls = {"n": 0}
+
+        def dying_save(*a, **k):
+            calls["n"] += 1
+            if calls["n"] == 7:          # die mid-archive, pre-manifest
+                raise OSError("disk gone")
+            return real(*a, **k)
+
+        monkeypatch.setattr(np, "save", dying_save)
+        with pytest.raises(OSError):
+            GraphArStore.write(path, s, chunk_size=128)
+        monkeypatch.undo()
+        assert not os.path.exists(path)
+        # no half-written temp litter survives either
+        assert [d for d in os.listdir(tmp_path)
+                if d.startswith(".tmp_graphar_")] == []
+        with pytest.raises(FileNotFoundError):
+            GraphArStore(path)
+
+    def test_write_replaces_existing_archive_atomically(self, tmp_path):
+        s1 = snb_store(n_persons=100, n_items=50, n_posts=20)
+        s2 = snb_store(n_persons=120, n_items=50, n_posts=20)
+        path = str(tmp_path / "ga")
+        GraphArStore.write(path, s1, chunk_size=64)
+        GraphArStore.write(path, s2, chunk_size=64)
+        assert GraphArStore(path).n_vertices == s2.n_vertices
+
+    def test_rejects_missing_manifest(self, tmp_path):
+        d = tmp_path / "garbage"
+        d.mkdir()
+        (d / "chunk_00000").mkdir()
+        with pytest.raises(FileNotFoundError, match="manifest"):
+            GraphArStore(str(d))
+
+    def test_rejects_incomplete_manifest(self, tmp_path):
+        import json
+        d = tmp_path / "ga"
+        d.mkdir()
+        (d / "meta.json").write_text(json.dumps({"n_vertices": 10}))
+        with pytest.raises(ValueError, match="incomplete"):
+            GraphArStore(str(d))
+
+    def test_rejects_missing_chunk(self, tmp_path):
+        s = snb_store(n_persons=300, n_items=150, n_posts=64)
+        path = GraphArStore.write(str(tmp_path / "ga"), s, chunk_size=128)
+        import shutil
+        shutil.rmtree(os.path.join(path, "chunk_00001"))
+        with pytest.raises(ValueError, match="chunk 1 missing"):
+            GraphArStore(path)
+
+    def test_to_csr_adopts_without_resort(self, tmp_path):
+        """to_csr adopts the chunk arrays (no re-sort) and must stay
+        bit-identical to the source store, eprops and labels included."""
+        s = snb_store(n_persons=300, n_items=150, n_posts=64)
+        path = GraphArStore.write(str(tmp_path / "ga"), s, chunk_size=128)
+        r = GraphArStore(path).to_csr()
+        np.testing.assert_array_equal(r.indptr, s.indptr)
+        np.testing.assert_array_equal(r.indices, s.indices)
+        np.testing.assert_array_equal(r.edge_labels(), s.edge_labels())
+        np.testing.assert_array_equal(r.vertex_labels(), s.vertex_labels())
+        for k in s._eprops:
+            np.testing.assert_array_equal(r.edge_prop(k), s.edge_prop(k))
+        for k in s._vprops:
+            np.testing.assert_array_equal(r.vertex_prop(k),
+                                          s.vertex_prop(k))
+
     def test_csv_baseline_equivalence(self, tmp_path):
         s = snb_store(n_persons=100, n_items=50, n_posts=20)
         write_csv(str(tmp_path / "csv"), s)
